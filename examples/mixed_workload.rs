@@ -1,0 +1,51 @@
+//! Mixed read/write workloads (paper Fig 13): compare the lazy vs eager
+//! rollback schemes on readwhilewriting, against RocksDB and ADOC.
+//!
+//!     cargo run --release --example mixed_workload -- --seconds 60
+
+use kvaccel::baselines::{System, SystemKind};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::LsmOptions;
+use kvaccel::runtime::{BloomBuilder, MergeEngine};
+use kvaccel::sim::NS_PER_SEC;
+use kvaccel::ssd::SsdConfig;
+use kvaccel::util::Args;
+use kvaccel::workload::{readwhilewriting, BenchConfig};
+
+fn main() {
+    let args = Args::from_env();
+    let seconds = args.get_u64("seconds", 60);
+    let cfg = BenchConfig {
+        duration: seconds * NS_PER_SEC,
+        ..Default::default()
+    };
+    for (wname, ratio) in [("B (9:1)", (9u64, 1u64)), ("C (8:2)", (8, 2))] {
+        println!("== workload {wname}, {seconds} virtual s, 4 threads ==");
+        for kind in [
+            SystemKind::RocksDb { slowdown: true },
+            SystemKind::Adoc,
+            SystemKind::Kvaccel { scheme: RollbackScheme::Lazy },
+            SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+        ] {
+            let mut sys = System::build(
+                kind,
+                LsmOptions::default().with_threads(4),
+                MergeEngine::rust(),
+                BloomBuilder::rust(),
+            );
+            let mut env = SimEnv::new(11, SsdConfig::default());
+            let r = readwhilewriting(&mut sys, &mut env, &cfg, ratio.0, ratio.1);
+            println!(
+                "  {:<10} write {:>8.1} ops/s  read {:>8.1} ops/s  read-p99 {:>8.1} us  rollbacks {:>3}",
+                kind.label(),
+                r.write_kops() * 1e3,
+                r.read_kops() * 1e3,
+                r.read_lat.p99_us,
+                r.rollbacks
+            );
+        }
+        println!();
+    }
+    println!("shape: eager rollback trades some write bandwidth for faster reads");
+}

@@ -1,0 +1,102 @@
+"""AOT-lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/load_hlo and its README.
+
+Artifacts (shape-specialized; the Rust runtime picks by name):
+
+  merge_b{B}_n{N}.hlo.txt   compaction_merge over (B, N) u32 keys+tags
+  bloom_n{N}_p{P}_m{M}.hlo.txt  bloom_build over (1, N) keys, M bits, P probes
+  manifest.json             machine-readable list of the above
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Shape menu. Merge windows: the compaction path feeds W-way windows of
+# N total lanes; batch B amortizes dispatch. Bloom: one SST's key batch
+# (memtable 128 MB / 4 KB values = 32768 entries max), 10 bits/key, 7
+# probes (RocksDB's defaults for 10 bits/key).
+MERGE_SHAPES = [(1, 1024), (1, 4096), (4, 4096), (1, 8192)]
+BLOOM_SHAPES = [(4096, 7, 40960), (32768, 7, 327680)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_merge(b: int, n: int) -> str:
+    fn = jax.jit(model.compaction_merge)
+    return to_hlo_text(fn.lower(*model.merge_example_args(b, n)))
+
+
+def lower_bloom(n: int, probes: int, bits: int) -> str:
+    fn = jax.jit(
+        functools.partial(
+            model.bloom_build, num_probes=probes, num_bits=bits
+        )
+    )
+    return to_hlo_text(fn.lower(*model.bloom_example_args(n)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with the scaffold Makefile's `--out path/model.hlo.txt`:
+    ap.add_argument("--out", default=None, help="also write the default "
+                    "merge artifact to this exact path")
+    args = ap.parse_args()
+    out_dir = (
+        os.path.dirname(args.out) if args.out else args.out_dir
+    ) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"merge": [], "bloom": []}
+    for b, n in MERGE_SHAPES:
+        text = lower_merge(b, n)
+        name = f"merge_b{b}_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["merge"].append({"b": b, "n": n, "file": name})
+        print(f"wrote {name} ({len(text)} chars)")
+    for n, p, m in BLOOM_SHAPES:
+        text = lower_bloom(n, p, m)
+        name = f"bloom_n{n}_p{p}_m{m}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["bloom"].append(
+            {"n": n, "probes": p, "bits": m, "file": name}
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if args.out:
+        # Marker file the Makefile stamps freshness on.
+        with open(args.out, "w") as f:
+            f.write(lower_merge(1, 4096))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

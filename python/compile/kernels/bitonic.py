@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: batched bitonic merge-sort over packed u64 lanes.
+
+This is the compute hot-spot of LSM compaction (the merge-sort the paper's
+hardware-acceleration lineage offloads to FPGA/GPU).  Hardware adaptation
+for TPU (see DESIGN.md §Hardware-Adaptation):
+
+- One (1, N) tile of packed ``key(32) | tag(32)`` u64 lanes stays resident
+  in VMEM for the entire sorting network; ``BlockSpec`` expresses the
+  HBM<->VMEM schedule that CUDA implementations express with threadblocks.
+- Each bitonic stage is a branch-free compare-exchange implemented with a
+  reshape + ``minimum``/``maximum`` pair — pure VPU work, no MXU, no
+  data-dependent control flow.
+- The batch dimension B is the Pallas grid: independent merge windows map
+  to grid steps exactly like independent CUDA blocks.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the network to plain
+HLO ops which round-trip through the HLO-text AOT path into the Rust
+runtime (see python/compile/aot.py).
+
+N must be a power of two.  Sorting ascending by the full u64 puts equal
+keys in ascending-tag order; the Rust coordinator packs tags so that this
+order encodes version recency (see rust/src/runtime/merge.rs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitonic_sort", "sort_network_stages", "stage_count"]
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def stage_count(n: int) -> int:
+    """Number of compare-exchange stages the network runs for width n."""
+    if not _is_pow2(n):
+        raise ValueError(f"bitonic width must be a power of two, got {n}")
+    log = n.bit_length() - 1
+    return log * (log + 1) // 2
+
+
+def _compare_exchange(v: jax.Array, k: int, j: int) -> jax.Array:
+    """One bitonic stage over the last axis of ``v`` (shape (..., n)).
+
+    Pairs elements at distance ``j`` (a power of two) by reshaping the lane
+    axis to (n // (2j), 2, j); the sort direction of a pair starting at
+    lane i is ascending iff ``i & k == 0``, which is constant within each
+    reshaped block, so the direction vector is a (n // (2j), 1, 1) iota
+    predicate — fully branch-free.
+    """
+    *lead, n = v.shape
+    blocks = n // (2 * j)
+    w = v.reshape(*lead, blocks, 2, j)
+    a = w[..., 0, :]
+    b = w[..., 1, :]
+    # Lane index of the first element of each block is block_idx * 2j;
+    # its bit `k` selects the direction for the whole block.
+    block_idx = jax.lax.broadcasted_iota(jnp.uint32, (blocks, 1), 0)
+    ascending = (block_idx * (2 * j)) & k == 0
+    lo = jnp.minimum(a, b)
+    hi = jnp.maximum(a, b)
+    first = jnp.where(ascending, lo, hi)
+    second = jnp.where(ascending, hi, lo)
+    out = jnp.stack([first, second], axis=-2)
+    return out.reshape(*lead, n)
+
+
+def sort_network_stages(n: int) -> list[tuple[int, int]]:
+    """The (k, j) schedule of the bitonic network for width n."""
+    stages = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            stages.append((k, j))
+            j //= 2
+        k *= 2
+    return stages
+
+
+def _sort_tile(v: jax.Array) -> jax.Array:
+    n = v.shape[-1]
+    for k, j in sort_network_stages(n):
+        v = _compare_exchange(v, k, j)
+    return v
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _sort_tile(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Sort each row of ``x`` (shape (B, N) uint64) ascending.
+
+    B is the Pallas grid; each grid step sorts one (1, N) VMEM tile.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (B, N), got shape {x.shape}")
+    b, n = x.shape
+    if not _is_pow2(n):
+        raise ValueError(f"N must be a power of two, got {n}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: batched double-hash probe positions for bloom filters.
+
+SST filter blocks are built once per flush/compaction output over the full
+batch of keys in the file — a data-parallel hash workload that rides along
+with the merge offload (the host only ORs the resulting bitmap words).
+
+Double hashing (Kirsch-Mitzenmatter): probe_i = h1(key) + i * h2(key) mod m
+with h1/h2 two multiplicative hashes.  Everything is elementwise u32
+arithmetic — one (1, N) VMEM tile per grid step, VPU only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bloom_probes", "H1_MULT", "H2_MULT"]
+
+# Knuth-style odd multiplicative constants (u32).
+H1_MULT = 0x9E3779B1
+H2_MULT = 0x85EBCA77
+
+
+def _probe_tile(keys: jax.Array, num_probes: int, num_bits: int) -> jax.Array:
+    """keys: (1, N) uint32 -> (num_probes, N) uint32 probe bit positions."""
+    k = keys.astype(jnp.uint32)
+    h1 = (k * jnp.uint32(H1_MULT)) >> jnp.uint32(17)
+    h2 = ((k * jnp.uint32(H2_MULT)) >> jnp.uint32(15)) | jnp.uint32(1)
+    i = jax.lax.broadcasted_iota(jnp.uint32, (num_probes, keys.shape[-1]), 0)
+    return (h1 + i * h2) % jnp.uint32(num_bits)
+
+
+def _kernel(num_probes, num_bits, x_ref, o_ref):
+    o_ref[...] = _probe_tile(x_ref[...], num_probes, num_bits)[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_probes", "num_bits", "interpret")
+)
+def bloom_probes(
+    keys: jax.Array,
+    *,
+    num_probes: int,
+    num_bits: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Probe positions for each key.
+
+    keys: (B, N) uint32 -> (B, num_probes, N) uint32, values < num_bits.
+    """
+    if keys.ndim != 2:
+        raise ValueError(f"expected (B, N), got {keys.shape}")
+    b, n = keys.shape
+    kern = functools.partial(_kernel, num_probes, num_bits)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, num_probes, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, num_probes, n), jnp.uint32),
+        interpret=interpret,
+    )(keys)

@@ -1,0 +1,76 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels and the L2 graphs.
+
+These are the CORE correctness signal: every kernel and every lowered
+artifact is pytest-compared against these references (exactly, since all
+the workloads are integer).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .bloom import H1_MULT, H2_MULT
+
+__all__ = [
+    "sort_ref",
+    "bloom_probes_ref",
+    "bloom_bitmap_ref",
+    "compaction_merge_ref",
+]
+
+_U32 = np.uint64(0xFFFFFFFF)
+
+
+def sort_ref(x: np.ndarray) -> np.ndarray:
+    """Row-wise ascending sort — oracle for kernels.bitonic.bitonic_sort."""
+    return np.sort(np.asarray(x), axis=-1)
+
+
+def bloom_probes_ref(
+    keys: np.ndarray, num_probes: int, num_bits: int
+) -> np.ndarray:
+    """(B, N) u32 -> (B, num_probes, N) u32 — oracle for bloom_probes."""
+    k = np.asarray(keys, dtype=np.uint32)
+    h1 = (k * np.uint32(H1_MULT)) >> np.uint32(17)
+    h2 = ((k * np.uint32(H2_MULT)) >> np.uint32(15)) | np.uint32(1)
+    i = np.arange(num_probes, dtype=np.uint32)[None, :, None]
+    return (h1[:, None, :] + i * h2[:, None, :]) % np.uint32(num_bits)
+
+
+def bloom_bitmap_ref(
+    keys: np.ndarray, num_probes: int, num_bits: int, valid: int | None = None
+) -> np.ndarray:
+    """Packed u32 bitmap words — oracle for model.bloom_build.
+
+    ``valid``: only the first ``valid`` keys contribute (padding dropped).
+    """
+    keys = np.asarray(keys, dtype=np.uint32).reshape(-1)
+    if valid is not None:
+        keys = keys[:valid]
+    assert num_bits % 32 == 0
+    words = np.zeros(num_bits // 32, dtype=np.uint32)
+    probes = bloom_probes_ref(keys[None], num_probes, num_bits)[0]
+    for pos in probes.reshape(-1):
+        words[pos // 32] |= np.uint32(1) << np.uint32(pos % 32)
+    return words
+
+
+def compaction_merge_ref(
+    keys: np.ndarray, tags: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Oracle for model.compaction_merge.
+
+    Sort each row by (key, tag) ascending; keep mask marks the first
+    occurrence of each key in the sorted row (lower tag == newer version by
+    the Rust packing convention, so "first" == newest).
+    Returns (sorted_keys u32, sorted_tags u32, keep u32) each (B, N).
+    """
+    keys = np.asarray(keys, dtype=np.uint32)
+    tags = np.asarray(tags, dtype=np.uint32)
+    packed = (keys.astype(np.uint64) << np.uint64(32)) | tags.astype(np.uint64)
+    packed = np.sort(packed, axis=-1)
+    skeys = (packed >> np.uint64(32)).astype(np.uint32)
+    stags = (packed & _U32).astype(np.uint32)
+    keep = np.ones_like(skeys)
+    keep[:, 1:] = (skeys[:, 1:] != skeys[:, :-1]).astype(np.uint32)
+    return skeys, stags, keep

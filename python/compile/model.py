@@ -1,0 +1,103 @@
+"""L2: the compaction-offload compute graphs, calling the L1 kernels.
+
+These are the exact graphs the Rust coordinator executes at runtime via
+PJRT (lowered once to HLO text by aot.py).  Two graphs:
+
+``compaction_merge``
+    One merge window of LSM compaction: B batches of N packed
+    (key, recency-tag) lanes drawn from the victim + overlapping SSTs.
+    The Rust side packs tags so that *lower tag == newer version*; sorting
+    ascending by the packed u64 therefore groups duplicates newest-first
+    and the keep-mask (first occurrence per key) implements
+    newest-version-wins dedup — the full semantic of one compaction merge
+    step, not just a sort.
+
+``bloom_build``
+    Build the packed bloom-filter bitmap words for one SST's key batch
+    (double hashing via kernels.bloom, scatter-OR into num_bits/32 u32
+    words).  Padding keys are routed out-of-range and dropped by the
+    scatter, so one artifact serves any fill count <= N.
+
+Python/JAX run ONLY at build time; the request path is pure Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bitonic import bitonic_sort
+from .kernels.bloom import bloom_probes
+
+__all__ = ["compaction_merge", "bloom_build", "PAD_KEY"]
+
+# Keys are 4 B (paper's db_bench config). 0xFFFFFFFF is reserved as the
+# padding sentinel: it sorts last and the Rust side never emits it.
+PAD_KEY = 0xFFFFFFFF
+
+
+def compaction_merge(keys: jax.Array, tags: jax.Array):
+    """Merge window: (B, N) u32 keys + (B, N) u32 tags.
+
+    Returns (sorted_keys, sorted_tags, keep) — all (B, N) u32.  ``keep`` is
+    1 on the first (== newest, by tag packing) occurrence of each key.
+    """
+    packed = (keys.astype(jnp.uint64) << jnp.uint64(32)) | tags.astype(
+        jnp.uint64
+    )
+    packed = bitonic_sort(packed)
+    sorted_keys = (packed >> jnp.uint64(32)).astype(jnp.uint32)
+    sorted_tags = (packed & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    first = jnp.concatenate(
+        [
+            jnp.ones_like(sorted_keys[:, :1]),
+            (sorted_keys[:, 1:] != sorted_keys[:, :-1]).astype(jnp.uint32),
+        ],
+        axis=1,
+    )
+    return sorted_keys, sorted_tags, first
+
+
+@functools.partial(jax.jit, static_argnames=("num_probes", "num_bits"))
+def bloom_build(keys: jax.Array, valid: jax.Array, *, num_probes: int,
+                num_bits: int):
+    """Bloom bitmap for one SST: keys (1, N) u32, valid () u32 live count.
+
+    Returns (num_bits // 32,) u32 packed words.  Positions of keys at index
+    >= valid are pushed out of range and dropped by the scatter.
+    """
+    assert num_bits % 32 == 0
+    n = keys.shape[-1]
+    probes = bloom_probes(keys, num_probes=num_probes, num_bits=num_bits)
+    # (1, P, N) -> (P, N); mask padding lanes out-of-bounds (drop mode).
+    probes = probes[0]
+    lane = jax.lax.broadcasted_iota(jnp.uint32, probes.shape, 1)
+    oob = jnp.uint32(num_bits)
+    pos = jnp.where(lane < valid, probes, oob).reshape(-1).astype(jnp.int32)
+    # Scatter into a bit array: set(1) is idempotent under probe collisions
+    # and mode="drop" discards the padding lanes routed to num_bits.
+    bits = jnp.zeros((num_bits,), dtype=jnp.uint32)
+    bits = bits.at[pos].set(jnp.uint32(1), mode="drop")
+    # Pack 32 bits -> one u32 word (little-endian bit order, matching the
+    # Rust-side probe check `word >> (pos % 32) & 1`).
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32)
+    )
+    words = (bits.reshape(num_bits // 32, 32) * weights[None, :]).sum(
+        axis=1, dtype=jnp.uint32
+    )
+    return words
+
+
+def merge_example_args(b: int, n: int):
+    spec = jax.ShapeDtypeStruct((b, n), jnp.uint32)
+    return (spec, spec)
+
+
+def bloom_example_args(n: int):
+    return (
+        jax.ShapeDtypeStruct((1, n), jnp.uint32),
+        jax.ShapeDtypeStruct((), jnp.uint32),
+    )

@@ -1,0 +1,171 @@
+"""L1 kernel correctness: Pallas kernels vs pure-numpy oracles.
+
+Hypothesis sweeps shapes (all power-of-two widths) and adversarial value
+distributions; comparisons are exact (integer workloads).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bitonic import (
+    bitonic_sort,
+    sort_network_stages,
+    stage_count,
+)
+from compile.kernels.bloom import bloom_probes
+
+
+def _sort(x: np.ndarray) -> np.ndarray:
+    return np.asarray(bitonic_sort(jnp.asarray(x)))
+
+
+# ---------------------------------------------------------------------------
+# bitonic_sort
+# ---------------------------------------------------------------------------
+
+class TestBitonicBasics:
+    def test_already_sorted(self):
+        x = np.arange(64, dtype=np.uint64)[None]
+        np.testing.assert_array_equal(_sort(x), x)
+
+    def test_reverse_sorted(self):
+        x = np.arange(64, dtype=np.uint64)[::-1].copy()[None]
+        np.testing.assert_array_equal(_sort(x), np.sort(x, axis=-1))
+
+    def test_all_equal(self):
+        x = np.full((2, 128), 7, dtype=np.uint64)
+        np.testing.assert_array_equal(_sort(x), x)
+
+    def test_u64_extremes(self):
+        x = np.array(
+            [[0, 2**64 - 1, 1, 2**63, 2**32, 2**32 - 1, 5, 2**63 - 1]],
+            dtype=np.uint64,
+        )
+        np.testing.assert_array_equal(_sort(x), ref.sort_ref(x))
+
+    def test_batch_rows_independent(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(0, 2**64, size=(8, 256), dtype=np.uint64)
+        np.testing.assert_array_equal(_sort(x), ref.sort_ref(x))
+
+    def test_width_must_be_pow2(self):
+        with pytest.raises(ValueError, match="power of two"):
+            bitonic_sort(jnp.zeros((1, 100), dtype=jnp.uint64))
+
+    def test_rank_must_be_2(self):
+        with pytest.raises(ValueError, match="expected"):
+            bitonic_sort(jnp.zeros((4,), dtype=jnp.uint64))
+
+    def test_is_permutation(self):
+        rng = np.random.default_rng(2)
+        x = rng.integers(0, 1000, size=(4, 512), dtype=np.uint64)
+        out = _sort(x)
+        for row_in, row_out in zip(x, out):
+            np.testing.assert_array_equal(
+                np.sort(row_in), row_out
+            )
+
+
+class TestSortNetworkSchedule:
+    @pytest.mark.parametrize("n,expected", [(2, 1), (4, 3), (8, 6),
+                                            (1024, 55), (4096, 78)])
+    def test_stage_count(self, n, expected):
+        assert stage_count(n) == expected
+        assert len(sort_network_stages(n)) == expected
+
+    def test_stage_count_rejects_non_pow2(self):
+        with pytest.raises(ValueError):
+            stage_count(3)
+
+    def test_schedule_shape(self):
+        stages = sort_network_stages(16)
+        # k doubles 2..16, j halves k/2..1
+        assert stages[0] == (2, 1)
+        assert stages[-1] == (16, 1)
+        for k, j in stages:
+            assert k & (k - 1) == 0 and j & (j - 1) == 0 and j < k
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    logn=st.integers(1, 10),
+    seed=st.integers(0, 2**31),
+)
+def test_bitonic_matches_ref_random(b, logn, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**64, size=(b, 2**logn), dtype=np.uint64)
+    np.testing.assert_array_equal(_sort(x), ref.sort_ref(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logn=st.integers(3, 9),
+    dup_universe=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_bitonic_heavy_duplicates(logn, dup_universe, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, dup_universe, size=(2, 2**logn), dtype=np.uint64)
+    np.testing.assert_array_equal(_sort(x), ref.sort_ref(x))
+
+
+# ---------------------------------------------------------------------------
+# bloom_probes
+# ---------------------------------------------------------------------------
+
+class TestBloomProbes:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        keys = rng.integers(0, 2**32, size=(2, 64), dtype=np.uint32)
+        out = np.asarray(
+            bloom_probes(jnp.asarray(keys), num_probes=7, num_bits=1024)
+        )
+        np.testing.assert_array_equal(
+            out, ref.bloom_probes_ref(keys, 7, 1024)
+        )
+
+    def test_positions_in_range(self):
+        rng = np.random.default_rng(4)
+        keys = rng.integers(0, 2**32, size=(1, 256), dtype=np.uint32)
+        out = np.asarray(
+            bloom_probes(jnp.asarray(keys), num_probes=5, num_bits=333)
+        )
+        assert (out < 333).all()
+
+    def test_deterministic(self):
+        keys = jnp.asarray(np.arange(32, dtype=np.uint32)[None])
+        a = bloom_probes(keys, num_probes=3, num_bits=64)
+        b = bloom_probes(keys, num_probes=3, num_bits=64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rejects_rank1(self):
+        with pytest.raises(ValueError):
+            bloom_probes(
+                jnp.zeros((8,), dtype=jnp.uint32), num_probes=3, num_bits=64
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 128, 512]),
+    probes=st.integers(1, 10),
+    logm=st.integers(6, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_bloom_probes_matches_ref_random(n, probes, logm, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**32, size=(1, n), dtype=np.uint32)
+    out = np.asarray(
+        bloom_probes(jnp.asarray(keys), num_probes=probes, num_bits=2**logm)
+    )
+    np.testing.assert_array_equal(
+        out, ref.bloom_probes_ref(keys, probes, 2**logm)
+    )

@@ -1,0 +1,37 @@
+//! Bench: the compaction-merge offload — XLA artifact vs pure-Rust
+//! reference across window sizes (the §Perf L1/L2 numbers in
+//! EXPERIMENTS.md). Run with `cargo bench --bench accel_merge`.
+
+use kvaccel::bench_util::{black_box, Bencher};
+use kvaccel::runtime::merge::merge_window_rust;
+use kvaccel::runtime::{default_artifacts_dir, MergeEngine, XlaRuntime};
+use kvaccel::sim::SimRng;
+use std::sync::Arc;
+
+fn window(n: usize, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = SimRng::new(seed);
+    (0..n).map(|i| (rng.next_u32() / 2, i as u32)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    for n in [1024usize, 4096, 16384] {
+        let w = window(n, n as u64);
+        b.bench_elements(&format!("merge_rust/{n}"), Some(n as u64), || {
+            black_box(merge_window_rust(black_box(&w)));
+        });
+    }
+    match XlaRuntime::load(default_artifacts_dir()) {
+        Ok(rt) => {
+            let engine = MergeEngine::xla(Arc::new(rt)).unwrap();
+            for n in [1024usize, 4096, 16384] {
+                let w = window(n, n as u64);
+                b.bench_elements(&format!("merge_xla/{n}"), Some(n as u64), || {
+                    black_box(engine.merge_window(black_box(&w)).unwrap());
+                });
+            }
+        }
+        Err(e) => eprintln!("skipping XLA benches (run `make artifacts`): {e:#}"),
+    }
+    b.summary();
+}

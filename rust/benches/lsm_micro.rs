@@ -1,0 +1,62 @@
+//! Bench: engine-internal hot paths (memtable insert, SST lookup, bloom
+//! probe, iterator next, full put path) — the §Perf L3 profile targets.
+//! Run with `cargo bench --bench lsm_micro`.
+
+use kvaccel::bench_util::{black_box, Bencher};
+use kvaccel::env::SimEnv;
+use kvaccel::lsm::memtable::Memtable;
+use kvaccel::lsm::{Entry, LsmDb, LsmOptions, ValueDesc};
+use kvaccel::runtime::bloom::{build_bitmap_rust, may_contain};
+use kvaccel::runtime::{BloomBuilder, MergeEngine};
+use kvaccel::sim::SimRng;
+use kvaccel::ssd::SsdConfig;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = SimRng::new(5);
+
+    // memtable insert
+    let mut mem = Memtable::new();
+    let mut s = 0u32;
+    b.bench("lsm/memtable_insert_4k", || {
+        s = s.wrapping_add(1);
+        if mem.len() >= 200_000 {
+            mem = Memtable::new(); // bound memory
+        }
+        mem.insert(Entry::new(s.wrapping_mul(2654435761) / 2, s, ValueDesc::new(s, 4096)));
+    });
+
+    // bloom probe
+    let keys: Vec<u32> = (0..32_768).map(|_| rng.next_u32() / 2).collect();
+    let words = build_bitmap_rust(&keys, 7, 327_680);
+    let mut q = 0usize;
+    b.bench("lsm/bloom_probe", || {
+        q = (q + 1) % keys.len();
+        black_box(may_contain(&words, keys[q], 7, 327_680));
+    });
+
+    // end-to-end put on the engine (small config, includes WAL+rotation)
+    let mut env = SimEnv::new(9, SsdConfig::default());
+    let mut db = LsmDb::new(
+        LsmOptions::default(),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut t = 0u64;
+    let mut k = 0u32;
+    b.bench("lsm/put_full_path", || {
+        k = k.wrapping_add(1);
+        t = db
+            .put(&mut env, t, k.wrapping_mul(2654435761) / 2, ValueDesc::new(k, 4096))
+            .done;
+    });
+
+    // point get after load
+    let mut g = 0u32;
+    b.bench("lsm/get_hot", || {
+        g = g.wrapping_add(1);
+        let key = (g % 10_000).wrapping_mul(2654435761) / 2;
+        black_box(db.get(&mut env, t, key));
+    });
+    b.summary();
+}

@@ -1,0 +1,27 @@
+//! Bench: one scaled-down end-to-end run per paper table/figure — prints
+//! the same rows the paper reports. `cargo bench --bench paper_figures`.
+//! (Full-scale regeneration: `kvaccel experiment all --scale 1`.)
+
+use kvaccel::experiments::{run, EngineMode, ExpContext, ALL_EXPERIMENTS};
+
+fn main() {
+    let scale = std::env::var("KVACCEL_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05);
+    let mut ctx = ExpContext::new(scale, 42, EngineMode::Rust)
+        .expect("experiment context");
+    ctx.out_dir = std::path::PathBuf::from("results/bench");
+    println!("paper_figures bench at scale {scale} (600 s * scale per run)\n");
+    let wall = std::time::Instant::now();
+    for id in ALL_EXPERIMENTS {
+        let t = std::time::Instant::now();
+        run(&ctx, id).expect(id);
+        println!("--- {id} regenerated in {:.1}s wall\n", t.elapsed().as_secs_f64());
+    }
+    println!(
+        "all {} experiments regenerated in {:.1}s wall",
+        ALL_EXPERIMENTS.len(),
+        wall.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,195 @@
+//! ADOC baseline (Yu et al., FAST'23): "automatically harmonizing
+//! dataflow" — a feedback tuner that watches the same stall signals and
+//! reacts by (a) growing the background compaction thread pool and (b)
+//! growing the write-buffer (batch) size while data is overflowing, then
+//! restoring both when the dataflow calms. Slowdown remains enabled as
+//! the last resort (paper §III-A: "ADOC ... still falls back to
+//! slowdowns").
+//!
+//! The control loop runs at the same 0.1 s cadence as KVACCEL's Detector
+//! so the two systems observe identical signals.
+
+use crate::env::SimEnv;
+use crate::lsm::{LsmDb, WriteCondition};
+use crate::sim::{CpuClass, Nanos, MILLIS};
+
+#[derive(Clone, Debug)]
+pub struct AdocConfig {
+    /// Control period.
+    pub interval: Nanos,
+    /// Thread pool may grow up to base * factor.
+    pub max_thread_factor: usize,
+    /// Write buffer may grow up to base * factor.
+    pub max_buffer_factor: u64,
+    /// Calm ticks before stepping back down.
+    pub cooldown_ticks: u64,
+    /// Tuner CPU cost per tick (signal collection + decision).
+    pub tick_cost_ns: Nanos,
+}
+
+impl Default for AdocConfig {
+    fn default() -> Self {
+        Self {
+            interval: 100 * MILLIS,
+            max_thread_factor: 2,
+            max_buffer_factor: 2,
+            cooldown_ticks: 10,
+            tick_cost_ns: 2_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct AdocStats {
+    pub ticks: u64,
+    pub thread_increases: u64,
+    pub thread_decreases: u64,
+    pub buffer_increases: u64,
+    pub buffer_decreases: u64,
+}
+
+#[derive(Debug)]
+pub struct AdocTuner {
+    cfg: AdocConfig,
+    base_threads: usize,
+    base_buffer: u64,
+    last_tick: Nanos,
+    ticked_once: bool,
+    calm_ticks: u64,
+    pub stats: AdocStats,
+}
+
+impl AdocTuner {
+    pub fn new(cfg: AdocConfig, base_threads: usize, base_buffer: u64) -> Self {
+        Self {
+            cfg,
+            base_threads,
+            base_buffer,
+            last_tick: 0,
+            ticked_once: false,
+            calm_ticks: 0,
+            stats: AdocStats::default(),
+        }
+    }
+
+    /// One control step if the period elapsed.
+    pub fn maybe_tune(&mut self, env: &mut SimEnv, at: Nanos, db: &mut LsmDb) {
+        if self.ticked_once && at < self.last_tick + self.cfg.interval {
+            return;
+        }
+        self.last_tick = at;
+        self.ticked_once = true;
+        self.stats.ticks += 1;
+        env.cpu.charge(CpuClass::Kvaccel, at, self.cfg.tick_cost_ns);
+
+        let cond = db.write_condition();
+        let overflowing = !matches!(cond, WriteCondition::Normal);
+        let max_threads = self.base_threads * self.cfg.max_thread_factor;
+        let max_buffer = self.base_buffer * self.cfg.max_buffer_factor;
+        if overflowing {
+            self.calm_ticks = 0;
+            // data overflow: add a compaction thread, widen the batch
+            let threads = db.compaction_threads();
+            if threads < max_threads {
+                db.set_compaction_threads(threads + 1);
+                self.stats.thread_increases += 1;
+            }
+            let buf = db.opts.write_buffer_size;
+            if buf < max_buffer {
+                db.set_write_buffer_size((buf + buf / 4).min(max_buffer));
+                self.stats.buffer_increases += 1;
+            }
+        } else {
+            self.calm_ticks += 1;
+            if self.calm_ticks >= self.cfg.cooldown_ticks {
+                // restore toward the configured baseline
+                let threads = db.compaction_threads();
+                if threads > self.base_threads {
+                    db.set_compaction_threads(threads - 1);
+                    self.stats.thread_decreases += 1;
+                }
+                let buf = db.opts.write_buffer_size;
+                if buf > self.base_buffer {
+                    db.set_write_buffer_size(
+                        (buf - buf / 4).max(self.base_buffer),
+                    );
+                    self.stats.buffer_decreases += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::{LsmOptions, ValueDesc};
+    use crate::runtime::{BloomBuilder, MergeEngine};
+    use crate::ssd::SsdConfig;
+
+    fn rig() -> (LsmDb, SimEnv, AdocTuner) {
+        let opts = LsmOptions::small_for_test();
+        let base_buf = opts.write_buffer_size;
+        (
+            LsmDb::new(opts, MergeEngine::rust(), BloomBuilder::rust()),
+            SimEnv::new(2, SsdConfig::default()),
+            AdocTuner::new(AdocConfig::default(), 1, base_buf),
+        )
+    }
+
+    #[test]
+    fn scales_up_under_pressure() {
+        let (mut db, mut env, mut tuner) = rig();
+        let mut t = 0;
+        for k in 0..6000u32 {
+            t = db.put(&mut env, t, k, ValueDesc::new(k, 4096)).done;
+            tuner.maybe_tune(&mut env, t, &mut db);
+        }
+        assert!(
+            tuner.stats.thread_increases > 0 || tuner.stats.buffer_increases > 0,
+            "pressure should have triggered tuning: {:?}",
+            tuner.stats
+        );
+        assert!(db.compaction_threads() >= 1);
+    }
+
+    #[test]
+    fn restores_when_calm() {
+        let (mut db, mut env, mut tuner) = rig();
+        // force scale-up state
+        db.set_compaction_threads(2);
+        db.set_write_buffer_size(tuner.base_buffer * 2);
+        // long calm period
+        let mut t = 0;
+        for _ in 0..30 {
+            t += 100 * MILLIS;
+            tuner.maybe_tune(&mut env, t, &mut db);
+        }
+        assert_eq!(db.compaction_threads(), 1, "threads restored");
+        assert_eq!(db.opts.write_buffer_size, tuner.base_buffer, "buffer restored");
+    }
+
+    #[test]
+    fn respects_interval() {
+        let (mut db, mut env, mut tuner) = rig();
+        tuner.maybe_tune(&mut env, 0, &mut db);
+        tuner.maybe_tune(&mut env, 1, &mut db);
+        assert_eq!(tuner.stats.ticks, 1);
+        tuner.maybe_tune(&mut env, 100 * MILLIS, &mut db);
+        assert_eq!(tuner.stats.ticks, 2);
+    }
+
+    #[test]
+    fn bounded_by_factors() {
+        let (mut db, mut env, mut tuner) = rig();
+        // sustained pressure, many ticks
+        let mut t = 0;
+        db.opts.enable_slowdown = false;
+        for k in 0..8000u32 {
+            t = db.put(&mut env, t, k, ValueDesc::new(k, 4096)).done;
+            tuner.maybe_tune(&mut env, t, &mut db);
+        }
+        assert!(db.compaction_threads() <= tuner.base_threads * 2);
+        assert!(db.opts.write_buffer_size <= tuner.base_buffer * 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Minimal criterion-style micro-benchmark harness (the offline image
+//! has no `criterion` crate). Warmup + timed iterations, mean/p50/p99
+//! over per-batch timings, throughput reporting — enough to drive the
+//! `cargo bench` targets in rust/benches/.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    /// minimum measurement time per benchmark
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// optional elements-per-iteration for throughput reporting
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn elements_per_sec(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / (self.mean_ns / 1e9))
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // honor a quick mode for CI: KVACCEL_BENCH_QUICK=1
+        let quick = std::env::var("KVACCEL_BENCH_QUICK").is_ok();
+        Self {
+            measure_time: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup_time: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_elements(name, None, move || {
+            f();
+        })
+    }
+
+    /// Benchmark with a per-iteration element count (throughput).
+    pub fn bench_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // warmup + calibration
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup_time || cal_iters < 3 {
+            f();
+            cal_iters += 1;
+            if cal_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = cal_start.elapsed().as_secs_f64() / cal_iters as f64;
+        // choose a batch so each sample is ~1ms
+        let batch = ((0.001 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let meas_start = Instant::now();
+        while meas_start.elapsed() < self.measure_time || samples.len() < 10 {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let per = s.elapsed().as_secs_f64() * 1e9 / batch as f64;
+            samples.push(per);
+            iters += batch;
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let p99 = samples[(samples.len() * 99) / 100.min(samples.len() - 1).max(1)]
+            .min(*samples.last().unwrap());
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            p99_ns: p99,
+            elements,
+        };
+        println!("{}", format_result(&r));
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn summary(&self) {
+        println!("\n=== bench summary ({} benchmarks) ===", self.results.len());
+        for r in &self.results {
+            println!("{}", format_result(r));
+        }
+    }
+}
+
+pub fn format_result(r: &BenchResult) -> String {
+    let tp = r
+        .elements_per_sec()
+        .map(|e| format!("  {:>10}/s", crate::util::fmt::si(e).trim().to_string()))
+        .unwrap_or_default();
+    format!(
+        "bench {:<44} mean {:>12}  p50 {:>12}  p99 {:>12}{}",
+        r.name,
+        crate::util::fmt::nanos(r.mean_ns),
+        crate::util::fmt::nanos(r.p50_ns),
+        crate::util::fmt::nanos(r.p99_ns),
+        tp
+    )
+}
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("KVACCEL_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0 && r.mean_ns < 1e6);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("KVACCEL_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let r = b
+            .bench_elements("sum-1k", Some(1000), || {
+                let s: u64 = black_box((0..1000u64).sum());
+                black_box(s);
+            })
+            .clone();
+        assert!(r.elements_per_sec().unwrap() > 1e6);
+    }
+}

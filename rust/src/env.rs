@@ -1,0 +1,28 @@
+//! Shared simulation environment threaded through every operation: the
+//! virtual clock, CPU accounting, deterministic RNG, and the one
+//! dual-interface SSD.
+
+use crate::sim::{Clock, CpuAccounting, SimRng};
+use crate::ssd::{SsdConfig, SsdDevice};
+
+pub struct SimEnv {
+    pub clock: Clock,
+    pub cpu: CpuAccounting,
+    pub rng: SimRng,
+    pub device: SsdDevice,
+}
+
+impl SimEnv {
+    pub fn new(seed: u64, ssd: SsdConfig) -> Self {
+        Self {
+            clock: Clock::new(),
+            cpu: CpuAccounting::new(),
+            rng: SimRng::new(seed),
+            device: SsdDevice::new(ssd),
+        }
+    }
+
+    pub fn now(&self) -> crate::sim::Nanos {
+        self.clock.now()
+    }
+}

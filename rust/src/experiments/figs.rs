@@ -1,0 +1,365 @@
+//! Figure reproductions (Figs 2, 3, 4, 5, 11, 12, 13, 14).
+
+use anyhow::Result;
+
+use crate::baselines::SystemKind;
+use crate::kvaccel::RollbackScheme;
+use crate::util::fmt;
+use crate::workload::{cdf, RunResult};
+
+use super::ExpContext;
+
+fn series_csv(r: &RunResult) -> Vec<String> {
+    r.writes
+        .ops_per_sec()
+        .iter()
+        .enumerate()
+        .map(|(s, &ops)| format!("{s},{ops}"))
+        .collect()
+}
+
+/// Fig 2: per-second throughput time-series for RocksDB and ADOC with the
+/// slowdown feature disabled / enabled (4 panels).
+pub fn fig2(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 2: throughput time-series vs slowdown ==\n");
+    let panels = [
+        ("a_rocksdb_noslow", SystemKind::RocksDb { slowdown: false }),
+        ("b_rocksdb_slow", SystemKind::RocksDb { slowdown: true }),
+        ("c_adoc_noslow_proxy", SystemKind::RocksDb { slowdown: false }),
+        ("d_adoc_slow", SystemKind::Adoc),
+    ];
+    for (name, kind) in panels {
+        // panel (c): ADOC depends on slowdown for its optimizations (the
+        // paper also notes this); the no-slowdown ADOC panel is RocksDB
+        // tuned up — we run ADOC with slowdown for (d) and RocksDB-noSD
+        // as the (c) proxy, matching the paper's observation.
+        let r = ctx.run_fillrandom(kind, 4);
+        let series = r.writes.ops_per_sec();
+        let zeros = series.iter().filter(|&&x| x == 0).count();
+        let peak = series.iter().max().copied().unwrap_or(0);
+        ctx.write_csv(&format!("fig2_{name}.csv"), "sec,write_ops", &series_csv(&r))?;
+        out.push_str(&format!(
+            "  {name:<22} {} | mean {:>7.1} ops/s  peak {:>7}  zero-throughput seconds {:>3}  halts {}\n",
+            r.system,
+            r.writes.mean_ops(),
+            peak,
+            zeros,
+            r.stop_events,
+        ));
+    }
+    out.push_str("  shape check: slowdown-on panels should show no zero-seconds; slowdown-off panels show halts\n");
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 3: average throughput + P99 latency, slowdown off vs on — plus the
+/// §III-A slowdown instance counts (paper: RocksDB 258, ADOC 433).
+pub fn fig3(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 3: throughput / P99 vs slowdown usage ==\n");
+    let rows = [
+        ("RocksDB-noSD", SystemKind::RocksDb { slowdown: false }),
+        ("RocksDB", SystemKind::RocksDb { slowdown: true }),
+        ("ADOC-noSD", SystemKind::RocksDb { slowdown: false }), // proxy, see fig2
+        ("ADOC", SystemKind::Adoc),
+    ];
+    let mut csv = Vec::new();
+    let mut measured: Vec<(String, RunResult)> = Vec::new();
+    for (label, kind) in rows {
+        let r = ctx.run_fillrandom(kind, 4);
+        csv.push(format!(
+            "{label},{:.1},{:.1},{},{}",
+            r.write_kops() * 1e3,
+            r.write_lat.p99_us,
+            r.slowdown_events,
+            r.stop_events
+        ));
+        out.push_str(&format!(
+            "  {label:<14} {:>8.1} ops/s  P99 {:>9}  slowdown instances {:>5}  halts {:>3}\n",
+            r.write_kops() * 1e3,
+            fmt::nanos(r.write_lat.p99_us * 1e3),
+            r.slowdown_events,
+            r.stop_events
+        ));
+        measured.push((label.to_string(), r));
+    }
+    ctx.write_csv(
+        "fig3.csv",
+        "system,write_ops_s,p99_us,slowdown_instances,halts",
+        &csv,
+    )?;
+    // paper deltas: slowdown costs RocksDB 34% / ADOC 47% throughput
+    let t_no = measured[0].1.write_kops();
+    let t_sd = measured[1].1.write_kops();
+    if t_no > 0.0 {
+        out.push_str(&format!(
+            "  RocksDB slowdown throughput delta: {:+.0}% (paper: -34%)\n",
+            100.0 * (t_sd - t_no) / t_no
+        ));
+    }
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 4: PCIe bandwidth time-series during write stalls, RocksDB(1) and
+/// RocksDB(4), slowdown off, 100–200 s window.
+pub fn fig4(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 4: PCIe bandwidth during stalls (no slowdown) ==\n");
+    for threads in [1usize, 4] {
+        let r = ctx.run_fillrandom(SystemKind::RocksDb { slowdown: false }, threads);
+        // paper plots the 100-200 s slice of 600 s = the middle third
+        let len = r.pcie_mbps.len().max(3);
+        let (lo, hi) = (len / 3, 2 * len / 3);
+        let rows: Vec<String> = r
+            .pcie_mbps
+            .iter()
+            .enumerate()
+            .map(|(s, &m)| {
+                format!("{s},{m:.2},{}", r.stall_seconds.contains(&s) as u8)
+            })
+            .collect();
+        ctx.write_csv(
+            &format!("fig4_rocksdb{threads}.csv"),
+            "sec,pcie_mbps,in_stall",
+            &rows,
+        )?;
+        let window: Vec<f64> = r
+            .pcie_mbps
+            .iter()
+            .skip(lo)
+            .take(hi - lo)
+            .copied()
+            .collect();
+        let stall_in_window = r
+            .stall_seconds
+            .iter()
+            .filter(|&&s| s >= lo && s < hi)
+            .count();
+        let peak = window.iter().cloned().fold(0.0f64, f64::max);
+        let idle = window.iter().filter(|&&m| m < 1.0).count();
+        out.push_str(&format!(
+            "  RocksDB({threads}) window {lo}-{hi}s: peak {:.0} MB/s, idle seconds {idle}, stall seconds {stall_in_window}\n",
+            peak
+        ));
+    }
+    out.push_str("  shape check: visible idle gaps inside stall windows (merge phase leaves the link dark)\n");
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 5: CDF of PCIe bandwidth *during write-stall seconds* for
+/// RocksDB(1) and RocksDB(4). Paper: with 1 thread, 30% of stall time has
+/// zero usage and 49% uses >90% of bandwidth.
+pub fn fig5(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 5: CDF of PCIe bandwidth during write stalls ==\n");
+    for threads in [1usize, 4] {
+        let r = ctx.run_fillrandom(SystemKind::RocksDb { slowdown: false }, threads);
+        let samples: Vec<f64> = r
+            .stall_seconds
+            .iter()
+            .filter_map(|&s| r.pcie_mbps.get(s).copied())
+            .collect();
+        // normalize to the observed stall-period peak (the paper uses the
+        // device's 630 MB/s ceiling; our PCIe carries reads faster than
+        // the NAND program path, so the observed peak is the comparable
+        // "available bandwidth" reference)
+        let dev_peak = samples.iter().cloned().fold(1.0f64, f64::max);
+        let thresholds: Vec<f64> = (0..=100).map(|i| dev_peak * i as f64 / 100.0).collect();
+        let curve = cdf(&samples, &thresholds);
+        let rows: Vec<String> = thresholds
+            .iter()
+            .zip(&curve)
+            .map(|(t, c)| format!("{t:.1},{c:.4}"))
+            .collect();
+        ctx.write_csv(&format!("fig5_rocksdb{threads}.csv"), "mbps,cdf", &rows)?;
+        let zero_frac = samples.iter().filter(|&&s| s < 1.0).count() as f64
+            / samples.len().max(1) as f64;
+        let high_frac = samples.iter().filter(|&&s| s > 0.9 * dev_peak).count() as f64
+            / samples.len().max(1) as f64;
+        out.push_str(&format!(
+            "  RocksDB({threads}): {} stall-second samples; zero-usage {:.0}% (paper {}%), >90%-usage {:.0}% (paper {}%)\n",
+            samples.len(),
+            zero_frac * 100.0,
+            if threads == 1 { 30 } else { 21 },
+            high_frac * 100.0,
+            if threads == 1 { 49 } else { 55 },
+        ));
+    }
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 11: per-second write throughput for RocksDB, ADOC, KVACCEL on
+/// workload A — KVACCEL should hold ~full rate where the others slow to
+/// the ~2 Kops/s floor.
+pub fn fig11(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 11: per-second throughput, workload A ==\n");
+    let mut floor = Vec::new();
+    for kind in super::headline_systems() {
+        let r = ctx.run_fillrandom(kind, 4);
+        ctx.write_csv(
+            &format!("fig11_{}.csv", r.system.to_lowercase()),
+            "sec,write_ops",
+            &series_csv(&r),
+        )?;
+        let series = r.writes.ops_per_sec();
+        // low-throughput floor: 5th percentile of non-warmup seconds
+        let mut sorted: Vec<u64> = series.iter().skip(2).copied().collect();
+        sorted.sort_unstable();
+        let p5 = sorted.get(sorted.len() / 20).copied().unwrap_or(0);
+        out.push_str(&format!(
+            "  {:<10} mean {:>8.1} ops/s  5th-pct floor {:>7} ops/s  halts {}\n",
+            r.system,
+            r.writes.mean_ops(),
+            p5,
+            r.stop_events
+        ));
+        floor.push((r.system.clone(), p5));
+    }
+    out.push_str(
+        "  shape check: KVACCEL floor should sit far above the baselines' slowdown floor\n",
+    );
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 12: throughput (a), P99 (b), efficiency (c) for all systems ×
+/// {1,2,4} compaction threads, workload A (KVACCEL write-optimized:
+/// rollback disabled during the run).
+pub fn fig12(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 12: throughput / P99 / efficiency, workload A ==\n");
+    let mut csv = Vec::new();
+    let mut grid: Vec<(String, usize, RunResult)> = Vec::new();
+    for kind in super::headline_systems() {
+        for threads in [1usize, 2, 4] {
+            let r = ctx.run_fillrandom(kind, threads);
+            out.push_str(&format!(
+                "  {:<10}({threads}) {:>8.1} ops/s  P99 {:>10}  CPU {:>5.1}%  eff {:>6.2} MB/s/%\n",
+                r.system,
+                r.write_kops() * 1e3,
+                fmt::nanos(r.write_lat.p99_us * 1e3),
+                r.cpu_percent,
+                r.efficiency
+            ));
+            csv.push(format!(
+                "{},{threads},{:.1},{:.1},{:.2},{:.3}",
+                r.system,
+                r.write_kops() * 1e3,
+                r.write_lat.p99_us,
+                r.cpu_percent,
+                r.efficiency
+            ));
+            grid.push((r.system.clone(), threads, r));
+        }
+    }
+    ctx.write_csv(
+        "fig12.csv",
+        "system,threads,write_ops_s,p99_us,cpu_percent,efficiency",
+        &csv,
+    )?;
+    // headline deltas (paper: KVACCEL up to +37% vs RocksDB, +17% vs ADOC)
+    let find = |name: &str, th: usize| {
+        grid.iter()
+            .find(|(s, t, _)| s == name && *t == th)
+            .map(|(_, _, r)| r)
+    };
+    let mut best_vs_rocks: f64 = 0.0;
+    let mut best_vs_adoc: f64 = 0.0;
+    for th in [1usize, 2, 4] {
+        if let (Some(k), Some(r), Some(a)) =
+            (find("KVACCEL", th), find("RocksDB", th), find("ADOC", th))
+        {
+            best_vs_rocks = best_vs_rocks
+                .max(100.0 * (k.write_kops() - r.write_kops()) / r.write_kops());
+            best_vs_adoc = best_vs_adoc
+                .max(100.0 * (k.write_kops() - a.write_kops()) / a.write_kops());
+        }
+    }
+    out.push_str(&format!(
+        "  KVACCEL max gain: vs RocksDB {best_vs_rocks:+.0}% (paper +37%), vs ADOC {best_vs_adoc:+.0}% (paper +17%)\n",
+    ));
+    if let (Some(k1), Some(a4)) = (find("KVACCEL", 1), find("ADOC", 4)) {
+        out.push_str(&format!(
+            "  KVACCEL(1) {:.1} vs ADOC(4) {:.1} ops/s (paper: comparable)\n",
+            k1.write_kops() * 1e3,
+            a4.write_kops() * 1e3
+        ));
+    }
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 13: read/write throughput for workloads A, B(9:1), C(8:2) across
+/// RocksDB, ADOC, KVACCEL-L, KVACCEL-E (all 4 threads).
+pub fn fig13(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 13: rollback schemes across workloads (4 threads) ==\n");
+    let systems = [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Lazy },
+        SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+    ];
+    let workloads: [(&str, Option<(u64, u64)>); 3] =
+        [("A", None), ("B", Some((9, 1))), ("C", Some((8, 2)))];
+    let mut csv = Vec::new();
+    for (wname, ratio) in workloads {
+        for kind in systems {
+            let r = match ratio {
+                None => ctx.run_fillrandom(kind, 4),
+                Some(rt) => ctx.run_rww(kind, 4, rt),
+            };
+            out.push_str(&format!(
+                "  {wname} {:<10} write {:>8.1} ops/s  read {:>8.1} ops/s  rollbacks {:>4}\n",
+                r.system,
+                r.write_kops() * 1e3,
+                r.read_kops() * 1e3,
+                r.rollbacks
+            ));
+            csv.push(format!(
+                "{wname},{},{:.1},{:.1},{}",
+                r.system,
+                r.write_kops() * 1e3,
+                r.read_kops() * 1e3,
+                r.rollbacks
+            ));
+        }
+    }
+    ctx.write_csv("fig13.csv", "workload,system,write_ops_s,read_ops_s,rollbacks", &csv)?;
+    out.push_str("  shape check: lazy wins writes on A; eager lifts reads on B/C\n");
+    ctx.log(&out);
+    Ok(out)
+}
+
+/// Fig 14: PCIe bandwidth overview, RocksDB(1) vs KVACCEL(1) (the paper
+/// plots log-scale; we emit the series + utilization summary).
+pub fn fig14(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from("== Fig 14: PCIe bandwidth overview (1 thread) ==\n");
+    for kind in [
+        SystemKind::RocksDb { slowdown: false },
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        let r = ctx.run_fillrandom(kind, 1);
+        let rows: Vec<String> = r
+            .pcie_mbps
+            .iter()
+            .enumerate()
+            .map(|(s, &m)| format!("{s},{m:.3}"))
+            .collect();
+        ctx.write_csv(
+            &format!("fig14_{}.csv", r.system.to_lowercase()),
+            "sec,pcie_mbps",
+            &rows,
+        )?;
+        let idle = r.pcie_mbps.iter().filter(|&&m| m < 1.0).count();
+        let mean = r.pcie_mbps.iter().sum::<f64>() / r.pcie_mbps.len().max(1) as f64;
+        out.push_str(&format!(
+            "  {:<10} mean {:>7.1} MB/s  idle seconds {:>4}/{}\n",
+            r.system,
+            mean,
+            idle,
+            r.pcie_mbps.len()
+        ));
+    }
+    out.push_str("  shape check: KVACCEL keeps the link busy where RocksDB goes dark\n");
+    ctx.log(&out);
+    Ok(out)
+}

@@ -1,0 +1,173 @@
+//! Experiment registry: one entry per figure/table of the paper's
+//! evaluation (see DESIGN.md §5 for the index). Each experiment prints
+//! the rows/series the paper reports and writes CSV into `results/`.
+//!
+//! Absolute numbers come from the simulator, not the authors' OpenSSD
+//! testbed; the *shapes* (who wins, by what factor, where crossovers
+//! fall) are the reproduction target — see EXPERIMENTS.md.
+
+pub mod figs;
+pub mod tables;
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::baselines::{System, SystemKind};
+use crate::env::SimEnv;
+use crate::kvaccel::RollbackScheme;
+use crate::lsm::LsmOptions;
+use crate::runtime::{default_artifacts_dir, BloomBuilder, MergeEngine, XlaRuntime};
+use crate::ssd::SsdConfig;
+use crate::workload::{BenchConfig, RunResult};
+
+/// Which merge/bloom engine the systems run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// AOT XLA artifacts via PJRT (the paper-analog offload; default for
+    /// the end-to-end example).
+    Xla,
+    /// Pure-Rust fallback (fast sweeps; bit-identical results).
+    Rust,
+}
+
+pub struct ExpContext {
+    /// 1.0 = the paper's full 600 s runs.
+    pub scale: f64,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    pub engine: EngineMode,
+    runtime: Option<Arc<XlaRuntime>>,
+    pub quiet: bool,
+}
+
+impl ExpContext {
+    pub fn new(scale: f64, seed: u64, engine: EngineMode) -> Result<Self> {
+        let runtime = match engine {
+            EngineMode::Rust => None,
+            EngineMode::Xla => Some(Arc::new(
+                XlaRuntime::load(default_artifacts_dir())
+                    .context("loading AOT artifacts (run `make artifacts`)")?,
+            )),
+        };
+        Ok(Self {
+            scale,
+            seed,
+            out_dir: PathBuf::from("results"),
+            engine,
+            runtime,
+            quiet: false,
+        })
+    }
+
+    pub fn merge_engine(&self) -> MergeEngine {
+        match &self.runtime {
+            Some(rt) => MergeEngine::xla(rt.clone()).expect("runtime has merge artifacts"),
+            None => MergeEngine::rust(),
+        }
+    }
+
+    pub fn bloom_builder(&self) -> BloomBuilder {
+        match &self.runtime {
+            Some(rt) => BloomBuilder::xla(rt.clone()),
+            None => BloomBuilder::rust(),
+        }
+    }
+
+    pub fn bench_config(&self) -> BenchConfig {
+        BenchConfig { seed: self.seed, ..Default::default() }.scaled(self.scale)
+    }
+
+    pub fn build_system(&self, kind: SystemKind, threads: usize) -> (System, SimEnv) {
+        let opts = LsmOptions::default().with_threads(threads);
+        (
+            System::build(kind, opts, self.merge_engine(), self.bloom_builder()),
+            SimEnv::new(self.seed, SsdConfig::default()),
+        )
+    }
+
+    /// Run workload A (fillrandom) on a fresh system.
+    pub fn run_fillrandom(&self, kind: SystemKind, threads: usize) -> RunResult {
+        let (mut sys, mut env) = self.build_system(kind, threads);
+        let cfg = self.bench_config();
+        let mut r = crate::workload::fillrandom(&mut sys, &mut env, &cfg);
+        r.system = kind.label();
+        r
+    }
+
+    /// Run workload B/C (readwhilewriting) on a fresh system.
+    pub fn run_rww(
+        &self,
+        kind: SystemKind,
+        threads: usize,
+        ratio: (u64, u64),
+    ) -> RunResult {
+        let (mut sys, mut env) = self.build_system(kind, threads);
+        let cfg = self.bench_config();
+        let mut r =
+            crate::workload::readwhilewriting(&mut sys, &mut env, &cfg, ratio.0, ratio.1);
+        r.system = kind.label();
+        r
+    }
+
+    pub fn log(&self, msg: impl AsRef<str>) {
+        if !self.quiet {
+            println!("{}", msg.as_ref());
+        }
+    }
+
+    /// Write a CSV into out_dir.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        Ok(path)
+    }
+}
+
+/// Standard system set for the headline comparisons.
+pub fn headline_systems() -> Vec<SystemKind> {
+    vec![
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ]
+}
+
+/// Run one experiment by id. Returns a human summary.
+pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
+    match id {
+        "fig2" => figs::fig2(ctx),
+        "fig3" => figs::fig3(ctx),
+        "fig4" => figs::fig4(ctx),
+        "fig5" => figs::fig5(ctx),
+        "fig11" => figs::fig11(ctx),
+        "fig12" => figs::fig12(ctx),
+        "fig13" => figs::fig13(ctx),
+        "fig14" => figs::fig14(ctx),
+        "table5" => tables::table5(ctx),
+        "table6" => tables::table6(ctx),
+        "all" => {
+            let mut out = String::new();
+            for id in ALL_EXPERIMENTS {
+                out.push_str(&run(ctx, id)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => Err(anyhow!(
+            "unknown experiment {other:?}; known: {ALL_EXPERIMENTS:?} or 'all'"
+        )),
+    }
+}
+
+pub const ALL_EXPERIMENTS: [&str; 10] = [
+    "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
+    "table5", "table6",
+];

@@ -1,0 +1,124 @@
+//! Controller module (paper §V-C): turns Detector reports into per-
+//! operation interface decisions.
+//!
+//! Write path: stall imminent -> Dev-LSM (KV interface); otherwise
+//! Main-LSM (block interface). Read path: Metadata Manager membership
+//! decides. The Controller also refuses to redirect when the KV region
+//! is nearly full (backpressure — the buffer is finite NAND space).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WritePath {
+    Main,
+    Dev,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPath {
+    Main,
+    Dev,
+}
+
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Refuse redirection beyond this KV-region occupancy.
+    pub max_kv_occupancy: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self { max_kv_occupancy: 0.9 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ControllerStats {
+    pub writes_to_main: u64,
+    pub writes_to_dev: u64,
+    pub reads_from_main: u64,
+    pub reads_from_dev: u64,
+    pub redirect_refusals: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct Controller {
+    pub cfg: ControllerConfig,
+    pub stats: ControllerStats,
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        Self { cfg, stats: ControllerStats::default() }
+    }
+
+    /// Decide the write path from the Detector's report.
+    pub fn write_path(&mut self, stall_imminent: bool, kv_occupancy: f64) -> WritePath {
+        if stall_imminent {
+            if kv_occupancy < self.cfg.max_kv_occupancy {
+                self.stats.writes_to_dev += 1;
+                return WritePath::Dev;
+            }
+            self.stats.redirect_refusals += 1;
+        }
+        self.stats.writes_to_main += 1;
+        WritePath::Main
+    }
+
+    /// Decide the read path from metadata membership.
+    pub fn read_path(&mut self, key_in_dev: bool) -> ReadPath {
+        if key_in_dev {
+            self.stats.reads_from_dev += 1;
+            ReadPath::Dev
+        } else {
+            self.stats.reads_from_main += 1;
+            ReadPath::Main
+        }
+    }
+
+    /// Redirection ratio so far (reporting).
+    pub fn redirect_fraction(&self) -> f64 {
+        let total = self.stats.writes_to_main + self.stats.writes_to_dev;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.writes_to_dev as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_by_stall_signal() {
+        let mut c = Controller::default();
+        assert_eq!(c.write_path(false, 0.0), WritePath::Main);
+        assert_eq!(c.write_path(true, 0.0), WritePath::Dev);
+        assert_eq!(c.stats.writes_to_main, 1);
+        assert_eq!(c.stats.writes_to_dev, 1);
+    }
+
+    #[test]
+    fn backpressure_refuses_redirect() {
+        let mut c = Controller::default();
+        assert_eq!(c.write_path(true, 0.95), WritePath::Main);
+        assert_eq!(c.stats.redirect_refusals, 1);
+    }
+
+    #[test]
+    fn read_path_follows_metadata() {
+        let mut c = Controller::default();
+        assert_eq!(c.read_path(true), ReadPath::Dev);
+        assert_eq!(c.read_path(false), ReadPath::Main);
+    }
+
+    #[test]
+    fn redirect_fraction_math() {
+        let mut c = Controller::default();
+        c.write_path(true, 0.0);
+        c.write_path(false, 0.0);
+        c.write_path(false, 0.0);
+        c.write_path(true, 0.0);
+        assert!((c.redirect_fraction() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! KVACCEL software modules (paper §V): Detector, Controller, Metadata
+//! Manager, Rollback Manager, the dual-interface range query, and the
+//! assembled `KvaccelDb`.
+
+pub mod controller;
+pub mod db;
+pub mod detector;
+pub mod metadata;
+pub mod range_query;
+pub mod rollback;
+
+pub use controller::{Controller, ControllerConfig, ReadPath, WritePath};
+pub use db::{KvaccelConfig, KvaccelDb};
+pub use detector::{Detector, DetectorConfig, DetectorSample};
+pub use metadata::{MetadataConfig, MetadataManager};
+pub use range_query::{AggregatedScan, DevIterator};
+pub use rollback::{RollbackConfig, RollbackManager, RollbackScheme};

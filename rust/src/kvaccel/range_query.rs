@@ -1,0 +1,308 @@
+//! Range query support (paper §V-F, Fig 10): one iterator per interface,
+//! aggregated by a comparator that switches between them as key order
+//! dictates. The Dev-LSM iterator has no read cache — every few Next()s
+//! cross a NAND page, which is exactly the Table V performance gap.
+
+use std::sync::Arc;
+
+use crate::env::SimEnv;
+use crate::lsm::entry::{Entry, Key};
+use crate::sim::Nanos;
+use crate::ssd::devlsm::DevSnapshot;
+use crate::ssd::kv_if::NamespaceId;
+
+/// Host-side cursor over a Dev-LSM snapshot (SEEK + NEXT through the KV
+/// interface). Charges a device page read per run on seek and an
+/// amortized page read while scanning.
+pub struct DevIterator {
+    ns: NamespaceId,
+    runs: Vec<Arc<Vec<Entry>>>,
+    idx: Vec<usize>,
+    /// entries per NAND page (amortized read granularity)
+    entries_per_page: usize,
+    nexts_since_read: usize,
+}
+
+impl DevIterator {
+    pub fn new(ns: NamespaceId, snap: DevSnapshot, page_bytes: u64, avg_entry: u64) -> Self {
+        let n = snap.runs.len();
+        Self {
+            ns,
+            runs: snap.runs,
+            idx: vec![0; n],
+            entries_per_page: (page_bytes / avg_entry.max(1)).max(1) as usize,
+            nexts_since_read: 0,
+        }
+    }
+
+    /// SEEK: position every run at the first key >= `key`. Each NAND run
+    /// pays one page read (the device walks its run index).
+    pub fn seek(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        let mut t = at;
+        for (i, run) in self.runs.iter().enumerate() {
+            self.idx[i] = run.partition_point(|e| e.key < key);
+            if i > 0 && !run.is_empty() {
+                // run 0 is the device memtable (DRAM) — no NAND read
+                t = env.device.kv_iter_page_read(t);
+            }
+        }
+        let _ = self.ns;
+        t
+    }
+
+    fn peek(&self) -> Option<(usize, Entry)> {
+        let mut best: Option<(usize, Entry)> = None;
+        for (i, run) in self.runs.iter().enumerate() {
+            if let Some(&e) = run.get(self.idx[i]) {
+                match best {
+                    None => best = Some((i, e)),
+                    // strictly-less keeps the newest (lowest run idx) on ties
+                    Some((_, b)) if e.key < b.key => best = Some((i, e)),
+                    _ => {}
+                }
+            }
+        }
+        best
+    }
+
+    /// Current head without advancing (comparator input).
+    pub fn peek_key(&self) -> Option<Key> {
+        self.peek().map(|(_, e)| e.key)
+    }
+
+    /// NEXT: return the next entry (newest version per key), charging an
+    /// amortized NAND page read.
+    pub fn next(&mut self, env: &mut SimEnv, at: Nanos) -> (Option<Entry>, Nanos) {
+        let Some((_, entry)) = self.peek() else { return (None, at) };
+        // advance all runs past this key (dedup older versions)
+        for (i, run) in self.runs.iter().enumerate() {
+            while run
+                .get(self.idx[i])
+                .map(|e| e.key == entry.key)
+                .unwrap_or(false)
+            {
+                self.idx[i] += 1;
+            }
+        }
+        let mut t = at;
+        self.nexts_since_read += 1;
+        if self.nexts_since_read >= self.entries_per_page {
+            self.nexts_since_read = 0;
+            t = env.device.kv_iter_page_read(t);
+        }
+        (Some(entry), t)
+    }
+}
+
+/// The aggregated dual-interface range scan (Fig 10): Seek both, then
+/// repeatedly emit from whichever iterator holds the smaller key,
+/// switching iterators at crossover points. The Metadata Manager is the
+/// recency authority across interfaces: a Dev-LSM entry is live only if
+/// the metadata table still routes its key to the device — otherwise a
+/// newer Main-LSM write superseded it and the device copy is stale
+/// (awaiting the next rollback's reset).
+pub struct AggregatedScan<'a> {
+    pub main: crate::lsm::iterator::LsmIterator,
+    pub dev: &'a mut DevIterator,
+    meta: &'a super::metadata::MetadataManager,
+    main_head: Option<Entry>,
+}
+
+impl<'a> AggregatedScan<'a> {
+    pub fn new(
+        mut main: crate::lsm::iterator::LsmIterator,
+        dev: &'a mut DevIterator,
+        meta: &'a super::metadata::MetadataManager,
+        env: &mut SimEnv,
+        at: Nanos,
+        start: Key,
+    ) -> (Self, Nanos) {
+        main.seek(start);
+        let t = dev.seek(env, at, start);
+        let main_head = main.next();
+        (Self { main, dev, meta, main_head }, t)
+    }
+
+    /// Produce the next merged entry; returns (entry, blocks_touched_in_main, time).
+    pub fn next(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> (Option<Entry>, Vec<(u64, usize)>, Nanos) {
+        let mut t = at;
+        loop {
+            let dev_key = self.dev.peek_key();
+            let main_key = self.main_head.map(|e| e.key);
+            match (dev_key, main_key) {
+                (None, None) => return (None, self.main.drain_blocks(), t),
+                // dev head is at or before main head
+                (Some(d), m) if m.map_or(true, |mk| d <= mk) => {
+                    let dev_live = self.meta.contains(d);
+                    let (e, nt) = self.dev.next(env, t);
+                    t = nt;
+                    let e = e.expect("peeked dev entry must exist");
+                    if !dev_live {
+                        // stale device copy: a newer Main-LSM write owns
+                        // this key; let the main side emit it.
+                        continue;
+                    }
+                    // dev copy is the newest: drop the superseded main copy
+                    if Some(d) == m {
+                        self.main_head = self.main.next();
+                    }
+                    if e.val.is_tombstone() {
+                        // live deletion buffered in the device
+                        continue;
+                    }
+                    return (Some(e), self.main.drain_blocks(), t);
+                }
+                _ => {
+                    let e = self.main_head.take();
+                    self.main_head = self.main.next();
+                    return (e, self.main.drain_blocks(), t);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::entry::ValueDesc;
+    use crate::lsm::iterator::LsmIterator;
+    use crate::ssd::SsdConfig;
+
+    fn env() -> SimEnv {
+        SimEnv::new(11, SsdConfig::default())
+    }
+
+    /// metadata table routing every listed key to the device
+    fn meta_with(keys: &[Key]) -> crate::kvaccel::MetadataManager {
+        let mut m = crate::kvaccel::MetadataManager::new(Default::default());
+        let entries: Vec<Entry> = keys
+            .iter()
+            .map(|&k| Entry::new(k, 1, ValueDesc::new(k, 8)))
+            .collect();
+        m.rebuild_from(&entries);
+        m
+    }
+
+    fn e(k: Key, s: u32) -> Entry {
+        Entry::new(k, s, ValueDesc::new(s, 64))
+    }
+
+    fn dev_iter(env: &mut SimEnv, keys: &[(Key, u32)]) -> DevIterator {
+        let mut t = 0;
+        for &(k, s) in keys {
+            t = env.device.kv_put(0, t, e(k, s)).unwrap();
+        }
+        let snap = env.device.kv_snapshot(0).unwrap();
+        DevIterator::new(0, snap, 16 * 1024, 4112)
+    }
+
+    #[test]
+    fn dev_iterator_orders_and_dedups() {
+        let mut env = env();
+        let mut it = dev_iter(&mut env, &[(5, 1), (1, 1), (9, 1), (5, 7)]);
+        it.seek(&mut env, 0, 0);
+        let mut got = Vec::new();
+        let mut t = 0;
+        while let (Some(x), nt) = it.next(&mut env, t) {
+            got.push((x.key, x.seq));
+            t = nt;
+        }
+        assert_eq!(got, vec![(1, 1), (5, 7), (9, 1)]);
+    }
+
+    #[test]
+    fn dev_seek_positions_midway() {
+        let mut env = env();
+        let mut it = dev_iter(&mut env, &[(1, 1), (5, 1), (9, 1)]);
+        it.seek(&mut env, 0, 4);
+        assert_eq!(it.peek_key(), Some(5));
+    }
+
+    #[test]
+    fn aggregated_scan_interleaves_sources() {
+        let mut env = env();
+        // dev holds 2, 6; main holds 1, 4, 9
+        let mut dev = dev_iter(&mut env, &[(2, 10), (6, 10)]);
+        let meta = meta_with(&[2, 6]);
+        let main = LsmIterator::new(vec![e(1, 1), e(4, 1), e(9, 1)], vec![], vec![], vec![]);
+        let (mut scan, t0) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
+        let mut keys = Vec::new();
+        let mut t = t0;
+        loop {
+            let (x, _blocks, nt) = scan.next(&mut env, t);
+            t = nt;
+            match x {
+                Some(x) => keys.push(x.key),
+                None => break,
+            }
+        }
+        assert_eq!(keys, vec![1, 2, 4, 6, 9]);
+    }
+
+    #[test]
+    fn dev_wins_on_duplicate_key() {
+        let mut env = env();
+        let mut dev = dev_iter(&mut env, &[(4, 99)]);
+        let meta = meta_with(&[4]);
+        let main = LsmIterator::new(vec![e(4, 1), e(5, 1)], vec![], vec![], vec![]);
+        let (mut scan, t0) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
+        let (x, _, t) = scan.next(&mut env, t0);
+        assert_eq!(x.unwrap().seq, 99, "dev (redirected, newest) must win");
+        let (y, _, _) = scan.next(&mut env, t);
+        assert_eq!(y.unwrap().key, 5, "main's stale copy skipped");
+    }
+
+    #[test]
+    fn stale_dev_copy_loses_to_newer_main_write() {
+        // dev holds key 4, but metadata says main owns it now
+        let mut env = env();
+        let mut dev = dev_iter(&mut env, &[(4, 1)]);
+        let meta = meta_with(&[]);
+        let main = LsmIterator::new(vec![e(4, 50), e(5, 1)], vec![], vec![], vec![]);
+        let (mut scan, t0) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
+        let (x, _, t) = scan.next(&mut env, t0);
+        assert_eq!(x.unwrap().seq, 50, "main's newer copy must win");
+        let (y, _, _) = scan.next(&mut env, t);
+        assert_eq!(y.unwrap().key, 5);
+    }
+
+    #[test]
+    fn dev_tombstone_hides_older_main_copy() {
+        let mut env = env();
+        let mut t0 = 0;
+        t0 = env
+            .device
+            .kv_put(0, t0, Entry::new(4, 9, ValueDesc::TOMBSTONE))
+            .unwrap();
+        let _ = t0;
+        let snap = env.device.kv_snapshot(0).unwrap();
+        let mut dev = DevIterator::new(0, snap, 16 * 1024, 4112);
+        let meta = meta_with(&[4]);
+        let main = LsmIterator::new(vec![e(4, 2), e(5, 1)], vec![], vec![], vec![]);
+        let (mut scan, t) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
+        let (x, _, _) = scan.next(&mut env, t);
+        assert_eq!(x.unwrap().key, 5, "deleted key must not appear");
+    }
+
+    #[test]
+    fn dev_nexts_charge_device_reads() {
+        let mut env = env();
+        let pairs: Vec<(Key, u32)> = (0..40).map(|k| (k, 1)).collect();
+        let mut it = dev_iter(&mut env, &pairs);
+        // force data into NAND runs so reads are charged
+        env.device.kv.ns_mut(0).unwrap().flush(0, &mut env.device.nand, &mut env.device.ftl).ok();
+        let t0 = it.seek(&mut env, 0, 0);
+        let mut t = t0;
+        for _ in 0..40 {
+            let (x, nt) = it.next(&mut env, t);
+            assert!(x.is_some());
+            t = nt;
+        }
+        assert!(t > t0, "page-crossing nexts must cost device time");
+    }
+}

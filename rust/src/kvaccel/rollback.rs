@@ -1,0 +1,239 @@
+//! Rollback Manager (paper §V-E): aggregates the two LSMs back into one
+//! by draining the Dev-LSM through the in-device iterator-based bulky
+//! range scan, DMA-ing 512 KB chunks to host memory, merging into the
+//! Main-LSM, and finally resetting the Dev-LSM.
+//!
+//! Scheduling schemes (paper): **eager** triggers as soon as the Detector
+//! reports calm and the Dev-LSM is non-empty (read-oriented workloads);
+//! **lazy** waits for a sustained quiet period or KV-region pressure
+//! (write-intensive workloads).
+
+use anyhow::Result;
+
+use crate::env::SimEnv;
+use crate::lsm::LsmDb;
+use crate::sim::{CpuClass, Nanos};
+use crate::ssd::kv_if::NamespaceId;
+
+use super::detector::Detector;
+use super::metadata::MetadataManager;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RollbackScheme {
+    Eager,
+    Lazy,
+    /// Never roll back during the run (the paper's write-optimized
+    /// workload-A configuration; a final rollback runs at `finish`).
+    Disabled,
+}
+
+#[derive(Clone, Debug)]
+pub struct RollbackConfig {
+    pub scheme: RollbackScheme,
+    /// Lazy: consecutive calm detector ticks before rolling back.
+    pub lazy_quiet_ticks: u64,
+    /// Lazy: KV-region occupancy fraction that forces a rollback.
+    pub lazy_occupancy_limit: f64,
+    /// Host CPU per merged-back entry.
+    pub merge_cpu_ns_per_entry: Nanos,
+}
+
+impl Default for RollbackConfig {
+    fn default() -> Self {
+        Self {
+            scheme: RollbackScheme::Eager,
+            lazy_quiet_ticks: 50, // 5 s of calm at the 0.1 s tick
+            lazy_occupancy_limit: 0.5,
+            merge_cpu_ns_per_entry: 1_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RollbackStats {
+    pub rollbacks: u64,
+    pub entries_returned: u64,
+    pub entries_stale_skipped: u64,
+    pub total_rollback_ns: Nanos,
+    pub last_completion: Nanos,
+}
+
+#[derive(Debug)]
+pub struct RollbackManager {
+    pub cfg: RollbackConfig,
+    /// completion horizon of an in-flight rollback (no re-trigger before).
+    in_flight_until: Nanos,
+    pub stats: RollbackStats,
+}
+
+impl RollbackManager {
+    pub fn new(cfg: RollbackConfig) -> Self {
+        Self { cfg, in_flight_until: 0, stats: RollbackStats::default() }
+    }
+
+    /// Should a rollback start now? Consulted on detector ticks.
+    pub fn should_rollback(
+        &self,
+        at: Nanos,
+        detector: &Detector,
+        dev_empty: bool,
+        kv_occupancy: f64,
+    ) -> bool {
+        if dev_empty || at < self.in_flight_until || detector.stall_imminent() {
+            return false;
+        }
+        match self.cfg.scheme {
+            RollbackScheme::Eager => true,
+            RollbackScheme::Lazy => {
+                detector.calm_ticks >= self.cfg.lazy_quiet_ticks
+                    || kv_occupancy >= self.cfg.lazy_occupancy_limit
+            }
+            RollbackScheme::Disabled => false,
+        }
+    }
+
+    /// Execute one rollback (paper Fig 9):
+    ///  3-4: device iterator scans the whole Dev-LSM;
+    ///  5-6: bulk-serialized pairs DMA to host in 512 KB chunks;
+    ///  7:   host merges them into the Main-LSM (stale pairs — already
+    ///       superseded by newer Main-LSM writes per the Metadata Manager
+    ///       — are dropped);
+    ///  8:   Dev-LSM reset + metadata cleared.
+    ///
+    /// Runs as a detached background activity in virtual time: device and
+    /// CPU costs are charged, Main-LSM state changes apply immediately,
+    /// and the foreground is not blocked (`at` is not advanced for the
+    /// caller). Returns the completion horizon.
+    pub fn perform(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        ns: NamespaceId,
+        main: &mut LsmDb,
+        metadata: &mut MetadataManager,
+    ) -> Result<Nanos> {
+        self.stats.rollbacks += 1;
+        let (entries, dma_done) = env.device.kv_bulk_scan(ns, at)?;
+        let mut t = dma_done;
+        let mut returned = 0u64;
+        for e in &entries {
+            // step 7 filter: only keys the metadata manager still routes
+            // to the Dev-LSM are live; the rest were overwritten in main.
+            if !metadata.contains(e.key) {
+                self.stats.entries_stale_skipped += 1;
+                continue;
+            }
+            returned += 1;
+            env.cpu.charge(CpuClass::Kvaccel, t, self.cfg.merge_cpu_ns_per_entry);
+            t = main.put_internal(env, t, e.key, e.val);
+        }
+        let reset_done = env.device.kv_reset(ns, t)?;
+        metadata.clear();
+        self.stats.entries_returned += returned;
+        let end = reset_done.max(t);
+        self.stats.total_rollback_ns += end.saturating_sub(at);
+        self.stats.last_completion = end;
+        self.in_flight_until = end;
+        Ok(end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvaccel::detector::DetectorConfig;
+    use crate::lsm::{Entry, LsmOptions, ValueDesc};
+    use crate::runtime::{BloomBuilder, MergeEngine};
+    use crate::ssd::SsdConfig;
+
+    fn rig() -> (LsmDb, SimEnv, Detector, MetadataManager, RollbackManager) {
+        (
+            LsmDb::new(
+                LsmOptions::small_for_test(),
+                MergeEngine::rust(),
+                BloomBuilder::rust(),
+            ),
+            SimEnv::new(5, SsdConfig::default()),
+            Detector::new(DetectorConfig::default()),
+            MetadataManager::new(Default::default()),
+            RollbackManager::new(RollbackConfig::default()),
+        )
+    }
+
+    fn dev_put(env: &mut SimEnv, meta: &mut MetadataManager, k: u32, seq: u32) {
+        let e = Entry::new(k, seq, ValueDesc::new(k + seq, 512));
+        env.device.kv_put(0, 0, e).unwrap();
+        meta.insert(env, 0, k);
+    }
+
+    #[test]
+    fn rollback_moves_entries_to_main() {
+        let (mut main, mut env, mut det, mut meta, mut rb) = rig();
+        for k in 0..20u32 {
+            dev_put(&mut env, &mut meta, k, k + 1);
+        }
+        det.sample(&mut env, 0, &main);
+        assert!(rb.should_rollback(0, &det, env.device.kv_is_empty(0), 0.0));
+        let end = rb.perform(&mut env, 0, 0, &mut main, &mut meta).unwrap();
+        assert!(end > 0);
+        assert!(env.device.kv_is_empty(0));
+        assert!(meta.is_empty());
+        for k in 0..20u32 {
+            let (v, _) = main.get(&mut env, end, k);
+            assert_eq!(v, Some(ValueDesc::new(k + k + 1, 512)), "key {k}");
+        }
+        assert_eq!(rb.stats.entries_returned, 20);
+    }
+
+    #[test]
+    fn stale_entries_skipped() {
+        let (mut main, mut env, _det, mut meta, mut rb) = rig();
+        dev_put(&mut env, &mut meta, 1, 1);
+        dev_put(&mut env, &mut meta, 2, 1);
+        // key 1 later overwritten in main: metadata record removed
+        main.put(&mut env, 0, 1, ValueDesc::new(999, 512));
+        meta.delete(&mut env, 0, 1);
+        let end = rb.perform(&mut env, 0, 0, &mut main, &mut meta).unwrap();
+        let (v1, _) = main.get(&mut env, end, 1);
+        assert_eq!(v1, Some(ValueDesc::new(999, 512)), "stale dev copy must not win");
+        let (v2, _) = main.get(&mut env, end, 2);
+        assert_eq!(v2, Some(ValueDesc::new(3, 512)));
+        assert_eq!(rb.stats.entries_stale_skipped, 1);
+    }
+
+    #[test]
+    fn schemes_gate_triggering() {
+        let (main, mut env, mut det, _meta, _rb) = rig();
+        det.sample(&mut env, 0, &main);
+        let eager = RollbackManager::new(RollbackConfig {
+            scheme: RollbackScheme::Eager,
+            ..Default::default()
+        });
+        let lazy = RollbackManager::new(RollbackConfig {
+            scheme: RollbackScheme::Lazy,
+            lazy_quiet_ticks: 100,
+            ..Default::default()
+        });
+        let off = RollbackManager::new(RollbackConfig {
+            scheme: RollbackScheme::Disabled,
+            ..Default::default()
+        });
+        assert!(eager.should_rollback(0, &det, false, 0.0));
+        assert!(!lazy.should_rollback(0, &det, false, 0.0), "lazy needs quiet");
+        assert!(lazy.should_rollback(0, &det, false, 0.9), "occupancy forces lazy");
+        assert!(!off.should_rollback(0, &det, false, 0.9));
+        // nothing to do when dev empty
+        assert!(!eager.should_rollback(0, &det, true, 0.0));
+    }
+
+    #[test]
+    fn no_retrigger_while_in_flight() {
+        let (mut main, mut env, mut det, mut meta, mut rb) = rig();
+        dev_put(&mut env, &mut meta, 1, 1);
+        det.sample(&mut env, 0, &main);
+        let end = rb.perform(&mut env, 0, 0, &mut main, &mut meta).unwrap();
+        dev_put(&mut env, &mut meta, 2, 2);
+        assert!(!rb.should_rollback(end - 1, &det, false, 0.0));
+        assert!(rb.should_rollback(end, &det, false, 0.0));
+    }
+}

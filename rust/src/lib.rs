@@ -1,0 +1,35 @@
+//! KVACCEL — reproduction of "A Host-SSD Collaborative Write Accelerator
+//! for LSM-Tree-Based Key-Value Stores" (CS.AR 2024).
+//!
+//! Three-layer architecture:
+//! - **L3 (this crate)**: the paper's contribution — Detector / Controller /
+//!   Metadata Manager / Rollback Manager on top of a from-scratch
+//!   RocksDB-like LSM engine and a dual-interface SSD simulator; plus the
+//!   RocksDB-slowdown and ADOC baselines and the full evaluation harness.
+//! - **L2/L1 (python/compile, build time only)**: the compaction-merge and
+//!   bloom-build compute graphs (JAX + Pallas), AOT-lowered to HLO text.
+//! - **runtime**: PJRT loader executing those artifacts from the Rust
+//!   compaction hot path.
+//!
+//! See DESIGN.md for the module inventory and the per-experiment index.
+
+pub mod env;
+pub mod runtime;
+
+pub mod sim;
+
+pub mod ssd;
+
+pub mod lsm;
+
+pub mod kvaccel;
+
+pub mod baselines;
+
+pub mod workload;
+
+pub mod experiments;
+
+pub mod bench_util;
+
+pub mod util;

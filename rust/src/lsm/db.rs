@@ -1,0 +1,841 @@
+//! The Main-LSM engine: RocksDB-shaped put/get/scan over the block
+//! interface, with flush + leveled compaction running on modeled
+//! background threads and RocksDB's stall/slowdown state machine.
+//!
+//! All timing is virtual: operations take an explicit issue time `at` and
+//! return completion times; background jobs are computed eagerly (inputs
+//! pinned at schedule, real merge executed through the MergeEngine) and
+//! their *effects* apply when the clock catches up to their end.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::env::SimEnv;
+use crate::runtime::{BloomBuilder, MergeEngine};
+use crate::sim::{CpuClass, Nanos, ThreadPool};
+use crate::util::LruCache;
+
+use super::compaction::{concat_inputs, run_merge, shape_of};
+use super::entry::{Entry, Key, Seq, ValueDesc};
+use super::iterator::LsmIterator;
+use super::memtable::Memtable;
+use super::options::LsmOptions;
+use super::stall::{evaluate, StallStats, WriteCondition};
+use super::version::Version;
+use super::wal::Wal;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PutResult {
+    pub done: Nanos,
+    /// time spent blocked in a hard write stall
+    pub stalled_ns: Nanos,
+    /// slowdown sleep injected into this put
+    pub delayed_ns: Nanos,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct DbStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub get_hits: u64,
+    pub flush_count: u64,
+    pub compaction_count: u64,
+    pub bytes_flushed: u64,
+    pub bytes_compacted_read: u64,
+    pub bytes_compacted_written: u64,
+    pub user_bytes_written: u64,
+    /// force-released stalls with no background job to wait for (should
+    /// stay 0; counted instead of deadlocking)
+    pub stall_anomalies: u64,
+}
+
+impl DbStats {
+    /// Total write amplification (flushed + compacted) / user bytes.
+    pub fn write_amplification(&self) -> f64 {
+        if self.user_bytes_written == 0 {
+            return 0.0;
+        }
+        (self.bytes_flushed + self.bytes_compacted_written) as f64
+            / self.user_bytes_written as f64
+    }
+}
+
+enum JobKind {
+    Flush {
+        sst: Arc<super::sst::Sst>,
+        max_seq: Seq,
+    },
+    Compaction {
+        level: usize,
+        removed: HashSet<u64>,
+        removed_files: Vec<crate::ssd::block_if::FileId>,
+        outputs: Vec<Arc<super::sst::Sst>>,
+        read_bytes: u64,
+        write_bytes: u64,
+    },
+}
+
+struct PendingJob {
+    end: Nanos,
+    kind: JobKind,
+}
+
+pub struct LsmDb {
+    pub opts: LsmOptions,
+    engine: MergeEngine,
+    bloom: BloomBuilder,
+
+    mem: Memtable,
+    imms: VecDeque<Memtable>, // oldest at front
+    version: Version,
+    wal: Wal,
+    seq: Seq,
+    next_sst_id: u64,
+
+    flush_free_at: Nanos,
+    pool: ThreadPool,
+    pending: Vec<PendingJob>,
+    busy: HashSet<u64>,
+    inflight_flushes: usize,
+    inflight_compactions: usize,
+
+    cache: LruCache<(u64, usize), ()>,
+
+    pub stall: StallStats,
+    pub stats: DbStats,
+}
+
+impl LsmDb {
+    pub fn new(opts: LsmOptions, engine: MergeEngine, bloom: BloomBuilder) -> Self {
+        Self {
+            pool: ThreadPool::new(opts.compaction_threads),
+            cache: LruCache::new(opts.block_cache_blocks),
+            version: Version::new(opts.num_levels),
+            engine,
+            bloom,
+            mem: Memtable::new(),
+            imms: VecDeque::new(),
+            wal: Wal::new(),
+            seq: 0,
+            next_sst_id: 1,
+            flush_free_at: 0,
+            pending: Vec::new(),
+            busy: HashSet::new(),
+            inflight_flushes: 0,
+            inflight_compactions: 0,
+            stall: StallStats::default(),
+            stats: DbStats::default(),
+            opts,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Introspection (Detector inputs + tests)
+    // -----------------------------------------------------------------
+
+    pub fn l0_count(&self) -> usize {
+        self.version.l0_count()
+    }
+
+    pub fn imm_count(&self) -> usize {
+        self.imms.len()
+    }
+
+    pub fn memtable_bytes(&self) -> u64 {
+        self.mem.approximate_bytes()
+    }
+
+    pub fn pending_compaction_bytes(&self) -> u64 {
+        self.version.pending_compaction_bytes(&self.opts)
+    }
+
+    pub fn version(&self) -> &Version {
+        &self.version
+    }
+
+    pub fn last_seq(&self) -> Seq {
+        self.seq
+    }
+
+    pub fn has_pending_jobs(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Current write condition from live signals (what the paper's
+    /// Detector samples every 0.1 s).
+    pub fn write_condition(&self) -> WriteCondition {
+        evaluate(
+            self.version.l0_count(),
+            self.imms.len(),
+            self.mem.approximate_bytes() >= self.opts.write_buffer_size,
+            self.version.pending_compaction_bytes(&self.opts),
+            &self.opts,
+        )
+    }
+
+    /// ADOC-style dynamic reconfiguration hooks.
+    pub fn set_compaction_threads(&mut self, n: usize) {
+        self.pool.set_threads(n);
+    }
+
+    pub fn set_write_buffer_size(&mut self, bytes: u64) {
+        self.opts.write_buffer_size = bytes;
+    }
+
+    pub fn compaction_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    // -----------------------------------------------------------------
+    // Background machinery
+    // -----------------------------------------------------------------
+
+    /// Apply every finished background job with end <= `at`.
+    pub fn catch_up(&mut self, env: &mut SimEnv, at: Nanos) {
+        loop {
+            let idx = self
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| j.end <= at)
+                .min_by_key(|(_, j)| j.end)
+                .map(|(i, _)| i);
+            let Some(idx) = idx else { break };
+            let job = self.pending.swap_remove(idx);
+            let end = job.end;
+            self.complete(env, job);
+            self.maybe_schedule(env, end);
+        }
+    }
+
+    fn complete(&mut self, env: &mut SimEnv, job: PendingJob) {
+        match job.kind {
+            JobKind::Flush { sst, max_seq } => {
+                self.stats.flush_count += 1;
+                self.stats.bytes_flushed += sst.bytes;
+                self.version.add_l0(sst);
+                self.imms.pop_front();
+                self.inflight_flushes -= 1;
+                self.wal.release_upto(max_seq);
+            }
+            JobKind::Compaction {
+                level,
+                removed,
+                removed_files,
+                outputs,
+                read_bytes,
+                write_bytes,
+            } => {
+                self.stats.compaction_count += 1;
+                self.stats.bytes_compacted_read += read_bytes;
+                self.stats.bytes_compacted_written += write_bytes;
+                for id in &removed {
+                    self.busy.remove(id);
+                }
+                self.version.apply_compaction(level, &removed, outputs);
+                for f in removed_files {
+                    // files may already be gone in pathological shutdowns
+                    let _ = env.device.delete_file(f);
+                }
+                self.inflight_compactions -= 1;
+            }
+        }
+    }
+
+    /// Schedule any newly-possible background work as of time `now`.
+    pub fn maybe_schedule(&mut self, env: &mut SimEnv, now: Nanos) {
+        // flushes: one job per unscheduled immutable memtable
+        while self.inflight_flushes < self.imms.len() {
+            let imm_idx = self.inflight_flushes;
+            let entries = self.imms[imm_idx].to_entries();
+            let max_seq = self.imms[imm_idx].max_seq;
+            if entries.is_empty() {
+                // empty imm: drop it synchronously
+                self.imms.remove(imm_idx);
+                continue;
+            }
+            self.schedule_flush(env, now, entries, max_seq)
+                .expect("flush scheduling failed");
+        }
+        // compactions: fill the pool
+        while self.inflight_compactions < self.pool.threads() {
+            let Some(pick) = self.version.pick_compaction(&self.opts, &self.busy)
+            else {
+                break;
+            };
+            self.schedule_compaction(env, now, pick)
+                .expect("compaction scheduling failed");
+        }
+    }
+
+    fn schedule_flush(
+        &mut self,
+        env: &mut SimEnv,
+        now: Nanos,
+        entries: Vec<Entry>,
+        max_seq: Seq,
+    ) -> Result<()> {
+        let start = self.flush_free_at.max(now);
+        let n = entries.len() as u64;
+        let cpu = n * self.opts.flush_cpu_ns_per_entry;
+        env.cpu.charge(CpuClass::Flush, start, cpu);
+        let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        let (file, io_done) = env.device.write_file_priority(start + cpu, bytes)?;
+        let id = self.next_sst_id;
+        self.next_sst_id += 1;
+        let bits = self.opts.bloom_bits_for(entries.len());
+        let sst = Arc::new(super::sst::Sst::build(
+            id,
+            file,
+            entries,
+            &self.bloom,
+            self.opts.bloom_probes,
+            bits,
+            self.opts.block_bytes,
+        )?);
+        let end = io_done;
+        self.flush_free_at = end;
+        self.inflight_flushes += 1;
+        self.pending.push(PendingJob { end, kind: JobKind::Flush { sst, max_seq } });
+        Ok(())
+    }
+
+    fn schedule_compaction(
+        &mut self,
+        env: &mut SimEnv,
+        now: Nanos,
+        pick: super::version::CompactionPick,
+    ) -> Result<()> {
+        let (thread, start) = self.pool.reserve(now);
+        for id in pick.all_ids() {
+            self.busy.insert(id);
+        }
+        // phase 1: read inputs (NAND + PCIe d2h)
+        let mut read_done = start;
+        let mut read_bytes = 0u64;
+        for sst in pick.inputs.iter().chain(&pick.targets) {
+            read_done = read_done.max(env.device.read_file(start, sst.file, sst.bytes));
+            read_bytes += sst.bytes;
+        }
+        // phase 2: merge on the compaction thread (no device traffic —
+        // this is the PCIe gap of Fig 4). L0->L1 is key-range-split
+        // across the pool (RocksDB's max_subcompactions): total CPU work
+        // is unchanged but wall time shrinks with thread count — this is
+        // how compaction threads buy throughput in the paper's Fig 12.
+        let entries = concat_inputs(&pick);
+        let merge_cpu = entries.len() as u64 * self.opts.merge_cpu_ns_per_entry;
+        env.cpu.charge(CpuClass::Compaction, read_done, merge_cpu);
+        let subcompactions = if pick.level == 0 {
+            self.pool.threads() as u64
+        } else {
+            1
+        };
+        let merge_done = read_done + merge_cpu / subcompactions;
+        let drop_tombstones = pick.level + 2 >= self.opts.num_levels;
+        let output_sets = run_merge(
+            &entries,
+            &self.engine,
+            self.opts.target_file_size,
+            drop_tombstones,
+        )?;
+        // phase 3: write outputs
+        let shape = shape_of(&pick, &output_sets);
+        let mut outputs = Vec::with_capacity(output_sets.len());
+        let mut write_done = merge_done;
+        for set in output_sets {
+            let bytes: u64 = set.iter().map(|e| e.encoded_len()).sum();
+            let (file, done) = env.device.write_file(merge_done, bytes)?;
+            write_done = write_done.max(done);
+            let id = self.next_sst_id;
+            self.next_sst_id += 1;
+            let bits = self.opts.bloom_bits_for(set.len());
+            outputs.push(Arc::new(super::sst::Sst::build(
+                id,
+                file,
+                set,
+                &self.bloom,
+                self.opts.bloom_probes,
+                bits,
+                self.opts.block_bytes,
+            )?));
+        }
+        let end = write_done.max(start + 1);
+        self.pool.occupy(thread, start, end);
+        self.inflight_compactions += 1;
+        let removed: HashSet<u64> = pick.all_ids().collect();
+        let removed_files = pick
+            .inputs
+            .iter()
+            .chain(&pick.targets)
+            .map(|s| s.file)
+            .collect();
+        self.pending.push(PendingJob {
+            end,
+            kind: JobKind::Compaction {
+                level: pick.level,
+                removed,
+                removed_files,
+                outputs,
+                read_bytes,
+                write_bytes: shape.write_bytes,
+            },
+        });
+        Ok(())
+    }
+
+    fn rotate_memtable(&mut self, env: &mut SimEnv, now: Nanos) {
+        self.wal.seal();
+        let full = std::mem::replace(&mut self.mem, Memtable::new());
+        self.imms.push_back(full);
+        self.maybe_schedule(env, now);
+    }
+
+    // -----------------------------------------------------------------
+    // Write path
+    // -----------------------------------------------------------------
+
+    /// Write with full stall/slowdown semantics. `at` is the issue time;
+    /// the result's `done` is when the writer thread is free again.
+    pub fn put(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+        val: ValueDesc,
+    ) -> PutResult {
+        let mut at = at;
+        let mut stalled_ns = 0;
+        let mut delayed_ns = 0;
+        self.catch_up(env, at);
+        loop {
+            let memtable_full =
+                self.mem.approximate_bytes() >= self.opts.write_buffer_size;
+            if memtable_full && self.imms.len() + 1 < self.opts.max_write_buffer_number
+            {
+                self.rotate_memtable(env, at);
+                continue;
+            }
+            let cond = evaluate(
+                self.version.l0_count(),
+                self.imms.len(),
+                memtable_full,
+                self.version.pending_compaction_bytes(&self.opts),
+                &self.opts,
+            );
+            match cond {
+                WriteCondition::Stopped(_) => {
+                    self.maybe_schedule(env, at);
+                    let next = self.pending.iter().map(|j| j.end).min();
+                    match next {
+                        Some(end) if end > at => {
+                            let start = at;
+                            stalled_ns += end - at;
+                            at = end;
+                            self.catch_up(env, at);
+                            self.stall.record_stop(start, at);
+                        }
+                        _ => {
+                            // no job to wait for: anomalous; release
+                            self.stats.stall_anomalies += 1;
+                            break;
+                        }
+                    }
+                }
+                WriteCondition::Delayed(_) if self.opts.enable_slowdown => {
+                    // one slowdown sleep per write (RocksDB's delayed
+                    // write pacing, §III-A)
+                    self.stall.record_delay(self.opts.slowdown_sleep_ns);
+                    delayed_ns = self.opts.slowdown_sleep_ns;
+                    at += delayed_ns;
+                    self.catch_up(env, at);
+                    break;
+                }
+                _ => {
+                    self.stall.clear_delay();
+                    break;
+                }
+            }
+        }
+        // the write itself
+        self.seq += 1;
+        let entry = Entry::new(key, self.seq, val);
+        self.stats.puts += 1;
+        self.stats.user_bytes_written += entry.encoded_len();
+        let wal_bytes = self.wal.append(entry);
+        env.device.wal_append(at, wal_bytes);
+        self.mem.insert(entry);
+        env.cpu.charge(CpuClass::Foreground, at, self.opts.put_cpu_ns);
+        at += self.opts.put_cpu_ns;
+        env.clock.advance_to(at);
+        PutResult { done: at, stalled_ns, delayed_ns }
+    }
+
+    /// Internal write used by the rollback path: bypasses stall blocking
+    /// (the Rollback Manager only runs when no stall is present) but still
+    /// pays WAL + memtable + rotation costs.
+    pub fn put_internal(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+        val: ValueDesc,
+    ) -> Nanos {
+        let mut at = at;
+        self.catch_up(env, at);
+        if self.mem.approximate_bytes() >= self.opts.write_buffer_size
+            && self.imms.len() + 1 < self.opts.max_write_buffer_number
+        {
+            self.rotate_memtable(env, at);
+        }
+        self.seq += 1;
+        let entry = Entry::new(key, self.seq, val);
+        self.stats.user_bytes_written += entry.encoded_len();
+        let wal_bytes = self.wal.append(entry);
+        env.device.wal_append(at, wal_bytes);
+        self.mem.insert(entry);
+        at += self.opts.flush_cpu_ns_per_entry; // bulk-load cost, not client path
+        env.cpu.charge(CpuClass::Kvaccel, at, self.opts.flush_cpu_ns_per_entry);
+        at
+    }
+
+    // -----------------------------------------------------------------
+    // Read path
+    // -----------------------------------------------------------------
+
+    /// Charge one data-block access: block-cache hit costs CPU only; a
+    /// miss reads through the device. Returns the time the data is ready.
+    fn block_access(&mut self, env: &mut SimEnv, at: Nanos, sst: u64, block: usize) -> Nanos {
+        if self.cache.get(&(sst, block)).is_some() {
+            env.cpu.charge(CpuClass::Foreground, at, self.opts.get_cpu_ns / 2);
+            return at + self.opts.get_cpu_ns / 2;
+        }
+        let done = env.device.read_block(at, self.opts.block_bytes);
+        self.cache.insert((sst, block), ());
+        done
+    }
+
+    /// Public block-access charger for external merging iterators (the
+    /// KVACCEL dual-iterator range query charges Main-LSM block touches
+    /// through this).
+    pub fn charge_block_access(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        sst: u64,
+        block: usize,
+    ) -> Nanos {
+        self.block_access(env, at, sst, block)
+    }
+
+    /// Point lookup. Tombstones read as absent.
+    pub fn get(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+    ) -> (Option<ValueDesc>, Nanos) {
+        self.catch_up(env, at);
+        self.stats.gets += 1;
+        env.cpu.charge(CpuClass::Foreground, at, self.opts.get_cpu_ns);
+        let mut at = at + self.opts.get_cpu_ns;
+        let as_result = |v: ValueDesc| if v.is_tombstone() { None } else { Some(v) };
+        if let Some((_, v)) = self.mem.get(key) {
+            self.stats.get_hits += 1;
+            env.clock.advance_to(at);
+            return (as_result(v), at);
+        }
+        for imm in self.imms.iter().rev() {
+            if let Some((_, v)) = imm.get(key) {
+                self.stats.get_hits += 1;
+                env.clock.advance_to(at);
+                return (as_result(v), at);
+            }
+        }
+        // L0: newest first, overlapping ranges
+        for sst in &self.version.levels[0].clone() {
+            if !sst.overlaps(key, key) || !sst.filter.may_contain(key) {
+                continue;
+            }
+            match sst.get(key) {
+                Some((e, block)) => {
+                    at = self.block_access(env, at, sst.id, block);
+                    self.stats.get_hits += 1;
+                    env.clock.advance_to(at);
+                    return (as_result(e.val), at);
+                }
+                None => {
+                    // bloom false positive: wasted block read
+                    at = self.block_access(env, at, sst.id, 0);
+                }
+            }
+        }
+        for level in 1..self.version.levels.len() {
+            let files = &self.version.levels[level];
+            let idx = files.partition_point(|s| s.largest < key);
+            let Some(sst) = files.get(idx).cloned() else { continue };
+            if !sst.overlaps(key, key) || !sst.filter.may_contain(key) {
+                continue;
+            }
+            match sst.get(key) {
+                Some((e, block)) => {
+                    at = self.block_access(env, at, sst.id, block);
+                    self.stats.get_hits += 1;
+                    env.clock.advance_to(at);
+                    return (as_result(e.val), at);
+                }
+                None => {
+                    at = self.block_access(env, at, sst.id, 0);
+                }
+            }
+        }
+        env.clock.advance_to(at);
+        (None, at)
+    }
+
+    /// Snapshot iterator over the whole store.
+    pub fn iter(&self) -> LsmIterator {
+        let mem = self.mem.to_entries();
+        let imms: Vec<Vec<Entry>> = self.imms.iter().rev().map(|m| m.to_entries()).collect();
+        let l0 = self.version.levels[0].clone();
+        let levels: Vec<_> = self.version.levels[1..].to_vec();
+        LsmIterator::new(mem, imms, l0, levels)
+    }
+
+    /// Range scan: seek + up to `count` nexts, with block-touch charging.
+    pub fn scan(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        start: Key,
+        count: usize,
+    ) -> (Vec<Entry>, Nanos) {
+        self.catch_up(env, at);
+        let mut it = self.iter();
+        it.seek(start);
+        let mut out = Vec::with_capacity(count);
+        let mut at = at;
+        while out.len() < count {
+            let Some(e) = it.next() else { break };
+            env.cpu.charge(CpuClass::Foreground, at, self.opts.next_cpu_ns);
+            at += self.opts.next_cpu_ns;
+            for (sst, block) in it.drain_blocks() {
+                at = self.block_access(env, at, sst, block);
+            }
+            out.push(e);
+        }
+        env.clock.advance_to(at);
+        (out, at)
+    }
+
+    // -----------------------------------------------------------------
+    // Maintenance / test helpers
+    // -----------------------------------------------------------------
+
+    /// Force-rotate and wait for all background work to finish.
+    pub fn flush_and_wait(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let mut at = at;
+        if !self.mem.is_empty() {
+            self.wal.seal();
+            let full = std::mem::replace(&mut self.mem, Memtable::new());
+            self.imms.push_back(full);
+        }
+        self.maybe_schedule(env, at);
+        while let Some(end) = self.pending.iter().map(|j| j.end).min() {
+            at = at.max(end);
+            self.catch_up(env, at);
+            self.maybe_schedule(env, at);
+        }
+        env.clock.advance_to(at);
+        at
+    }
+
+    /// Entries that crash recovery would replay from the WAL.
+    pub fn wal_replay(&self) -> Vec<Entry> {
+        self.wal.replay()
+    }
+
+    pub fn wal_live_bytes(&self) -> u64 {
+        self.wal.live_bytes()
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::SsdConfig;
+
+    fn rig() -> (LsmDb, SimEnv) {
+        let opts = LsmOptions::small_for_test();
+        (
+            LsmDb::new(opts, MergeEngine::rust(), BloomBuilder::rust()),
+            SimEnv::new(7, SsdConfig::default()),
+        )
+    }
+
+    fn v(seed: u32) -> ValueDesc {
+        ValueDesc::new(seed, 4096)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let (mut db, mut env) = rig();
+        let r = db.put(&mut env, 0, 42, v(1));
+        let (got, _) = db.get(&mut env, r.done, 42);
+        assert_eq!(got, Some(v(1)));
+    }
+
+    #[test]
+    fn overwrite_returns_latest() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        t = db.put(&mut env, t, 1, v(1)).done;
+        t = db.put(&mut env, t, 1, v(2)).done;
+        let (got, _) = db.get(&mut env, t, 1);
+        assert_eq!(got, Some(v(2)));
+    }
+
+    #[test]
+    fn delete_via_tombstone() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        t = db.put(&mut env, t, 1, v(1)).done;
+        t = db.put(&mut env, t, 1, ValueDesc::TOMBSTONE).done;
+        let (got, _) = db.get(&mut env, t, 1);
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn flush_then_get_from_sst() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..50 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        t = db.flush_and_wait(&mut env, t);
+        assert!(db.version().file_count() >= 1);
+        for k in 0..50 {
+            let (got, nt) = db.get(&mut env, t, k);
+            t = nt;
+            assert_eq!(got, Some(v(k)), "key {k}");
+        }
+    }
+
+    #[test]
+    fn sustained_writes_trigger_flush_and_compaction() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..3000u32 {
+            t = db.put(&mut env, t, k % 701, v(k)).done;
+        }
+        t = db.flush_and_wait(&mut env, t);
+        assert!(db.stats.flush_count > 0, "no flushes happened");
+        assert!(db.stats.compaction_count > 0, "no compactions happened");
+        // every key readable with its latest value
+        for k in 0..701u32 {
+            let expect = (0..3000u32)
+                .filter(|x| x % 701 == k)
+                .max()
+                .map(v);
+            let (got, nt) = db.get(&mut env, t, k);
+            t = nt;
+            assert_eq!(got, expect, "key {k}");
+        }
+    }
+
+    #[test]
+    fn stalls_emerge_without_slowdown() {
+        let (mut db, mut env) = rig();
+        db.opts.enable_slowdown = false;
+        let mut t = 0;
+        let mut stalled = 0u64;
+        for k in 0..4000u32 {
+            let r = db.put(&mut env, t, k, v(k));
+            t = r.done;
+            stalled += r.stalled_ns;
+        }
+        assert!(
+            stalled > 0 || db.stall.stop_events > 0,
+            "small config under pressure should stall"
+        );
+        assert_eq!(db.stats.stall_anomalies, 0);
+    }
+
+    #[test]
+    fn slowdown_throttles_instead_of_stopping() {
+        let (mut a, mut env_a) = rig();
+        a.opts.enable_slowdown = true;
+        let (mut b, mut env_b) = rig();
+        b.opts.enable_slowdown = false;
+        let (mut ta, mut tb) = (0, 0);
+        for k in 0..4000u32 {
+            ta = a.put(&mut env_a, ta, k, v(k)).done;
+            tb = b.put(&mut env_b, tb, k, v(k)).done;
+        }
+        assert!(a.stall.slowdown_events > 0, "slowdown never engaged");
+        assert!(
+            a.stall.stopped_ns_total <= b.stall.stopped_ns_total,
+            "slowdown should reduce hard-stop time: {} vs {}",
+            a.stall.stopped_ns_total,
+            b.stall.stopped_ns_total
+        );
+    }
+
+    #[test]
+    fn scan_merges_all_sources() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in (0..100).rev() {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        t = db.flush_and_wait(&mut env, t);
+        for k in 100..120 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        let (got, _) = db.scan(&mut env, t, 90, 20);
+        let keys: Vec<Key> = got.iter().map(|e| e.key).collect();
+        assert_eq!(keys, (90..110).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wal_replay_covers_unflushed() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..10 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        let replay = db.wal_replay();
+        assert_eq!(replay.len(), 10);
+        let _ = t;
+    }
+
+    #[test]
+    fn write_amplification_reported() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..3000u32 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        db.flush_and_wait(&mut env, t);
+        let wa = db.stats.write_amplification();
+        assert!(wa > 1.0, "WA {wa} should exceed 1 after compactions");
+    }
+
+    #[test]
+    fn levels_stay_disjoint() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..5000u32 {
+            t = db.put(&mut env, t, (k * 37) % 2048, v(k)).done;
+        }
+        db.flush_and_wait(&mut env, t);
+        for l in 1..db.version().levels.len() {
+            assert!(db.version().level_disjoint(l), "level {l} overlaps");
+        }
+    }
+}

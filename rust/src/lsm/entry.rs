@@ -1,0 +1,130 @@
+//! Core key/value/entry types shared by the host LSM, the device Dev-LSM
+//! and the runtime merge contract.
+//!
+//! Keys are 4-byte (u32) per the paper's db_bench configuration (Table
+//! IV: 4 B keys, 4 KB values). `u32::MAX` is reserved as the merge
+//! artifact's padding sentinel (runtime::PAD_KEY) and is never a user key.
+//!
+//! Values are *descriptors* `(seed, len)`: the byte payload is a
+//! deterministic stream regenerable from the descriptor
+//! (`sim::rng::value_bytes`), so a 4 KB value costs 4 KB in every
+//! bandwidth/size model but O(8 B) of host RAM. This is what makes 600
+//! virtual seconds of 630 MB/s traffic simulable in-memory; see DESIGN.md.
+
+use crate::sim::rng::value_bytes;
+
+pub type Key = u32;
+/// Monotone sequence number assigned by the writing store (u32: the
+/// paper's runs are <2^32 operations).
+pub type Seq = u32;
+
+/// Largest permitted user key (u32::MAX is the merge pad sentinel).
+pub const MAX_USER_KEY: Key = u32::MAX - 1;
+
+/// Length tag marking a tombstone.
+const TOMBSTONE_LEN: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ValueDesc {
+    pub seed: u32,
+    pub len: u32,
+}
+
+impl ValueDesc {
+    pub const TOMBSTONE: ValueDesc = ValueDesc { seed: 0, len: TOMBSTONE_LEN };
+
+    pub fn new(seed: u32, len: u32) -> Self {
+        assert_ne!(len, TOMBSTONE_LEN, "len reserved for tombstones");
+        Self { seed, len }
+    }
+
+    pub fn is_tombstone(&self) -> bool {
+        self.len == TOMBSTONE_LEN
+    }
+
+    /// Logical value size in bytes (0 for tombstones).
+    pub fn value_len(&self) -> u64 {
+        if self.is_tombstone() {
+            0
+        } else {
+            self.len as u64
+        }
+    }
+
+    /// Materialize the deterministic payload (tests / verification).
+    pub fn materialize(&self) -> Vec<u8> {
+        assert!(!self.is_tombstone(), "tombstones carry no payload");
+        value_bytes(self.seed, self.len)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub key: Key,
+    pub seq: Seq,
+    pub val: ValueDesc,
+}
+
+impl Entry {
+    pub fn new(key: Key, seq: Seq, val: ValueDesc) -> Self {
+        debug_assert!(key <= MAX_USER_KEY, "key {key:#x} collides with pad sentinel");
+        Self { key, seq, val }
+    }
+
+    /// Logical on-flash footprint: 4 B key + 8 B internal metadata
+    /// (seq + type, RocksDB-style) + 4 B length + payload.
+    pub fn encoded_len(&self) -> u64 {
+        16 + self.val.value_len()
+    }
+
+    /// Ordering used everywhere: by key ascending, then seq *descending*
+    /// (newest first) — matches RocksDB's internal key comparator.
+    pub fn internal_cmp(&self, other: &Entry) -> std::cmp::Ordering {
+        self.key
+            .cmp(&other.key)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tombstone_flagging() {
+        assert!(ValueDesc::TOMBSTONE.is_tombstone());
+        assert!(!ValueDesc::new(1, 100).is_tombstone());
+        assert_eq!(ValueDesc::TOMBSTONE.value_len(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reserved_len_panics() {
+        ValueDesc::new(0, u32::MAX);
+    }
+
+    #[test]
+    fn materialize_roundtrip() {
+        let v = ValueDesc::new(42, 4096);
+        let b = v.materialize();
+        assert_eq!(b.len(), 4096);
+        assert_eq!(b, v.materialize());
+    }
+
+    #[test]
+    fn encoded_len_includes_payload() {
+        let e = Entry::new(1, 1, ValueDesc::new(0, 4096));
+        assert_eq!(e.encoded_len(), 16 + 4096);
+        let t = Entry::new(1, 2, ValueDesc::TOMBSTONE);
+        assert_eq!(t.encoded_len(), 16);
+    }
+
+    #[test]
+    fn internal_cmp_newest_first() {
+        let a = Entry::new(5, 10, ValueDesc::new(0, 1));
+        let b = Entry::new(5, 20, ValueDesc::new(0, 1));
+        let c = Entry::new(6, 1, ValueDesc::new(0, 1));
+        assert_eq!(b.internal_cmp(&a), std::cmp::Ordering::Less); // newer first
+        assert_eq!(a.internal_cmp(&c), std::cmp::Ordering::Less);
+    }
+}

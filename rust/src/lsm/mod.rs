@@ -1,0 +1,22 @@
+//! RocksDB-like LSM engine substrate (the host-side Main-LSM).
+//!
+//! Built from scratch for this reproduction: memtable/WAL/SST/leveled
+//! compaction with RocksDB's stall + slowdown semantics, over the block
+//! interface of the simulated dual-interface SSD. The compaction merge
+//! and SST bloom builds execute through `runtime::` (AOT XLA artifacts).
+
+pub mod compaction;
+pub mod db;
+pub mod entry;
+pub mod iterator;
+pub mod memtable;
+pub mod options;
+pub mod sst;
+pub mod stall;
+pub mod version;
+pub mod wal;
+
+pub use db::{DbStats, LsmDb, PutResult};
+pub use entry::{Entry, Key, Seq, ValueDesc, MAX_USER_KEY};
+pub use options::LsmOptions;
+pub use stall::{StallReason, StallStats, WriteCondition};

@@ -1,0 +1,171 @@
+//! LSM engine tuning knobs. Defaults mirror the paper's setup (RocksDB
+//! v8.3.2 with 128 MB memtables, Table III) and RocksDB's documented
+//! stall/slowdown triggers; the CPU-cost constants are calibrated so the
+//! simulated foreground burst rate and stall cadence match the paper's
+//! measured shapes (see DESIGN.md §2 and EXPERIMENTS.md).
+
+use crate::sim::{Nanos, MICROS};
+
+#[derive(Clone, Debug)]
+pub struct LsmOptions {
+    // ----- structure -----
+    /// Active memtable capacity (paper Table III: 128 MB).
+    pub write_buffer_size: u64,
+    /// Max memtables (active + immutable) before writes must stop.
+    pub max_write_buffer_number: usize,
+    /// L0 file count that triggers L0->L1 compaction.
+    pub l0_compaction_trigger: usize,
+    /// L0 file count that triggers write slowdown (RocksDB default 20).
+    pub l0_slowdown_trigger: usize,
+    /// L0 file count that stops writes (RocksDB default 36).
+    pub l0_stop_trigger: usize,
+    /// Target size of L1 (max_bytes_for_level_base).
+    pub max_bytes_for_level_base: u64,
+    /// Per-level size multiplier.
+    pub level_multiplier: u64,
+    pub num_levels: usize,
+    /// Output SST target size.
+    pub target_file_size: u64,
+    /// Pending-compaction-bytes soft limit (slowdown trigger).
+    pub soft_pending_compaction_bytes: u64,
+    /// Pending-compaction-bytes hard limit (stop trigger).
+    pub hard_pending_compaction_bytes: u64,
+
+    // ----- background work -----
+    /// Compaction thread count (the paper's swept parameter, Table III).
+    pub compaction_threads: usize,
+
+    // ----- slowdown policy -----
+    /// RocksDB's slowdown mechanism on/off (Fig 2/3's variable).
+    pub enable_slowdown: bool,
+    /// Sleep injected per write while in the delayed state (the paper
+    /// cites ~1 ms thread sleeps [31]; calibrated to the ~2 Kops/s
+    /// slowed-down service floor in Fig 2).
+    pub slowdown_sleep_ns: Nanos,
+
+    // ----- SST / read path -----
+    /// SST data-block size.
+    pub block_bytes: u64,
+    /// Block cache capacity in blocks.
+    pub block_cache_blocks: usize,
+    pub bloom_bits_per_key: u32,
+    pub bloom_probes: usize,
+
+    // ----- calibrated CPU cost model -----
+    /// Foreground cost of one put (client + WAL memcpy + memtable insert).
+    pub put_cpu_ns: Nanos,
+    /// Foreground cost of one get step (seek + block decode, pre-I/O).
+    pub get_cpu_ns: Nanos,
+    /// Compaction merge CPU per entry (decode + compare + encode + CRC).
+    pub merge_cpu_ns_per_entry: Nanos,
+    /// Flush CPU per entry.
+    pub flush_cpu_ns_per_entry: Nanos,
+    /// Iterator next CPU per entry (cached path).
+    pub next_cpu_ns: Nanos,
+}
+
+impl Default for LsmOptions {
+    fn default() -> Self {
+        Self {
+            write_buffer_size: 128 << 20,
+            max_write_buffer_number: 2,
+            l0_compaction_trigger: 4,
+            l0_slowdown_trigger: 20,
+            l0_stop_trigger: 36,
+            max_bytes_for_level_base: 256 << 20,
+            level_multiplier: 10,
+            num_levels: 7,
+            target_file_size: 64 << 20,
+            soft_pending_compaction_bytes: 64 << 30,
+            hard_pending_compaction_bytes: 256 << 30,
+            compaction_threads: 1,
+            enable_slowdown: true,
+            slowdown_sleep_ns: 500 * MICROS,
+            block_bytes: 32 * 1024,
+            block_cache_blocks: 16 * 1024, // 512 MB of 32 KB blocks
+            bloom_bits_per_key: 10,
+            bloom_probes: 7,
+            put_cpu_ns: 33 * MICROS,
+            get_cpu_ns: 2 * MICROS,
+            merge_cpu_ns_per_entry: 10 * MICROS,
+            flush_cpu_ns_per_entry: MICROS,
+            next_cpu_ns: 2 * MICROS,
+        }
+    }
+}
+
+impl LsmOptions {
+    /// Target byte size for level `l` (l >= 1).
+    pub fn level_target_bytes(&self, level: usize) -> u64 {
+        if level == 0 {
+            // L0 is file-count driven; report trigger * memtable size.
+            return self.l0_compaction_trigger as u64 * self.write_buffer_size;
+        }
+        let mut target = self.max_bytes_for_level_base;
+        for _ in 1..level {
+            target = target.saturating_mul(self.level_multiplier);
+        }
+        target
+    }
+
+    /// Bloom geometry for an SST with `keys` entries: bits rounded up to
+    /// a multiple of 32.
+    pub fn bloom_bits_for(&self, keys: usize) -> u32 {
+        let bits = (keys as u32).saturating_mul(self.bloom_bits_per_key).max(64);
+        bits.div_ceil(32) * 32
+    }
+
+    /// Paper Table III variant: n compaction threads.
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.compaction_threads = n;
+        self
+    }
+
+    pub fn with_slowdown(mut self, enabled: bool) -> Self {
+        self.enable_slowdown = enabled;
+        self
+    }
+
+    /// Scaled-down configuration for fast tests: small memtables/files so
+    /// flushes and compactions trigger after a few hundred entries.
+    pub fn small_for_test() -> Self {
+        Self {
+            write_buffer_size: 64 << 10,
+            max_bytes_for_level_base: 256 << 10,
+            target_file_size: 64 << 10,
+            soft_pending_compaction_bytes: 4 << 20,
+            hard_pending_compaction_bytes: 16 << 20,
+            block_cache_blocks: 128,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_targets_scale_by_multiplier() {
+        let o = LsmOptions::default();
+        assert_eq!(o.level_target_bytes(1), 256 << 20);
+        assert_eq!(o.level_target_bytes(2), (256 << 20) * 10);
+        assert_eq!(o.level_target_bytes(3), (256 << 20) * 100);
+    }
+
+    #[test]
+    fn bloom_bits_multiple_of_32() {
+        let o = LsmOptions::default();
+        for keys in [1usize, 10, 1000, 32768] {
+            assert_eq!(o.bloom_bits_for(keys) % 32, 0);
+            assert!(o.bloom_bits_for(keys) >= keys as u32 * 10 || keys == 1);
+        }
+    }
+
+    #[test]
+    fn builders() {
+        let o = LsmOptions::default().with_threads(4).with_slowdown(false);
+        assert_eq!(o.compaction_threads, 4);
+        assert!(!o.enable_slowdown);
+    }
+}

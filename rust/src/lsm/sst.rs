@@ -1,0 +1,194 @@
+//! Sorted String Table: sorted, key-unique entries with a bloom filter
+//! and block-granular read accounting.
+//!
+//! Entries live in memory (`Arc<Vec<Entry>>`, value payloads are
+//! descriptors — see entry.rs); the file's *logical* bytes (including the
+//! 4 KB payloads) are what the device models charge. The bloom filter is
+//! built through `runtime::BloomBuilder`, i.e. by the AOT bloom artifact
+//! when one is loaded.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::bloom::{may_contain, BloomBuilder};
+use crate::ssd::block_if::FileId;
+
+use super::entry::{Entry, Key};
+
+#[derive(Clone, Debug)]
+pub struct BloomFilter {
+    pub words: Vec<u32>,
+    pub probes: usize,
+    pub bits: u32,
+}
+
+impl BloomFilter {
+    pub fn may_contain(&self, key: Key) -> bool {
+        if self.bits == 0 {
+            return true;
+        }
+        may_contain(&self.words, key, self.probes, self.bits)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Sst {
+    pub id: u64,
+    pub file: FileId,
+    /// Sorted ascending by key; exactly one entry per key.
+    pub entries: Arc<Vec<Entry>>,
+    pub smallest: Key,
+    pub largest: Key,
+    /// Logical file size (entries' encoded bytes + ~2% metadata).
+    pub bytes: u64,
+    pub filter: BloomFilter,
+    /// Data-block size used for read accounting.
+    pub block_bytes: u64,
+    /// Max seq contained (recency ordering for overlapping L0 files).
+    pub max_seq: u32,
+}
+
+impl Sst {
+    /// Assemble an SST from sorted unique entries. The caller provides
+    /// the already-created device file id (I/O is charged there).
+    pub fn build(
+        id: u64,
+        file: FileId,
+        entries: Vec<Entry>,
+        builder: &BloomBuilder,
+        probes: usize,
+        bits: u32,
+        block_bytes: u64,
+    ) -> Result<Self> {
+        assert!(!entries.is_empty(), "SSTs are never empty");
+        debug_assert!(
+            entries.windows(2).all(|w| w[0].key < w[1].key),
+            "entries must be sorted and unique"
+        );
+        let keys: Vec<Key> = entries.iter().map(|e| e.key).collect();
+        let words = builder.build(&keys, probes, bits)?;
+        let data_bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        let bytes = data_bytes + data_bytes / 50 + 4096; // index+filter+footer
+        let max_seq = entries.iter().map(|e| e.seq).max().unwrap();
+        Ok(Self {
+            id,
+            file,
+            smallest: entries.first().unwrap().key,
+            largest: entries.last().unwrap().key,
+            entries: Arc::new(entries),
+            bytes,
+            filter: BloomFilter { words, probes, bits },
+            block_bytes,
+            max_seq,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn overlaps(&self, min: Key, max: Key) -> bool {
+        self.smallest <= max && min <= self.largest
+    }
+
+    /// Binary-search lookup. Returns the entry and the data-block index
+    /// it lives in (for cache/IO accounting).
+    pub fn get(&self, key: Key) -> Option<(Entry, usize)> {
+        match self.entries.binary_search_by(|e| e.key.cmp(&key)) {
+            Ok(idx) => Some((self.entries[idx], self.block_of(idx))),
+            Err(_) => None,
+        }
+    }
+
+    /// Index of the first entry >= key (iterator seek).
+    pub fn lower_bound(&self, key: Key) -> usize {
+        self.entries.partition_point(|e| e.key < key)
+    }
+
+    /// Data-block index of entry `idx` (fixed entries/block derived from
+    /// the average encoded length).
+    pub fn block_of(&self, idx: usize) -> usize {
+        let avg = (self.bytes / self.entries.len().max(1) as u64).max(1);
+        let per_block = (self.block_bytes / avg).max(1) as usize;
+        idx / per_block
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.block_of(self.entries.len().saturating_sub(1)) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::entry::ValueDesc;
+
+    fn build(keys: &[Key]) -> Sst {
+        let entries: Vec<Entry> = keys
+            .iter()
+            .map(|&k| Entry::new(k, k + 1, ValueDesc::new(k, 4096)))
+            .collect();
+        Sst::build(1, 0, entries, &BloomBuilder::rust(), 7, 1024, 32 * 1024).unwrap()
+    }
+
+    #[test]
+    fn build_sets_bounds() {
+        let s = build(&[3, 7, 11]);
+        assert_eq!((s.smallest, s.largest), (3, 11));
+        assert_eq!(s.len(), 3);
+        assert!(s.bytes > 3 * 4096);
+    }
+
+    #[test]
+    fn get_hits_and_misses() {
+        let s = build(&[1, 5, 9]);
+        assert_eq!(s.get(5).unwrap().0.val, ValueDesc::new(5, 4096));
+        assert!(s.get(4).is_none());
+    }
+
+    #[test]
+    fn bloom_has_no_false_negatives() {
+        let keys: Vec<Key> = (0..200).map(|i| i * 17).collect();
+        let s = build(&keys);
+        for &k in &keys {
+            assert!(s.filter.may_contain(k));
+        }
+    }
+
+    #[test]
+    fn overlap_logic() {
+        let s = build(&[10, 20]);
+        assert!(s.overlaps(5, 10));
+        assert!(s.overlaps(15, 16));
+        assert!(!s.overlaps(21, 30));
+        assert!(!s.overlaps(0, 9));
+    }
+
+    #[test]
+    fn lower_bound_seek() {
+        let s = build(&[10, 20, 30]);
+        assert_eq!(s.lower_bound(5), 0);
+        assert_eq!(s.lower_bound(20), 1);
+        assert_eq!(s.lower_bound(25), 2);
+        assert_eq!(s.lower_bound(31), 3);
+    }
+
+    #[test]
+    fn blocks_partition_entries() {
+        let s = build(&(0..100).collect::<Vec<_>>());
+        assert!(s.block_count() >= 10); // ~8 entries of 4KB per 32KB block
+        assert_eq!(s.block_of(0), 0);
+        assert!(s.block_of(99) >= s.block_of(50));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sst_panics() {
+        Sst::build(1, 0, vec![], &BloomBuilder::rust(), 7, 64, 1024).unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! RocksDB's write-stall / slowdown condition state machine and its
+//! bookkeeping (stall intervals feed Figs 4/5; slowdown instance counts
+//! reproduce §III's 258/433 numbers).
+//!
+//! Three trigger families (SILK/ADOC taxonomy quoted by the paper §II-A):
+//!  1. flush-based (memtable exhaustion),
+//!  2. L0->L1 serialization (L0 file count),
+//!  3. pending compaction bytes.
+
+use crate::sim::Nanos;
+
+use super::options::LsmOptions;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallReason {
+    MemtableLimit,
+    L0Files,
+    PendingBytes,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteCondition {
+    Normal,
+    /// Slowdown region: writes proceed but are throttled when the
+    /// slowdown feature is enabled.
+    Delayed(StallReason),
+    /// Hard stop: writes block until background work clears the trigger.
+    Stopped(StallReason),
+}
+
+impl WriteCondition {
+    pub fn is_stopped(&self) -> bool {
+        matches!(self, WriteCondition::Stopped(_))
+    }
+
+    pub fn is_delayed(&self) -> bool {
+        matches!(self, WriteCondition::Delayed(_))
+    }
+}
+
+/// Evaluate the condition from the raw signals (the same three the
+/// paper's Detector polls: L0 count, memtable state, pending bytes).
+pub fn evaluate(
+    l0_files: usize,
+    imm_count: usize,
+    memtable_full: bool,
+    pending_bytes: u64,
+    opts: &LsmOptions,
+) -> WriteCondition {
+    // stops (checked first)
+    if imm_count + 1 >= opts.max_write_buffer_number && memtable_full {
+        return WriteCondition::Stopped(StallReason::MemtableLimit);
+    }
+    if l0_files >= opts.l0_stop_trigger {
+        return WriteCondition::Stopped(StallReason::L0Files);
+    }
+    if pending_bytes >= opts.hard_pending_compaction_bytes {
+        return WriteCondition::Stopped(StallReason::PendingBytes);
+    }
+    // slowdowns. Memtable pressure only arms a slowdown when there are
+    // at least 3 write buffers (RocksDB: `max_write_buffer_number > 3`
+    // guards the memtable delay trigger); with the default 2, a pending
+    // flush is normal operation and only a full pair stops writes.
+    if opts.max_write_buffer_number >= 3
+        && imm_count + 2 >= opts.max_write_buffer_number
+    {
+        return WriteCondition::Delayed(StallReason::MemtableLimit);
+    }
+    if l0_files >= opts.l0_slowdown_trigger {
+        return WriteCondition::Delayed(StallReason::L0Files);
+    }
+    if pending_bytes >= opts.soft_pending_compaction_bytes {
+        return WriteCondition::Delayed(StallReason::PendingBytes);
+    }
+    WriteCondition::Normal
+}
+
+/// Interval + event accounting.
+#[derive(Clone, Debug, Default)]
+pub struct StallStats {
+    /// Closed [start, end) intervals during which writes were stopped.
+    pub stall_intervals: Vec<(Nanos, Nanos)>,
+    /// Transitions into the delayed state ("slowdown instances", §III-A).
+    pub slowdown_events: u64,
+    /// Transitions into the stopped state.
+    pub stop_events: u64,
+    pub stopped_ns_total: Nanos,
+    pub delayed_ns_total: Nanos,
+    in_delay: bool,
+}
+
+impl StallStats {
+    pub fn record_stop(&mut self, start: Nanos, end: Nanos) {
+        if end > start {
+            self.stop_events += 1;
+            self.stopped_ns_total += end - start;
+            self.stall_intervals.push((start, end));
+        }
+    }
+
+    /// Record a throttled write; counts an "instance" on the transition
+    /// into the delayed state, like RocksDB's stall counters.
+    pub fn record_delay(&mut self, sleep: Nanos) {
+        if !self.in_delay {
+            self.in_delay = true;
+            self.slowdown_events += 1;
+        }
+        self.delayed_ns_total += sleep;
+    }
+
+    pub fn clear_delay(&mut self) {
+        self.in_delay = false;
+    }
+
+    /// Was virtual second `sec` inside any stop interval? (Fig 4's green
+    /// boxes / Fig 5's CDF filter.)
+    pub fn second_in_stall(&self, sec: usize) -> bool {
+        let start = sec as Nanos * crate::sim::NS_PER_SEC;
+        let end = start + crate::sim::NS_PER_SEC;
+        self.stall_intervals
+            .iter()
+            .any(|&(s, e)| s < end && start < e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> LsmOptions {
+        LsmOptions::default()
+    }
+
+    #[test]
+    fn normal_when_quiet() {
+        assert_eq!(evaluate(0, 0, false, 0, &opts()), WriteCondition::Normal);
+    }
+
+    #[test]
+    fn memtable_stop_requires_full_active() {
+        let o = opts(); // max_write_buffer_number = 2
+        assert_eq!(
+            evaluate(0, 1, true, 0, &o),
+            WriteCondition::Stopped(StallReason::MemtableLimit)
+        );
+        // with only 2 buffers, a pending flush alone is NOT a slowdown
+        assert_eq!(evaluate(0, 1, false, 0, &o), WriteCondition::Normal);
+        // with >= 3 buffers the delay trigger arms
+        let mut o3 = opts();
+        o3.max_write_buffer_number = 4;
+        assert_eq!(
+            evaluate(0, 2, false, 0, &o3),
+            WriteCondition::Delayed(StallReason::MemtableLimit)
+        );
+    }
+
+    #[test]
+    fn l0_thresholds() {
+        let o = opts();
+        assert!(evaluate(20, 0, false, 0, &o).is_delayed());
+        assert!(evaluate(36, 0, false, 0, &o).is_stopped());
+        assert_eq!(evaluate(19, 0, false, 0, &o), WriteCondition::Normal);
+    }
+
+    #[test]
+    fn pending_bytes_thresholds() {
+        let o = opts();
+        assert!(evaluate(0, 0, false, o.soft_pending_compaction_bytes, &o).is_delayed());
+        assert!(evaluate(0, 0, false, o.hard_pending_compaction_bytes, &o).is_stopped());
+    }
+
+    #[test]
+    fn stop_takes_priority_over_delay() {
+        let o = opts();
+        let c = evaluate(36, 1, false, o.soft_pending_compaction_bytes, &o);
+        assert!(c.is_stopped());
+    }
+
+    #[test]
+    fn stats_transitions() {
+        let mut s = StallStats::default();
+        s.record_delay(100);
+        s.record_delay(100);
+        s.clear_delay();
+        s.record_delay(100);
+        assert_eq!(s.slowdown_events, 2);
+        assert_eq!(s.delayed_ns_total, 300);
+        s.record_stop(10, 20);
+        s.record_stop(30, 30); // empty: ignored
+        assert_eq!(s.stop_events, 1);
+        assert_eq!(s.stopped_ns_total, 10);
+    }
+
+    #[test]
+    fn second_in_stall_overlap() {
+        let mut s = StallStats::default();
+        let sec = crate::sim::NS_PER_SEC;
+        s.record_stop(sec + 100, 3 * sec);
+        assert!(!s.second_in_stall(0));
+        assert!(s.second_in_stall(1));
+        assert!(s.second_in_stall(2));
+        assert!(!s.second_in_stall(3));
+    }
+}

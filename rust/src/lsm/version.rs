@@ -1,0 +1,307 @@
+//! Leveled manifest: which SSTs live at which level, overlap queries,
+//! compaction scoring/picking, and the pending-compaction-bytes estimate
+//! that drives one of the three stall conditions.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use super::entry::Key;
+use super::options::LsmOptions;
+use super::sst::Sst;
+
+/// Max oldest-L0 files folded into one L0->L1 job (RocksDB picks subsets
+/// rather than the whole level; keeps jobs small and stalls oscillatory).
+pub const MAX_L0_FILES_PER_COMPACTION: usize = 8;
+
+#[derive(Clone, Debug)]
+pub struct Version {
+    /// levels[0] is newest-first (overlapping files); levels[1..] are
+    /// sorted by smallest key, pairwise disjoint.
+    pub levels: Vec<Vec<Arc<Sst>>>,
+    /// Cached per-level byte totals, maintained incrementally — the
+    /// stall conditions read these on EVERY put, so recomputing from the
+    /// file lists was the #1 foreground hotspot (see EXPERIMENTS.md §Perf).
+    bytes: Vec<u64>,
+}
+
+/// A picked compaction: inputs from `level`, overlapping files from
+/// `level + 1`.
+#[derive(Clone, Debug)]
+pub struct CompactionPick {
+    pub level: usize,
+    pub inputs: Vec<Arc<Sst>>,
+    pub targets: Vec<Arc<Sst>>,
+}
+
+impl CompactionPick {
+    pub fn input_bytes(&self) -> u64 {
+        self.inputs.iter().chain(&self.targets).map(|s| s.bytes).sum()
+    }
+
+    pub fn input_entries(&self) -> usize {
+        self.inputs
+            .iter()
+            .chain(&self.targets)
+            .map(|s| s.len())
+            .sum()
+    }
+
+    pub fn all_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.inputs.iter().chain(&self.targets).map(|s| s.id)
+    }
+}
+
+impl Version {
+    pub fn new(num_levels: usize) -> Self {
+        Self {
+            levels: vec![Vec::new(); num_levels],
+            bytes: vec![0; num_levels],
+        }
+    }
+
+    pub fn l0_count(&self) -> usize {
+        self.levels[0].len()
+    }
+
+    pub fn level_bytes(&self, level: usize) -> u64 {
+        debug_assert_eq!(
+            self.bytes[level],
+            self.levels[level].iter().map(|s| s.bytes).sum::<u64>(),
+            "cached level bytes diverged at L{level}"
+        );
+        self.bytes[level]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.levels.len()).map(|l| self.level_bytes(l)).sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// Add a flushed SST to L0 (newest first).
+    pub fn add_l0(&mut self, sst: Arc<Sst>) {
+        self.bytes[0] += sst.bytes;
+        self.levels[0].insert(0, sst);
+    }
+
+    /// Install compaction outputs: remove `removed` ids from `level` and
+    /// `level+1`, insert `added` into `level+1` keeping key order.
+    pub fn apply_compaction(
+        &mut self,
+        level: usize,
+        removed: &HashSet<u64>,
+        added: Vec<Arc<Sst>>,
+    ) {
+        let removed_bytes = |files: &[Arc<Sst>]| -> u64 {
+            files
+                .iter()
+                .filter(|s| removed.contains(&s.id))
+                .map(|s| s.bytes)
+                .sum()
+        };
+        self.bytes[level] -= removed_bytes(&self.levels[level]);
+        self.levels[level].retain(|s| !removed.contains(&s.id));
+        let out = level + 1;
+        self.bytes[out] -= removed_bytes(&self.levels[out]);
+        self.levels[out].retain(|s| !removed.contains(&s.id));
+        self.bytes[out] += added.iter().map(|s| s.bytes).sum::<u64>();
+        self.levels[out].extend(added);
+        self.levels[out].sort_by_key(|s| s.smallest);
+        debug_assert!(self.level_disjoint(out), "L{out} overlap after compaction");
+    }
+
+    /// Check the disjointness invariant of a level >= 1.
+    pub fn level_disjoint(&self, level: usize) -> bool {
+        self.levels[level]
+            .windows(2)
+            .all(|w| w[0].largest < w[1].smallest)
+    }
+
+    /// Files in `level` overlapping [min, max].
+    pub fn overlapping(&self, level: usize, min: Key, max: Key) -> Vec<Arc<Sst>> {
+        self.levels[level]
+            .iter()
+            .filter(|s| s.overlaps(min, max))
+            .cloned()
+            .collect()
+    }
+
+    /// RocksDB-style estimate: bytes that still need to flow down before
+    /// every level is under target.
+    pub fn pending_compaction_bytes(&self, opts: &LsmOptions) -> u64 {
+        let mut pending = 0u64;
+        // L0 beyond the compaction trigger counts in full.
+        let l0_bytes = self.level_bytes(0);
+        let trigger_bytes =
+            opts.l0_compaction_trigger as u64 * opts.write_buffer_size;
+        pending += l0_bytes.saturating_sub(trigger_bytes);
+        for level in 1..self.levels.len() - 1 {
+            pending += self
+                .level_bytes(level)
+                .saturating_sub(opts.level_target_bytes(level));
+        }
+        pending
+    }
+
+    /// Compaction score per level (score >= 1.0 means "needs compaction").
+    pub fn compaction_score(&self, level: usize, opts: &LsmOptions) -> f64 {
+        if level == 0 {
+            self.l0_count() as f64 / opts.l0_compaction_trigger as f64
+        } else {
+            self.level_bytes(level) as f64
+                / opts.level_target_bytes(level) as f64
+        }
+    }
+
+    /// Replace a whole level (tests/tools); keeps the byte cache coherent.
+    pub fn set_level(&mut self, level: usize, files: Vec<Arc<Sst>>) {
+        self.bytes[level] = files.iter().map(|s| s.bytes).sum();
+        self.levels[level] = files;
+    }
+
+    /// Pick the highest-score level needing compaction, excluding files
+    /// already being compacted. L0->L1 is serialized (only one at a time —
+    /// the paper's write-stall event #2): if any L0 file is busy, L0 is
+    /// skipped.
+    pub fn pick_compaction(
+        &self,
+        opts: &LsmOptions,
+        busy: &HashSet<u64>,
+    ) -> Option<CompactionPick> {
+        // Levels in descending score order; take the first feasible pick
+        // so a busy L0 does not starve lower-level compactions (RocksDB
+        // runs them concurrently on the remaining threads).
+        let mut scored: Vec<(f64, usize)> = (0..self.levels.len() - 1)
+            .map(|l| (self.compaction_score(l, opts), l))
+            .filter(|&(s, _)| s >= 1.0)
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (_, level) in scored {
+            if let Some(pick) = self.pick_at_level(level, busy) {
+                return Some(pick);
+            }
+        }
+        None
+    }
+
+    fn pick_at_level(
+        &self,
+        level: usize,
+        busy: &HashSet<u64>,
+    ) -> Option<CompactionPick> {
+        let inputs: Vec<Arc<Sst>> = if level == 0 {
+            // L0->L1 is serialized (stall type #2) and incremental: take
+            // the OLDEST few files (safe: they are older than every
+            // remaining L0 file) so jobs stay small and the L0 count
+            // oscillates around the slowdown trigger like RocksDB's.
+            if self.levels[0].iter().any(|s| busy.contains(&s.id)) {
+                return None;
+            }
+            let k = self.levels[0].len().min(MAX_L0_FILES_PER_COMPACTION);
+            let start = self.levels[0].len() - k;
+            self.levels[0][start..].to_vec()
+        } else {
+            // oldest-ish heuristic: first non-busy file
+            let f = self.levels[level]
+                .iter()
+                .find(|s| !busy.contains(&s.id))?
+                .clone();
+            vec![f]
+        };
+        if inputs.is_empty() {
+            return None;
+        }
+        let min = inputs.iter().map(|s| s.smallest).min().unwrap();
+        let max = inputs.iter().map(|s| s.largest).max().unwrap();
+        let targets = self.overlapping(level + 1, min, max);
+        if targets.iter().any(|s| busy.contains(&s.id)) {
+            return None;
+        }
+        Some(CompactionPick { level, inputs, targets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::entry::{Entry, ValueDesc};
+    use crate::runtime::bloom::BloomBuilder;
+
+    fn sst(id: u64, keys: std::ops::Range<u32>) -> Arc<Sst> {
+        let entries: Vec<Entry> = keys
+            .map(|k| Entry::new(k, id as u32 * 1000 + k, ValueDesc::new(k, 512)))
+            .collect();
+        Arc::new(
+            Sst::build(id, id, entries, &BloomBuilder::rust(), 7, 1024, 32 * 1024)
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn l0_newest_first() {
+        let mut v = Version::new(3);
+        v.add_l0(sst(1, 0..10));
+        v.add_l0(sst(2, 5..15));
+        assert_eq!(v.levels[0][0].id, 2);
+        assert_eq!(v.l0_count(), 2);
+    }
+
+    #[test]
+    fn scores_trigger_picks() {
+        let opts = LsmOptions::small_for_test();
+        let mut v = Version::new(3);
+        for i in 0..4 {
+            v.add_l0(sst(i, (i as u32 * 10)..(i as u32 * 10 + 10)));
+        }
+        assert!(v.compaction_score(0, &opts) >= 1.0);
+        let pick = v.pick_compaction(&opts, &HashSet::new()).unwrap();
+        assert_eq!(pick.level, 0);
+        assert_eq!(pick.inputs.len(), 4);
+    }
+
+    #[test]
+    fn l0_pick_blocked_while_busy() {
+        let opts = LsmOptions::small_for_test();
+        let mut v = Version::new(3);
+        for i in 0..4 {
+            v.add_l0(sst(i, 0..10));
+        }
+        let mut busy = HashSet::new();
+        busy.insert(2u64);
+        assert!(v.pick_compaction(&opts, &busy).is_none());
+    }
+
+    #[test]
+    fn apply_compaction_maintains_disjoint() {
+        let mut v = Version::new(3);
+        v.add_l0(sst(1, 0..10));
+        v.set_level(1, vec![sst(2, 0..5), sst(3, 20..30)]);
+        let removed: HashSet<u64> = [1u64, 2].into_iter().collect();
+        v.apply_compaction(0, &removed, vec![sst(4, 0..10)]);
+        assert_eq!(v.l0_count(), 0);
+        assert_eq!(v.levels[1].len(), 2);
+        assert!(v.level_disjoint(1));
+    }
+
+    #[test]
+    fn overlapping_query() {
+        let mut v = Version::new(3);
+        v.set_level(1, vec![sst(1, 0..5), sst(2, 10..15), sst(3, 20..25)]);
+        let hits = v.overlapping(1, 4, 11);
+        let ids: Vec<u64> = hits.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn pending_bytes_grows_with_l0() {
+        let opts = LsmOptions::small_for_test();
+        let mut v = Version::new(3);
+        let before = v.pending_compaction_bytes(&opts);
+        for i in 0..10 {
+            v.add_l0(sst(i, 0..100));
+        }
+        assert!(v.pending_compaction_bytes(&opts) > before);
+    }
+}

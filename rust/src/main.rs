@@ -1,0 +1,157 @@
+//! KVACCEL CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   run <workload>      run a single workload (A|B|C|D) on one system
+//!   experiment <id|all> regenerate a paper figure/table (see DESIGN.md)
+//!   inspect             print artifact + device model info
+//!
+//! Examples:
+//!   kvaccel run A --system kvaccel --threads 4 --scale 0.1
+//!   kvaccel experiment fig12 --scale 0.25 --engine xla
+//!   kvaccel experiment all --scale 0.1 --engine rust
+
+use anyhow::{anyhow, Result};
+
+use kvaccel::baselines::{System, SystemKind};
+use kvaccel::env::SimEnv;
+use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EXPERIMENTS};
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::LsmOptions;
+use kvaccel::runtime::{default_artifacts_dir, XlaRuntime};
+use kvaccel::ssd::SsdConfig;
+use kvaccel::util::{fmt, Args};
+use kvaccel::workload::{self, BenchConfig};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("experiment") | Some("exp") => cmd_experiment(&args),
+        Some("inspect") => cmd_inspect(),
+        _ => {
+            println!("kvaccel — host-SSD collaborative write accelerator (paper reproduction)");
+            println!();
+            println!("usage:");
+            println!("  kvaccel run <A|B|C|D> [--system rocksdb|rocksdb-nosd|adoc|kvaccel|kvaccel-lazy|kvaccel-eager]");
+            println!("              [--threads N] [--scale F] [--seed N] [--engine rust|xla]");
+            println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
+            println!("      ids: {ALL_EXPERIMENTS:?}");
+            println!("  kvaccel inspect");
+            Ok(())
+        }
+    }
+}
+
+fn parse_system(name: &str) -> Result<SystemKind> {
+    Ok(match name {
+        "rocksdb" => SystemKind::RocksDb { slowdown: true },
+        "rocksdb-nosd" => SystemKind::RocksDb { slowdown: false },
+        "adoc" => SystemKind::Adoc,
+        "kvaccel" => SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+        "kvaccel-lazy" => SystemKind::Kvaccel { scheme: RollbackScheme::Lazy },
+        "kvaccel-eager" => SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+        other => return Err(anyhow!("unknown system {other:?}")),
+    })
+}
+
+fn parse_engine(args: &Args) -> EngineMode {
+    match args.get_or("engine", "rust") {
+        "xla" => EngineMode::Xla,
+        _ => EngineMode::Rust,
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let workload_id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("run needs a workload: A|B|C|D"))?
+        .to_uppercase();
+    let kind = parse_system(args.get_or("system", "kvaccel"))?;
+    let threads = args.get_usize("threads", 4);
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+    let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
+
+    let opts = LsmOptions::default().with_threads(threads);
+    let mut sys = System::build(kind, opts, ctx.merge_engine(), ctx.bloom_builder());
+    let mut env = SimEnv::new(seed, SsdConfig::default());
+    let cfg: BenchConfig = ctx.bench_config();
+
+    let r = match workload_id.as_str() {
+        "A" => workload::fillrandom(&mut sys, &mut env, &cfg),
+        "B" => workload::readwhilewriting(&mut sys, &mut env, &cfg, 9, 1),
+        "C" => workload::readwhilewriting(&mut sys, &mut env, &cfg, 8, 2),
+        "D" => {
+            let preload_bytes = ((20u64 << 30) as f64 * scale) as u64;
+            let t0 = workload::preload(&mut sys, &mut env, &cfg, preload_bytes)?;
+            workload::seekrandom(&mut sys, &mut env, &cfg, (60_000f64 * scale) as usize, 1024, t0)
+        }
+        other => return Err(anyhow!("unknown workload {other:?}")),
+    };
+
+    println!("system        {}", kind.label());
+    println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
+    println!("writes        {} ({:.1} Kops/s)", r.writes.total, r.write_kops());
+    println!("reads         {} ({:.1} Kops/s)", r.reads.total, r.read_kops());
+    println!("write p50/p99 {} / {}", fmt::nanos(r.write_lat.p50_us * 1e3), fmt::nanos(r.write_lat.p99_us * 1e3));
+    println!("read  p50/p99 {} / {}", fmt::nanos(r.read_lat.p50_us * 1e3), fmt::nanos(r.read_lat.p99_us * 1e3));
+    println!("throughput    {:.1} MB/s user writes", r.write_mbps);
+    println!("cpu           {:.1}% of 8 cores", r.cpu_percent);
+    println!("efficiency    {:.2} MB/s per CPU%", r.efficiency);
+    println!("stalls        {} halts ({:.2}s), {} slowdown instances", r.stop_events, r.stopped_s, r.slowdown_events);
+    println!("write amp     {:.2}", r.write_amplification);
+    if r.redirected_writes > 0 || r.rollbacks > 0 {
+        println!("kvaccel       {} redirected writes, {} rollbacks", r.redirected_writes, r.rollbacks);
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("experiment needs an id or 'all'"))?;
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+    let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
+    println!(
+        "running {id} at scale {scale} (paper = 1.0), engine {:?}; CSVs -> results/",
+        ctx.engine
+    );
+    run_experiment(&ctx, id)?;
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let dir = default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => {
+            println!("merge artifacts: {:?}", rt.merge_shapes());
+            println!("bloom artifacts: {:?}", rt.bloom_shapes());
+        }
+        Err(e) => println!("runtime not loadable: {e:#}"),
+    }
+    let ssd = SsdConfig::default();
+    println!(
+        "ssd model: {} ch x {} way, page {}, peak program bw {}",
+        ssd.nand.channels,
+        ssd.nand.ways,
+        fmt::bytes(ssd.nand.page_bytes as f64),
+        fmt::bytes(ssd.nand.peak_program_bw())
+    );
+    println!(
+        "pcie: {:.1} GB/s per direction, dma chunk {}",
+        ssd.pcie.bytes_per_ns,
+        fmt::bytes(ssd.dma_chunk_bytes as f64)
+    );
+    Ok(())
+}

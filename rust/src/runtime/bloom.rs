@@ -1,0 +1,146 @@
+//! SST bloom-filter construction via the `bloom_build` artifact, plus the
+//! bit-identical pure-Rust fallback used for probing at read time (the
+//! read path only tests bits; building the whole bitmap is the batch
+//! workload that rides the offload).
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use super::XlaRuntime;
+
+/// Hash constants — MUST match python/compile/kernels/bloom.py.
+pub const H1_MULT: u32 = 0x9E37_79B1;
+pub const H2_MULT: u32 = 0x85EB_CA77;
+
+/// Probe positions for `key` (double hashing, Kirsch-Mitzenmacher).
+#[inline]
+pub fn probe_positions(key: u32, num_probes: usize, num_bits: u32) -> impl Iterator<Item = u32> {
+    let h1 = key.wrapping_mul(H1_MULT) >> 17;
+    let h2 = (key.wrapping_mul(H2_MULT) >> 15) | 1;
+    (0..num_probes as u32).map(move |i| (h1.wrapping_add(i.wrapping_mul(h2))) % num_bits)
+}
+
+/// Build the packed bitmap words in pure Rust (reference + fallback).
+pub fn build_bitmap_rust(keys: &[u32], num_probes: usize, num_bits: u32) -> Vec<u32> {
+    assert_eq!(num_bits % 32, 0);
+    let mut words = vec![0u32; (num_bits / 32) as usize];
+    for &k in keys {
+        for pos in probe_positions(k, num_probes, num_bits) {
+            words[(pos / 32) as usize] |= 1 << (pos % 32);
+        }
+    }
+    words
+}
+
+/// Test a key against packed bitmap words.
+#[inline]
+pub fn may_contain(words: &[u32], key: u32, num_probes: usize, num_bits: u32) -> bool {
+    probe_positions(key, num_probes, num_bits)
+        .all(|pos| words[(pos / 32) as usize] >> (pos % 32) & 1 == 1)
+}
+
+/// Bloom bitmap builder: XLA artifact if available + shape matches,
+/// otherwise the Rust fallback. Both produce identical words.
+#[derive(Clone, Default)]
+pub struct BloomBuilder {
+    rt: Option<Arc<XlaRuntime>>,
+}
+
+impl BloomBuilder {
+    pub fn rust() -> Self {
+        Self { rt: None }
+    }
+
+    pub fn xla(rt: Arc<XlaRuntime>) -> Self {
+        Self { rt: Some(rt) }
+    }
+
+    pub fn is_accelerated(&self) -> bool {
+        self.rt.is_some()
+    }
+
+    /// Build bitmap words for `keys` with the given geometry.
+    pub fn build(&self, keys: &[u32], num_probes: usize, num_bits: u32) -> Result<Vec<u32>> {
+        if let Some(rt) = &self.rt {
+            // Find an artifact with matching probes/bits and capacity.
+            let shape = rt
+                .bloom_shapes()
+                .into_iter()
+                .find(|&(n, p, m)| {
+                    n >= keys.len() && p == num_probes && m as u32 == num_bits
+                });
+            if let Some((n, p, m)) = shape {
+                return self.build_xla(rt, keys, n, p, m);
+            }
+        }
+        Ok(build_bitmap_rust(keys, num_probes, num_bits))
+    }
+
+    fn build_xla(
+        &self,
+        rt: &Arc<XlaRuntime>,
+        keys: &[u32],
+        n: usize,
+        p: usize,
+        m: usize,
+    ) -> Result<Vec<u32>> {
+        let exe = rt
+            .bloom_exe((n, p, m))
+            .ok_or_else(|| anyhow!("missing bloom artifact ({n},{p},{m})"))?;
+        let mut padded = vec![0u32; n];
+        padded[..keys.len()].copy_from_slice(keys);
+        let lk = xla::Literal::vec1(&padded)
+            .reshape(&[1, n as i64])
+            .map_err(|e| anyhow!("reshape bloom keys: {e:?}"))?;
+        let lv = xla::Literal::scalar(keys.len() as u32);
+        let result = exe
+            .execute::<xla::Literal>(&[lk, lv])
+            .map_err(|e| anyhow!("execute bloom: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch bloom: {e:?}"))?;
+        let words = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple bloom: {e:?}"))?;
+        words.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_false_negatives() {
+        let keys: Vec<u32> = (0..500u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let words = build_bitmap_rust(&keys, 7, 4096);
+        for &k in &keys {
+            assert!(may_contain(&words, k, 7, 4096));
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_reasonable() {
+        let keys: Vec<u32> = (0..1000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        // 10 bits/key, 7 probes -> ~1% fpr
+        let words = build_bitmap_rust(&keys, 7, 10240);
+        let fp = (1_000_000u32..1_010_000)
+            .filter(|&k| may_contain(&words, k, 7, 10240))
+            .count();
+        assert!(fp < 500, "fp rate too high: {fp}/10000");
+    }
+
+    #[test]
+    fn empty_filter_rejects() {
+        let words = build_bitmap_rust(&[], 7, 1024);
+        assert!(!may_contain(&words, 42, 7, 1024));
+    }
+
+    #[test]
+    fn probe_positions_in_range() {
+        for k in [0u32, 1, u32::MAX, 0xDEADBEEF] {
+            for pos in probe_positions(k, 10, 333 * 32) {
+                assert!(pos < 333 * 32);
+            }
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Compaction merge offload: the L1/L2 `compaction_merge` artifact driven
+//! from the Rust compaction path, plus a bit-identical pure-Rust fallback.
+//!
+//! Contract (matches python/compile/model.py):
+//! - Input: up to B*N `(key, tag)` u32 pairs; **lower tag == newer
+//!   version**. The caller concatenates compaction input runs newest-first
+//!   so the position index works directly as the tag.
+//! - Output: pairs sorted ascending by `(key, tag)` with a keep mask on
+//!   the first (newest) occurrence of each key; `PAD_KEY` pad lanes sort
+//!   last and are stripped.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use super::XlaRuntime;
+
+/// Reserved padding key — never a user key (enforced by `lsm::Key` checks).
+pub const PAD_KEY: u32 = u32::MAX;
+
+/// One merged, deduped output element: `(key, tag)` where `tag` indexes the
+/// caller's concatenated input (its permutation back to full entries).
+pub type MergedPair = (u32, u32);
+
+/// How a window of pairs is sorted+deduped.
+#[derive(Clone)]
+pub enum MergeEngine {
+    /// AOT XLA artifact executed via PJRT (the paper-analog offload path).
+    Xla(MergeAccelerator),
+    /// Pure-Rust reference (also the bench baseline).
+    Rust,
+}
+
+impl MergeEngine {
+    pub fn rust() -> Self {
+        MergeEngine::Rust
+    }
+
+    pub fn xla(rt: Arc<XlaRuntime>) -> Result<Self> {
+        Ok(MergeEngine::Xla(MergeAccelerator::new(rt)?))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeEngine::Xla(_) => "xla",
+            MergeEngine::Rust => "rust",
+        }
+    }
+
+    /// Sort + dedup one window of `(key, tag)` pairs (see module docs).
+    /// Output is ascending by key, exactly one (the lowest-tag) pair per
+    /// distinct key.
+    pub fn merge_window(&self, pairs: &[(u32, u32)]) -> Result<Vec<MergedPair>> {
+        match self {
+            MergeEngine::Rust => Ok(merge_window_rust(pairs)),
+            MergeEngine::Xla(acc) => acc.merge_window(pairs),
+        }
+    }
+}
+
+/// Reference implementation: identical semantics to the artifact.
+pub fn merge_window_rust(pairs: &[(u32, u32)]) -> Vec<MergedPair> {
+    let mut packed: Vec<u64> = pairs
+        .iter()
+        .map(|&(k, t)| ((k as u64) << 32) | t as u64)
+        .collect();
+    packed.sort_unstable();
+    let mut out = Vec::with_capacity(packed.len());
+    let mut prev_key = u64::MAX;
+    for p in packed {
+        let key = p >> 32;
+        if key != prev_key {
+            let k = key as u32;
+            if k != PAD_KEY {
+                out.push((k, (p & 0xFFFF_FFFF) as u32));
+            }
+            prev_key = key;
+        }
+    }
+    out
+}
+
+/// PJRT-backed merge accelerator. Picks the smallest artifact window that
+/// fits the input; larger inputs are split into windows and k-way merged
+/// (the O(n log n) work stays on the accelerator; the final pass is a
+/// linear scan).
+#[derive(Clone)]
+pub struct MergeAccelerator {
+    rt: Arc<XlaRuntime>,
+    /// (batch, lanes) shapes ascending by capacity.
+    shapes: Vec<(usize, usize)>,
+    /// Largest single-window lane count.
+    max_lanes: usize,
+}
+
+impl MergeAccelerator {
+    pub fn new(rt: Arc<XlaRuntime>) -> Result<Self> {
+        let shapes = rt.merge_shapes();
+        if shapes.is_empty() {
+            return Err(anyhow!("runtime has no merge artifacts"));
+        }
+        let max_lanes = shapes.iter().map(|&(b, n)| b * n).max().unwrap();
+        Ok(Self { rt, shapes, max_lanes })
+    }
+
+    /// Capacity of the largest single dispatch.
+    pub fn max_window(&self) -> usize {
+        self.max_lanes
+    }
+
+    pub fn merge_window(&self, pairs: &[(u32, u32)]) -> Result<Vec<MergedPair>> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if pairs.len() <= self.max_lanes {
+            let (keys, tags, keep, b, n) = self.execute_padded(pairs)?;
+            let mut out = Vec::with_capacity(pairs.len());
+            collect_kept(&keys, &tags, &keep, b, n, &mut out);
+            // Windows within one dispatch are batch rows sorted
+            // independently; merge them.
+            if b > 1 {
+                out = merge_sorted_dedup(out, n);
+            }
+            return Ok(out);
+        }
+        // Oversized input: accelerate per max-window chunk, then k-way
+        // merge the sorted chunks (linear, newest-wins via tag).
+        let mut runs: Vec<Vec<MergedPair>> = Vec::new();
+        for chunk in pairs.chunks(self.max_lanes) {
+            runs.push(self.merge_window(chunk)?);
+        }
+        Ok(kway_merge_dedup(runs))
+    }
+
+    /// Dispatch one padded window; returns raw artifact outputs.
+    fn execute_padded(
+        &self,
+        pairs: &[(u32, u32)],
+    ) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>, usize, usize)> {
+        let (b, n) = self.pick_shape(pairs.len());
+        let total = b * n;
+        let mut keys = vec![PAD_KEY; total];
+        let mut tags = vec![u32::MAX; total];
+        for (i, &(k, t)) in pairs.iter().enumerate() {
+            keys[i] = k;
+            tags[i] = t;
+        }
+        let exe = self
+            .rt
+            .merge_exe((b, n))
+            .ok_or_else(|| anyhow!("missing merge artifact ({b},{n})"))?;
+        let lk = xla::Literal::vec1(&keys)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| anyhow!("reshape keys: {e:?}"))?;
+        let lt = xla::Literal::vec1(&tags)
+            .reshape(&[b as i64, n as i64])
+            .map_err(|e| anyhow!("reshape tags: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lk, lt])
+            .map_err(|e| anyhow!("execute merge: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (k, t, m) = result
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        Ok((
+            k.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?,
+            t.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?,
+            m.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?,
+            b,
+            n,
+        ))
+    }
+
+    /// Smallest shape with capacity >= len (or the largest overall).
+    fn pick_shape(&self, len: usize) -> (usize, usize) {
+        for &(b, n) in &self.shapes {
+            if b * n >= len {
+                return (b, n);
+            }
+        }
+        *self.shapes.last().unwrap()
+    }
+}
+
+/// Gather kept (non-pad) pairs row by row from artifact output.
+fn collect_kept(
+    keys: &[u32],
+    tags: &[u32],
+    keep: &[u32],
+    b: usize,
+    n: usize,
+    out: &mut Vec<MergedPair>,
+) {
+    for row in 0..b {
+        let base = row * n;
+        for i in 0..n {
+            if keep[base + i] != 0 && keys[base + i] != PAD_KEY {
+                out.push((keys[base + i], tags[base + i]));
+            }
+        }
+    }
+}
+
+/// Merge `b` concatenated sorted deduped rows of width <= n into one.
+fn merge_sorted_dedup(flat: Vec<MergedPair>, _n: usize) -> Vec<MergedPair> {
+    // Rows are concatenated in `flat` but each row is sorted; split on
+    // descending key boundaries and k-way merge.
+    let mut runs: Vec<Vec<MergedPair>> = Vec::new();
+    let mut cur: Vec<MergedPair> = Vec::new();
+    for p in flat {
+        if let Some(&last) = cur.last() {
+            if p.0 < last.0 {
+                runs.push(std::mem::take(&mut cur));
+            }
+        }
+        cur.push(p);
+    }
+    if !cur.is_empty() {
+        runs.push(cur);
+    }
+    kway_merge_dedup(runs)
+}
+
+/// Linear k-way merge of sorted, per-run-deduped `(key, tag)` runs;
+/// across runs the lowest tag wins per key.
+pub fn kway_merge_dedup(runs: Vec<Vec<MergedPair>>) -> Vec<MergedPair> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut heads: Vec<usize> = vec![0; runs.len()];
+    let mut out: Vec<MergedPair> = Vec::with_capacity(total);
+    loop {
+        let mut best: Option<(u32, u32, usize)> = None;
+        for (ri, run) in runs.iter().enumerate() {
+            if let Some(&(k, t)) = run.get(heads[ri]) {
+                let better = match best {
+                    None => true,
+                    Some((bk, bt, _)) => (k, t) < (bk, bt),
+                };
+                if better {
+                    best = Some((k, t, ri));
+                }
+            }
+        }
+        match best {
+            None => break,
+            Some((k, t, ri)) => {
+                heads[ri] += 1;
+                match out.last() {
+                    Some(&(lk, _)) if lk == k => {} // older duplicate
+                    _ => out.push((k, t)),
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_merge_sorts_and_dedups() {
+        let pairs = vec![(5, 30), (9, 1), (5, 10), (1, 2), (5, 20)];
+        let out = merge_window_rust(&pairs);
+        assert_eq!(out, vec![(1, 2), (5, 10), (9, 1)]);
+    }
+
+    #[test]
+    fn rust_merge_strips_pad() {
+        let pairs = vec![(PAD_KEY, 0), (3, 1), (PAD_KEY, u32::MAX)];
+        assert_eq!(merge_window_rust(&pairs), vec![(3, 1)]);
+    }
+
+    #[test]
+    fn rust_merge_empty() {
+        assert!(merge_window_rust(&[]).is_empty());
+    }
+
+    #[test]
+    fn kway_newest_wins_across_runs() {
+        let runs = vec![vec![(1, 5), (4, 0)], vec![(1, 2), (2, 9)]];
+        assert_eq!(kway_merge_dedup(runs), vec![(1, 2), (2, 9), (4, 0)]);
+    }
+
+    #[test]
+    fn kway_empty_runs() {
+        assert!(kway_merge_dedup(vec![vec![], vec![]]).is_empty());
+    }
+
+    #[test]
+    fn merge_sorted_dedup_splits_rows() {
+        // two sorted rows concatenated: [1,3,7] ++ [2,3,9]
+        let flat = vec![(1, 0), (3, 4), (7, 1), (2, 2), (3, 3), (9, 5)];
+        let out = merge_sorted_dedup(flat, 3);
+        assert_eq!(out, vec![(1, 0), (2, 2), (3, 3), (7, 1), (9, 5)]);
+    }
+}

@@ -1,0 +1,160 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Python runs only at build time; after `make artifacts` the binary is
+//! self-contained. Interchange is HLO *text* — the image's xla_extension
+//! 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids), and
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod bloom;
+pub mod merge;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use bloom::BloomBuilder;
+pub use merge::{MergeAccelerator, MergeEngine, PAD_KEY};
+
+/// Compiled artifact registry keyed by artifact kind + shape.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    /// merge executables keyed by (batch, lanes)
+    merges: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    /// bloom executables keyed by (keys, probes, bits)
+    blooms: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Load and compile every artifact in `dir` (see aot.py for the naming
+    /// scheme). Compilation happens once, here; execution is lock-free.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut rt = Self {
+            client,
+            merges: HashMap::new(),
+            blooms: HashMap::new(),
+            dir: dir.clone(),
+        };
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts`)"))?;
+        for entry in entries {
+            let path = entry?.path();
+            let name = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n,
+                None => continue,
+            };
+            if let Some(shape) = parse_merge_name(name) {
+                let exe = rt.compile(&path)?;
+                rt.merges.insert(shape, exe);
+            } else if let Some(shape) = parse_bloom_name(name) {
+                let exe = rt.compile(&path)?;
+                rt.blooms.insert(shape, exe);
+            }
+        }
+        if rt.merges.is_empty() {
+            return Err(anyhow!(
+                "no merge artifacts found in {dir:?}; run `make artifacts`"
+            ));
+        }
+        Ok(rt)
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Merge-window shapes available, sorted ascending by capacity.
+    pub fn merge_shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = self.merges.keys().copied().collect();
+        v.sort_by_key(|&(b, n)| (b * n, n));
+        v
+    }
+
+    pub fn bloom_shapes(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self.blooms.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub(crate) fn merge_exe(
+        &self,
+        shape: (usize, usize),
+    ) -> Option<&xla::PjRtLoadedExecutable> {
+        self.merges.get(&shape)
+    }
+
+    pub(crate) fn bloom_exe(
+        &self,
+        shape: (usize, usize, usize),
+    ) -> Option<&xla::PjRtLoadedExecutable> {
+        self.blooms.get(&shape)
+    }
+}
+
+/// `merge_b{B}_n{N}.hlo.txt` -> (B, N)
+fn parse_merge_name(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("merge_b")?.strip_suffix(".hlo.txt")?;
+    let (b, n) = rest.split_once("_n")?;
+    Some((b.parse().ok()?, n.parse().ok()?))
+}
+
+/// `bloom_n{N}_p{P}_m{M}.hlo.txt` -> (N, P, M)
+fn parse_bloom_name(name: &str) -> Option<(usize, usize, usize)> {
+    let rest = name.strip_prefix("bloom_n")?.strip_suffix(".hlo.txt")?;
+    let (n, rest) = rest.split_once("_p")?;
+    let (p, m) = rest.split_once("_m")?;
+    Some((n.parse().ok()?, p.parse().ok()?, m.parse().ok()?))
+}
+
+/// Shared handle used across the engine. `None` (no artifacts) degrades to
+/// the pure-Rust fallbacks — used by unit tests that shouldn't pay PJRT
+/// startup, and exercised on purpose by `MergeEngine::rust()`.
+pub type SharedRuntime = Option<Arc<XlaRuntime>>;
+
+/// Canonical artifacts location relative to the repo root, overridable via
+/// `KVACCEL_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("KVACCEL_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_merge_names() {
+        assert_eq!(parse_merge_name("merge_b4_n4096.hlo.txt"), Some((4, 4096)));
+        assert_eq!(parse_merge_name("merge_b1_n1024.hlo.txt"), Some((1, 1024)));
+        assert_eq!(parse_merge_name("bloom_n1_p2_m3.hlo.txt"), None);
+        assert_eq!(parse_merge_name("merge_b4_n4096.hlo"), None);
+    }
+
+    #[test]
+    fn parse_bloom_names() {
+        assert_eq!(
+            parse_bloom_name("bloom_n32768_p7_m327680.hlo.txt"),
+            Some((32768, 7, 327680))
+        );
+        assert_eq!(parse_bloom_name("merge_b4_n4096.hlo.txt"), None);
+    }
+}

@@ -1,0 +1,71 @@
+//! Virtual clock: monotonically advancing nanosecond counter.
+
+/// Virtual nanoseconds since experiment start.
+pub type Nanos = u64;
+
+pub const NS_PER_SEC: Nanos = 1_000_000_000;
+pub const SECONDS: Nanos = NS_PER_SEC;
+pub const MILLIS: Nanos = 1_000_000;
+pub const MICROS: Nanos = 1_000;
+
+/// The experiment-global virtual clock. Actors (workload threads,
+/// background jobs, the device) all express time on this axis; the
+/// workload driver advances it in global order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Clock {
+    now: Nanos,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { now: 0 }
+    }
+
+    #[inline]
+    pub fn now(&self) -> Nanos {
+        self.now
+    }
+
+    /// Advance to an absolute time; ignores moves into the past (multiple
+    /// actors may report completions out of order).
+    #[inline]
+    pub fn advance_to(&mut self, t: Nanos) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    #[inline]
+    pub fn advance_by(&mut self, d: Nanos) {
+        self.now += d;
+    }
+
+    /// Current 1-second bin index (used by all time-series collectors).
+    #[inline]
+    pub fn second(&self) -> usize {
+        (self.now / NS_PER_SEC) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_monotonic() {
+        let mut c = Clock::new();
+        c.advance_to(100);
+        c.advance_to(50); // no-op
+        assert_eq!(c.now(), 100);
+        c.advance_by(25);
+        assert_eq!(c.now(), 125);
+    }
+
+    #[test]
+    fn second_bins() {
+        let mut c = Clock::new();
+        assert_eq!(c.second(), 0);
+        c.advance_to(NS_PER_SEC * 3 + 1);
+        assert_eq!(c.second(), 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! CPU-time accounting: every host-side activity charges busy nanoseconds
+//! to a class; CPU utilization (paper Eq. 1 denominator) integrates the
+//! host classes over a modeled core budget (8 cores, Table II: "CPU usage
+//! limited to 8 cores"). The device ARM core is accounted separately.
+
+use super::clock::{Nanos, NS_PER_SEC};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CpuClass {
+    /// Foreground writer/reader threads (WAL memcpy, memtable insert, ...).
+    Foreground,
+    /// Flush jobs (imm memtable -> L0 SST).
+    Flush,
+    /// Compaction merge work.
+    Compaction,
+    /// KVACCEL software modules (detector poll, metadata ops, rollback).
+    Kvaccel,
+    /// The device's single ARM Cortex-A9 (Dev-LSM work) — *not* host CPU.
+    DeviceArm,
+}
+
+const HOST_CLASSES: [CpuClass; 4] = [
+    CpuClass::Foreground,
+    CpuClass::Flush,
+    CpuClass::Compaction,
+    CpuClass::Kvaccel,
+];
+
+#[derive(Clone, Debug, Default)]
+pub struct CpuAccounting {
+    foreground: Nanos,
+    flush: Nanos,
+    compaction: Nanos,
+    kvaccel: Nanos,
+    device_arm: Nanos,
+    /// host busy ns binned per virtual second (for CPU time-series).
+    host_bins: Vec<Nanos>,
+}
+
+impl CpuAccounting {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn charge(&mut self, class: CpuClass, at: Nanos, busy: Nanos) {
+        let slot = match class {
+            CpuClass::Foreground => &mut self.foreground,
+            CpuClass::Flush => &mut self.flush,
+            CpuClass::Compaction => &mut self.compaction,
+            CpuClass::Kvaccel => &mut self.kvaccel,
+            CpuClass::DeviceArm => &mut self.device_arm,
+        };
+        *slot += busy;
+        if class != CpuClass::DeviceArm {
+            let bin = (at / NS_PER_SEC) as usize;
+            if self.host_bins.len() <= bin {
+                self.host_bins.resize(bin + 1, 0);
+            }
+            self.host_bins[bin] += busy;
+        }
+    }
+
+    pub fn busy(&self, class: CpuClass) -> Nanos {
+        match class {
+            CpuClass::Foreground => self.foreground,
+            CpuClass::Flush => self.flush,
+            CpuClass::Compaction => self.compaction,
+            CpuClass::Kvaccel => self.kvaccel,
+            CpuClass::DeviceArm => self.device_arm,
+        }
+    }
+
+    pub fn host_busy_total(&self) -> Nanos {
+        HOST_CLASSES.iter().map(|&c| self.busy(c)).sum()
+    }
+
+    /// Average host CPU utilization in percent of `cores` over `elapsed`.
+    /// This is the denominator of the paper's efficiency metric (Eq. 1).
+    pub fn host_cpu_percent(&self, elapsed: Nanos, cores: u32) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        100.0 * self.host_busy_total() as f64 / (elapsed as f64 * cores as f64)
+    }
+
+    /// Per-second host CPU% series.
+    pub fn host_percent_series(&self, cores: u32) -> Vec<f64> {
+        self.host_bins
+            .iter()
+            .map(|&b| 100.0 * b as f64 / (NS_PER_SEC as f64 * cores as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_per_class() {
+        let mut cpu = CpuAccounting::new();
+        cpu.charge(CpuClass::Compaction, 0, 500);
+        cpu.charge(CpuClass::Compaction, 10, 250);
+        cpu.charge(CpuClass::DeviceArm, 10, 999);
+        assert_eq!(cpu.busy(CpuClass::Compaction), 750);
+        assert_eq!(cpu.host_busy_total(), 750);
+        assert_eq!(cpu.busy(CpuClass::DeviceArm), 999);
+    }
+
+    #[test]
+    fn percent_math() {
+        let mut cpu = CpuAccounting::new();
+        // 2 of 8 cores busy for 1s
+        cpu.charge(CpuClass::Flush, 0, 2 * NS_PER_SEC);
+        let pct = cpu.host_cpu_percent(NS_PER_SEC, 8);
+        assert!((pct - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_bins() {
+        let mut cpu = CpuAccounting::new();
+        cpu.charge(CpuClass::Foreground, NS_PER_SEC * 2 + 5, NS_PER_SEC / 2);
+        let series = cpu.host_percent_series(1);
+        assert_eq!(series.len(), 3);
+        assert!((series[2] - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! Virtual-time discrete-event substrate.
+//!
+//! The paper's experiments are 600-second wall-clock runs on a Cosmos+
+//! OpenSSD testbed; here every I/O and CPU cost is charged in *virtual*
+//! nanoseconds against device/CPU models, so a 600 s experiment runs in
+//! seconds of wall time, deterministically (seeded). See DESIGN.md §2.
+
+pub mod clock;
+pub mod cpu;
+pub mod jobs;
+pub mod rng;
+
+pub use clock::{Clock, Nanos, MICROS, MILLIS, NS_PER_SEC, SECONDS};
+pub use cpu::{CpuAccounting, CpuClass};
+pub use jobs::ThreadPool;
+pub use rng::SimRng;

@@ -1,0 +1,163 @@
+//! Deterministic RNG for workload generation (offline image has no `rand`
+//! crate; this is splitmix64 + xoshiro256**, both well-studied).
+
+#[derive(Clone, Debug)]
+pub struct SimRng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl SimRng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // xoshiro256**
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, bound) — Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn gen_range_u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn gen_range_u32(&mut self, bound: u32) -> u32 {
+        self.gen_range_u64(bound as u64) as u32
+    }
+
+    /// Bernoulli with probability num/den.
+    #[inline]
+    pub fn gen_ratio(&mut self, num: u32, den: u32) -> bool {
+        self.gen_range_u32(den) < num
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fork an independent stream (for per-actor RNGs).
+    pub fn fork(&mut self, stream: u64) -> SimRng {
+        SimRng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+}
+
+/// Deterministic value-byte stream used to materialize synthetic values
+/// (see lsm::entry::ValueDesc) — must be reproducible from (seed, len).
+pub fn value_bytes(seed: u32, len: u32) -> Vec<u8> {
+    let mut state = (seed as u64) << 1 | 1;
+    let mut out = Vec::with_capacity(len as usize);
+    while out.len() < len as usize {
+        let word = splitmix64(&mut state);
+        for b in word.to_le_bytes() {
+            if out.len() == len as usize {
+                break;
+            }
+            out.push(b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SimRng::new(42);
+        let mut b = SimRng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = SimRng::new(1);
+        let mut b = SimRng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = SimRng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.gen_range_u64(17) < 17);
+        }
+        // rough uniformity over 16 buckets
+        let mut hist = [0u32; 16];
+        for _ in 0..16_000 {
+            hist[r.gen_range_u64(16) as usize] += 1;
+        }
+        for h in hist {
+            assert!((600..1400).contains(&h), "non-uniform: {hist:?}");
+        }
+    }
+
+    #[test]
+    fn ratio_sanity() {
+        let mut r = SimRng::new(9);
+        let hits = (0..10_000).filter(|_| r.gen_ratio(1, 10)).count();
+        assert!((700..1300).contains(&hits), "ratio off: {hits}");
+    }
+
+    #[test]
+    fn value_bytes_deterministic_and_sized() {
+        assert_eq!(value_bytes(5, 100), value_bytes(5, 100));
+        assert_eq!(value_bytes(5, 100).len(), 100);
+        assert_ne!(value_bytes(5, 32), value_bytes(6, 32));
+        assert!(value_bytes(0, 0).is_empty());
+    }
+}

@@ -1,0 +1,442 @@
+//! Dev-LSM: the in-device LSM-based write buffer behind the key-value
+//! interface (paper §V-B/§V-E). Runs entirely on the device's single ARM
+//! Cortex-A9 core; its NAND traffic shares the array with the block
+//! interface.
+//!
+//! Structure: a device memtable (DRAM, capacitor-backed like commercial
+//! KV-SSDs) plus L0-style sorted runs programmed to the KV region of the
+//! FTL. No in-device compaction by default (the paper disables Dev-LSM
+//! compaction for its write-intensive evaluation; `DevLsmConfig::compact`
+//! enables a simple run-count-triggered merge).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::lsm::entry::{Entry, Key, Seq, ValueDesc};
+use crate::sim::{Nanos, MICROS};
+
+use super::ftl::{Extent, Ftl, Region};
+use super::nand::{NandArray, NandOp};
+
+#[derive(Clone, Debug)]
+pub struct DevLsmConfig {
+    /// Device DRAM budget for the memtable.
+    pub memtable_bytes: u64,
+    /// ARM cost of one memtable insert.
+    pub arm_put_ns: Nanos,
+    /// ARM cost of a point-lookup step (memtable or one run probe).
+    pub arm_lookup_ns: Nanos,
+    /// ARM cost per entry while serializing (flush/scan).
+    pub arm_serialize_ns: Nanos,
+    /// Merge device runs when their count exceeds this (0 = never, the
+    /// paper's workload-A configuration).
+    pub compact_run_trigger: usize,
+}
+
+impl Default for DevLsmConfig {
+    fn default() -> Self {
+        Self {
+            memtable_bytes: 32 * 1024 * 1024,
+            arm_put_ns: 3 * MICROS,
+            arm_lookup_ns: 2 * MICROS,
+            arm_serialize_ns: MICROS / 2,
+            compact_run_trigger: 0,
+        }
+    }
+}
+
+/// One sorted run in the KV region.
+#[derive(Clone, Debug)]
+pub struct DevRun {
+    pub entries: Arc<Vec<Entry>>,
+    pub extent: Extent,
+    pub bytes: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct DevLsmStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub flushes: u64,
+    pub resets: u64,
+    pub bulk_scans: u64,
+    pub compactions: u64,
+}
+
+/// The in-device LSM. NAND/FTL are passed in by the owning `SsdDevice`
+/// (they are shared with the block interface — that sharing *is* the
+/// paper's architecture).
+#[derive(Clone, Debug)]
+pub struct DevLsm {
+    cfg: DevLsmConfig,
+    mem: BTreeMap<Key, (Seq, ValueDesc)>,
+    mem_bytes: u64,
+    runs: Vec<DevRun>, // newest first
+    /// Single ARM core busy horizon.
+    arm_free: Nanos,
+    pub stats: DevLsmStats,
+}
+
+impl DevLsm {
+    pub fn new(cfg: DevLsmConfig) -> Self {
+        Self {
+            cfg,
+            mem: BTreeMap::new(),
+            mem_bytes: 0,
+            runs: Vec::new(),
+            arm_free: 0,
+            stats: DevLsmStats::default(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty() && self.runs.is_empty()
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.mem.len() + self.runs.iter().map(|r| r.entries.len()).sum::<usize>()
+    }
+
+    pub fn buffered_bytes(&self) -> u64 {
+        self.mem_bytes + self.runs.iter().map(|r| r.bytes).sum::<u64>()
+    }
+
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Charge `work` on the ARM core starting no earlier than `t`.
+    fn arm(&mut self, t: Nanos, work: Nanos) -> Nanos {
+        let start = t.max(self.arm_free);
+        self.arm_free = start + work;
+        self.arm_free
+    }
+
+    /// Device-side PUT (data already DMA'd in). Returns ack time and the
+    /// ARM busy-time charged (for device-CPU accounting).
+    pub fn put(
+        &mut self,
+        t: Nanos,
+        entry: Entry,
+        nand: &mut NandArray,
+        ftl: &mut Ftl,
+    ) -> Result<(Nanos, Nanos)> {
+        self.stats.puts += 1;
+        let mut charged = self.cfg.arm_put_ns;
+        let ack = self.arm(t, self.cfg.arm_put_ns);
+        let sz = entry.encoded_len();
+        self.mem_bytes += sz;
+        self.mem.insert(entry.key, (entry.seq, entry.val));
+        if self.mem_bytes >= self.cfg.memtable_bytes {
+            charged += self.flush(ack, nand, ftl)?;
+        }
+        Ok((ack, charged))
+    }
+
+    /// Flush the device memtable to a sorted NAND run. The ARM serializes
+    /// entries; NAND programs complete asynchronously (capacitor-backed).
+    /// Returns ARM busy-time charged.
+    pub fn flush(
+        &mut self,
+        t: Nanos,
+        nand: &mut NandArray,
+        ftl: &mut Ftl,
+    ) -> Result<Nanos> {
+        if self.mem.is_empty() {
+            return Ok(0);
+        }
+        self.stats.flushes += 1;
+        let entries: Vec<Entry> = self
+            .mem
+            .iter()
+            .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
+            .collect();
+        let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        let work = self.cfg.arm_serialize_ns * entries.len() as u64;
+        let ready = self.arm(t, work);
+        let extent = ftl.alloc_bytes(Region::KeyValue, bytes)?;
+        nand.submit(ready, bytes, NandOp::Program);
+        self.runs.insert(
+            0,
+            DevRun { entries: Arc::new(entries), extent, bytes },
+        );
+        self.mem.clear();
+        self.mem_bytes = 0;
+        if self.cfg.compact_run_trigger > 0 && self.runs.len() > self.cfg.compact_run_trigger
+        {
+            return Ok(work + self.compact_runs(ready, nand, ftl)?);
+        }
+        Ok(work)
+    }
+
+    /// Simple full-merge device compaction (optional; see config).
+    fn compact_runs(
+        &mut self,
+        t: Nanos,
+        nand: &mut NandArray,
+        ftl: &mut Ftl,
+    ) -> Result<Nanos> {
+        self.stats.compactions += 1;
+        let read_bytes: u64 = self.runs.iter().map(|r| r.bytes).sum();
+        let ready = nand.submit(t, read_bytes, NandOp::Read);
+        let merged = self.merged_entries();
+        let work = self.cfg.arm_serialize_ns * merged.len() as u64;
+        let done = self.arm(ready, work);
+        let bytes: u64 = merged.iter().map(|e| e.encoded_len()).sum();
+        for run in self.runs.drain(..) {
+            ftl.trim(Region::KeyValue, run.extent);
+        }
+        let extent = ftl.alloc_bytes(Region::KeyValue, bytes)?;
+        nand.submit(done, bytes, NandOp::Program);
+        self.runs.push(DevRun { entries: Arc::new(merged), extent, bytes });
+        Ok(work)
+    }
+
+    /// Point lookup. Returns (result, ack_time, arm_ns, nand_reads).
+    pub fn get(
+        &mut self,
+        t: Nanos,
+        key: Key,
+        nand: &mut NandArray,
+    ) -> (Option<ValueDesc>, Nanos, Nanos) {
+        self.stats.gets += 1;
+        let mut charged = self.cfg.arm_lookup_ns;
+        let mut now = self.arm(t, self.cfg.arm_lookup_ns);
+        if let Some(&(_, val)) = self.mem.get(&key) {
+            return (Some(val), now, charged);
+        }
+        // probe runs newest-first; each probe costs a NAND page read —
+        // the paper's "slower point read query on the Dev-LSM".
+        let page = nand.config().page_bytes;
+        let mut result = None;
+        for run in &self.runs {
+            charged += self.cfg.arm_lookup_ns;
+            let probe_done = nand.submit(now, page, NandOp::Read);
+            now = probe_done.max(now) + self.cfg.arm_lookup_ns;
+            if let Ok(idx) = run.entries.binary_search_by(|e| e.key.cmp(&key)) {
+                result = Some(run.entries[idx].val);
+                break;
+            }
+        }
+        self.arm_free = self.arm_free.max(now);
+        (result, now, charged)
+    }
+
+    /// All live entries, newest version per key, ascending by key. This is
+    /// the iterator-based range scan's payload (paper Fig 9 steps 3-5).
+    pub fn merged_entries(&self) -> Vec<Entry> {
+        let mut out: BTreeMap<Key, (Seq, ValueDesc)> = BTreeMap::new();
+        // oldest runs first so newer overwrite
+        for run in self.runs.iter().rev() {
+            for e in run.entries.iter() {
+                match out.get(&e.key) {
+                    Some(&(seq, _)) if seq >= e.seq => {}
+                    _ => {
+                        out.insert(e.key, (e.seq, e.val));
+                    }
+                }
+            }
+        }
+        for (&k, &(seq, val)) in &self.mem {
+            match out.get(&k) {
+                Some(&(s, _)) if s >= seq => {}
+                _ => {
+                    out.insert(k, (seq, val));
+                }
+            }
+        }
+        out.into_iter()
+            .map(|(k, (seq, val))| Entry { key: k, seq, val })
+            .collect()
+    }
+
+    /// Iterator-based bulky range scan for rollback: reads every run page
+    /// from NAND, merges on the ARM, and returns the entries plus the time
+    /// the serialized stream is ready in device memory for DMA-out.
+    /// Returns (entries, ready_time, arm_ns_charged, payload_bytes).
+    pub fn bulk_scan(
+        &mut self,
+        t: Nanos,
+        nand: &mut NandArray,
+    ) -> (Vec<Entry>, Nanos, Nanos, u64) {
+        self.stats.bulk_scans += 1;
+        let read_bytes: u64 = self.runs.iter().map(|r| r.bytes).sum();
+        let nand_done = if read_bytes > 0 {
+            nand.submit(t, read_bytes, NandOp::Read)
+        } else {
+            t
+        };
+        let entries = self.merged_entries();
+        let work = self.cfg.arm_serialize_ns * entries.len() as u64;
+        let ready = self.arm(nand_done, work);
+        let payload: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        (entries, ready, work, payload)
+    }
+
+    /// Reset after rollback (paper Fig 9 step 8): trim every run, clear
+    /// the memtable.
+    pub fn reset(&mut self, t: Nanos, ftl: &mut Ftl) -> Nanos {
+        self.stats.resets += 1;
+        for run in self.runs.drain(..) {
+            ftl.trim(Region::KeyValue, run.extent);
+        }
+        self.mem.clear();
+        self.mem_bytes = 0;
+        self.arm(t, 10 * MICROS)
+    }
+
+    /// Snapshot for a range iterator (memtable materialized + run refs).
+    pub fn iter_snapshot(&self) -> DevSnapshot {
+        let mem_run: Vec<Entry> = self
+            .mem
+            .iter()
+            .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
+            .collect();
+        let mut runs: Vec<Arc<Vec<Entry>>> = vec![Arc::new(mem_run)];
+        runs.extend(self.runs.iter().map(|r| r.entries.clone()));
+        DevSnapshot { runs }
+    }
+
+    pub fn config(&self) -> &DevLsmConfig {
+        &self.cfg
+    }
+}
+
+/// Immutable snapshot of Dev-LSM state for range iteration (newest source
+/// first).
+#[derive(Clone, Debug)]
+pub struct DevSnapshot {
+    pub runs: Vec<Arc<Vec<Entry>>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::nand::NandConfig;
+
+    fn rig() -> (DevLsm, NandArray, Ftl) {
+        let nand_cfg = NandConfig::default();
+        let total = 1 << 20;
+        (
+            DevLsm::new(DevLsmConfig::default()),
+            NandArray::new(nand_cfg),
+            Ftl::new(total, total / 2, 16 * 1024),
+        )
+    }
+
+    fn e(key: Key, seq: Seq) -> Entry {
+        Entry::new(key, seq, ValueDesc::new(key ^ seq, 4096))
+    }
+
+    #[test]
+    fn put_then_get_from_memtable() {
+        let (mut d, mut nand, mut ftl) = rig();
+        d.put(0, e(5, 1), &mut nand, &mut ftl).unwrap();
+        let (v, _, _) = d.get(1000, 5, &mut nand);
+        assert_eq!(v, Some(ValueDesc::new(5 ^ 1, 4096)));
+    }
+
+    #[test]
+    fn get_missing_is_none() {
+        let (mut d, mut nand, _) = rig();
+        let (v, _, _) = d.get(0, 42, &mut nand);
+        assert!(v.is_none());
+    }
+
+    #[test]
+    fn flush_creates_run_and_get_still_works() {
+        let (mut d, mut nand, mut ftl) = rig();
+        for k in 0..10 {
+            d.put(0, e(k, k + 1), &mut nand, &mut ftl).unwrap();
+        }
+        d.flush(0, &mut nand, &mut ftl).unwrap();
+        assert_eq!(d.run_count(), 1);
+        let (v, t, _) = d.get(0, 3, &mut nand);
+        assert_eq!(v, Some(ValueDesc::new(3 ^ 4, 4096)));
+        // run probe paid a NAND read
+        assert!(t >= nand.config().t_read);
+    }
+
+    #[test]
+    fn memtable_overflow_autoflushes() {
+        let nand_cfg = NandConfig::default();
+        let mut d = DevLsm::new(DevLsmConfig {
+            memtable_bytes: 10 * 4112,
+            ..Default::default()
+        });
+        let mut nand = NandArray::new(nand_cfg);
+        let mut ftl = Ftl::new(1 << 20, 0, 16 * 1024);
+        for k in 0..25 {
+            d.put(0, e(k, k + 1), &mut nand, &mut ftl).unwrap();
+        }
+        assert!(d.run_count() >= 2, "runs: {}", d.run_count());
+    }
+
+    #[test]
+    fn merged_entries_newest_wins() {
+        let (mut d, mut nand, mut ftl) = rig();
+        d.put(0, e(1, 1), &mut nand, &mut ftl).unwrap();
+        d.flush(0, &mut nand, &mut ftl).unwrap();
+        d.put(0, e(1, 9), &mut nand, &mut ftl).unwrap();
+        let m = d.merged_entries();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].seq, 9);
+    }
+
+    #[test]
+    fn bulk_scan_returns_everything_sorted() {
+        let (mut d, mut nand, mut ftl) = rig();
+        for k in [5u32, 1, 9, 3] {
+            d.put(0, e(k, k), &mut nand, &mut ftl).unwrap();
+        }
+        d.flush(0, &mut nand, &mut ftl).unwrap();
+        d.put(0, e(2, 10), &mut nand, &mut ftl).unwrap();
+        let (entries, ready, _, payload) = d.bulk_scan(0, &mut nand);
+        let keys: Vec<Key> = entries.iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![1, 2, 3, 5, 9]);
+        assert!(ready > 0);
+        assert!(payload > 5 * 4096);
+    }
+
+    #[test]
+    fn reset_empties_and_frees_pages(){
+        let (mut d, mut nand, mut ftl) = rig();
+        for k in 0..10 {
+            d.put(0, e(k, k + 1), &mut nand, &mut ftl).unwrap();
+        }
+        d.flush(0, &mut nand, &mut ftl).unwrap();
+        let allocated = ftl.allocated_pages(Region::KeyValue);
+        assert!(allocated > 0);
+        d.reset(0, &mut ftl);
+        assert!(d.is_empty());
+        assert_eq!(ftl.allocated_pages(Region::KeyValue), 0);
+    }
+
+    #[test]
+    fn device_compaction_merges_runs() {
+        let nand_cfg = NandConfig::default();
+        let mut d = DevLsm::new(DevLsmConfig {
+            memtable_bytes: 5 * 4112,
+            compact_run_trigger: 2,
+            ..Default::default()
+        });
+        let mut nand = NandArray::new(nand_cfg);
+        let mut ftl = Ftl::new(1 << 20, 0, 16 * 1024);
+        for k in 0..40 {
+            d.put(0, e(k % 7, k + 1), &mut nand, &mut ftl).unwrap();
+        }
+        d.flush(0, &mut nand, &mut ftl).unwrap();
+        assert!(d.run_count() <= 2, "compaction should bound runs");
+        assert!(d.stats.compactions > 0);
+    }
+
+    #[test]
+    fn arm_core_serializes_ops() {
+        let (mut d, mut nand, mut ftl) = rig();
+        let (a1, _) = d.put(0, e(1, 1), &mut nand, &mut ftl).unwrap();
+        let (a2, _) = d.put(0, e(2, 2), &mut nand, &mut ftl).unwrap();
+        assert!(a2 >= a1 + d.config().arm_put_ns);
+    }
+}

@@ -1,0 +1,240 @@
+//! Flash Translation Layer: logical-to-physical page mapping over the
+//! disaggregated address space (Fig 8).
+//!
+//! The logical page range is split at the **disaggregation point** into a
+//! block-interface region and a key-value-interface region; each region
+//! has its own allocator, so the two interfaces can never hand out
+//! overlapping NAND pages (paper §V-D). Mapping-table maintenance charges
+//! device-controller CPU time via the caller.
+//!
+//! GC modeling note: the LSM write pattern above this layer is
+//! append-and-trim (whole SST files / whole Dev-LSM runs), which keeps
+//! invalidation block-aligned; copy-back GC is therefore intentionally not
+//! modeled and write amplification below the FTL is ~1 (see DESIGN.md).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Region {
+    Block,
+    KeyValue,
+}
+
+/// One allocated extent of physical pages (contiguous for simplicity —
+/// striping happens at the NAND layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Extent {
+    pub start_page: u64,
+    pub pages: u64,
+}
+
+#[derive(Clone, Debug)]
+struct RegionState {
+    start: u64,
+    end: u64,
+    next: u64,
+    /// Free extents (start -> pages) returned by trims, coalesced lazily.
+    free: BTreeMap<u64, u64>,
+    free_pages: u64,
+    allocated_pages: u64,
+}
+
+impl RegionState {
+    fn new(start: u64, end: u64) -> Self {
+        Self {
+            start,
+            end,
+            next: start,
+            free: BTreeMap::new(),
+            free_pages: 0,
+            allocated_pages: 0,
+        }
+    }
+
+    fn capacity(&self) -> u64 {
+        self.end - self.start
+    }
+
+    fn available(&self) -> u64 {
+        (self.end - self.next) + self.free_pages
+    }
+
+    fn alloc(&mut self, pages: u64) -> Result<Extent> {
+        // Bump allocation first; fall back to the free list (first fit).
+        if self.end - self.next >= pages {
+            let ext = Extent { start_page: self.next, pages };
+            self.next += pages;
+            self.allocated_pages += pages;
+            return Ok(ext);
+        }
+        let fit = self
+            .free
+            .iter()
+            .find(|(_, &len)| len >= pages)
+            .map(|(&s, &len)| (s, len));
+        if let Some((s, len)) = fit {
+            self.free.remove(&s);
+            if len > pages {
+                self.free.insert(s + pages, len - pages);
+            }
+            self.free_pages -= pages;
+            self.allocated_pages += pages;
+            return Ok(Extent { start_page: s, pages });
+        }
+        bail!(
+            "FTL region exhausted: want {pages} pages, available {}",
+            self.available()
+        )
+    }
+
+    fn trim(&mut self, ext: Extent) {
+        self.allocated_pages = self.allocated_pages.saturating_sub(ext.pages);
+        self.free_pages += ext.pages;
+        self.free.insert(ext.start_page, ext.pages);
+        // coalesce neighbours
+        let mut merged = true;
+        while merged {
+            merged = false;
+            let keys: Vec<u64> = self.free.keys().copied().collect();
+            for s in keys {
+                if let Some(&len) = self.free.get(&s) {
+                    if let Some(&next_len) = self.free.get(&(s + len)) {
+                        self.free.remove(&(s + len));
+                        *self.free.get_mut(&s).unwrap() = len + next_len;
+                        merged = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The FTL proper: two regions split at the disaggregation point.
+#[derive(Clone, Debug)]
+pub struct Ftl {
+    block: RegionState,
+    kv: RegionState,
+    page_bytes: u64,
+}
+
+impl Ftl {
+    /// `disaggregation_point` is the first logical page of the KV region.
+    pub fn new(total_pages: u64, disaggregation_point: u64, page_bytes: u64) -> Self {
+        assert!(disaggregation_point <= total_pages);
+        Self {
+            block: RegionState::new(0, disaggregation_point),
+            kv: RegionState::new(disaggregation_point, total_pages),
+            page_bytes,
+        }
+    }
+
+    fn region(&mut self, r: Region) -> &mut RegionState {
+        match r {
+            Region::Block => &mut self.block,
+            Region::KeyValue => &mut self.kv,
+        }
+    }
+
+    pub fn alloc(&mut self, r: Region, pages: u64) -> Result<Extent> {
+        self.region(r).alloc(pages)
+    }
+
+    pub fn alloc_bytes(&mut self, r: Region, bytes: u64) -> Result<Extent> {
+        let pages = bytes.div_ceil(self.page_bytes).max(1);
+        self.alloc(r, pages)
+    }
+
+    pub fn trim(&mut self, r: Region, ext: Extent) {
+        self.region(r).trim(ext);
+    }
+
+    pub fn capacity_pages(&self, r: Region) -> u64 {
+        match r {
+            Region::Block => self.block.capacity(),
+            Region::KeyValue => self.kv.capacity(),
+        }
+    }
+
+    pub fn available_pages(&self, r: Region) -> u64 {
+        match r {
+            Region::Block => self.block.available(),
+            Region::KeyValue => self.kv.available(),
+        }
+    }
+
+    pub fn allocated_pages(&self, r: Region) -> u64 {
+        match r {
+            Region::Block => self.block.allocated_pages,
+            Region::KeyValue => self.kv.allocated_pages,
+        }
+    }
+
+    /// Interfaces can never overlap: the KV region starts where the block
+    /// region ends.
+    pub fn disaggregation_point(&self) -> u64 {
+        self.block.end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ftl() -> Ftl {
+        Ftl::new(1000, 800, 16 * 1024)
+    }
+
+    #[test]
+    fn regions_disjoint() {
+        let mut f = ftl();
+        let a = f.alloc(Region::Block, 10).unwrap();
+        let b = f.alloc(Region::KeyValue, 10).unwrap();
+        assert!(a.start_page + a.pages <= 800);
+        assert!(b.start_page >= 800);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut f = ftl();
+        assert!(f.alloc(Region::KeyValue, 200).is_ok());
+        assert!(f.alloc(Region::KeyValue, 1).is_err());
+    }
+
+    #[test]
+    fn trim_then_realloc() {
+        let mut f = ftl();
+        let a = f.alloc(Region::KeyValue, 200).unwrap();
+        f.trim(Region::KeyValue, a);
+        let b = f.alloc(Region::KeyValue, 150).unwrap();
+        assert_eq!(b.pages, 150);
+        assert_eq!(f.allocated_pages(Region::KeyValue), 150);
+    }
+
+    #[test]
+    fn coalescing_allows_big_realloc() {
+        let mut f = ftl();
+        let a = f.alloc(Region::KeyValue, 100).unwrap();
+        let b = f.alloc(Region::KeyValue, 100).unwrap();
+        f.trim(Region::KeyValue, a);
+        f.trim(Region::KeyValue, b);
+        assert!(f.alloc(Region::KeyValue, 200).is_ok());
+    }
+
+    #[test]
+    fn alloc_bytes_rounds_up() {
+        let mut f = ftl();
+        let e = f.alloc_bytes(Region::Block, 16 * 1024 + 1).unwrap();
+        assert_eq!(e.pages, 2);
+    }
+
+    #[test]
+    fn accounting() {
+        let mut f = ftl();
+        assert_eq!(f.capacity_pages(Region::Block), 800);
+        assert_eq!(f.available_pages(Region::KeyValue), 200);
+        f.alloc(Region::KeyValue, 50).unwrap();
+        assert_eq!(f.available_pages(Region::KeyValue), 150);
+    }
+}

@@ -1,0 +1,142 @@
+//! Key-value interface: NVMe-KV-style command surface (PUT / GET / SEEK /
+//! NEXT / bulk SCAN / RESET) with namespace support.
+//!
+//! Multi-tenancy (paper §V-D): each KV namespace owns an isolated Dev-LSM;
+//! all namespaces share the device's single ARM core, the NAND array and
+//! the KV region of the FTL — the same isolation model as [37].
+
+use anyhow::{anyhow, Result};
+
+use super::devlsm::{DevLsm, DevLsmConfig, DevSnapshot};
+use super::ftl::Ftl;
+use super::nand::NandArray;
+use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::sim::Nanos;
+
+pub type NamespaceId = u32;
+
+#[derive(Debug)]
+pub struct KvInterface {
+    namespaces: Vec<DevLsm>,
+}
+
+impl KvInterface {
+    pub fn new(cfg: DevLsmConfig) -> Self {
+        Self { namespaces: vec![DevLsm::new(cfg)] }
+    }
+
+    /// Create an additional namespace; returns its id.
+    pub fn create_namespace(&mut self, cfg: DevLsmConfig) -> NamespaceId {
+        self.namespaces.push(DevLsm::new(cfg));
+        (self.namespaces.len() - 1) as NamespaceId
+    }
+
+    pub fn namespace_count(&self) -> usize {
+        self.namespaces.len()
+    }
+
+    pub fn ns(&self, ns: NamespaceId) -> Result<&DevLsm> {
+        self.namespaces
+            .get(ns as usize)
+            .ok_or_else(|| anyhow!("unknown KV namespace {ns}"))
+    }
+
+    pub fn ns_mut(&mut self, ns: NamespaceId) -> Result<&mut DevLsm> {
+        self.namespaces
+            .get_mut(ns as usize)
+            .ok_or_else(|| anyhow!("unknown KV namespace {ns}"))
+    }
+
+    pub fn put(
+        &mut self,
+        ns: NamespaceId,
+        t: Nanos,
+        entry: Entry,
+        nand: &mut NandArray,
+        ftl: &mut Ftl,
+    ) -> Result<(Nanos, Nanos)> {
+        self.ns_mut(ns)?.put(t, entry, nand, ftl)
+    }
+
+    pub fn get(
+        &mut self,
+        ns: NamespaceId,
+        t: Nanos,
+        key: Key,
+        nand: &mut NandArray,
+    ) -> Result<(Option<ValueDesc>, Nanos, Nanos)> {
+        Ok(self.ns_mut(ns)?.get(t, key, nand))
+    }
+
+    pub fn bulk_scan(
+        &mut self,
+        ns: NamespaceId,
+        t: Nanos,
+        nand: &mut NandArray,
+    ) -> Result<(Vec<Entry>, Nanos, Nanos, u64)> {
+        Ok(self.ns_mut(ns)?.bulk_scan(t, nand))
+    }
+
+    pub fn reset(&mut self, ns: NamespaceId, t: Nanos, ftl: &mut Ftl) -> Result<Nanos> {
+        Ok(self.ns_mut(ns)?.reset(t, ftl))
+    }
+
+    pub fn snapshot(&self, ns: NamespaceId) -> Result<DevSnapshot> {
+        Ok(self.ns(ns)?.iter_snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::nand::NandConfig;
+
+    fn rig() -> (KvInterface, NandArray, Ftl) {
+        (
+            KvInterface::new(DevLsmConfig::default()),
+            NandArray::new(NandConfig::default()),
+            Ftl::new(1 << 20, 0, 16 * 1024),
+        )
+    }
+
+    fn e(key: Key, seq: u32) -> Entry {
+        Entry::new(key, seq, ValueDesc::new(key, 128))
+    }
+
+    #[test]
+    fn default_namespace_works() {
+        let (mut kv, mut nand, mut ftl) = rig();
+        kv.put(0, 0, e(1, 1), &mut nand, &mut ftl).unwrap();
+        let (v, _, _) = kv.get(0, 0, 1, &mut nand).unwrap();
+        assert_eq!(v, Some(ValueDesc::new(1, 128)));
+    }
+
+    #[test]
+    fn namespaces_isolated() {
+        let (mut kv, mut nand, mut ftl) = rig();
+        let ns2 = kv.create_namespace(DevLsmConfig::default());
+        kv.put(0, 0, e(1, 1), &mut nand, &mut ftl).unwrap();
+        let (v, _, _) = kv.get(ns2, 0, 1, &mut nand).unwrap();
+        assert!(v.is_none(), "tenant isolation violated");
+        kv.put(ns2, 0, e(1, 7), &mut nand, &mut ftl).unwrap();
+        let (v0, _, _) = kv.get(0, 0, 1, &mut nand).unwrap();
+        assert_eq!(v0.map(|d| d.seed), Some(1));
+    }
+
+    #[test]
+    fn unknown_namespace_errors() {
+        let (mut kv, mut nand, _) = rig();
+        assert!(kv.get(9, 0, 1, &mut nand).is_err());
+    }
+
+    #[test]
+    fn reset_scopes_to_namespace() {
+        let (mut kv, mut nand, mut ftl) = rig();
+        let ns2 = kv.create_namespace(DevLsmConfig::default());
+        kv.put(0, 0, e(1, 1), &mut nand, &mut ftl).unwrap();
+        kv.put(ns2, 0, e(2, 1), &mut nand, &mut ftl).unwrap();
+        kv.reset(0, 0, &mut ftl).unwrap();
+        assert!(kv.ns(0).unwrap().is_empty());
+        assert!(!kv.ns(ns2).unwrap().is_empty());
+    }
+}

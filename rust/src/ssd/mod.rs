@@ -1,0 +1,22 @@
+//! Dual-interface SSD simulator (substitute for the Cosmos+ OpenSSD
+//! prototype — see DESIGN.md §2).
+//!
+//! The SSD's logical NAND space is disaggregated at a configurable point
+//! into a **block-interface region** (hosting the Main-LSM's files through
+//! a minimal extent filesystem) and a **key-value-interface region**
+//! (hosting the in-device Dev-LSM). Both regions share the same NAND
+//! geometry/timing, the same FTL, and the same PCIe link — which is
+//! exactly what makes the paper's bandwidth-reuse observation work.
+
+pub mod block_if;
+pub mod device;
+pub mod devlsm;
+pub mod ftl;
+pub mod kv_if;
+pub mod nand;
+pub mod pcie;
+
+pub use device::{SsdConfig, SsdDevice};
+pub use devlsm::DevLsm;
+pub use nand::{NandArray, NandConfig, NandOp};
+pub use pcie::{Direction, PcieLink, PcieConfig};

@@ -1,0 +1,247 @@
+//! NAND flash array timing model.
+//!
+//! Geometry follows the Cosmos+ OpenSSD (Table I): 4 channels x 8 ways,
+//! 16 KB pages. Per-page operations occupy a (channel, way) pair: the
+//! way is busy for the cell operation (tPROG/tR) and the channel bus is
+//! serialized for the page transfer. With all 32 ways streaming, the
+//! sustained program bandwidth calibrates to the paper's ~630 MB/s device
+//! peak.
+
+use crate::sim::{Nanos, MICROS};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NandOp {
+    Read,
+    Program,
+}
+
+#[derive(Clone, Debug)]
+pub struct NandConfig {
+    pub channels: usize,
+    pub ways: usize,
+    pub page_bytes: u64,
+    /// Cell program time per page.
+    pub t_prog: Nanos,
+    /// Cell read time per page.
+    pub t_read: Nanos,
+    /// Channel bus transfer time per page (serialized per channel).
+    pub t_bus: Nanos,
+    /// Total logical capacity in pages (1 TB module by default).
+    pub total_pages: u64,
+}
+
+impl Default for NandConfig {
+    fn default() -> Self {
+        // 32 ways * 16 KB / 800 us  = 655 MB/s program ceiling (~paper's
+        // 630 MB/s measured peak); reads are faster per cell op.
+        Self {
+            channels: 4,
+            ways: 8,
+            page_bytes: 16 * 1024,
+            t_prog: 800 * MICROS,
+            t_read: 320 * MICROS,
+            t_bus: 25 * MICROS,
+            total_pages: (1u64 << 40) / (16 * 1024),
+        }
+    }
+}
+
+impl NandConfig {
+    pub fn pages_for(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.page_bytes).max(1)
+    }
+
+    /// Peak sequential program bandwidth in bytes/sec (sanity/reporting).
+    pub fn peak_program_bw(&self) -> f64 {
+        let lanes = (self.channels * self.ways) as f64;
+        lanes * self.page_bytes as f64 / (self.t_prog as f64 / 1e9)
+    }
+}
+
+/// Busy-horizon model of the array. Pages of an I/O are striped
+/// round-robin across (channel, way) lanes, the way the OpenSSD firmware
+/// stripes sequential writes.
+#[derive(Clone, Debug)]
+pub struct NandArray {
+    cfg: NandConfig,
+    /// way_free[ch * ways + w]
+    way_free: Vec<Nanos>,
+    /// bus_free[ch]
+    bus_free: Vec<Nanos>,
+    cursor: usize,
+    /// total bytes programmed/read (reporting)
+    pub bytes_programmed: u64,
+    pub bytes_read: u64,
+    busy_ns_accum: u128,
+}
+
+impl NandArray {
+    pub fn new(cfg: NandConfig) -> Self {
+        let lanes = cfg.channels * cfg.ways;
+        Self {
+            way_free: vec![0; lanes],
+            bus_free: vec![0; cfg.channels],
+            cursor: 0,
+            bytes_programmed: 0,
+            bytes_read: 0,
+            busy_ns_accum: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &NandConfig {
+        &self.cfg
+    }
+
+    /// Submit an I/O of `bytes` at time `t`; returns completion time of
+    /// the last page.
+    pub fn submit(&mut self, t: Nanos, bytes: u64, op: NandOp) -> Nanos {
+        let pages = self.cfg.pages_for(bytes);
+        match op {
+            NandOp::Program => self.bytes_programmed += bytes,
+            NandOp::Read => self.bytes_read += bytes,
+        }
+        let mut done = t;
+        for _ in 0..pages {
+            let lane = self.cursor;
+            self.cursor = (self.cursor + 1) % self.way_free.len();
+            let ch = lane / self.cfg.ways;
+            let end = match op {
+                NandOp::Program => {
+                    // bus transfer (host data -> cell register), then prog
+                    let bus_start = t.max(self.bus_free[ch]).max(self.way_free[lane]);
+                    let bus_end = bus_start + self.cfg.t_bus;
+                    self.bus_free[ch] = bus_end;
+                    let prog_end = bus_end + self.cfg.t_prog;
+                    self.way_free[lane] = prog_end;
+                    self.busy_ns_accum += (prog_end - bus_start) as u128;
+                    prog_end
+                }
+                NandOp::Read => {
+                    // cell read, then bus transfer out
+                    let read_start = t.max(self.way_free[lane]);
+                    let read_end = read_start + self.cfg.t_read;
+                    let bus_start = read_end.max(self.bus_free[ch]);
+                    let bus_end = bus_start + self.cfg.t_bus;
+                    self.bus_free[ch] = bus_end;
+                    self.way_free[lane] = bus_end;
+                    self.busy_ns_accum += (bus_end - read_start) as u128;
+                    bus_end
+                }
+            };
+            done = done.max(end);
+        }
+        done
+    }
+
+    /// Priority submission (flush writes): real firmware interleaves
+    /// streams at page granularity, so a 128 MB flush is not FIFO-queued
+    /// behind a multi-GB compaction write — it receives a fair share of
+    /// the array immediately. Modeled as service at half the peak rate
+    /// while the array is busy (full rate when idle), with the stolen
+    /// lane-time pushed onto the bulk horizons to conserve total
+    /// bandwidth.
+    pub fn submit_priority(&mut self, t: Nanos, bytes: u64, op: NandOp) -> Nanos {
+        let pages = self.cfg.pages_for(bytes);
+        match op {
+            NandOp::Program => self.bytes_programmed += bytes,
+            NandOp::Read => self.bytes_read += bytes,
+        }
+        let lanes = self.way_free.len() as u64;
+        let per_page = match op {
+            NandOp::Program => self.cfg.t_bus + self.cfg.t_prog,
+            NandOp::Read => self.cfg.t_read + self.cfg.t_bus,
+        };
+        let busy = self.earliest_free() > t;
+        // streaming throughput across lanes; halved under contention
+        let full_share = per_page / lanes.max(1);
+        let per_page_share = if busy { full_share * 2 } else { full_share };
+        let done = t + per_page + pages.saturating_sub(1) * per_page_share;
+        // conserve capacity: charge the consumed lane-time to the array
+        let stolen = pages * per_page / lanes.max(1);
+        for lane in self.way_free.iter_mut() {
+            *lane = (*lane).max(t) + stolen;
+        }
+        self.busy_ns_accum += (pages * per_page) as u128;
+        done
+    }
+
+    /// Earliest time any lane is free (backpressure signal).
+    pub fn earliest_free(&self) -> Nanos {
+        *self.way_free.iter().min().unwrap()
+    }
+
+    /// All-lanes-idle time (drain horizon).
+    pub fn drained_at(&self) -> Nanos {
+        *self.way_free.iter().max().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS_PER_SEC;
+
+    #[test]
+    fn peak_bw_calibration() {
+        let cfg = NandConfig::default();
+        let bw = cfg.peak_program_bw();
+        // Paper device: ~630 MB/s peak. Model ceiling within 600-700 MB/s.
+        assert!(
+            (600e6..700e6).contains(&bw),
+            "program bw {bw:.0} out of calibration band"
+        );
+    }
+
+    #[test]
+    fn sustained_write_matches_ceiling() {
+        let cfg = NandConfig::default();
+        let mut nand = NandArray::new(cfg.clone());
+        let total: u64 = 256 * 1024 * 1024;
+        let done = nand.submit(0, total, NandOp::Program);
+        let bw = total as f64 / (done as f64 / NS_PER_SEC as f64);
+        let peak = cfg.peak_program_bw();
+        assert!(
+            bw > peak * 0.8 && bw <= peak * 1.05,
+            "sustained {bw:.0} vs peak {peak:.0}"
+        );
+    }
+
+    #[test]
+    fn reads_faster_than_writes() {
+        let mut a = NandArray::new(NandConfig::default());
+        let mut b = NandArray::new(NandConfig::default());
+        let size = 64 * 1024 * 1024;
+        let r = a.submit(0, size, NandOp::Read);
+        let w = b.submit(0, size, NandOp::Program);
+        assert!(r < w, "read {r} should beat write {w}");
+    }
+
+    #[test]
+    fn small_write_latency_single_page() {
+        let cfg = NandConfig::default();
+        let mut nand = NandArray::new(cfg.clone());
+        let done = nand.submit(1000, 4096, NandOp::Program);
+        assert_eq!(done, 1000 + cfg.t_bus + cfg.t_prog);
+    }
+
+    #[test]
+    fn queueing_pushes_completion() {
+        let cfg = NandConfig::default();
+        let lanes = (cfg.channels * cfg.ways) as u64;
+        let mut nand = NandArray::new(cfg.clone());
+        // saturate every lane once
+        nand.submit(0, lanes * cfg.page_bytes, NandOp::Program);
+        let second = nand.submit(0, cfg.page_bytes, NandOp::Program);
+        assert!(second > cfg.t_bus + cfg.t_prog);
+    }
+
+    #[test]
+    fn byte_counters() {
+        let mut nand = NandArray::new(NandConfig::default());
+        nand.submit(0, 100, NandOp::Program);
+        nand.submit(0, 200, NandOp::Read);
+        assert_eq!(nand.bytes_programmed, 100);
+        assert_eq!(nand.bytes_read, 200);
+    }
+}

@@ -1,0 +1,67 @@
+//! Human-readable number formatting for experiment output tables.
+
+/// 1234567 -> "1.23 M", 630_000_000 -> "630.00 M"
+pub fn si(v: f64) -> String {
+    let (scaled, suffix) = if v.abs() >= 1e9 {
+        (v / 1e9, " G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, " M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, " K")
+    } else {
+        (v, " ")
+    };
+    format!("{scaled:.2}{suffix}")
+}
+
+/// Bytes -> "630.0 MB/s"-style strings.
+pub fn bytes(v: f64) -> String {
+    let (scaled, suffix) = if v.abs() >= 1024.0 * 1024.0 * 1024.0 {
+        (v / (1024.0 * 1024.0 * 1024.0), "GB")
+    } else if v.abs() >= 1024.0 * 1024.0 {
+        (v / (1024.0 * 1024.0), "MB")
+    } else if v.abs() >= 1024.0 {
+        (v / 1024.0, "KB")
+    } else {
+        (v, "B")
+    };
+    format!("{scaled:.1} {suffix}")
+}
+
+/// Nanoseconds -> "1.37 us" / "2.5 ms" / "3.1 s".
+pub fn nanos(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2} s", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2} ms", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2} us", v / 1e3)
+    } else {
+        format!("{v:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_scales() {
+        assert_eq!(si(1_234_567.0), "1.23 M");
+        assert_eq!(si(999.0).trim_end(), "999.00");
+        assert_eq!(si(2_500.0), "2.50 K");
+    }
+
+    #[test]
+    fn bytes_scales() {
+        assert_eq!(bytes(630.0 * 1024.0 * 1024.0), "630.0 MB");
+        assert_eq!(bytes(512.0), "512.0 B");
+    }
+
+    #[test]
+    fn nanos_scales() {
+        assert_eq!(nanos(1370.0), "1.37 us");
+        assert_eq!(nanos(250.0), "250 ns");
+        assert_eq!(nanos(2.5e9), "2.50 s");
+    }
+}

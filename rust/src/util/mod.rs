@@ -1,0 +1,9 @@
+//! Small utilities: CLI parsing (offline image has no clap), LRU cache,
+//! human formatting.
+
+pub mod cli;
+pub mod fmt;
+pub mod lru;
+
+pub use cli::Args;
+pub use lru::LruCache;

@@ -1,0 +1,311 @@
+//! db_bench-equivalent workload drivers (paper Table IV):
+//!   A: fillrandom, 1 write thread, no limit, 600 s
+//!   B: readwhilewriting, +1 read thread, 9:1 write/read
+//!   C: readwhilewriting, 8:2
+//!   D: seekrandom (Seek + 1024 Next) after a fillrandom preload
+//!
+//! Closed-loop actors on the virtual clock: each thread issues its next
+//! operation when the previous completes; throughput and stalls emerge
+//! from the engine + device models.
+
+use anyhow::Result;
+
+use crate::baselines::System;
+use crate::env::SimEnv;
+use crate::lsm::entry::Key;
+use crate::sim::{Nanos, NS_PER_SEC};
+
+use super::keygen::KeyGen;
+use super::stats::{Histogram, HistogramSummary, OpSeries, RunResult};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Virtual run length (paper: 600 s).
+    pub duration: Nanos,
+    pub value_size: u32,
+    /// Key-space bound (db_bench --num); reads draw from the same space.
+    pub key_space: Key,
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            duration: 600 * NS_PER_SEC,
+            value_size: 4096,
+            key_space: 4_000_000,
+            seed: 42,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Scale run length (CI/smoke runs).
+    pub fn scaled(mut self, scale: f64) -> Self {
+        self.duration = ((self.duration as f64) * scale) as Nanos;
+        self
+    }
+}
+
+/// Workload A: fillrandom, one closed-loop writer.
+pub fn fillrandom(sys: &mut System, env: &mut SimEnv, cfg: &BenchConfig) -> RunResult {
+    let mut gen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
+    let mut writes = OpSeries::default();
+    let mut wlat = Histogram::new();
+    let mut t: Nanos = 0;
+    let mut op: u64 = 0;
+    while t < cfg.duration {
+        let key = gen.random_key();
+        let val = gen.value_for(key, op);
+        let r = sys.put(env, t, key, val);
+        wlat.record(r.done - t);
+        writes.record(r.done.min(cfg.duration - 1));
+        t = r.done;
+        op += 1;
+    }
+    assemble(sys, env, cfg, "A/fillrandom", writes, wlat, OpSeries::default(), Histogram::new(), t)
+}
+
+/// Workloads B/C: readwhilewriting at a write:read ratio (e.g. (9,1)).
+pub fn readwhilewriting(
+    sys: &mut System,
+    env: &mut SimEnv,
+    cfg: &BenchConfig,
+    ratio_write: u64,
+    ratio_read: u64,
+) -> RunResult {
+    let mut wgen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
+    let mut rgen = KeyGen::new(cfg.seed ^ 0xDEAD_BEEF, cfg.key_space, cfg.value_size);
+    let mut writes = OpSeries::default();
+    let mut reads = OpSeries::default();
+    let mut wlat = Histogram::new();
+    let mut rlat = Histogram::new();
+    let (mut wt, mut rt): (Nanos, Nanos) = (0, 0);
+    let (mut wops, mut rops): (u64, u64) = (0, 0);
+    let mut end = 0;
+    loop {
+        // keep the running mix at ratio_write:ratio_read, each thread
+        // closed-loop on its own clock
+        let want_read =
+            rops * ratio_write < wops * ratio_read && rt < cfg.duration;
+        if want_read {
+            let key = rgen.random_key();
+            let (_, done) = sys.get(env, rt, key);
+            rlat.record(done - rt);
+            reads.record(done.min(cfg.duration - 1));
+            rt = done;
+            rops += 1;
+            end = end.max(rt);
+        } else if wt < cfg.duration {
+            let key = wgen.random_key();
+            let val = wgen.value_for(key, wops);
+            let r = sys.put(env, wt, key, val);
+            wlat.record(r.done - wt);
+            writes.record(r.done.min(cfg.duration - 1));
+            wt = r.done;
+            wops += 1;
+            end = end.max(wt);
+        } else {
+            break;
+        }
+        if wt >= cfg.duration && rt >= cfg.duration {
+            break;
+        }
+    }
+    let name = format!("readwhilewriting {ratio_write}:{ratio_read}");
+    assemble(sys, env, cfg, &name, writes, wlat, reads, rlat, end)
+}
+
+/// Workload D: seekrandom — `seeks` range queries of (Seek + `nexts`
+/// Next) each, after the caller has preloaded the store.
+pub fn seekrandom(
+    sys: &mut System,
+    env: &mut SimEnv,
+    cfg: &BenchConfig,
+    seeks: usize,
+    nexts: usize,
+    start_at: Nanos,
+) -> RunResult {
+    let mut gen = KeyGen::new(cfg.seed ^ 0x5EEC, cfg.key_space, cfg.value_size);
+    let mut reads = OpSeries::default();
+    let mut rlat = Histogram::new();
+    let mut t = start_at;
+    let t0 = start_at;
+    for _ in 0..seeks {
+        let start = gen.random_key();
+        let issue = t;
+        let (got, done) = sys.scan(env, t, start, nexts);
+        // ops counted the db_bench way: the Seek plus every Next
+        for _ in 0..=got.len() {
+            reads.record(done.min(issue + NS_PER_SEC));
+        }
+        rlat.record(done - issue);
+        t = done;
+    }
+    let mut r = assemble(
+        sys,
+        env,
+        cfg,
+        "D/seekrandom",
+        OpSeries::default(),
+        Histogram::new(),
+        reads,
+        rlat,
+        t,
+    );
+    r.duration_s = (t - t0) as f64 / NS_PER_SEC as f64;
+    r
+}
+
+/// Preload helper for workload D (the paper's "initial 20 GB
+/// fillrandom"): returns the time after preload + settle.
+pub fn preload(
+    sys: &mut System,
+    env: &mut SimEnv,
+    cfg: &BenchConfig,
+    bytes: u64,
+) -> Result<Nanos> {
+    let mut gen = KeyGen::new(cfg.seed ^ 0xF111, cfg.key_space, cfg.value_size);
+    let per_op = 16 + cfg.value_size as u64;
+    let ops = bytes / per_op;
+    let mut t = 0;
+    for op in 0..ops {
+        let key = gen.random_key();
+        let val = gen.value_for(key, op);
+        t = sys.put(env, t, key, val).done;
+    }
+    sys.finish(env, t)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assemble(
+    sys: &System,
+    env: &SimEnv,
+    cfg: &BenchConfig,
+    workload: &str,
+    writes: OpSeries,
+    wlat: Histogram,
+    reads: OpSeries,
+    rlat: Histogram,
+    end: Nanos,
+) -> RunResult {
+    let duration_s = (end.max(1)) as f64 / NS_PER_SEC as f64;
+    let db = sys.main_db();
+    let stall = sys.stall_stats();
+    let cpu_percent = env.cpu.host_cpu_percent(end.max(1), 8);
+    let write_mbps = writes.total as f64 * (16 + cfg.value_size as u64) as f64
+        / duration_s
+        / (1024.0 * 1024.0);
+    let read_mbps = reads.total as f64 * (16 + cfg.value_size as u64) as f64
+        / duration_s
+        / (1024.0 * 1024.0);
+    let efficiency = if cpu_percent > 0.0 {
+        (write_mbps + read_mbps) / cpu_percent
+    } else {
+        0.0
+    };
+    let total_secs = duration_s.ceil() as usize;
+    let stall_seconds: Vec<usize> = (0..total_secs)
+        .filter(|&s| stall.second_in_stall(s))
+        .collect();
+    let (redirected, rollbacks) = sys
+        .kvaccel()
+        .map(|k| {
+            (
+                k.controller.stats.writes_to_dev,
+                k.rollback.stats.rollbacks,
+            )
+        })
+        .unwrap_or((0, 0));
+    RunResult {
+        system: String::new(), // caller labels
+        workload: workload.to_string(),
+        threads: db.compaction_threads(),
+        duration_s,
+        write_lat: HistogramSummary::from(&wlat),
+        read_lat: HistogramSummary::from(&rlat),
+        writes,
+        reads,
+        write_mbps,
+        read_mbps,
+        cpu_percent,
+        efficiency,
+        stop_events: stall.stop_events,
+        slowdown_events: stall.slowdown_events,
+        stopped_s: stall.stopped_ns_total as f64 / NS_PER_SEC as f64,
+        write_amplification: db.stats.write_amplification(),
+        pcie_mbps: env.device.pcie.stats.combined_mbps(),
+        stall_seconds,
+        redirected_writes: redirected,
+        rollbacks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemKind;
+    use crate::lsm::LsmOptions;
+    use crate::runtime::{BloomBuilder, MergeEngine};
+    use crate::ssd::SsdConfig;
+
+    fn tiny_cfg() -> BenchConfig {
+        BenchConfig {
+            duration: 2 * NS_PER_SEC,
+            key_space: 50_000,
+            ..Default::default()
+        }
+    }
+
+    fn sys(kind: SystemKind) -> (System, SimEnv) {
+        (
+            System::build(
+                kind,
+                LsmOptions::small_for_test(),
+                MergeEngine::rust(),
+                BloomBuilder::rust(),
+            ),
+            SimEnv::new(3, SsdConfig::default()),
+        )
+    }
+
+    #[test]
+    fn fillrandom_produces_series() {
+        let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
+        let r = fillrandom(&mut s, &mut env, &tiny_cfg());
+        assert!(r.writes.total > 100, "writes: {}", r.writes.total);
+        assert!(r.duration_s >= 2.0);
+        assert!(r.write_lat.p99_us > 0.0);
+        assert!(!r.pcie_mbps.is_empty());
+    }
+
+    #[test]
+    fn readwhilewriting_respects_ratio() {
+        let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
+        let r = readwhilewriting(&mut s, &mut env, &tiny_cfg(), 9, 1);
+        assert!(r.writes.total > 0 && r.reads.total > 0);
+        let ratio = r.writes.total as f64 / r.reads.total as f64;
+        assert!((6.0..14.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn seekrandom_counts_next_ops() {
+        let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
+        let cfg = tiny_cfg();
+        let t = preload(&mut s, &mut env, &cfg, 2 << 20).unwrap();
+        let r = seekrandom(&mut s, &mut env, &cfg, 10, 16, t);
+        assert!(r.reads.total >= 10, "ops {}", r.reads.total);
+        assert!(r.duration_s > 0.0);
+    }
+
+    #[test]
+    fn kvaccel_run_reports_redirects() {
+        use crate::kvaccel::RollbackScheme;
+        let (mut s, mut env) = sys(SystemKind::Kvaccel {
+            scheme: RollbackScheme::Disabled,
+        });
+        let r = fillrandom(&mut s, &mut env, &tiny_cfg());
+        assert!(r.redirected_writes > 0, "expected redirection under pressure");
+        assert_eq!(r.stop_events, 0, "KVACCEL must not hard-stop");
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation + measurement (the db_bench stand-in).
+
+pub mod db_bench;
+pub mod keygen;
+pub mod stats;
+
+pub use db_bench::{fillrandom, preload, readwhilewriting, seekrandom, BenchConfig};
+pub use keygen::KeyGen;
+pub use stats::{cdf, Histogram, OpSeries, RunResult};

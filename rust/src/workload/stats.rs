@@ -1,0 +1,271 @@
+//! Measurement plumbing for the evaluation harness: latency histograms
+//! (P50/P99/P999), per-second op series, and the paper's efficiency
+//! metric (Eq. 1: avg throughput MB/s / avg CPU%).
+
+use crate::sim::{Nanos, NS_PER_SEC};
+
+/// Log-bucketed latency histogram: 64 powers of two x 16 linear
+/// sub-buckets — <7% relative error, O(1) record.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+const SUB: usize = 16;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64 * SUB], count: 0, sum: 0, max: 0 }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (exp - 4)) & (SUB as u64 - 1)) as usize;
+        (exp - 3) * SUB + sub
+    }
+
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let exp = idx / SUB + 3;
+        let sub = idx % SUB;
+        (1u64 << exp) + ((sub as u64) << (exp - 4))
+    }
+
+    pub fn record(&mut self, v: Nanos) {
+        let idx = Self::bucket_of(v).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1] -> approximate value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Per-second operation counter.
+#[derive(Clone, Debug, Default)]
+pub struct OpSeries {
+    bins: Vec<u64>,
+    pub total: u64,
+}
+
+impl OpSeries {
+    pub fn record(&mut self, at: Nanos) {
+        let sec = (at / NS_PER_SEC) as usize;
+        if self.bins.len() <= sec {
+            self.bins.resize(sec + 1, 0);
+        }
+        self.bins[sec] += 1;
+        self.total += 1;
+    }
+
+    pub fn ops_per_sec(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn mean_ops(&self) -> f64 {
+        if self.bins.is_empty() {
+            0.0
+        } else {
+            self.total as f64 / self.bins.len() as f64
+        }
+    }
+}
+
+/// Everything one workload run produces — the figures read fields off
+/// this struct.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub system: String,
+    pub workload: String,
+    pub threads: usize,
+    pub duration_s: f64,
+    pub writes: OpSeries,
+    pub reads: OpSeries,
+    pub write_lat: HistogramSummary,
+    pub read_lat: HistogramSummary,
+    /// user write throughput in MB/s
+    pub write_mbps: f64,
+    pub read_mbps: f64,
+    pub cpu_percent: f64,
+    /// Eq. 1: MB/s per CPU%
+    pub efficiency: f64,
+    pub stop_events: u64,
+    pub slowdown_events: u64,
+    pub stopped_s: f64,
+    pub write_amplification: f64,
+    /// per-second combined PCIe MB/s (Intel-PCM stand-in)
+    pub pcie_mbps: Vec<f64>,
+    /// seconds that intersect a write-stall interval
+    pub stall_seconds: Vec<usize>,
+    /// KVACCEL extras
+    pub redirected_writes: u64,
+    pub rollbacks: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+}
+
+impl From<&Histogram> for HistogramSummary {
+    fn from(h: &Histogram) -> Self {
+        Self {
+            count: h.count(),
+            mean_us: h.mean() / 1e3,
+            p50_us: h.p50() as f64 / 1e3,
+            p99_us: h.p99() as f64 / 1e3,
+            p999_us: h.p999() as f64 / 1e3,
+            max_us: h.max() as f64 / 1e3,
+        }
+    }
+}
+
+impl RunResult {
+    pub fn write_kops(&self) -> f64 {
+        self.writes.total as f64 / self.duration_s.max(1e-9) / 1e3
+    }
+
+    pub fn read_kops(&self) -> f64 {
+        self.reads.total as f64 / self.duration_s.max(1e-9) / 1e3
+    }
+}
+
+/// Empirical CDF helper (Fig 5): fraction of samples <= each threshold.
+pub fn cdf(samples: &[f64], thresholds: &[f64]) -> Vec<f64> {
+    if samples.is_empty() {
+        return vec![0.0; thresholds.len()];
+    }
+    thresholds
+        .iter()
+        .map(|&t| samples.iter().filter(|&&s| s <= t).count() as f64 / samples.len() as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_roughly_right() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50();
+        let p99 = h.p99();
+        assert!((4500..5600).contains(&p50), "p50={p50}");
+        assert!((9300..10001).contains(&p99), "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+        assert!((h.mean() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 2, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.25), 0);
+        assert_eq!(h.max(), 3);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 1000);
+    }
+
+    #[test]
+    fn op_series_bins() {
+        let mut s = OpSeries::default();
+        s.record(0);
+        s.record(NS_PER_SEC - 1);
+        s.record(2 * NS_PER_SEC);
+        assert_eq!(s.ops_per_sec(), &[2, 0, 1]);
+        assert_eq!(s.total, 3);
+    }
+
+    #[test]
+    fn cdf_fractions() {
+        let samples = vec![0.0, 10.0, 50.0, 100.0];
+        let got = cdf(&samples, &[0.0, 49.0, 1000.0]);
+        assert_eq!(got, vec![0.25, 0.5, 1.0]);
+    }
+}

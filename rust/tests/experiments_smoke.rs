@@ -1,0 +1,25 @@
+//! Smoke test: every registered experiment runs end-to-end at a tiny
+//! scale and emits its CSV rows (the figure/table reproduction machinery
+//! itself is exercised in CI).
+
+use kvaccel::experiments::{run, EngineMode, ExpContext, ALL_EXPERIMENTS};
+
+#[test]
+fn all_experiments_run_at_tiny_scale() {
+    let mut ctx = ExpContext::new(0.01, 7, EngineMode::Rust).unwrap();
+    ctx.out_dir = std::path::PathBuf::from(std::env::temp_dir())
+        .join("kvaccel_exp_smoke");
+    ctx.quiet = true;
+    for id in ALL_EXPERIMENTS {
+        let summary = run(&ctx, id).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert!(summary.contains("=="), "{id} produced no summary");
+    }
+    // spot-check a CSV landed
+    assert!(ctx.out_dir.join("fig12.csv").exists());
+}
+
+#[test]
+fn unknown_experiment_errors() {
+    let ctx = ExpContext::new(0.01, 7, EngineMode::Rust).unwrap();
+    assert!(run(&ctx, "fig99").is_err());
+}

@@ -1,0 +1,234 @@
+//! Cross-module integration tests: full systems on real workloads,
+//! durability/recovery drills, ACID-property checks (paper §V-G).
+
+use kvaccel::baselines::{System, SystemKind};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
+use kvaccel::lsm::{LsmDb, LsmOptions, ValueDesc};
+use kvaccel::runtime::{BloomBuilder, MergeEngine};
+use kvaccel::sim::NS_PER_SEC;
+use kvaccel::ssd::SsdConfig;
+use kvaccel::workload::{fillrandom, readwhilewriting, BenchConfig};
+
+fn small_env(seed: u64) -> SimEnv {
+    SimEnv::new(seed, SsdConfig::default())
+}
+
+fn v(seed: u32) -> ValueDesc {
+    ValueDesc::new(seed, 4096)
+}
+
+/// Mid-size engine config: small enough that a few virtual seconds of
+/// fillrandom builds real flush/compaction pressure, large enough that
+/// the stall machinery behaves like the full config.
+fn pressured_opts(threads: usize) -> LsmOptions {
+    LsmOptions {
+        write_buffer_size: 8 << 20,
+        max_bytes_for_level_base: 16 << 20,
+        target_file_size: 4 << 20,
+        ..LsmOptions::default().with_threads(threads)
+    }
+}
+
+#[test]
+fn kvaccel_beats_baselines_on_write_burst() {
+    let cfg = BenchConfig { duration: 5 * NS_PER_SEC, ..Default::default() };
+    let mut results = Vec::new();
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        let mut sys = System::build(
+            kind,
+            pressured_opts(2),
+            MergeEngine::rust(),
+            BloomBuilder::rust(),
+        );
+        let mut env = small_env(42);
+        let r = fillrandom(&mut sys, &mut env, &cfg);
+        results.push((kind.label(), r));
+    }
+    let kops = |n: &str| {
+        results
+            .iter()
+            .find(|(l, _)| l == n)
+            .map(|(_, r)| r.write_kops())
+            .unwrap()
+    };
+    assert!(
+        kops("KVACCEL") > kops("ADOC"),
+        "KVACCEL {} <= ADOC {}",
+        kops("KVACCEL"),
+        kops("ADOC")
+    );
+    assert!(kops("KVACCEL") > kops("RocksDB"));
+    let kv = results.iter().find(|(l, _)| l == "KVACCEL").unwrap();
+    assert_eq!(kv.1.stop_events, 0, "KVACCEL halted");
+}
+
+#[test]
+fn mixed_workload_all_systems_consistent() {
+    let cfg = BenchConfig {
+        duration: 3 * NS_PER_SEC,
+        key_space: 100_000,
+        ..Default::default()
+    };
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+    ] {
+        let mut sys = System::build(
+            kind,
+            LsmOptions::default().with_threads(2),
+            MergeEngine::rust(),
+            BloomBuilder::rust(),
+        );
+        let mut env = small_env(7);
+        let r = readwhilewriting(&mut sys, &mut env, &cfg, 8, 2);
+        assert!(r.writes.total > 0 && r.reads.total > 0, "{}", kind.label());
+    }
+}
+
+#[test]
+fn wal_recovery_replays_unflushed_writes() {
+    let mut env = small_env(3);
+    let mut db = LsmDb::new(
+        LsmOptions::small_for_test(),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut t = 0;
+    for k in 0..500u32 {
+        t = db.put(&mut env, t, k, v(k)).done;
+    }
+    let replay = db.wal_replay();
+    assert!(!replay.is_empty(), "expected unflushed WAL entries");
+    let mut db2 = LsmDb::new(
+        LsmOptions::small_for_test(),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut t2 = 0;
+    for e in replay {
+        t2 = db2.put(&mut env, t2, e.key, e.val).done;
+    }
+    let tail_key = 499u32;
+    let (got, _) = db2.get(&mut env, t2, tail_key);
+    assert_eq!(got, Some(v(tail_key)));
+}
+
+#[test]
+fn kvaccel_metadata_crash_recovery_end_to_end() {
+    let mut env = small_env(5);
+    let mut db = KvaccelDb::new(
+        LsmOptions::small_for_test(),
+        KvaccelConfig::default().with_scheme(RollbackScheme::Disabled),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut t = 0;
+    for k in 0..3000u32 {
+        t = db.put(&mut env, t, k, v(k)).done;
+    }
+    let before = db.metadata.len();
+    assert!(before > 0, "no redirection happened");
+    db.metadata.clear(); // simulated metadata loss
+    t = db.recover_metadata(&mut env, t).unwrap();
+    assert_eq!(db.metadata.len(), before);
+    for k in (0..3000u32).step_by(211) {
+        let (got, nt) = db.get(&mut env, t, k);
+        t = nt;
+        assert_eq!(got, Some(v(k)), "key {k} after metadata recovery");
+    }
+}
+
+#[test]
+fn durability_redirected_writes_survive_in_nand() {
+    let mut env = small_env(6);
+    let mut db = KvaccelDb::new(
+        LsmOptions::small_for_test(),
+        KvaccelConfig::default().with_scheme(RollbackScheme::Disabled),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut t = 0;
+    for k in 0..3000u32 {
+        t = db.put(&mut env, t, k, v(k)).done;
+    }
+    assert!(!env.device.kv_is_empty(0));
+    let (entries, _) = env.device.kv_bulk_scan(0, t).unwrap();
+    for e in &entries {
+        assert_eq!(e.val.len, 4096);
+    }
+    assert_eq!(entries.len(), db.metadata.len());
+}
+
+#[test]
+fn isolation_scans_are_stable_under_concurrent_writes() {
+    let mut env = small_env(8);
+    let mut db = KvaccelDb::new(
+        LsmOptions::small_for_test(),
+        KvaccelConfig::default(),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut t = 0;
+    for k in (0..1000u32).step_by(2) {
+        t = db.put(&mut env, t, k, v(k)).done;
+    }
+    let (snap, t1) = db.scan(&mut env, t, 0, 100);
+    let mut t2 = t1;
+    for k in (1..1000u32).step_by(2) {
+        t2 = db.put(&mut env, t2, k, v(k)).done;
+    }
+    assert_eq!(snap.len(), 100);
+    assert!(snap.iter().all(|e| e.key % 2 == 0));
+    let (snap2, _) = db.scan(&mut env, t2, 0, 100);
+    assert!(snap2.iter().take(99).any(|e| e.key % 2 == 1));
+}
+
+#[test]
+fn sustained_run_holds_invariants() {
+    let cfg = BenchConfig {
+        duration: 4 * NS_PER_SEC,
+        key_space: 200_000,
+        ..Default::default()
+    };
+    let mut sys = System::build(
+        SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+        pressured_opts(4),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let mut env = small_env(11);
+    let r = fillrandom(&mut sys, &mut env, &cfg);
+    assert!(r.writes.total > 10_000);
+    let t = sys.finish(&mut env, 10 * NS_PER_SEC).unwrap();
+    let db = sys.main_db();
+    for l in 1..db.version().levels.len() {
+        assert!(db.version().level_disjoint(l), "L{l} overlap");
+    }
+    let _ = t;
+}
+
+#[test]
+fn multi_tenant_namespaces_stay_isolated_under_load() {
+    use kvaccel::lsm::Entry;
+    let mut env = small_env(13);
+    let ns2 = env.device.kv.create_namespace(Default::default());
+    let mut t = 0;
+    for k in 0..500u32 {
+        t = env.device.kv_put(0, t, Entry::new(k, k + 1, v(k))).unwrap();
+        t = env
+            .device
+            .kv_put(ns2, t, Entry::new(k, k + 1, v(k ^ 0xFFFF)))
+            .unwrap();
+    }
+    for k in (0..500u32).step_by(37) {
+        let (a, _) = env.device.kv_get(0, t, k).unwrap();
+        let (b, _) = env.device.kv_get(ns2, t, k).unwrap();
+        assert_eq!(a, Some(v(k)));
+        assert_eq!(b, Some(v(k ^ 0xFFFF)));
+    }
+}

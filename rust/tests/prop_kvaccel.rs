@@ -1,0 +1,130 @@
+//! Property tests for the full KVACCEL system: random op streams across
+//! redirect/rollback cycles model-checked against a BTreeMap oracle —
+//! the paper's consistency claim (§V-G) under adversarial interleaving.
+
+use std::collections::BTreeMap;
+
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
+use kvaccel::lsm::{LsmOptions, ValueDesc};
+use kvaccel::runtime::{BloomBuilder, MergeEngine};
+use kvaccel::sim::SimRng;
+use kvaccel::ssd::SsdConfig;
+
+const CASES: u64 = 15;
+const OPS: usize = 1500;
+
+fn value(tag: u32) -> ValueDesc {
+    ValueDesc::new(tag, 4096)
+}
+
+fn episode(seed: u64, scheme: RollbackScheme) {
+    let mut rng = SimRng::new(seed);
+    let mut env = SimEnv::new(seed, SsdConfig::default());
+    let mut db = KvaccelDb::new(
+        LsmOptions::small_for_test(),
+        KvaccelConfig::default().with_scheme(scheme),
+        MergeEngine::rust(),
+        BloomBuilder::rust(),
+    );
+    let key_space = 1 + rng.gen_range_u32(600);
+    let mut oracle: BTreeMap<u32, Option<ValueDesc>> = BTreeMap::new();
+    let mut t = 0u64;
+    for op in 0..OPS {
+        match rng.gen_range_u32(100) {
+            0..=59 => {
+                let k = rng.gen_range_u32(key_space);
+                let v = value(op as u32);
+                t = db.put(&mut env, t, k, v).done;
+                oracle.insert(k, Some(v));
+            }
+            60..=69 => {
+                let k = rng.gen_range_u32(key_space);
+                t = db.put(&mut env, t, k, ValueDesc::TOMBSTONE).done;
+                oracle.insert(k, None);
+            }
+            70..=94 => {
+                let k = rng.gen_range_u32(key_space);
+                let (got, nt) = db.get(&mut env, t, k);
+                t = nt;
+                let want = oracle.get(&k).copied().flatten();
+                assert_eq!(
+                    got, want,
+                    "seed {seed} scheme {scheme:?} op {op} get({k})"
+                );
+            }
+            _ => {
+                let start = rng.gen_range_u32(key_space);
+                let count = 1 + rng.gen_range_u32(16) as usize;
+                let (got, nt) = db.scan(&mut env, t, start, count);
+                t = nt;
+                let want: Vec<(u32, ValueDesc)> = oracle
+                    .range(start..)
+                    .filter_map(|(&k, &v)| v.map(|v| (k, v)))
+                    .take(count)
+                    .collect();
+                let got_kv: Vec<(u32, ValueDesc)> =
+                    got.iter().map(|e| (e.key, e.val)).collect();
+                assert_eq!(
+                    got_kv, want,
+                    "seed {seed} scheme {scheme:?} op {op} scan({start})"
+                );
+            }
+        }
+    }
+    // finish: rollback + drain, then the aggregate store must equal the
+    // oracle exactly (aggregation property, paper §V-B)
+    let mut t = db.finish(&mut env, t).unwrap();
+    assert!(env.device.kv_is_empty(db.namespace()), "seed {seed}: dev not drained");
+    assert!(db.metadata.is_empty(), "seed {seed}: metadata not cleared");
+    for (&k, &want) in &oracle {
+        let (got, nt) = db.get(&mut env, t, k);
+        t = nt;
+        assert_eq!(got, want, "seed {seed} scheme {scheme:?} final get({k})");
+    }
+}
+
+#[test]
+fn kvaccel_eager_matches_oracle() {
+    for case in 0..CASES {
+        episode(0xABCD + case, RollbackScheme::Eager);
+    }
+}
+
+#[test]
+fn kvaccel_lazy_matches_oracle() {
+    for case in 0..CASES {
+        episode(0xBEEF + case, RollbackScheme::Lazy);
+    }
+}
+
+#[test]
+fn kvaccel_disabled_rollback_matches_oracle() {
+    for case in 0..CASES {
+        episode(0xD00D + case, RollbackScheme::Disabled);
+    }
+}
+
+#[test]
+fn rollback_is_idempotent_under_repeated_finish() {
+    for seed in 0..5u64 {
+        let mut env = SimEnv::new(seed, SsdConfig::default());
+        let mut db = KvaccelDb::new(
+            LsmOptions::small_for_test(),
+            KvaccelConfig::default().with_scheme(RollbackScheme::Disabled),
+            MergeEngine::rust(),
+            BloomBuilder::rust(),
+        );
+        let mut t = 0;
+        for k in 0..2000u32 {
+            t = db.put(&mut env, t, k, value(k)).done;
+        }
+        t = db.finish(&mut env, t).unwrap();
+        let t2 = db.finish(&mut env, t).unwrap(); // second finish: no-op
+        for k in (0..2000u32).step_by(191) {
+            let (got, nt) = db.get(&mut env, t2, k);
+            t = nt;
+            assert_eq!(got, Some(value(k)), "seed {seed} key {k}");
+        }
+    }
+}

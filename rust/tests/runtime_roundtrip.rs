@@ -1,0 +1,86 @@
+//! Integration: the python-AOT -> rust-PJRT bridge.
+//!
+//! Loads the real artifacts produced by `make artifacts`, executes the
+//! merge and bloom graphs through PJRT, and checks bit-identity against
+//! the pure-Rust references. Skips (with a loud message) if artifacts are
+//! missing.
+
+use kvaccel::runtime::bloom::build_bitmap_rust;
+use kvaccel::runtime::merge::merge_window_rust;
+use kvaccel::runtime::{default_artifacts_dir, BloomBuilder, MergeEngine, XlaRuntime};
+use kvaccel::sim::SimRng;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<XlaRuntime>> {
+    match XlaRuntime::load(default_artifacts_dir()) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP runtime tests (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+// One #[test] driving every check: the PJRT client/executables are not
+// Sync (xla crate uses Rc), so we load + compile the artifact set once
+// and run all verifications sequentially on this thread.
+#[test]
+fn roundtrip_suite() {
+    let Some(rt) = runtime() else { return };
+    merge_artifact_matches_rust_reference(rt.clone());
+    merge_artifact_dedups_newest_first(rt.clone());
+    merge_artifact_empty_and_pad_handling(rt.clone());
+    bloom_artifact_matches_rust_reference(rt.clone());
+    runtime_reports_shapes(rt);
+}
+
+fn merge_artifact_matches_rust_reference(rt: Arc<XlaRuntime>) {
+    let engine = MergeEngine::xla(rt).unwrap();
+    let mut rng = SimRng::new(42);
+    for n in [1usize, 7, 100, 1024, 4096, 5000, 20_000] {
+        let pairs: Vec<(u32, u32)> = (0..n)
+            .map(|i| (rng.next_u32() % 10_000, i as u32))
+            .collect();
+        let got = engine.merge_window(&pairs).unwrap();
+        let want = merge_window_rust(&pairs);
+        assert_eq!(got, want, "mismatch at n={n}");
+    }
+}
+
+fn merge_artifact_dedups_newest_first(rt: Arc<XlaRuntime>) {
+    let engine = MergeEngine::xla(rt).unwrap();
+    // key 5 appears with tags 3, 9, 17 -> tag 3 (newest) must win
+    let pairs = vec![(5u32, 9u32), (1, 0), (5, 3), (2, 1), (5, 17)];
+    let got = engine.merge_window(&pairs).unwrap();
+    assert_eq!(got, vec![(1, 0), (2, 1), (5, 3)]);
+}
+
+fn merge_artifact_empty_and_pad_handling(rt: Arc<XlaRuntime>) {
+    let engine = MergeEngine::xla(rt).unwrap();
+    assert!(engine.merge_window(&[]).unwrap().is_empty());
+    // a window that forces padding (size not matching any artifact)
+    let pairs: Vec<(u32, u32)> = (0..37).map(|i| (1000 - i, i)).collect();
+    let got = engine.merge_window(&pairs).unwrap();
+    assert_eq!(got.len(), 37);
+    assert!(got.windows(2).all(|w| w[0].0 < w[1].0));
+}
+
+fn bloom_artifact_matches_rust_reference(rt: Arc<XlaRuntime>) {
+    let builder = BloomBuilder::xla(rt.clone());
+    let shapes = rt.bloom_shapes();
+    assert!(!shapes.is_empty(), "no bloom artifacts");
+    for &(n, p, m) in &shapes {
+        let mut rng = SimRng::new(n as u64);
+        // partially-filled batch exercises the padding-drop path
+        let keys: Vec<u32> = (0..n / 2 + 1).map(|_| rng.next_u32() / 2).collect();
+        let got = builder.build(&keys, p, m as u32).unwrap();
+        let want = build_bitmap_rust(&keys, p, m as u32);
+        assert_eq!(got, want, "bloom mismatch at shape ({n},{p},{m})");
+    }
+}
+
+fn runtime_reports_shapes(rt: Arc<XlaRuntime>) {
+    let shapes = rt.merge_shapes();
+    assert!(shapes.contains(&(1, 4096)), "expected merge_b1_n4096: {shapes:?}");
+    assert!(shapes.iter().all(|&(b, n)| b >= 1 && n.is_power_of_two()));
+}
