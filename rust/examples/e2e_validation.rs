@@ -12,7 +12,8 @@
 //!
 //! Recorded in EXPERIMENTS.md §End-to-end.
 
-use kvaccel::baselines::{System, SystemKind};
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::{EngineBuilder, EngineStats};
 use kvaccel::env::SimEnv;
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::LsmOptions;
@@ -50,15 +51,14 @@ fn main() -> anyhow::Result<()> {
         SystemKind::Adoc,
         SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
     ] {
-        let mut sys = System::build(
-            kind,
-            LsmOptions::default().with_threads(4),
-            MergeEngine::xla(rt.clone())?,
-            BloomBuilder::xla(rt.clone()),
-        );
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::default().with_threads(4))
+            .merge_engine(MergeEngine::xla(rt.clone())?)
+            .bloom_builder(BloomBuilder::xla(rt.clone()))
+            .build();
         let mut env = SimEnv::new(42, SsdConfig::default());
         let wall = std::time::Instant::now();
-        let r = fillrandom(&mut sys, &mut env, &cfg);
+        let r = fillrandom(&mut *sys, &mut env, &cfg);
         println!(
             "{:<10} {:>9.1} write ops/s  P99 {:>9.1} us  CPU {:>5.1}%  eff {:>5.2}  halts {:>3}  [{} compactions via XLA, {:.1}s wall]",
             kind.label(),

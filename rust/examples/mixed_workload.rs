@@ -3,11 +3,11 @@
 //!
 //!     cargo run --release --example mixed_workload -- --seconds 60
 
-use kvaccel::baselines::{System, SystemKind};
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::EngineBuilder;
 use kvaccel::env::SimEnv;
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::LsmOptions;
-use kvaccel::runtime::{BloomBuilder, MergeEngine};
 use kvaccel::sim::NS_PER_SEC;
 use kvaccel::ssd::SsdConfig;
 use kvaccel::util::Args;
@@ -28,14 +28,11 @@ fn main() {
             SystemKind::Kvaccel { scheme: RollbackScheme::Lazy },
             SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
         ] {
-            let mut sys = System::build(
-                kind,
-                LsmOptions::default().with_threads(4),
-                MergeEngine::rust(),
-                BloomBuilder::rust(),
-            );
+            let mut sys = EngineBuilder::new(kind)
+                .opts(LsmOptions::default().with_threads(4))
+                .build();
             let mut env = SimEnv::new(11, SsdConfig::default());
-            let r = readwhilewriting(&mut sys, &mut env, &cfg, ratio.0, ratio.1);
+            let r = readwhilewriting(&mut *sys, &mut env, &cfg, ratio.0, ratio.1);
             println!(
                 "  {:<10} write {:>8.1} ops/s  read {:>8.1} ops/s  read-p99 {:>8.1} us  rollbacks {:>3}",
                 kind.label(),

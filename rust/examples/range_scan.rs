@@ -4,19 +4,15 @@
 //!
 //!     cargo run --release --example range_scan
 
+use kvaccel::engine::{EngineBuilder, EngineStats, KvEngine};
 use kvaccel::env::SimEnv;
-use kvaccel::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
-use kvaccel::lsm::{LsmOptions, ValueDesc};
-use kvaccel::runtime::{BloomBuilder, MergeEngine};
+use kvaccel::lsm::ValueDesc;
 use kvaccel::ssd::SsdConfig;
 
 fn main() -> anyhow::Result<()> {
-    let mut db = KvaccelDb::new(
-        LsmOptions::default(),
-        KvaccelConfig::default().with_scheme(RollbackScheme::Disabled),
-        MergeEngine::rust(),
-        BloomBuilder::rust(),
-    );
+    // write-optimized KVACCEL: rollback disabled, so redirected pairs
+    // stay in the Dev-LSM and scans must aggregate both interfaces
+    let mut db = EngineBuilder::kvaccel().build();
     let mut env = SimEnv::new(3, SsdConfig::default());
 
     // sequential-ish fill with enough pressure to trigger redirection
@@ -24,7 +20,12 @@ fn main() -> anyhow::Result<()> {
     for k in 0..300_000u32 {
         t = db.put(&mut env, t, k, ValueDesc::new(k, 4096)).done;
     }
-    let redirected = db.controller.stats.writes_to_dev;
+    let redirected = db
+        .kvaccel()
+        .expect("kvaccel engine")
+        .controller
+        .stats
+        .writes_to_dev;
     println!("loaded 300k pairs; {redirected} redirected to the Dev-LSM");
 
     // scans must see a seamless, sorted, newest-version view

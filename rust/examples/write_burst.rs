@@ -4,11 +4,11 @@
 //!
 //!     cargo run --release --example write_burst -- --seconds 30
 
-use kvaccel::baselines::{System, SystemKind};
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::EngineBuilder;
 use kvaccel::env::SimEnv;
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::LsmOptions;
-use kvaccel::runtime::{BloomBuilder, MergeEngine};
 use kvaccel::sim::NS_PER_SEC;
 use kvaccel::ssd::SsdConfig;
 use kvaccel::util::Args;
@@ -38,14 +38,11 @@ fn main() {
         SystemKind::RocksDb { slowdown: true },
         SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
     ] {
-        let mut sys = System::build(
-            kind,
-            LsmOptions::default().with_threads(4),
-            MergeEngine::rust(),
-            BloomBuilder::rust(),
-        );
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::default().with_threads(4))
+            .build();
         let mut env = SimEnv::new(1, SsdConfig::default());
-        let r = fillrandom(&mut sys, &mut env, &cfg);
+        let r = fillrandom(&mut *sys, &mut env, &cfg);
         println!(
             "{:<13} mean {:>8.1} ops/s  halts {:>3}  slowdowns {:>3}",
             kind.label(),

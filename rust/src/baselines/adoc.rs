@@ -9,8 +9,13 @@
 //! The control loop runs at the same 0.1 s cadence as KVACCEL's Detector
 //! so the two systems observe identical signals.
 
+use anyhow::Result;
+
+use crate::engine::{BatchResult, EngineStats, KvEngine, WriteBatch};
 use crate::env::SimEnv;
-use crate::lsm::{LsmDb, WriteCondition};
+use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::lsm::{LsmDb, LsmOptions, PutResult, WriteCondition};
+use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::{CpuClass, Nanos, MILLIS};
 
 #[derive(Clone, Debug)]
@@ -120,11 +125,86 @@ impl AdocTuner {
     }
 }
 
+/// The ADOC system as a [`KvEngine`]: the tuned Main-LSM plus its
+/// feedback controller, ticked on every client operation (the paper runs
+/// the tuner on the same 0.1 s cadence as KVACCEL's Detector).
+pub struct AdocEngine {
+    pub db: LsmDb,
+    pub tuner: AdocTuner,
+}
+
+impl AdocEngine {
+    pub fn new(
+        opts: LsmOptions,
+        cfg: AdocConfig,
+        engine: MergeEngine,
+        bloom: BloomBuilder,
+    ) -> Self {
+        let base_threads = opts.compaction_threads;
+        let base_buffer = opts.write_buffer_size;
+        // ADOC keeps slowdown as the last resort (paper §III-A).
+        let db = LsmDb::new(opts.with_slowdown(true), engine, bloom);
+        Self {
+            db,
+            tuner: AdocTuner::new(cfg, base_threads, base_buffer),
+        }
+    }
+}
+
+impl EngineStats for AdocEngine {
+    fn main_db(&self) -> &LsmDb {
+        &self.db
+    }
+}
+
+impl KvEngine for AdocEngine {
+    fn put(&mut self, env: &mut SimEnv, at: Nanos, key: Key, val: ValueDesc) -> PutResult {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.put(env, at, key, val)
+    }
+
+    fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> PutResult {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.delete(env, at, key)
+    }
+
+    fn get(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> (Option<ValueDesc>, Nanos) {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.get(env, at, key)
+    }
+
+    fn write_batch(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        batch: &WriteBatch,
+    ) -> BatchResult {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.write_batch(env, at, batch)
+    }
+
+    fn scan(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        start: Key,
+        count: usize,
+    ) -> (Vec<Entry>, Nanos) {
+        self.db.scan(env, at, start, count)
+    }
+
+    fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        self.db.flush_and_wait(env, at)
+    }
+
+    fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
+        Ok(self.db.flush_and_wait(env, at))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lsm::{LsmOptions, ValueDesc};
-    use crate::runtime::{BloomBuilder, MergeEngine};
     use crate::ssd::SsdConfig;
 
     fn rig() -> (LsmDb, SimEnv, AdocTuner) {

@@ -1,19 +1,17 @@
-//! The evaluated systems behind one trait: RocksDB (with/without
-//! slowdown), ADOC, and KVACCEL (lazy/eager/write-optimized) — the rows
-//! and series of every figure in the paper.
+//! The evaluated systems: RocksDB (with/without slowdown), ADOC, and
+//! KVACCEL (lazy/eager/write-optimized) — the rows and series of every
+//! figure in the paper.
+//!
+//! All of them sit behind the [`crate::engine::KvEngine`] trait; there
+//! is no per-system dispatch here. [`SystemKind`] names a row,
+//! [`crate::engine::EngineBuilder`] constructs it, and every workload or
+//! experiment driver takes `&mut dyn KvEngine`.
 
 pub mod adoc;
 
-use anyhow::Result;
+use crate::kvaccel::RollbackScheme;
 
-use crate::env::SimEnv;
-use crate::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
-use crate::lsm::entry::{Entry, Key, ValueDesc};
-use crate::lsm::{DbStats, LsmDb, LsmOptions, PutResult, StallStats};
-use crate::runtime::{BloomBuilder, MergeEngine};
-use crate::sim::Nanos;
-
-pub use adoc::{AdocConfig, AdocStats, AdocTuner};
+pub use adoc::{AdocConfig, AdocEngine, AdocStats, AdocTuner};
 
 /// Which system to instantiate (paper Table III rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,122 +38,20 @@ impl SystemKind {
     }
 }
 
-/// Uniform store interface for the workload drivers.
-pub enum System {
-    RocksDb(LsmDb),
-    Adoc(LsmDb, AdocTuner),
-    Kvaccel(KvaccelDb),
-}
-
-impl System {
-    pub fn build(
-        kind: SystemKind,
-        opts: LsmOptions,
-        engine: MergeEngine,
-        bloom: BloomBuilder,
-    ) -> Self {
-        match kind {
-            SystemKind::RocksDb { slowdown } => {
-                System::RocksDb(LsmDb::new(opts.with_slowdown(slowdown), engine, bloom))
-            }
-            SystemKind::Adoc => {
-                let base_threads = opts.compaction_threads;
-                let base_buffer = opts.write_buffer_size;
-                let db = LsmDb::new(opts.with_slowdown(true), engine, bloom);
-                System::Adoc(
-                    db,
-                    AdocTuner::new(AdocConfig::default(), base_threads, base_buffer),
-                )
-            }
-            SystemKind::Kvaccel { scheme } => System::Kvaccel(KvaccelDb::new(
-                opts,
-                KvaccelConfig::default().with_scheme(scheme),
-                engine,
-                bloom,
-            )),
-        }
-    }
-
-    pub fn put(&mut self, env: &mut SimEnv, at: Nanos, key: Key, val: ValueDesc) -> PutResult {
-        match self {
-            System::RocksDb(db) => db.put(env, at, key, val),
-            System::Adoc(db, tuner) => {
-                tuner.maybe_tune(env, at, db);
-                db.put(env, at, key, val)
-            }
-            System::Kvaccel(db) => db.put(env, at, key, val),
-        }
-    }
-
-    pub fn get(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> (Option<ValueDesc>, Nanos) {
-        match self {
-            System::RocksDb(db) => db.get(env, at, key),
-            System::Adoc(db, tuner) => {
-                tuner.maybe_tune(env, at, db);
-                db.get(env, at, key)
-            }
-            System::Kvaccel(db) => db.get(env, at, key),
-        }
-    }
-
-    pub fn scan(
-        &mut self,
-        env: &mut SimEnv,
-        at: Nanos,
-        start: Key,
-        count: usize,
-    ) -> (Vec<Entry>, Nanos) {
-        match self {
-            System::RocksDb(db) => db.scan(env, at, start, count),
-            System::Adoc(db, _) => db.scan(env, at, start, count),
-            System::Kvaccel(db) => db.scan(env, at, start, count),
-        }
-    }
-
-    /// Drain background work (and final rollback for KVACCEL).
-    pub fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
-        match self {
-            System::RocksDb(db) | System::Adoc(db, _) => Ok(db.flush_and_wait(env, at)),
-            System::Kvaccel(db) => db.finish(env, at),
-        }
-    }
-
-    pub fn main_db(&self) -> &LsmDb {
-        match self {
-            System::RocksDb(db) | System::Adoc(db, _) => db,
-            System::Kvaccel(db) => &db.main,
-        }
-    }
-
-    pub fn stall_stats(&self) -> &StallStats {
-        &self.main_db().stall
-    }
-
-    pub fn db_stats(&self) -> &DbStats {
-        &self.main_db().stats
-    }
-
-    pub fn kvaccel(&self) -> Option<&KvaccelDb> {
-        match self {
-            System::Kvaccel(db) => Some(db),
-            _ => None,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{EngineBuilder, KvEngine};
+    use crate::env::SimEnv;
+    use crate::lsm::{LsmOptions, ValueDesc};
+    use crate::sim::Nanos;
     use crate::ssd::SsdConfig;
 
-    fn run_small(kind: SystemKind) -> (System, SimEnv, Nanos) {
+    fn run_small(kind: SystemKind) -> (Box<dyn KvEngine>, SimEnv, Nanos) {
         let mut env = SimEnv::new(4, SsdConfig::default());
-        let mut sys = System::build(
-            kind,
-            LsmOptions::small_for_test(),
-            MergeEngine::rust(),
-            BloomBuilder::rust(),
-        );
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::small_for_test())
+            .build();
         let mut t = 0;
         for k in 0..2000u32 {
             t = sys.put(&mut env, t, k % 500, ValueDesc::new(k, 4096)).done;

@@ -1,0 +1,381 @@
+//! The unified store interface: one `KvEngine` trait in front of every
+//! evaluated system (Main-LSM alone, ADOC-tuned LSM, full KVACCEL), so
+//! workloads, experiments and examples pick an engine by *construction*
+//! (`EngineBuilder`) instead of by code path.
+//!
+//! This mirrors the paper's central claim — the dual-interface write
+//! buffer swaps in *behind the same KV API* the host already uses — and
+//! production practice (RocksDB's `DB` + `WriteBatch`, keystone-db's
+//! `kstone-api` facade over `kstone-core`).
+//!
+//! Layering: `engine` sits above `lsm`/`kvaccel`/`baselines` (the trait
+//! impls live next to the concrete types) and below `workload`/
+//! `experiments`/`examples`, which only see `&mut dyn KvEngine`.
+
+use anyhow::Result;
+
+use crate::baselines::{AdocConfig, AdocEngine, SystemKind};
+use crate::env::SimEnv;
+use crate::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
+use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::lsm::{DbStats, LsmDb, LsmOptions, PutResult, StallStats, WriteCondition};
+use crate::runtime::{BloomBuilder, MergeEngine};
+use crate::sim::Nanos;
+
+// ---------------------------------------------------------------------
+// Write batches
+// ---------------------------------------------------------------------
+
+/// One operation inside a [`WriteBatch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchOp {
+    Put { key: Key, val: ValueDesc },
+    Delete { key: Key },
+}
+
+impl BatchOp {
+    pub fn key(&self) -> Key {
+        match *self {
+            BatchOp::Put { key, .. } | BatchOp::Delete { key } => key,
+        }
+    }
+
+    /// The value this op writes (deletes write the tombstone sentinel).
+    pub fn value(&self) -> ValueDesc {
+        match *self {
+            BatchOp::Put { val, .. } => val,
+            BatchOp::Delete { .. } => ValueDesc::TOMBSTONE,
+        }
+    }
+
+    pub fn is_delete(&self) -> bool {
+        matches!(self, BatchOp::Delete { .. })
+    }
+}
+
+/// An ordered group of writes applied as one unit: a single admission
+/// gate (stall/slowdown) at the front, one group-committed WAL append,
+/// and — on KVACCEL — a single Controller routing decision, so a whole
+/// batch redirects to the Dev-LSM during an anticipated stall.
+#[derive(Clone, Debug, Default)]
+pub struct WriteBatch {
+    ops: Vec<BatchOp>,
+}
+
+impl WriteBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { ops: Vec::with_capacity(n) }
+    }
+
+    pub fn put(&mut self, key: Key, val: ValueDesc) -> &mut Self {
+        self.ops.push(BatchOp::Put { key, val });
+        self
+    }
+
+    pub fn delete(&mut self, key: Key) -> &mut Self {
+        self.ops.push(BatchOp::Delete { key });
+        self
+    }
+
+    pub fn ops(&self) -> &[BatchOp] {
+        &self.ops
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.ops.clear();
+    }
+}
+
+/// Completion report for a batched write.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchResult {
+    /// When the writer thread is free again.
+    pub done: Nanos,
+    /// Time blocked in a hard write stall at the admission gate.
+    pub stalled_ns: Nanos,
+    /// Slowdown sleep injected at the admission gate.
+    pub delayed_ns: Nanos,
+    /// Operations applied.
+    pub ops: usize,
+}
+
+// ---------------------------------------------------------------------
+// Stats / health
+// ---------------------------------------------------------------------
+
+/// Point-in-time health snapshot — the same signals the paper's Detector
+/// polls, uniform across engines.
+#[derive(Clone, Debug)]
+pub struct EngineHealth {
+    pub write_condition: WriteCondition,
+    pub l0_files: usize,
+    pub imm_memtables: usize,
+    pub memtable_bytes: u64,
+    pub pending_compaction_bytes: u64,
+    pub wal_live_bytes: u64,
+    /// Keys currently resident in the Dev-LSM (0 for non-KVACCEL engines).
+    pub dev_resident_keys: usize,
+    /// Detector's current verdict (false for non-KVACCEL engines).
+    pub stall_imminent: bool,
+}
+
+/// Read-only accessors shared by every engine; supertrait of
+/// [`KvEngine`] so drivers can report without knowing the concrete type.
+pub trait EngineStats {
+    /// The Main-LSM behind this engine (every system has exactly one).
+    fn main_db(&self) -> &LsmDb;
+
+    /// Downcast hook for KVACCEL-specific reporting (redirects,
+    /// rollbacks); `None` for the baselines.
+    fn kvaccel(&self) -> Option<&KvaccelDb> {
+        None
+    }
+
+    fn stall_stats(&self) -> &StallStats {
+        &self.main_db().stall
+    }
+
+    fn db_stats(&self) -> &DbStats {
+        &self.main_db().stats
+    }
+
+    fn health(&self) -> EngineHealth {
+        let db = self.main_db();
+        EngineHealth {
+            write_condition: db.write_condition(),
+            l0_files: db.l0_count(),
+            imm_memtables: db.imm_count(),
+            memtable_bytes: db.memtable_bytes(),
+            pending_compaction_bytes: db.pending_compaction_bytes(),
+            wal_live_bytes: db.wal_live_bytes(),
+            dev_resident_keys: self.kvaccel().map_or(0, |k| k.metadata.len()),
+            stall_imminent: self
+                .kvaccel()
+                .is_some_and(|k| k.detector.stall_imminent()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The engine trait
+// ---------------------------------------------------------------------
+
+/// Uniform KV store interface over the simulated SSD. All timing is
+/// virtual: operations take an issue time `at` and return completion
+/// times. Scans are snapshot-consistent — the result set is pinned at
+/// issue time and unaffected by later writes.
+pub trait KvEngine: EngineStats {
+    /// Write one pair with full admission (stall/slowdown or redirect)
+    /// semantics.
+    fn put(&mut self, env: &mut SimEnv, at: Nanos, key: Key, val: ValueDesc) -> PutResult;
+
+    /// Delete a key: a tombstone through the same write path (WAL →
+    /// memtable → dropped at the bottommost compaction level).
+    fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> PutResult;
+
+    /// Point lookup; deleted keys read as absent.
+    fn get(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> (Option<ValueDesc>, Nanos);
+
+    /// Apply a [`WriteBatch`] as one unit (single admission gate, group
+    /// WAL commit, single routing decision on KVACCEL).
+    fn write_batch(&mut self, env: &mut SimEnv, at: Nanos, batch: &WriteBatch) -> BatchResult;
+
+    /// Snapshot range scan: seek to `start`, return up to `count` live
+    /// entries in ascending key order, newest version per key.
+    fn scan(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        start: Key,
+        count: usize,
+    ) -> (Vec<Entry>, Nanos);
+
+    /// Force-rotate the memtable and drain all background work.
+    fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
+
+    /// End-of-run cleanup: final rollback (KVACCEL) + drain. After
+    /// `finish`, the engine holds single-store semantics.
+    fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos>;
+}
+
+// ---------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------
+
+/// Constructs any evaluated system behind `Box<dyn KvEngine>`. Engine
+/// choice is a constructor argument; everything downstream is generic.
+///
+/// ```ignore
+/// let mut sys = EngineBuilder::kvaccel()
+///     .opts(LsmOptions::default().with_threads(4))
+///     .build();
+/// ```
+pub struct EngineBuilder {
+    kind: SystemKind,
+    opts: LsmOptions,
+    merge: MergeEngine,
+    bloom: BloomBuilder,
+    kvaccel_cfg: KvaccelConfig,
+    adoc_cfg: AdocConfig,
+}
+
+impl EngineBuilder {
+    pub fn new(kind: SystemKind) -> Self {
+        Self {
+            kind,
+            opts: LsmOptions::default(),
+            merge: MergeEngine::rust(),
+            bloom: BloomBuilder::rust(),
+            kvaccel_cfg: KvaccelConfig::default(),
+            adoc_cfg: AdocConfig::default(),
+        }
+    }
+
+    /// Plain LSM engine (RocksDB row with slowdown enabled).
+    pub fn lsm() -> Self {
+        Self::new(SystemKind::RocksDb { slowdown: true })
+    }
+
+    /// RocksDB row with the slowdown feature on/off.
+    pub fn rocksdb(slowdown: bool) -> Self {
+        Self::new(SystemKind::RocksDb { slowdown })
+    }
+
+    /// ADOC baseline (feedback tuner, slowdown as last resort).
+    pub fn adoc() -> Self {
+        Self::new(SystemKind::Adoc)
+    }
+
+    /// KVACCEL in the write-optimized configuration (rollback disabled
+    /// during the run).
+    pub fn kvaccel() -> Self {
+        Self::new(SystemKind::Kvaccel { scheme: RollbackScheme::Disabled })
+    }
+
+    /// KVACCEL with an explicit rollback scheme.
+    pub fn kvaccel_scheme(scheme: RollbackScheme) -> Self {
+        Self::new(SystemKind::Kvaccel { scheme })
+    }
+
+    pub fn kind(&self) -> SystemKind {
+        self.kind
+    }
+
+    /// Replace the LSM options (slowdown flag is still forced by the
+    /// kind at build: RocksDB rows honor their `slowdown` field, KVACCEL
+    /// always disables it).
+    pub fn opts(mut self, opts: LsmOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.opts.compaction_threads = n;
+        self
+    }
+
+    pub fn merge_engine(mut self, merge: MergeEngine) -> Self {
+        self.merge = merge;
+        self
+    }
+
+    pub fn bloom_builder(mut self, bloom: BloomBuilder) -> Self {
+        self.bloom = bloom;
+        self
+    }
+
+    pub fn kvaccel_config(mut self, cfg: KvaccelConfig) -> Self {
+        self.kvaccel_cfg = cfg;
+        self
+    }
+
+    pub fn adoc_config(mut self, cfg: AdocConfig) -> Self {
+        self.adoc_cfg = cfg;
+        self
+    }
+
+    pub fn build(self) -> Box<dyn KvEngine> {
+        match self.kind {
+            SystemKind::RocksDb { slowdown } => Box::new(LsmDb::new(
+                self.opts.with_slowdown(slowdown),
+                self.merge,
+                self.bloom,
+            )),
+            SystemKind::Adoc => Box::new(AdocEngine::new(
+                self.opts,
+                self.adoc_cfg,
+                self.merge,
+                self.bloom,
+            )),
+            SystemKind::Kvaccel { scheme } => Box::new(KvaccelDb::new(
+                self.opts,
+                self.kvaccel_cfg.with_scheme(scheme),
+                self.merge,
+                self.bloom,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::SsdConfig;
+
+    #[test]
+    fn batch_builder_orders_ops() {
+        let mut b = WriteBatch::new();
+        b.put(1, ValueDesc::new(1, 64)).delete(2).put(3, ValueDesc::new(3, 64));
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert_eq!(b.ops()[0].key(), 1);
+        assert!(b.ops()[1].is_delete());
+        assert!(b.ops()[1].value().is_tombstone());
+        assert_eq!(b.ops()[2].value(), ValueDesc::new(3, 64));
+    }
+
+    #[test]
+    fn builder_constructs_every_kind() {
+        for kind in [
+            SystemKind::RocksDb { slowdown: true },
+            SystemKind::RocksDb { slowdown: false },
+            SystemKind::Adoc,
+            SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+        ] {
+            let mut env = SimEnv::new(1, SsdConfig::default());
+            let mut sys = EngineBuilder::new(kind)
+                .opts(LsmOptions::small_for_test())
+                .build();
+            let r = sys.put(&mut env, 0, 7, ValueDesc::new(7, 128));
+            let (got, _) = sys.get(&mut env, r.done, 7);
+            assert_eq!(got, Some(ValueDesc::new(7, 128)), "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn health_snapshot_via_trait() {
+        let mut env = SimEnv::new(2, SsdConfig::default());
+        let mut sys = EngineBuilder::lsm().opts(LsmOptions::small_for_test()).build();
+        let mut t = 0;
+        for k in 0..100u32 {
+            t = sys.put(&mut env, t, k, ValueDesc::new(k, 1024)).done;
+        }
+        let h = sys.health();
+        assert!(h.memtable_bytes > 0 || h.l0_files > 0 || h.imm_memtables > 0);
+        assert_eq!(h.dev_resident_keys, 0);
+        assert!(!h.stall_imminent);
+        let _ = t;
+    }
+}

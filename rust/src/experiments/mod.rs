@@ -15,7 +15,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::baselines::{System, SystemKind};
+use crate::baselines::SystemKind;
+use crate::engine::{EngineBuilder, KvEngine};
 use crate::env::SimEnv;
 use crate::kvaccel::RollbackScheme;
 use crate::lsm::LsmOptions;
@@ -80,10 +81,19 @@ impl ExpContext {
         BenchConfig { seed: self.seed, ..Default::default() }.scaled(self.scale)
     }
 
-    pub fn build_system(&self, kind: SystemKind, threads: usize) -> (System, SimEnv) {
+    /// Build one evaluated system behind the unified engine interface.
+    pub fn build_system(
+        &self,
+        kind: SystemKind,
+        threads: usize,
+    ) -> (Box<dyn KvEngine>, SimEnv) {
         let opts = LsmOptions::default().with_threads(threads);
         (
-            System::build(kind, opts, self.merge_engine(), self.bloom_builder()),
+            EngineBuilder::new(kind)
+                .opts(opts)
+                .merge_engine(self.merge_engine())
+                .bloom_builder(self.bloom_builder())
+                .build(),
             SimEnv::new(self.seed, SsdConfig::default()),
         )
     }
@@ -92,7 +102,7 @@ impl ExpContext {
     pub fn run_fillrandom(&self, kind: SystemKind, threads: usize) -> RunResult {
         let (mut sys, mut env) = self.build_system(kind, threads);
         let cfg = self.bench_config();
-        let mut r = crate::workload::fillrandom(&mut sys, &mut env, &cfg);
+        let mut r = crate::workload::fillrandom(&mut *sys, &mut env, &cfg);
         r.system = kind.label();
         r
     }
@@ -107,7 +117,7 @@ impl ExpContext {
         let (mut sys, mut env) = self.build_system(kind, threads);
         let cfg = self.bench_config();
         let mut r =
-            crate::workload::readwhilewriting(&mut sys, &mut env, &cfg, ratio.0, ratio.1);
+            crate::workload::readwhilewriting(&mut *sys, &mut env, &cfg, ratio.0, ratio.1);
         r.system = kind.label();
         r
     }

@@ -6,6 +6,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::baselines::SystemKind;
+use crate::engine::KvEngine;
 use crate::env::SimEnv;
 use crate::kvaccel::{
     Detector, DetectorConfig, MetadataConfig, MetadataManager, RollbackScheme,
@@ -35,7 +36,7 @@ pub fn table5(ctx: &ExpContext) -> Result<String> {
     ] {
         let (mut sys, mut env) = ctx.build_system(kind, 4);
         let cfg = ctx.bench_config();
-        let t0 = preload(&mut sys, &mut env, &cfg, preload_bytes)?;
+        let t0 = preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
         // leave residue in the Dev-LSM for KVACCEL: preload's finish()
         // drained it, so push a post-preload burst that redirects
         let t0 = if kind == (SystemKind::Kvaccel { scheme: RollbackScheme::Disabled }) {
@@ -58,7 +59,7 @@ pub fn table5(ctx: &ExpContext) -> Result<String> {
         } else {
             t0
         };
-        let r = seekrandom(&mut sys, &mut env, &cfg, seeks, 1024, t0);
+        let r = seekrandom(&mut *sys, &mut env, &cfg, seeks, 1024, t0);
         let kops = r.reads.total as f64 / r.duration_s.max(1e-9) / 1e3;
         out.push_str(&format!(
             "  {:<10} {:>8.0} Kops/s   (paper: {})\n",

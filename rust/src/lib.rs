@@ -11,6 +11,10 @@
 //! - **runtime**: PJRT loader executing those artifacts from the Rust
 //!   compaction hot path.
 //!
+//! All systems are driven through one store interface: the
+//! [`engine::KvEngine`] trait (put/get/delete/write_batch/scan/flush/
+//! finish), constructed by [`engine::EngineBuilder`].
+//!
 //! See DESIGN.md for the module inventory and the per-experiment index.
 
 pub mod env;
@@ -25,6 +29,8 @@ pub mod lsm;
 pub mod kvaccel;
 
 pub mod baselines;
+
+pub mod engine;
 
 pub mod workload;
 

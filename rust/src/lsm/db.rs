@@ -38,6 +38,9 @@ pub struct PutResult {
 #[derive(Clone, Debug, Default)]
 pub struct DbStats {
     pub puts: u64,
+    pub deletes: u64,
+    /// `write_batch` calls (each may carry many puts/deletes).
+    pub batches: u64,
     pub gets: u64,
     pub get_hits: u64,
     pub flush_count: u64,
@@ -396,15 +399,11 @@ impl LsmDb {
     // Write path
     // -----------------------------------------------------------------
 
-    /// Write with full stall/slowdown semantics. `at` is the issue time;
-    /// the result's `done` is when the writer thread is free again.
-    pub fn put(
-        &mut self,
-        env: &mut SimEnv,
-        at: Nanos,
-        key: Key,
-        val: ValueDesc,
-    ) -> PutResult {
+    /// Admission gate shared by `put` and `write_batch`: apply finished
+    /// background work, rotate the memtable when possible, then block
+    /// (hard stop) or sleep (slowdown) per the stall state machine.
+    /// Returns the admitted issue time plus stalled/delayed accounting.
+    fn admit_write(&mut self, env: &mut SimEnv, at: Nanos) -> (Nanos, Nanos, Nanos) {
         let mut at = at;
         let mut stalled_ns = 0;
         let mut delayed_ns = 0;
@@ -458,6 +457,19 @@ impl LsmDb {
                 }
             }
         }
+        (at, stalled_ns, delayed_ns)
+    }
+
+    /// Write with full stall/slowdown semantics. `at` is the issue time;
+    /// the result's `done` is when the writer thread is free again.
+    pub fn put(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+        val: ValueDesc,
+    ) -> PutResult {
+        let (mut at, stalled_ns, delayed_ns) = self.admit_write(env, at);
         // the write itself
         self.seq += 1;
         let entry = Entry::new(key, self.seq, val);
@@ -470,6 +482,61 @@ impl LsmDb {
         at += self.opts.put_cpu_ns;
         env.clock.advance_to(at);
         PutResult { done: at, stalled_ns, delayed_ns }
+    }
+
+    /// Delete a key: a tombstone through the standard write path (WAL
+    /// record → memtable tombstone → dropped at the bottommost
+    /// compaction level by `run_merge`).
+    pub fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> PutResult {
+        self.stats.deletes += 1;
+        self.put(env, at, key, ValueDesc::TOMBSTONE)
+    }
+
+    /// Apply a batch as one unit: a single admission gate up front, per-
+    /// entry memtable inserts (with mid-batch rotation when a slot is
+    /// free), and one group-committed WAL submission — ops after the
+    /// first pay the amortized `put_cpu_ns / batch_cpu_divisor`.
+    pub fn write_batch(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        batch: &crate::engine::WriteBatch,
+    ) -> crate::engine::BatchResult {
+        if batch.is_empty() {
+            self.catch_up(env, at);
+            return crate::engine::BatchResult { done: at, ..Default::default() };
+        }
+        let (mut at, stalled_ns, delayed_ns) = self.admit_write(env, at);
+        self.stats.batches += 1;
+        let mut wal_bytes = 0u64;
+        for op in batch.ops() {
+            // rotate mid-batch when the memtable fills and a slot is
+            // free; a stopped condition never re-blocks inside a batch
+            // (the gate already ran), matching put_internal's policy.
+            if self.mem.approximate_bytes() >= self.opts.write_buffer_size
+                && self.imms.len() + 1 < self.opts.max_write_buffer_number
+            {
+                self.rotate_memtable(env, at);
+            }
+            self.seq += 1;
+            let entry = Entry::new(op.key(), self.seq, op.value());
+            // `puts` counts every write op (tombstones included), exactly
+            // like the single-op path; `deletes` is supplementary.
+            self.stats.puts += 1;
+            if op.is_delete() {
+                self.stats.deletes += 1;
+            }
+            self.stats.user_bytes_written += entry.encoded_len();
+            wal_bytes += self.wal.append(entry);
+            self.mem.insert(entry);
+        }
+        // one group-commit WAL submission for the whole batch
+        env.device.wal_append(at, wal_bytes);
+        let cpu = self.opts.batch_cpu_ns(batch.len() as u64);
+        env.cpu.charge(CpuClass::Foreground, at, cpu);
+        at += cpu;
+        env.clock.advance_to(at);
+        crate::engine::BatchResult { done: at, stalled_ns, delayed_ns, ops: batch.len() }
     }
 
     /// Internal write used by the rollback path: bypasses stall blocking
@@ -665,6 +732,57 @@ impl LsmDb {
     }
 }
 
+// ---------------------------------------------------------------------
+// Unified engine interface
+// ---------------------------------------------------------------------
+
+impl crate::engine::EngineStats for LsmDb {
+    fn main_db(&self) -> &LsmDb {
+        self
+    }
+}
+
+impl crate::engine::KvEngine for LsmDb {
+    fn put(&mut self, env: &mut SimEnv, at: Nanos, key: Key, val: ValueDesc) -> PutResult {
+        LsmDb::put(self, env, at, key, val)
+    }
+
+    fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> PutResult {
+        LsmDb::delete(self, env, at, key)
+    }
+
+    fn get(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> (Option<ValueDesc>, Nanos) {
+        LsmDb::get(self, env, at, key)
+    }
+
+    fn write_batch(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        batch: &crate::engine::WriteBatch,
+    ) -> crate::engine::BatchResult {
+        LsmDb::write_batch(self, env, at, batch)
+    }
+
+    fn scan(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        start: Key,
+        count: usize,
+    ) -> (Vec<Entry>, Nanos) {
+        LsmDb::scan(self, env, at, start, count)
+    }
+
+    fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        self.flush_and_wait(env, at)
+    }
+
+    fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
+        Ok(self.flush_and_wait(env, at))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -824,6 +942,103 @@ mod tests {
         db.flush_and_wait(&mut env, t);
         let wa = db.stats.write_amplification();
         assert!(wa > 1.0, "WA {wa} should exceed 1 after compactions");
+    }
+
+    #[test]
+    fn delete_survives_flush_and_compaction() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        t = db.put(&mut env, t, 42, v(1)).done;
+        t = db.delete(&mut env, t, 42).done;
+        // enough disjoint-key traffic to force flushes + compactions so
+        // the tombstone travels down the tree
+        for k in 0..3000u32 {
+            t = db.put(&mut env, t, 1000 + (k % 701), v(k)).done;
+        }
+        t = db.flush_and_wait(&mut env, t);
+        assert!(db.stats.compaction_count > 0, "no compactions happened");
+        assert_eq!(db.stats.deletes, 1);
+        let (got, nt) = db.get(&mut env, t, 42);
+        t = nt;
+        assert_eq!(got, None, "deleted key resurfaced");
+        let _ = t;
+    }
+
+    #[test]
+    fn write_batch_matches_individual_puts() {
+        use crate::engine::WriteBatch;
+        let (mut a, mut env_a) = rig();
+        let (mut b, mut env_b) = rig();
+        let mut wb = WriteBatch::new();
+        let mut tb = 0;
+        for k in 0..200u32 {
+            wb.put(k, v(k));
+            tb = b.put(&mut env_b, tb, k, v(k)).done;
+        }
+        wb.delete(50).delete(199);
+        tb = b.delete(&mut env_b, tb, 50).done;
+        tb = b.delete(&mut env_b, tb, 199).done;
+        let r = a.write_batch(&mut env_a, 0, &wb);
+        assert_eq!(r.ops, 202);
+        assert_eq!(a.stats.puts, b.stats.puts);
+        assert_eq!(a.stats.deletes, b.stats.deletes);
+        let mut ta = r.done;
+        for k in 0..200u32 {
+            let want = if k == 50 || k == 199 { None } else { Some(v(k)) };
+            let (ga, na) = a.get(&mut env_a, ta, k);
+            ta = na;
+            let (gb, nb) = b.get(&mut env_b, tb, k);
+            tb = nb;
+            assert_eq!(ga, want, "batch key {k}");
+            assert_eq!(gb, want, "sequential key {k}");
+        }
+    }
+
+    #[test]
+    fn write_batch_amortizes_client_cost() {
+        use crate::engine::WriteBatch;
+        let (mut db, mut env) = rig();
+        let n = 8u32;
+        let mut wb = WriteBatch::new();
+        for k in 0..n {
+            wb.put(k, v(k));
+        }
+        let r = db.write_batch(&mut env, 0, &wb);
+        assert_eq!(r.stalled_ns, 0);
+        assert!(
+            r.done < n as u64 * db.opts.put_cpu_ns,
+            "batch of {n} should beat {n} sequential puts: {}",
+            r.done
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        use crate::engine::WriteBatch;
+        let (mut db, mut env) = rig();
+        let r = db.write_batch(&mut env, 17, &WriteBatch::new());
+        assert_eq!(r.done, 17);
+        assert_eq!(r.ops, 0);
+        assert_eq!(db.stats.puts, 0);
+        assert_eq!(db.stats.batches, 0);
+    }
+
+    #[test]
+    fn large_batch_rotates_memtable_midway() {
+        use crate::engine::WriteBatch;
+        let (mut db, mut env) = rig();
+        // small_for_test buffer is 64 KB; ~keys*4KB blows well past it
+        let mut wb = WriteBatch::new();
+        for k in 0..64u32 {
+            wb.put(k, v(k));
+        }
+        let r = db.write_batch(&mut env, 0, &wb);
+        let mut t = db.flush_and_wait(&mut env, r.done);
+        for k in 0..64u32 {
+            let (got, nt) = db.get(&mut env, t, k);
+            t = nt;
+            assert_eq!(got, Some(v(k)), "key {k}");
+        }
     }
 
     #[test]

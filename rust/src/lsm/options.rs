@@ -62,6 +62,10 @@ pub struct LsmOptions {
     pub flush_cpu_ns_per_entry: Nanos,
     /// Iterator next CPU per entry (cached path).
     pub next_cpu_ns: Nanos,
+    /// Group-commit amortization for `write_batch`: ops after the first
+    /// cost `put_cpu_ns / batch_cpu_divisor` each (one WAL submission and
+    /// one client round-trip are shared by the whole batch).
+    pub batch_cpu_divisor: u64,
 }
 
 impl Default for LsmOptions {
@@ -90,6 +94,7 @@ impl Default for LsmOptions {
             merge_cpu_ns_per_entry: 10 * MICROS,
             flush_cpu_ns_per_entry: MICROS,
             next_cpu_ns: 2 * MICROS,
+            batch_cpu_divisor: 4,
         }
     }
 }
@@ -113,6 +118,16 @@ impl LsmOptions {
     pub fn bloom_bits_for(&self, keys: usize) -> u32 {
         let bits = (keys as u32).saturating_mul(self.bloom_bits_per_key).max(64);
         bits.div_ceil(32) * 32
+    }
+
+    /// Client CPU for an `ops`-entry group commit: the first op pays the
+    /// full `put_cpu_ns`, the rest the amortized share (one WAL
+    /// submission + one client round-trip for the whole batch).
+    pub fn batch_cpu_ns(&self, ops: u64) -> Nanos {
+        if ops == 0 {
+            return 0;
+        }
+        self.put_cpu_ns + (ops - 1) * self.put_cpu_ns / self.batch_cpu_divisor.max(1)
     }
 
     /// Paper Table III variant: n compaction threads.

@@ -12,7 +12,8 @@
 
 use anyhow::{anyhow, Result};
 
-use kvaccel::baselines::{System, SystemKind};
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::EngineBuilder;
 use kvaccel::env::SimEnv;
 use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EXPERIMENTS};
 use kvaccel::kvaccel::RollbackScheme;
@@ -81,18 +82,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
 
     let opts = LsmOptions::default().with_threads(threads);
-    let mut sys = System::build(kind, opts, ctx.merge_engine(), ctx.bloom_builder());
+    let mut sys = EngineBuilder::new(kind)
+        .opts(opts)
+        .merge_engine(ctx.merge_engine())
+        .bloom_builder(ctx.bloom_builder())
+        .build();
     let mut env = SimEnv::new(seed, SsdConfig::default());
     let cfg: BenchConfig = ctx.bench_config();
 
     let r = match workload_id.as_str() {
-        "A" => workload::fillrandom(&mut sys, &mut env, &cfg),
-        "B" => workload::readwhilewriting(&mut sys, &mut env, &cfg, 9, 1),
-        "C" => workload::readwhilewriting(&mut sys, &mut env, &cfg, 8, 2),
+        "A" => workload::fillrandom(&mut *sys, &mut env, &cfg),
+        "B" => workload::readwhilewriting(&mut *sys, &mut env, &cfg, 9, 1),
+        "C" => workload::readwhilewriting(&mut *sys, &mut env, &cfg, 8, 2),
         "D" => {
             let preload_bytes = ((20u64 << 30) as f64 * scale) as u64;
-            let t0 = workload::preload(&mut sys, &mut env, &cfg, preload_bytes)?;
-            workload::seekrandom(&mut sys, &mut env, &cfg, (60_000f64 * scale) as usize, 1024, t0)
+            let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
+            workload::seekrandom(&mut *sys, &mut env, &cfg, (60_000f64 * scale) as usize, 1024, t0)
         }
         other => return Err(anyhow!("unknown workload {other:?}")),
     };

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::baselines::System;
+use crate::engine::{EngineStats, KvEngine, WriteBatch};
 use crate::env::SimEnv;
 use crate::lsm::entry::Key;
 use crate::sim::{Nanos, NS_PER_SEC};
@@ -48,7 +48,7 @@ impl BenchConfig {
 }
 
 /// Workload A: fillrandom, one closed-loop writer.
-pub fn fillrandom(sys: &mut System, env: &mut SimEnv, cfg: &BenchConfig) -> RunResult {
+pub fn fillrandom(sys: &mut dyn KvEngine, env: &mut SimEnv, cfg: &BenchConfig) -> RunResult {
     let mut gen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
     let mut writes = OpSeries::default();
     let mut wlat = Histogram::new();
@@ -66,9 +66,45 @@ pub fn fillrandom(sys: &mut System, env: &mut SimEnv, cfg: &BenchConfig) -> RunR
     assemble(sys, env, cfg, "A/fillrandom", writes, wlat, OpSeries::default(), Histogram::new(), t)
 }
 
+/// Workload A variant driven through `write_batch`: the closed-loop
+/// writer group-commits `batch_size` pairs per submission. Under
+/// pressure, KVACCEL redirects each batch to the Dev-LSM as one unit.
+pub fn fillrandom_batched(
+    sys: &mut dyn KvEngine,
+    env: &mut SimEnv,
+    cfg: &BenchConfig,
+    batch_size: usize,
+) -> RunResult {
+    let batch_size = batch_size.max(1);
+    let mut gen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
+    let mut writes = OpSeries::default();
+    let mut wlat = Histogram::new();
+    let mut t: Nanos = 0;
+    let mut op: u64 = 0;
+    let mut batch = WriteBatch::with_capacity(batch_size);
+    while t < cfg.duration {
+        batch.clear();
+        for _ in 0..batch_size {
+            let key = gen.random_key();
+            batch.put(key, gen.value_for(key, op));
+            op += 1;
+        }
+        let r = sys.write_batch(env, t, &batch);
+        // per-op latency: the batch latency is shared by its ops
+        let per_op = (r.done - t) / batch_size as u64;
+        for _ in 0..batch_size {
+            wlat.record(per_op.max(1));
+            writes.record(r.done.min(cfg.duration - 1));
+        }
+        t = r.done;
+    }
+    let name = format!("A/fillrandom_batched x{batch_size}");
+    assemble(sys, env, cfg, &name, writes, wlat, OpSeries::default(), Histogram::new(), t)
+}
+
 /// Workloads B/C: readwhilewriting at a write:read ratio (e.g. (9,1)).
 pub fn readwhilewriting(
-    sys: &mut System,
+    sys: &mut dyn KvEngine,
     env: &mut SimEnv,
     cfg: &BenchConfig,
     ratio_write: u64,
@@ -119,7 +155,7 @@ pub fn readwhilewriting(
 /// Workload D: seekrandom — `seeks` range queries of (Seek + `nexts`
 /// Next) each, after the caller has preloaded the store.
 pub fn seekrandom(
-    sys: &mut System,
+    sys: &mut dyn KvEngine,
     env: &mut SimEnv,
     cfg: &BenchConfig,
     seeks: usize,
@@ -160,7 +196,7 @@ pub fn seekrandom(
 /// Preload helper for workload D (the paper's "initial 20 GB
 /// fillrandom"): returns the time after preload + settle.
 pub fn preload(
-    sys: &mut System,
+    sys: &mut dyn KvEngine,
     env: &mut SimEnv,
     cfg: &BenchConfig,
     bytes: u64,
@@ -179,7 +215,7 @@ pub fn preload(
 
 #[allow(clippy::too_many_arguments)]
 fn assemble(
-    sys: &System,
+    sys: &dyn KvEngine,
     env: &SimEnv,
     cfg: &BenchConfig,
     workload: &str,
@@ -245,8 +281,8 @@ fn assemble(
 mod tests {
     use super::*;
     use crate::baselines::SystemKind;
+    use crate::engine::EngineBuilder;
     use crate::lsm::LsmOptions;
-    use crate::runtime::{BloomBuilder, MergeEngine};
     use crate::ssd::SsdConfig;
 
     fn tiny_cfg() -> BenchConfig {
@@ -257,14 +293,11 @@ mod tests {
         }
     }
 
-    fn sys(kind: SystemKind) -> (System, SimEnv) {
+    fn sys(kind: SystemKind) -> (Box<dyn KvEngine>, SimEnv) {
         (
-            System::build(
-                kind,
-                LsmOptions::small_for_test(),
-                MergeEngine::rust(),
-                BloomBuilder::rust(),
-            ),
+            EngineBuilder::new(kind)
+                .opts(LsmOptions::small_for_test())
+                .build(),
             SimEnv::new(3, SsdConfig::default()),
         )
     }
@@ -272,7 +305,7 @@ mod tests {
     #[test]
     fn fillrandom_produces_series() {
         let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
-        let r = fillrandom(&mut s, &mut env, &tiny_cfg());
+        let r = fillrandom(&mut *s, &mut env, &tiny_cfg());
         assert!(r.writes.total > 100, "writes: {}", r.writes.total);
         assert!(r.duration_s >= 2.0);
         assert!(r.write_lat.p99_us > 0.0);
@@ -282,7 +315,7 @@ mod tests {
     #[test]
     fn readwhilewriting_respects_ratio() {
         let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
-        let r = readwhilewriting(&mut s, &mut env, &tiny_cfg(), 9, 1);
+        let r = readwhilewriting(&mut *s, &mut env, &tiny_cfg(), 9, 1);
         assert!(r.writes.total > 0 && r.reads.total > 0);
         let ratio = r.writes.total as f64 / r.reads.total as f64;
         assert!((6.0..14.0).contains(&ratio), "ratio {ratio}");
@@ -292,8 +325,8 @@ mod tests {
     fn seekrandom_counts_next_ops() {
         let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
         let cfg = tiny_cfg();
-        let t = preload(&mut s, &mut env, &cfg, 2 << 20).unwrap();
-        let r = seekrandom(&mut s, &mut env, &cfg, 10, 16, t);
+        let t = preload(&mut *s, &mut env, &cfg, 2 << 20).unwrap();
+        let r = seekrandom(&mut *s, &mut env, &cfg, 10, 16, t);
         assert!(r.reads.total >= 10, "ops {}", r.reads.total);
         assert!(r.duration_s > 0.0);
     }
@@ -304,8 +337,28 @@ mod tests {
         let (mut s, mut env) = sys(SystemKind::Kvaccel {
             scheme: RollbackScheme::Disabled,
         });
-        let r = fillrandom(&mut s, &mut env, &tiny_cfg());
+        let r = fillrandom(&mut *s, &mut env, &tiny_cfg());
         assert!(r.redirected_writes > 0, "expected redirection under pressure");
         assert_eq!(r.stop_events, 0, "KVACCEL must not hard-stop");
+    }
+
+    #[test]
+    fn batched_fillrandom_runs_on_every_engine() {
+        use crate::kvaccel::RollbackScheme;
+        for kind in [
+            SystemKind::RocksDb { slowdown: true },
+            SystemKind::Adoc,
+            SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+        ] {
+            let (mut s, mut env) = sys(kind);
+            let r = fillrandom_batched(&mut *s, &mut env, &tiny_cfg(), 16);
+            assert!(
+                r.writes.total > 100,
+                "{}: writes {}",
+                kind.label(),
+                r.writes.total
+            );
+            assert!(r.workload.contains("batched"));
+        }
     }
 }

@@ -4,6 +4,8 @@ pub mod db_bench;
 pub mod keygen;
 pub mod stats;
 
-pub use db_bench::{fillrandom, preload, readwhilewriting, seekrandom, BenchConfig};
+pub use db_bench::{
+    fillrandom, fillrandom_batched, preload, readwhilewriting, seekrandom, BenchConfig,
+};
 pub use keygen::KeyGen;
 pub use stats::{cdf, Histogram, OpSeries, RunResult};

@@ -1,7 +1,8 @@
 //! Cross-module integration tests: full systems on real workloads,
 //! durability/recovery drills, ACID-property checks (paper §V-G).
 
-use kvaccel::baselines::{System, SystemKind};
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::{EngineBuilder, EngineStats};
 use kvaccel::env::SimEnv;
 use kvaccel::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
 use kvaccel::lsm::{LsmDb, LsmOptions, ValueDesc};
@@ -39,14 +40,9 @@ fn kvaccel_beats_baselines_on_write_burst() {
         SystemKind::Adoc,
         SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
     ] {
-        let mut sys = System::build(
-            kind,
-            pressured_opts(2),
-            MergeEngine::rust(),
-            BloomBuilder::rust(),
-        );
+        let mut sys = EngineBuilder::new(kind).opts(pressured_opts(2)).build();
         let mut env = small_env(42);
-        let r = fillrandom(&mut sys, &mut env, &cfg);
+        let r = fillrandom(&mut *sys, &mut env, &cfg);
         results.push((kind.label(), r));
     }
     let kops = |n: &str| {
@@ -78,14 +74,11 @@ fn mixed_workload_all_systems_consistent() {
         SystemKind::RocksDb { slowdown: true },
         SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
     ] {
-        let mut sys = System::build(
-            kind,
-            LsmOptions::default().with_threads(2),
-            MergeEngine::rust(),
-            BloomBuilder::rust(),
-        );
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::default().with_threads(2))
+            .build();
         let mut env = small_env(7);
-        let r = readwhilewriting(&mut sys, &mut env, &cfg, 8, 2);
+        let r = readwhilewriting(&mut *sys, &mut env, &cfg, 8, 2);
         assert!(r.writes.total > 0 && r.reads.total > 0, "{}", kind.label());
     }
 }
@@ -195,14 +188,11 @@ fn sustained_run_holds_invariants() {
         key_space: 200_000,
         ..Default::default()
     };
-    let mut sys = System::build(
-        SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
-        pressured_opts(4),
-        MergeEngine::rust(),
-        BloomBuilder::rust(),
-    );
+    let mut sys = EngineBuilder::new(SystemKind::Kvaccel { scheme: RollbackScheme::Eager })
+        .opts(pressured_opts(4))
+        .build();
     let mut env = small_env(11);
-    let r = fillrandom(&mut sys, &mut env, &cfg);
+    let r = fillrandom(&mut *sys, &mut env, &cfg);
     assert!(r.writes.total > 10_000);
     let t = sys.finish(&mut env, 10 * NS_PER_SEC).unwrap();
     let db = sys.main_db();

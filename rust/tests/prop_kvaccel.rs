@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use kvaccel::engine::WriteBatch;
 use kvaccel::env::SimEnv;
 use kvaccel::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
 use kvaccel::lsm::{LsmOptions, ValueDesc};
@@ -32,15 +33,33 @@ fn episode(seed: u64, scheme: RollbackScheme) {
     let mut t = 0u64;
     for op in 0..OPS {
         match rng.gen_range_u32(100) {
-            0..=59 => {
+            0..=54 => {
                 let k = rng.gen_range_u32(key_space);
                 let v = value(op as u32);
                 t = db.put(&mut env, t, k, v).done;
                 oracle.insert(k, Some(v));
             }
+            55..=59 => {
+                // batched writes flow through the detector/controller as
+                // one unit (batched redirection during stalls)
+                let mut wb = WriteBatch::new();
+                let n = 1 + rng.gen_range_u32(8);
+                for i in 0..n {
+                    let k = rng.gen_range_u32(key_space);
+                    if rng.gen_ratio(1, 5) {
+                        wb.delete(k);
+                        oracle.insert(k, None);
+                    } else {
+                        let v = value(op as u32 * 16 + i);
+                        wb.put(k, v);
+                        oracle.insert(k, Some(v));
+                    }
+                }
+                t = db.write_batch(&mut env, t, &wb).done;
+            }
             60..=69 => {
                 let k = rng.gen_range_u32(key_space);
-                t = db.put(&mut env, t, k, ValueDesc::TOMBSTONE).done;
+                t = db.delete(&mut env, t, k).done;
                 oracle.insert(k, None);
             }
             70..=94 => {
