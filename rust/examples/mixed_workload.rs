@@ -34,10 +34,11 @@ fn main() {
             let mut env = SimEnv::new(11, SsdConfig::default());
             let r = readwhilewriting(&mut *sys, &mut env, &cfg, ratio.0, ratio.1);
             println!(
-                "  {:<10} write {:>8.1} ops/s  read {:>8.1} ops/s  read-p99 {:>8.1} us  rollbacks {:>3}",
+                "  {:<10} write {:>8.1} ops/s  read {:>8.1} ops/s  hit {:>5.1}%  read-p99 {:>8.1} us  rollbacks {:>3}",
                 kind.label(),
                 r.write_kops() * 1e3,
                 r.read_kops() * 1e3,
+                r.read_hit_rate() * 100.0,
                 r.read_lat.p99_us,
                 r.rollbacks
             );

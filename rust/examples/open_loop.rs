@@ -1,0 +1,85 @@
+//! Open-loop overload demo: offered load above the Main-LSM's
+//! sustainable throughput.
+//!
+//! A closed-loop driver can never show a write-stall queue — it only
+//! issues as fast as the engine completes. With open-loop (fixed-rate)
+//! arrivals, requests queue in each client's FIFO while the engine
+//! stalls, so latency = queueing delay + service time. On the plain LSM
+//! the queueing delay grows without bound; KVACCEL redirects the
+//! overflow to the Dev-LSM and keeps the tail bounded.
+//!
+//!     cargo run --release --example open_loop -- --seconds 20 --rate 50000
+
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::EngineBuilder;
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::LsmOptions;
+use kvaccel::sim::NS_PER_SEC;
+use kvaccel::ssd::SsdConfig;
+use kvaccel::util::Args;
+use kvaccel::workload::{
+    preset_spec, run_spec, BenchConfig, KeyDist, LoopMode,
+};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let seconds = args.get_u64("seconds", 20);
+    let rate = args.get_f64("rate", 50_000.0);
+    let clients = args.get_usize("clients", 4);
+    let cfg = BenchConfig {
+        duration: seconds * NS_PER_SEC,
+        ..Default::default()
+    };
+    println!(
+        "open-loop fillrandom: {clients} clients, {rate:.0} ops/s aggregate, {seconds} virtual s\n"
+    );
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        let spec = preset_spec(
+            "A",
+            &cfg,
+            clients,
+            LoopMode::OpenFixed { ops_per_sec: rate },
+            KeyDist::Uniform,
+        )?;
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::default().with_threads(4))
+            .build();
+        let mut env = SimEnv::new(42, SsdConfig::default());
+        let r = run_spec(&mut *sys, &mut env, &spec);
+        println!("== {} ==", kind.label());
+        println!(
+            "  served {} writes in {:.1} virtual s ({:.1} Kops/s vs {:.1} offered)",
+            r.writes.total,
+            r.duration_s,
+            r.write_kops(),
+            rate / 1e3
+        );
+        println!(
+            "  total write latency p50 {:.0} us  p99 {:.0} us  p999 {:.0} us",
+            r.write_lat.p50_us, r.write_lat.p99_us, r.write_lat.p999_us
+        );
+        println!(
+            "  queueing delay      p50 {:.0} us  p99 {:.0} us (time waiting in the FIFO)",
+            r.queue_delay.p50_us, r.queue_delay.p99_us
+        );
+        let series = &r.queue_delay_series_us;
+        let show: Vec<String> = series
+            .iter()
+            .step_by((series.len() / 10).max(1))
+            .map(|us| format!("{us:.0}"))
+            .collect();
+        println!("  mean qdelay/s (us)  [{}]", show.join(", "));
+        println!(
+            "  stalls: {} halts ({:.2}s), {} slowdowns; redirected {}\n",
+            r.stop_events, r.stopped_s, r.slowdown_events, r.redirected_writes
+        );
+    }
+    println!("shape: the LSM rows' queueing delay climbs second over second;");
+    println!("KVACCEL redirects under pressure and its tail stays bounded.");
+    Ok(())
+}

@@ -122,6 +122,19 @@ impl ExpContext {
         r
     }
 
+    /// Run an arbitrary multi-client [`WorkloadSpec`] on a fresh system.
+    pub fn run_workload(
+        &self,
+        kind: SystemKind,
+        threads: usize,
+        spec: &crate::workload::WorkloadSpec,
+    ) -> RunResult {
+        let (mut sys, mut env) = self.build_system(kind, threads);
+        let mut r = crate::workload::run_spec(&mut *sys, &mut env, spec);
+        r.system = kind.label();
+        r
+    }
+
     pub fn log(&self, msg: impl AsRef<str>) {
         if !self.quiet {
             println!("{}", msg.as_ref());
@@ -161,6 +174,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "fig12" => figs::fig12(ctx),
         "fig13" => figs::fig13(ctx),
         "fig14" => figs::fig14(ctx),
+        "qdelay" => figs::qdelay(ctx),
         "table5" => tables::table5(ctx),
         "table6" => tables::table6(ctx),
         "all" => {
@@ -177,7 +191,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 10] = [
+pub const ALL_EXPERIMENTS: [&str; 11] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "table5", "table6",
+    "qdelay", "table5", "table6",
 ];

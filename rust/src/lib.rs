@@ -13,7 +13,10 @@
 //!
 //! All systems are driven through one store interface: the
 //! [`engine::KvEngine`] trait (put/get/delete/write_batch/scan/flush/
-//! finish), constructed by [`engine::EngineBuilder`].
+//! finish), constructed by [`engine::EngineBuilder`], and loaded by the
+//! event-driven multi-client scheduler ([`workload::client`] over
+//! [`sim::sched`]): N concurrent clients, open- or closed-loop, driven
+//! in global virtual-time order.
 //!
 //! See DESIGN.md for the module inventory and the per-experiment index.
 

@@ -3,12 +3,23 @@
 //! Subcommands:
 //!   run <workload>      run a single workload (A|B|C|D) on one system
 //!   experiment <id|all> regenerate a paper figure/table (see DESIGN.md)
+//!   bench               fixed open-loop comparison -> BENCH_PR2.json
 //!   inspect             print artifact + device model info
 //!
 //! Examples:
 //!   kvaccel run A --system kvaccel --threads 4 --scale 0.1
+//!   kvaccel run A --clients 8 --loop-mode open --rate 50000 --dist zipfian
+//!   kvaccel run B --system rocksdb --clients 2 --loop-mode poisson --rate 20000
 //!   kvaccel experiment fig12 --scale 0.25 --engine xla
-//!   kvaccel experiment all --scale 0.1 --engine rust
+//!   kvaccel bench --out BENCH_PR2.json --scale 0.02
+//!
+//! Workload scheduler flags (run):
+//!   --clients N          concurrent clients (default 1)
+//!   --loop-mode M        closed | open | poisson (default closed)
+//!   --rate R             aggregate offered ops/s for open/poisson
+//!   --think-ms T         closed-loop think time per op (default 0)
+//!   --dist D             uniform | zipfian | latest (default uniform)
+//!   --theta F            zipfian skew in (0,1) (default 0.99)
 
 use anyhow::{anyhow, Result};
 
@@ -19,9 +30,10 @@ use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EX
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::LsmOptions;
 use kvaccel::runtime::{default_artifacts_dir, XlaRuntime};
+use kvaccel::sim::MILLIS;
 use kvaccel::ssd::SsdConfig;
 use kvaccel::util::{fmt, Args};
-use kvaccel::workload::{self, BenchConfig};
+use kvaccel::workload::{self, BenchConfig, KeyDist, LoopMode, RunResult};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -35,6 +47,7 @@ fn real_main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("experiment") | Some("exp") => cmd_experiment(&args),
+        Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(),
         _ => {
             println!("kvaccel — host-SSD collaborative write accelerator (paper reproduction)");
@@ -42,8 +55,11 @@ fn real_main() -> Result<()> {
             println!("usage:");
             println!("  kvaccel run <A|B|C|D> [--system rocksdb|rocksdb-nosd|adoc|kvaccel|kvaccel-lazy|kvaccel-eager]");
             println!("              [--threads N] [--scale F] [--seed N] [--engine rust|xla]");
+            println!("              [--clients N] [--loop-mode closed|open|poisson] [--rate OPS_S]");
+            println!("              [--think-ms T] [--dist uniform|zipfian|latest] [--theta F]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
+            println!("  kvaccel bench [--out BENCH_PR2.json] [--scale F] [--rate OPS_S] [--clients N]");
             println!("  kvaccel inspect");
             Ok(())
         }
@@ -69,6 +85,35 @@ fn parse_engine(args: &Args) -> EngineMode {
     }
 }
 
+fn parse_loop_mode(args: &Args) -> Result<LoopMode> {
+    let rate = args.get_f64("rate", 10_000.0);
+    Ok(match args.get_or("loop-mode", "closed") {
+        "closed" => LoopMode::Closed {
+            think: (args.get_f64("think-ms", 0.0) * MILLIS as f64) as u64,
+        },
+        "open" | "open-fixed" | "fixed" => LoopMode::OpenFixed { ops_per_sec: rate },
+        "poisson" | "open-poisson" => LoopMode::OpenPoisson { ops_per_sec: rate },
+        other => return Err(anyhow!("unknown loop mode {other:?} (closed|open|poisson)")),
+    })
+}
+
+fn parse_dist(args: &Args) -> Result<KeyDist> {
+    Ok(match args.get_or("dist", "uniform") {
+        "uniform" => KeyDist::Uniform,
+        "zipfian" | "zipf" => {
+            let theta = args.get_f64("theta", 0.99);
+            if !(theta > 0.0 && theta < 1.0) {
+                return Err(anyhow!(
+                    "--theta must be in (0,1) exclusive (YCSB zipfian), got {theta}"
+                ));
+            }
+            KeyDist::Zipfian { theta }
+        }
+        "latest" => KeyDist::Latest,
+        other => return Err(anyhow!("unknown key dist {other:?} (uniform|zipfian|latest)")),
+    })
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let workload_id = args
         .positional
@@ -79,6 +124,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 4);
     let scale = args.get_f64("scale", 0.1);
     let seed = args.get_u64("seed", 42);
+    let clients = args.get_usize("clients", 1);
+    let mode = parse_loop_mode(args)?;
+    let dist = parse_dist(args)?;
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
 
     let opts = LsmOptions::default().with_threads(threads);
@@ -90,24 +138,81 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut env = SimEnv::new(seed, SsdConfig::default());
     let cfg: BenchConfig = ctx.bench_config();
 
-    let r = match workload_id.as_str() {
-        "A" => workload::fillrandom(&mut *sys, &mut env, &cfg),
-        "B" => workload::readwhilewriting(&mut *sys, &mut env, &cfg, 9, 1),
-        "C" => workload::readwhilewriting(&mut *sys, &mut env, &cfg, 8, 2),
+    let (r, clients_line) = match workload_id.as_str() {
+        "A" | "B" | "C" => {
+            let spec = workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?;
+            // report the actors that actually ran (B/C add a read
+            // client; open-loop rates are split per preset_spec)
+            let line = format!(
+                "clients       {} [{}] dist {dist:?}",
+                spec.clients.len(),
+                describe_clients(&spec)
+            );
+            (workload::run_spec(&mut *sys, &mut env, &spec), line)
+        }
         "D" => {
+            // seekrandom is a single sequential scanner; scheduler knobs
+            // apply to A/B/C
             let preload_bytes = ((20u64 << 30) as f64 * scale) as u64;
             let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
-            workload::seekrandom(&mut *sys, &mut env, &cfg, (60_000f64 * scale) as usize, 1024, t0)
+            let r = workload::seekrandom(
+                &mut *sys, &mut env, &cfg, (60_000f64 * scale) as usize, 1024, t0,
+            );
+            let line = "clients       1 (sequential seekrandom; \
+                --clients/--loop-mode/--rate/--dist apply to A|B|C)"
+                .to_string();
+            (r, line)
         }
         other => return Err(anyhow!("unknown workload {other:?}")),
     };
 
     println!("system        {}", kind.label());
     println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
+    println!("{clients_line}");
+    print_result(&r);
+    Ok(())
+}
+
+/// One compact descriptor per actor in the spec, e.g.
+/// `writer:open@9000/s, writer:open@9000/s, reader:open@2000/s`.
+fn describe_clients(spec: &kvaccel::workload::WorkloadSpec) -> String {
+    spec.clients
+        .iter()
+        .map(|c| {
+            let role = if c.mix.get > 0 && c.mix.put == 0 { "reader" } else { "writer" };
+            let paced = if c.pace.is_some() { "(paced)" } else { "" };
+            match c.mode {
+                LoopMode::Closed { think: 0 } => format!("{role}{paced}:closed"),
+                LoopMode::Closed { think } => {
+                    format!("{role}{paced}:closed+think{}ms", think / MILLIS)
+                }
+                LoopMode::OpenFixed { ops_per_sec } => {
+                    format!("{role}:open@{ops_per_sec:.0}/s")
+                }
+                LoopMode::OpenPoisson { ops_per_sec } => {
+                    format!("{role}:poisson@{ops_per_sec:.0}/s")
+                }
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn print_result(r: &RunResult) {
     println!("writes        {} ({:.1} Kops/s)", r.writes.total, r.write_kops());
     println!("reads         {} ({:.1} Kops/s)", r.reads.total, r.read_kops());
     println!("write p50/p99 {} / {}", fmt::nanos(r.write_lat.p50_us * 1e3), fmt::nanos(r.write_lat.p99_us * 1e3));
     println!("read  p50/p99 {} / {}", fmt::nanos(r.read_lat.p50_us * 1e3), fmt::nanos(r.read_lat.p99_us * 1e3));
+    if r.read_hits + r.read_misses > 0 {
+        println!("read hit-rate {:.1}%", r.read_hit_rate() * 100.0);
+    }
+    if r.queue_delay.count > 0 {
+        println!(
+            "queue delay   p50 {} / p99 {} (open-loop wait before service)",
+            fmt::nanos(r.queue_delay.p50_us * 1e3),
+            fmt::nanos(r.queue_delay.p99_us * 1e3)
+        );
+    }
     println!("throughput    {:.1} MB/s user writes", r.write_mbps);
     println!("cpu           {:.1}% of 8 cores", r.cpu_percent);
     println!("efficiency    {:.2} MB/s per CPU%", r.efficiency);
@@ -116,7 +221,6 @@ fn cmd_run(args: &Args) -> Result<()> {
     if r.redirected_writes > 0 || r.rollbacks > 0 {
         println!("kvaccel       {} redirected writes, {} rollbacks", r.redirected_writes, r.rollbacks);
     }
-    Ok(())
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -132,6 +236,74 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         ctx.engine
     );
     run_experiment(&ctx, id)?;
+    Ok(())
+}
+
+/// Fixed open-loop comparison across the headline systems, emitted as
+/// machine-readable JSON (the perf-trajectory artifact built in CI).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "BENCH_PR2.json").to_string();
+    let scale = args.get_f64("scale", 0.02);
+    let seed = args.get_u64("seed", 42);
+    let clients = args.get_usize("clients", 4);
+    let rate = args.get_f64("rate", 30_000.0);
+    let threads = args.get_usize("threads", 4);
+    let cfg = BenchConfig { seed, ..Default::default() }.scaled(scale);
+    let mode = LoopMode::OpenFixed { ops_per_sec: rate };
+
+    let mut rows = Vec::new();
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::default().with_threads(threads))
+            .build();
+        let mut env = SimEnv::new(seed, SsdConfig::default());
+        let spec = workload::preset_spec("A", &cfg, clients, mode, KeyDist::Uniform)?;
+        let r = workload::run_spec(&mut *sys, &mut env, &spec);
+        println!("== {} ==", kind.label());
+        print_result(&r);
+        rows.push(format!(
+            concat!(
+                "    \"{}\": {{\"write_mbps\": {:.3}, \"write_ops\": {}, ",
+                "\"p50_us\": {:.2}, \"p99_us\": {:.2}, \"p999_us\": {:.2}, ",
+                "\"queue_delay_p99_us\": {:.2}, \"stall_stopped_s\": {:.3}, ",
+                "\"slowdown_events\": {}, \"stop_events\": {}, ",
+                "\"efficiency_mbps_per_cpu\": {:.4}, \"redirected_writes\": {}}}"
+            ),
+            kind.label(),
+            r.write_mbps,
+            r.writes.total,
+            r.write_lat.p50_us,
+            r.write_lat.p99_us,
+            r.write_lat.p999_us,
+            r.queue_delay.p99_us,
+            r.stopped_s,
+            r.slowdown_events,
+            r.stop_events,
+            r.efficiency,
+            r.redirected_writes,
+        ));
+    }
+    let json = format!(
+        concat!(
+            "{{\n  \"schema\": \"kvaccel-bench-v1\",\n",
+            "  \"config\": {{\"workload\": \"A/fillrandom\", \"loop_mode\": \"open-fixed\", ",
+            "\"rate_ops_s\": {:.1}, \"clients\": {}, \"threads\": {}, ",
+            "\"scale\": {}, \"seed\": {}}},\n",
+            "  \"systems\": {{\n{}\n  }}\n}}\n"
+        ),
+        rate,
+        clients,
+        threads,
+        scale,
+        seed,
+        rows.join(",\n"),
+    );
+    std::fs::write(&out, &json)?;
+    println!("\nwrote {out}");
     Ok(())
 }
 

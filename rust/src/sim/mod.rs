@@ -9,8 +9,10 @@ pub mod clock;
 pub mod cpu;
 pub mod jobs;
 pub mod rng;
+pub mod sched;
 
 pub use clock::{Clock, Nanos, MICROS, MILLIS, NS_PER_SEC, SECONDS};
 pub use cpu::{CpuAccounting, CpuClass};
 pub use jobs::ThreadPool;
 pub use rng::SimRng;
+pub use sched::{ActorId, Event, EventKind, EventQueue};

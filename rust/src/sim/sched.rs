@@ -1,0 +1,159 @@
+//! Discrete-event scheduler: a binary-heap event queue on the virtual
+//! `Nanos` axis with deterministic tie-breaking.
+//!
+//! The workload layer (`workload::client`) runs N concurrent clients
+//! against one `KvEngine` by popping events in global time order. Ties
+//! are broken by actor id, then by insertion order, so a run is a pure
+//! function of (spec, seed) — the determinism the conformance tests
+//! assert. Engine side-effects still apply "when the clock catches up"
+//! (see DESIGN.md §2); the queue only fixes the *issue order* of
+//! operations across clients.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::Nanos;
+
+/// Identifies one client/actor inside a workload run.
+pub type ActorId = u32;
+
+/// What a popped event means to the workload scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Closed-loop: the actor is ready to issue its next operation.
+    Issue,
+    /// Open-loop: a request arrives and joins the actor's FIFO.
+    Arrival,
+    /// Open-loop: the actor should consider serving its FIFO head.
+    Dispatch,
+}
+
+/// A scheduled wake-up for one actor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub at: Nanos,
+    pub actor: ActorId,
+    pub kind: EventKind,
+    /// Global insertion counter: the final tie-break, so two events at
+    /// the same (at, actor) pop in push order.
+    seq: u64,
+}
+
+// BinaryHeap is a max-heap; order events so the *earliest* pops first,
+// ties broken by actor id then insertion order.
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.actor.cmp(&self.actor))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue. Pop order is a total, deterministic function of the
+/// push sequence.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: Nanos, actor: ActorId, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Event { at, actor, kind, seq: self.seq });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<Nanos> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(300, 0, EventKind::Issue);
+        q.push(100, 1, EventKind::Issue);
+        q.push(200, 2, EventKind::Arrival);
+        let order: Vec<Nanos> = std::iter::from_fn(|| q.pop()).map(|e| e.at).collect();
+        assert_eq!(order, vec![100, 200, 300]);
+    }
+
+    #[test]
+    fn ties_break_by_actor_then_insertion() {
+        let mut q = EventQueue::new();
+        q.push(50, 2, EventKind::Issue);
+        q.push(50, 0, EventKind::Dispatch);
+        q.push(50, 1, EventKind::Arrival);
+        q.push(50, 1, EventKind::Issue); // same actor+time: push order
+        let order: Vec<(ActorId, EventKind)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.actor, e.kind)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0, EventKind::Dispatch),
+                (1, EventKind::Arrival),
+                (1, EventKind::Issue),
+                (2, EventKind::Issue),
+            ]
+        );
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_deterministic() {
+        let run = || {
+            let mut q = EventQueue::new();
+            let mut got = Vec::new();
+            q.push(10, 0, EventKind::Issue);
+            q.push(5, 1, EventKind::Issue);
+            while let Some(e) = q.pop() {
+                got.push((e.at, e.actor));
+                if e.at < 30 {
+                    q.push(e.at + 7, e.actor, EventKind::Issue);
+                    q.push(e.at + 7, 1 - e.actor, EventKind::Arrival);
+                }
+            }
+            got
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn peek_and_len() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(9, 0, EventKind::Issue);
+        q.push(4, 0, EventKind::Issue);
+        assert_eq!(q.peek_time(), Some(4));
+        assert_eq!(q.len(), 2);
+    }
+}

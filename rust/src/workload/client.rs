@@ -1,0 +1,825 @@
+//! Event-driven multi-client workload model.
+//!
+//! A [`WorkloadSpec`] describes N concurrent clients, each a state
+//! machine with its own `KeyGen`/RNG stream and a weighted op mix
+//! (put/get/delete/scan/batch). A discrete-event scheduler
+//! (`sim::sched::EventQueue`) drives them in global virtual-time order
+//! against one shared `&mut dyn KvEngine`:
+//!
+//! - **Closed loop**: a client reissues when its previous op completes
+//!   (plus optional think time). Latency is pure service time; the
+//!   offered load adapts to what the engine sustains — write-stall
+//!   *queueing* is invisible by construction.
+//! - **Open loop**: requests arrive at a fixed or Poisson rate into a
+//!   per-client FIFO regardless of completions. Latency = queueing
+//!   delay + service time, recorded separately, so a rate above the
+//!   engine's sustainable throughput shows up as unbounded queue growth
+//!   (the write-stall pathology the paper's Table IV workloads probe).
+//!
+//! The old db_bench drivers (`workload::db_bench`) are thin mix presets
+//! over this scheduler.
+
+use crate::engine::{EngineStats, KvEngine, WriteBatch};
+use crate::env::SimEnv;
+use crate::lsm::entry::Key;
+use crate::sim::sched::{ActorId, EventKind, EventQueue};
+use crate::sim::{Nanos, SimRng, NS_PER_SEC};
+
+use super::db_bench::BenchConfig;
+use super::keygen::{KeyDist, KeyGen};
+use super::stats::{Histogram, HistogramSummary, OpSeries, RunResult};
+
+// ---------------------------------------------------------------------
+// Client configuration
+// ---------------------------------------------------------------------
+
+/// One operation kind a client can issue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Put,
+    Get,
+    Delete,
+    Scan,
+    Batch,
+}
+
+/// Weighted operation mix; weights are relative (9:1, not percentages).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpMix {
+    pub put: u32,
+    pub get: u32,
+    pub delete: u32,
+    pub scan: u32,
+    pub batch: u32,
+}
+
+impl OpMix {
+    pub fn write_only() -> Self {
+        Self { put: 1, get: 0, delete: 0, scan: 0, batch: 0 }
+    }
+
+    pub fn read_only() -> Self {
+        Self { put: 0, get: 1, delete: 0, scan: 0, batch: 0 }
+    }
+
+    pub fn scan_only() -> Self {
+        Self { put: 0, get: 0, delete: 0, scan: 1, batch: 0 }
+    }
+
+    pub fn batch_only() -> Self {
+        Self { put: 0, get: 0, delete: 0, scan: 0, batch: 1 }
+    }
+
+    /// Mixed put/get at the given write:read weights.
+    pub fn put_get(put: u32, get: u32) -> Self {
+        Self { put, get, delete: 0, scan: 0, batch: 0 }
+    }
+
+    fn total(&self) -> u32 {
+        self.put + self.get + self.delete + self.scan + self.batch
+    }
+
+    fn pick(&self, rng: &mut SimRng) -> OpKind {
+        let total = self.total().max(1);
+        // single-kind mixes skip the draw (keeps presets cheap)
+        if self.put == total {
+            return OpKind::Put;
+        }
+        if self.get == total {
+            return OpKind::Get;
+        }
+        if self.delete == total {
+            return OpKind::Delete;
+        }
+        if self.scan == total {
+            return OpKind::Scan;
+        }
+        if self.batch == total {
+            return OpKind::Batch;
+        }
+        let mut x = rng.gen_range_u32(total);
+        for (w, k) in [
+            (self.put, OpKind::Put),
+            (self.get, OpKind::Get),
+            (self.delete, OpKind::Delete),
+            (self.scan, OpKind::Scan),
+            (self.batch, OpKind::Batch),
+        ] {
+            if x < w {
+                return k;
+            }
+            x -= w;
+        }
+        OpKind::Put
+    }
+}
+
+/// How a client generates load.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoopMode {
+    /// Reissue when the previous op completes, after `think` ns.
+    Closed { think: Nanos },
+    /// Deterministic fixed-rate arrivals into the client's FIFO.
+    OpenFixed { ops_per_sec: f64 },
+    /// Poisson arrivals at the given mean rate.
+    OpenPoisson { ops_per_sec: f64 },
+}
+
+/// Ratio coupling for closed-loop clients (db_bench readwhilewriting):
+/// this client only issues while `own_ops * den < other_ops * num`,
+/// i.e. it tracks `num/den` of the paced-against client's op count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pace {
+    pub against: ActorId,
+    pub num: u64,
+    pub den: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    pub mix: OpMix,
+    pub mode: LoopMode,
+    pub dist: KeyDist,
+    /// Next count per Scan op.
+    pub scan_len: usize,
+    /// Puts per Batch op.
+    pub batch_size: usize,
+    /// Stop after this many issued ops (None = run to the horizon).
+    /// Open-loop clients also stop arrivals and drop any queued backlog
+    /// once the cap is reached.
+    pub max_ops: Option<u64>,
+    /// Ratio coupling (closed-loop only; open-loop rates are absolute).
+    pub pace: Option<Pace>,
+    /// XOR'd into the spec seed for this client's generator stream.
+    pub seed_tag: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            mix: OpMix::write_only(),
+            mode: LoopMode::Closed { think: 0 },
+            dist: KeyDist::Uniform,
+            scan_len: 16,
+            batch_size: 16,
+            max_ops: None,
+            pace: None,
+            seed_tag: 0,
+        }
+    }
+}
+
+impl ClientConfig {
+    pub fn writer() -> Self {
+        Self::default()
+    }
+
+    pub fn reader() -> Self {
+        Self { mix: OpMix::read_only(), ..Self::default() }
+    }
+
+    pub fn with_mode(mut self, mode: LoopMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_dist(mut self, dist: KeyDist) -> Self {
+        self.dist = dist;
+        self
+    }
+
+    pub fn with_seed_tag(mut self, tag: u64) -> Self {
+        self.seed_tag = tag;
+        self
+    }
+
+    /// Couple this client to `num/den` of another client's op count.
+    pub fn with_pace_against(mut self, against: ActorId, num: u64, den: u64) -> Self {
+        self.pace = Some(Pace { against, num, den });
+        self
+    }
+}
+
+/// A full multi-client workload description.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub clients: Vec<ClientConfig>,
+    /// Arrival/issue horizon: no client starts new work at or after
+    /// `start_at + duration` (open-loop queues still drain).
+    pub duration: Nanos,
+    pub start_at: Nanos,
+    pub key_space: Key,
+    pub value_size: u32,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn from_bench(name: impl Into<String>, cfg: &BenchConfig) -> Self {
+        Self {
+            name: name.into(),
+            clients: Vec::new(),
+            duration: cfg.duration,
+            start_at: 0,
+            key_space: cfg.key_space,
+            value_size: cfg.value_size,
+            seed: cfg.seed,
+        }
+    }
+
+    pub fn with_clients(mut self, clients: Vec<ClientConfig>) -> Self {
+        self.clients = clients;
+        self
+    }
+}
+
+/// One issued operation, for determinism checks and debugging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpTrace {
+    pub client: ActorId,
+    pub kind: OpKind,
+    pub key: Key,
+    pub issue: Nanos,
+    pub done: Nanos,
+}
+
+// ---------------------------------------------------------------------
+// Runtime state
+// ---------------------------------------------------------------------
+
+struct Client {
+    cfg: ClientConfig,
+    gen: KeyGen,
+    rng: SimRng,
+    /// Ops issued so far (pace / max_ops accounting; a batch counts 1).
+    issued: u64,
+    /// Per-client op counter feeding `KeyGen::value_for`.
+    op_seq: u64,
+    /// When the client's previous op completes.
+    free_at: Nanos,
+    /// Open-loop: a Dispatch event is outstanding.
+    busy: bool,
+    /// Open-loop FIFO of arrival times awaiting service.
+    fifo: std::collections::VecDeque<Nanos>,
+    /// Closed-loop paced client waiting for its ratio budget.
+    parked: bool,
+}
+
+impl Client {
+    fn interarrival(&mut self) -> Nanos {
+        let ns = match self.cfg.mode {
+            LoopMode::OpenFixed { ops_per_sec } => {
+                NS_PER_SEC as f64 / ops_per_sec.max(1e-9)
+            }
+            LoopMode::OpenPoisson { ops_per_sec } => {
+                let mean = NS_PER_SEC as f64 / ops_per_sec.max(1e-9);
+                -(1.0 - self.rng.next_f64()).ln() * mean
+            }
+            LoopMode::Closed { .. } => 0.0,
+        };
+        (ns as Nanos).max(1)
+    }
+}
+
+struct RunStats {
+    writes: OpSeries,
+    wlat: Histogram,
+    reads: OpSeries,
+    rlat: Histogram,
+    read_hits: u64,
+    read_misses: u64,
+    qdelay: Histogram,
+    qdelay_sum: Vec<f64>,
+    qdelay_cnt: Vec<u64>,
+    /// Per-second series bins are capped here (pre-refactor behavior:
+    /// completions land in the last in-horizon second).
+    series_cap: Nanos,
+}
+
+impl RunStats {
+    fn new(end_time: Nanos) -> Self {
+        Self {
+            writes: OpSeries::default(),
+            wlat: Histogram::new(),
+            reads: OpSeries::default(),
+            rlat: Histogram::new(),
+            read_hits: 0,
+            read_misses: 0,
+            qdelay: Histogram::new(),
+            qdelay_sum: Vec::new(),
+            qdelay_cnt: Vec::new(),
+            series_cap: end_time.saturating_sub(1),
+        }
+    }
+
+    /// Closed-loop completions clip to the last in-horizon second (the
+    /// pre-refactor behavior: only the final op ever overshoots).
+    /// Open-loop drain completions keep their true second, so the
+    /// per-second series shows the real service shape, not a spike.
+    fn series_at(&self, done: Nanos, cap: bool) -> Nanos {
+        if cap {
+            done.min(self.series_cap)
+        } else {
+            done
+        }
+    }
+
+    fn write_op(&mut self, from: Nanos, done: Nanos, cap: bool) {
+        self.wlat.record(done.saturating_sub(from));
+        self.writes.record(self.series_at(done, cap));
+    }
+
+    fn batch_op(&mut self, from: Nanos, done: Nanos, ops: usize, cap: bool) {
+        let per_op = done.saturating_sub(from) / ops.max(1) as u64;
+        let at = self.series_at(done, cap);
+        for _ in 0..ops {
+            self.wlat.record(per_op.max(1));
+            self.writes.record(at);
+        }
+    }
+
+    fn read_op(&mut self, from: Nanos, done: Nanos, hit: Option<bool>, ops: usize, cap: bool) {
+        self.rlat.record(done.saturating_sub(from));
+        let at = self.series_at(done, cap);
+        for _ in 0..ops {
+            self.reads.record(at);
+        }
+        match hit {
+            Some(true) => self.read_hits += 1,
+            Some(false) => self.read_misses += 1,
+            None => {}
+        }
+    }
+
+    fn queue_wait(&mut self, arrived: Nanos, start: Nanos) {
+        self.qdelay.record(start.saturating_sub(arrived));
+        let sec = (arrived / NS_PER_SEC) as usize;
+        if self.qdelay_sum.len() <= sec {
+            self.qdelay_sum.resize(sec + 1, 0.0);
+            self.qdelay_cnt.resize(sec + 1, 0);
+        }
+        self.qdelay_sum[sec] += start.saturating_sub(arrived) as f64;
+        self.qdelay_cnt[sec] += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// The scheduler
+// ---------------------------------------------------------------------
+
+/// Run a workload spec against an engine; see [`run_spec_traced`].
+pub fn run_spec(sys: &mut dyn KvEngine, env: &mut SimEnv, spec: &WorkloadSpec) -> RunResult {
+    run_spec_traced(sys, env, spec, false).0
+}
+
+/// Run a workload spec, optionally recording the full op trace (used by
+/// the determinism conformance tests).
+pub fn run_spec_traced(
+    sys: &mut dyn KvEngine,
+    env: &mut SimEnv,
+    spec: &WorkloadSpec,
+    record_trace: bool,
+) -> (RunResult, Vec<OpTrace>) {
+    assert!(!spec.clients.is_empty(), "workload spec has no clients");
+    let end_time = spec.start_at.saturating_add(spec.duration);
+    let mut q = EventQueue::new();
+    let mut clients: Vec<Client> = spec
+        .clients
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| {
+            // client 0 with no tag gets exactly the spec seed, so the
+            // single-writer presets reproduce the pre-scheduler key
+            // streams bit-for-bit
+            let seed = spec.seed
+                ^ cfg.seed_tag
+                ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+            Client {
+                gen: KeyGen::with_dist(seed, spec.key_space, spec.value_size, cfg.dist),
+                rng: SimRng::new(seed ^ 0x6D17_ACED),
+                cfg: cfg.clone(),
+                issued: 0,
+                op_seq: 0,
+                free_at: spec.start_at,
+                busy: false,
+                fifo: std::collections::VecDeque::new(),
+                parked: false,
+            }
+        })
+        .collect();
+    for (i, c) in clients.iter().enumerate() {
+        match c.cfg.mode {
+            LoopMode::Closed { .. } => q.push(spec.start_at, i as ActorId, EventKind::Issue),
+            _ => q.push(spec.start_at, i as ActorId, EventKind::Arrival),
+        }
+    }
+
+    let mut stats = RunStats::new(end_time);
+    let mut trace = Vec::new();
+    let mut end = spec.start_at;
+
+    while let Some(ev) = q.pop() {
+        let a = ev.actor as usize;
+        match ev.kind {
+            EventKind::Issue => {
+                if ev.at >= end_time
+                    || clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m)
+                {
+                    continue; // client retires
+                }
+                if let Some(p) = clients[a].cfg.pace {
+                    let other = clients[p.against as usize].issued;
+                    if clients[a].issued * p.den >= other * p.num {
+                        clients[a].parked = true; // ahead of ratio: wait
+                        continue;
+                    }
+                }
+                sync_latest_frontier(&mut clients, a);
+                let done = issue_one(
+                    sys, env, &mut clients[a], ev.actor, ev.at, ev.at, true,
+                    &mut stats, &mut trace, record_trace,
+                );
+                clients[a].issued += 1;
+                clients[a].free_at = done;
+                end = end.max(done);
+                let think = match clients[a].cfg.mode {
+                    LoopMode::Closed { think } => think,
+                    _ => 0,
+                };
+                q.push(done.saturating_add(think), ev.actor, EventKind::Issue);
+                wake_paced(&mut clients, &mut q, ev.actor);
+            }
+            EventKind::Arrival => {
+                if ev.at >= end_time
+                    || clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m)
+                {
+                    continue; // arrivals stop at the horizon
+                }
+                let ia = clients[a].interarrival();
+                q.push(ev.at.saturating_add(ia), ev.actor, EventKind::Arrival);
+                clients[a].fifo.push_back(ev.at);
+                if !clients[a].busy {
+                    clients[a].busy = true;
+                    q.push(ev.at, ev.actor, EventKind::Dispatch);
+                }
+            }
+            EventKind::Dispatch => {
+                if clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m) {
+                    // op cap reached: abandon the queued backlog too
+                    clients[a].fifo.clear();
+                    clients[a].busy = false;
+                    continue;
+                }
+                let Some(arrived) = clients[a].fifo.pop_front() else {
+                    clients[a].busy = false;
+                    continue;
+                };
+                // the op was queued at `arrived`; service starts once
+                // the client's previous op is done
+                let start = ev.at.max(clients[a].free_at);
+                stats.queue_wait(arrived, start);
+                sync_latest_frontier(&mut clients, a);
+                let done = issue_one(
+                    sys, env, &mut clients[a], ev.actor, start, arrived, false,
+                    &mut stats, &mut trace, record_trace,
+                );
+                clients[a].issued += 1;
+                clients[a].free_at = done;
+                end = end.max(done);
+                if clients[a].fifo.is_empty() {
+                    clients[a].busy = false;
+                } else {
+                    q.push(done, ev.actor, EventKind::Dispatch);
+                }
+                wake_paced(&mut clients, &mut q, ev.actor);
+            }
+        }
+    }
+
+    (assemble(sys, env, spec, stats, end), trace)
+}
+
+/// Latest-biased clients share one insert frontier (YCSB keeps a global
+/// counter): before a Latest client issues, it adopts the newest write
+/// high-water mark across all clients, so a read-only client follows
+/// the writers' appends instead of reading key 0 forever.
+fn sync_latest_frontier(clients: &mut [Client], a: usize) {
+    if clients[a].cfg.dist != KeyDist::Latest {
+        return;
+    }
+    let hw = clients.iter().map(|c| c.gen.inserted()).max().unwrap_or(0);
+    clients[a].gen.observe_inserted(hw);
+}
+
+/// Re-arm closed-loop clients parked on a pace ratio against `changed`.
+#[allow(clippy::needless_range_loop)] // indexes two clients at once
+fn wake_paced(clients: &mut [Client], q: &mut EventQueue, changed: ActorId) {
+    for j in 0..clients.len() {
+        if !clients[j].parked {
+            continue;
+        }
+        let Some(p) = clients[j].cfg.pace else { continue };
+        if p.against != changed {
+            continue;
+        }
+        let other = clients[p.against as usize].issued;
+        if clients[j].issued * p.den < other * p.num {
+            clients[j].parked = false;
+            // resume on the client's own timeline (it was idle, not
+            // busy), preserving its configured think spacing
+            let think = match clients[j].cfg.mode {
+                LoopMode::Closed { think } => think,
+                _ => 0,
+            };
+            let at = clients[j].free_at.saturating_add(think);
+            q.push(at, j as ActorId, EventKind::Issue);
+        }
+    }
+}
+
+/// Issue one operation for a client at `at`; latency is measured from
+/// `lat_from` (arrival time in open loop, issue time in closed loop);
+/// `cap_series` clips the per-second bin to the horizon (closed loop).
+#[allow(clippy::too_many_arguments)]
+fn issue_one(
+    sys: &mut dyn KvEngine,
+    env: &mut SimEnv,
+    c: &mut Client,
+    id: ActorId,
+    at: Nanos,
+    lat_from: Nanos,
+    cap_series: bool,
+    stats: &mut RunStats,
+    trace: &mut Vec<OpTrace>,
+    record: bool,
+) -> Nanos {
+    let kind = c.cfg.mix.pick(&mut c.rng);
+    let (key, done) = match kind {
+        OpKind::Put => {
+            let key = c.gen.write_key();
+            let val = c.gen.value_for(key, c.op_seq);
+            c.op_seq += 1;
+            let r = sys.put(env, at, key, val);
+            stats.write_op(lat_from, r.done, cap_series);
+            (key, r.done)
+        }
+        OpKind::Delete => {
+            let key = c.gen.write_key();
+            c.op_seq += 1;
+            let r = sys.delete(env, at, key);
+            stats.write_op(lat_from, r.done, cap_series);
+            (key, r.done)
+        }
+        OpKind::Get => {
+            let key = c.gen.random_key();
+            let (got, done) = sys.get(env, at, key);
+            stats.read_op(lat_from, done, Some(got.is_some()), 1, cap_series);
+            (key, done)
+        }
+        OpKind::Scan => {
+            let start = c.gen.random_key();
+            let (got, done) = sys.scan(env, at, start, c.cfg.scan_len);
+            // counted the db_bench way: the Seek plus every Next
+            stats.read_op(lat_from, done, None, got.len() + 1, cap_series);
+            (start, done)
+        }
+        OpKind::Batch => {
+            let n = c.cfg.batch_size.max(1);
+            let mut batch = WriteBatch::with_capacity(n);
+            let mut first: Option<Key> = None;
+            for _ in 0..n {
+                let key = c.gen.write_key();
+                let val = c.gen.value_for(key, c.op_seq);
+                c.op_seq += 1;
+                if first.is_none() {
+                    first = Some(key);
+                }
+                batch.put(key, val);
+            }
+            let r = sys.write_batch(env, at, &batch);
+            stats.batch_op(lat_from, r.done, n, cap_series);
+            (first.unwrap_or(0), r.done)
+        }
+    };
+    if record {
+        trace.push(OpTrace { client: id, kind, key, issue: at, done });
+    }
+    done
+}
+
+fn assemble(
+    sys: &dyn KvEngine,
+    env: &SimEnv,
+    spec: &WorkloadSpec,
+    stats: RunStats,
+    end: Nanos,
+) -> RunResult {
+    let end = end.max(spec.start_at + 1);
+    let duration_s = (end - spec.start_at) as f64 / NS_PER_SEC as f64;
+    let db = sys.main_db();
+    let stall = sys.stall_stats();
+    let cpu_percent = env.cpu.host_cpu_percent(end, 8);
+    let bytes_per_op = (16 + spec.value_size as u64) as f64;
+    let write_mbps =
+        stats.writes.total as f64 * bytes_per_op / duration_s / (1024.0 * 1024.0);
+    let read_mbps =
+        stats.reads.total as f64 * bytes_per_op / duration_s / (1024.0 * 1024.0);
+    let efficiency = if cpu_percent > 0.0 {
+        (write_mbps + read_mbps) / cpu_percent
+    } else {
+        0.0
+    };
+    let total_secs = (end as f64 / NS_PER_SEC as f64).ceil() as usize;
+    let stall_seconds: Vec<usize> = (0..total_secs)
+        .filter(|&s| stall.second_in_stall(s))
+        .collect();
+    let (redirected, rollbacks) = sys
+        .kvaccel()
+        .map(|k| (k.controller.stats.writes_to_dev, k.rollback.stats.rollbacks))
+        .unwrap_or((0, 0));
+    let queue_delay_series_us: Vec<f64> = stats
+        .qdelay_sum
+        .iter()
+        .zip(&stats.qdelay_cnt)
+        .map(|(&s, &n)| if n == 0 { 0.0 } else { s / n as f64 / 1e3 })
+        .collect();
+    RunResult {
+        system: String::new(), // caller labels
+        workload: spec.name.clone(),
+        threads: db.compaction_threads(),
+        duration_s,
+        write_lat: HistogramSummary::from(&stats.wlat),
+        read_lat: HistogramSummary::from(&stats.rlat),
+        writes: stats.writes,
+        reads: stats.reads,
+        write_mbps,
+        read_mbps,
+        cpu_percent,
+        efficiency,
+        stop_events: stall.stop_events,
+        slowdown_events: stall.slowdown_events,
+        stopped_s: stall.stopped_ns_total as f64 / NS_PER_SEC as f64,
+        write_amplification: db.stats.write_amplification(),
+        pcie_mbps: env.device.pcie.stats.combined_mbps(),
+        stall_seconds,
+        redirected_writes: redirected,
+        rollbacks,
+        read_hits: stats.read_hits,
+        read_misses: stats.read_misses,
+        queue_delay: HistogramSummary::from(&stats.qdelay),
+        queue_delay_series_us,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemKind;
+    use crate::engine::EngineBuilder;
+    use crate::lsm::LsmOptions;
+    use crate::ssd::SsdConfig;
+
+    fn spec(clients: Vec<ClientConfig>, secs: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "test".into(),
+            clients,
+            duration: secs * NS_PER_SEC,
+            start_at: 0,
+            key_space: 50_000,
+            value_size: 4096,
+            seed: 42,
+        }
+    }
+
+    fn build() -> (Box<dyn KvEngine>, SimEnv) {
+        (
+            EngineBuilder::new(SystemKind::RocksDb { slowdown: true })
+                .opts(LsmOptions::small_for_test())
+                .build(),
+            SimEnv::new(3, SsdConfig::default()),
+        )
+    }
+
+    #[test]
+    fn mix_pick_honors_weights() {
+        let mix = OpMix::put_get(9, 1);
+        let mut rng = SimRng::new(1);
+        let mut gets = 0;
+        for _ in 0..10_000 {
+            if mix.pick(&mut rng) == OpKind::Get {
+                gets += 1;
+            }
+        }
+        assert!((700..1300).contains(&gets), "gets {gets}");
+    }
+
+    #[test]
+    fn closed_loop_single_writer_runs() {
+        let (mut s, mut env) = build();
+        let r = run_spec(&mut *s, &mut env, &spec(vec![ClientConfig::writer()], 1));
+        assert!(r.writes.total > 100);
+        assert_eq!(r.queue_delay.count, 0, "closed loop has no queue");
+    }
+
+    #[test]
+    fn open_loop_fixed_rate_tracks_rate() {
+        let (mut s, mut env) = build();
+        // a deliberately low rate the engine trivially sustains
+        let c = ClientConfig::writer()
+            .with_mode(LoopMode::OpenFixed { ops_per_sec: 500.0 });
+        let r = run_spec(&mut *s, &mut env, &spec(vec![c], 2));
+        // ~1000 arrivals in 2 s, all served with negligible queueing
+        assert!((900..1100).contains(&(r.writes.total as i64)), "{}", r.writes.total);
+        assert!(r.queue_delay.count > 0);
+        // under-load, the typical op sees (almost) no queue; transient
+        // stall windows may still inflate the tail, so check the median
+        assert!(
+            r.queue_delay.p50_us < 1000.0,
+            "under-load queueing should be tiny: p50 {}",
+            r.queue_delay.p50_us
+        );
+    }
+
+    #[test]
+    fn open_loop_poisson_rate_roughly_tracks() {
+        let (mut s, mut env) = build();
+        let c = ClientConfig::writer()
+            .with_mode(LoopMode::OpenPoisson { ops_per_sec: 500.0 });
+        let r = run_spec(&mut *s, &mut env, &spec(vec![c], 2));
+        assert!((700..1300).contains(&(r.writes.total as i64)), "{}", r.writes.total);
+    }
+
+    #[test]
+    fn multi_client_interleaves_and_totals_add_up() {
+        let (mut s, mut env) = build();
+        let clients = vec![
+            ClientConfig::writer(),
+            ClientConfig::writer().with_seed_tag(7),
+            ClientConfig::reader()
+                .with_mode(LoopMode::OpenFixed { ops_per_sec: 200.0 })
+                .with_seed_tag(9),
+        ];
+        let (r, trace) =
+            run_spec_traced(&mut *s, &mut env, &spec(clients, 1), true);
+        assert!(r.writes.total > 200);
+        assert!(r.reads.total > 100);
+        assert_eq!(r.read_hits + r.read_misses, r.reads.total);
+        let ids: std::collections::HashSet<ActorId> =
+            trace.iter().map(|t| t.client).collect();
+        assert_eq!(ids.len(), 3, "all clients issued ops");
+        assert_eq!(trace.len() as u64, r.writes.total + r.reads.total);
+    }
+
+    #[test]
+    fn paced_reader_tracks_ratio() {
+        let (mut s, mut env) = build();
+        let clients = vec![
+            ClientConfig::writer(),
+            ClientConfig::reader().with_seed_tag(0xDEAD_BEEF).with_pace_against(0, 1, 9),
+        ];
+        let r = run_spec(&mut *s, &mut env, &spec(clients, 2));
+        assert!(r.reads.total > 0);
+        // small_for_test can saturate the reader on cold reads, so this
+        // only checks the coupling holds roughly; the strict 1% bound is
+        // asserted on paper-default options in tests/scheduler.rs
+        let ratio = r.writes.total as f64 / r.reads.total as f64;
+        assert!((7.0..12.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn latest_read_only_client_follows_writer_frontier() {
+        let (mut s, mut env) = build();
+        let clients = vec![
+            ClientConfig::writer().with_dist(KeyDist::Latest),
+            ClientConfig::reader().with_dist(KeyDist::Latest).with_seed_tag(3),
+        ];
+        let (r, trace) = run_spec_traced(&mut *s, &mut env, &spec(clients, 1), true);
+        assert!(r.reads.total > 100);
+        // the reader never writes; without frontier sharing it would
+        // read key 0 forever
+        let distinct: std::collections::HashSet<Key> = trace
+            .iter()
+            .filter(|t| t.kind == OpKind::Get)
+            .map(|t| t.key)
+            .collect();
+        assert!(distinct.len() > 10, "latest reads stuck at the origin");
+        assert!(
+            r.read_hit_rate() > 0.5,
+            "latest reads should find the writer's appends: {:.2}",
+            r.read_hit_rate()
+        );
+    }
+
+    #[test]
+    fn think_time_throttles_a_closed_client() {
+        let (mut s, mut env) = build();
+        let fast = run_spec(&mut *s, &mut env, &spec(vec![ClientConfig::writer()], 1));
+        let (mut s2, mut env2) = build();
+        let slow_cfg = ClientConfig::writer()
+            .with_mode(LoopMode::Closed { think: 10 * crate::sim::MILLIS });
+        let slow = run_spec(&mut *s2, &mut env2, &spec(vec![slow_cfg], 1));
+        assert!(slow.writes.total < fast.writes.total / 2);
+        // ~100 ops/s with 10 ms think time
+        assert!((50..150).contains(&(slow.writes.total as i64)), "{}", slow.writes.total);
+    }
+}

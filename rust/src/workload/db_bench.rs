@@ -1,22 +1,26 @@
-//! db_bench-equivalent workload drivers (paper Table IV):
+//! db_bench-equivalent workload presets (paper Table IV):
 //!   A: fillrandom, 1 write thread, no limit, 600 s
 //!   B: readwhilewriting, +1 read thread, 9:1 write/read
 //!   C: readwhilewriting, 8:2
 //!   D: seekrandom (Seek + 1024 Next) after a fillrandom preload
 //!
-//! Closed-loop actors on the virtual clock: each thread issues its next
-//! operation when the previous completes; throughput and stalls emerge
-//! from the engine + device models.
+//! Since the scheduler refactor these are thin mix presets over
+//! `workload::client::run_spec`: each builds a [`WorkloadSpec`] and the
+//! event-driven scheduler drives the clients in global virtual-time
+//! order. `readwhilewriting` is a real concurrent read client (its own
+//! KeyGen/RNG stream, its own timeline in the event queue) paced to the
+//! db_bench write:read ratio, not ratio interleaving inside one loop.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::engine::{EngineStats, KvEngine, WriteBatch};
+use crate::engine::KvEngine;
 use crate::env::SimEnv;
 use crate::lsm::entry::Key;
 use crate::sim::{Nanos, NS_PER_SEC};
 
-use super::keygen::KeyGen;
-use super::stats::{Histogram, HistogramSummary, OpSeries, RunResult};
+use super::client::{run_spec, ClientConfig, LoopMode, OpMix, WorkloadSpec};
+use super::keygen::{KeyDist, KeyGen};
+use super::stats::RunResult;
 
 #[derive(Clone, Debug)]
 pub struct BenchConfig {
@@ -47,23 +51,14 @@ impl BenchConfig {
     }
 }
 
-/// Workload A: fillrandom, one closed-loop writer.
+/// Workload A: fillrandom, one closed-loop writer. The generated key
+/// and timing stream is bit-identical to the pre-scheduler driver
+/// (value seeds additionally fold in the generator identity so
+/// concurrent writers stay distinguishable).
 pub fn fillrandom(sys: &mut dyn KvEngine, env: &mut SimEnv, cfg: &BenchConfig) -> RunResult {
-    let mut gen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
-    let mut writes = OpSeries::default();
-    let mut wlat = Histogram::new();
-    let mut t: Nanos = 0;
-    let mut op: u64 = 0;
-    while t < cfg.duration {
-        let key = gen.random_key();
-        let val = gen.value_for(key, op);
-        let r = sys.put(env, t, key, val);
-        wlat.record(r.done - t);
-        writes.record(r.done.min(cfg.duration - 1));
-        t = r.done;
-        op += 1;
-    }
-    assemble(sys, env, cfg, "A/fillrandom", writes, wlat, OpSeries::default(), Histogram::new(), t)
+    let spec = WorkloadSpec::from_bench("A/fillrandom", cfg)
+        .with_clients(vec![ClientConfig::writer()]);
+    run_spec(sys, env, &spec)
 }
 
 /// Workload A variant driven through `write_batch`: the closed-loop
@@ -76,33 +71,22 @@ pub fn fillrandom_batched(
     batch_size: usize,
 ) -> RunResult {
     let batch_size = batch_size.max(1);
-    let mut gen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
-    let mut writes = OpSeries::default();
-    let mut wlat = Histogram::new();
-    let mut t: Nanos = 0;
-    let mut op: u64 = 0;
-    let mut batch = WriteBatch::with_capacity(batch_size);
-    while t < cfg.duration {
-        batch.clear();
-        for _ in 0..batch_size {
-            let key = gen.random_key();
-            batch.put(key, gen.value_for(key, op));
-            op += 1;
-        }
-        let r = sys.write_batch(env, t, &batch);
-        // per-op latency: the batch latency is shared by its ops
-        let per_op = (r.done - t) / batch_size as u64;
-        for _ in 0..batch_size {
-            wlat.record(per_op.max(1));
-            writes.record(r.done.min(cfg.duration - 1));
-        }
-        t = r.done;
-    }
-    let name = format!("A/fillrandom_batched x{batch_size}");
-    assemble(sys, env, cfg, &name, writes, wlat, OpSeries::default(), Histogram::new(), t)
+    let client = ClientConfig {
+        mix: OpMix::batch_only(),
+        batch_size,
+        ..ClientConfig::default()
+    };
+    let spec =
+        WorkloadSpec::from_bench(format!("A/fillrandom_batched x{batch_size}"), cfg)
+            .with_clients(vec![client]);
+    run_spec(sys, env, &spec)
 }
 
 /// Workloads B/C: readwhilewriting at a write:read ratio (e.g. (9,1)).
+/// Client 0 is the closed-loop writer; client 1 is a concurrent read
+/// client paced to issue `ratio_read` reads per `ratio_write` writes
+/// (db_bench keeps the running mix at that ratio). Read hit-rate and
+/// read latency are reported separately in the [`RunResult`].
 pub fn readwhilewriting(
     sys: &mut dyn KvEngine,
     env: &mut SimEnv,
@@ -110,46 +94,17 @@ pub fn readwhilewriting(
     ratio_write: u64,
     ratio_read: u64,
 ) -> RunResult {
-    let mut wgen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
-    let mut rgen = KeyGen::new(cfg.seed ^ 0xDEAD_BEEF, cfg.key_space, cfg.value_size);
-    let mut writes = OpSeries::default();
-    let mut reads = OpSeries::default();
-    let mut wlat = Histogram::new();
-    let mut rlat = Histogram::new();
-    let (mut wt, mut rt): (Nanos, Nanos) = (0, 0);
-    let (mut wops, mut rops): (u64, u64) = (0, 0);
-    let mut end = 0;
-    loop {
-        // keep the running mix at ratio_write:ratio_read, each thread
-        // closed-loop on its own clock
-        let want_read =
-            rops * ratio_write < wops * ratio_read && rt < cfg.duration;
-        if want_read {
-            let key = rgen.random_key();
-            let (_, done) = sys.get(env, rt, key);
-            rlat.record(done - rt);
-            reads.record(done.min(cfg.duration - 1));
-            rt = done;
-            rops += 1;
-            end = end.max(rt);
-        } else if wt < cfg.duration {
-            let key = wgen.random_key();
-            let val = wgen.value_for(key, wops);
-            let r = sys.put(env, wt, key, val);
-            wlat.record(r.done - wt);
-            writes.record(r.done.min(cfg.duration - 1));
-            wt = r.done;
-            wops += 1;
-            end = end.max(wt);
-        } else {
-            break;
-        }
-        if wt >= cfg.duration && rt >= cfg.duration {
-            break;
-        }
-    }
-    let name = format!("readwhilewriting {ratio_write}:{ratio_read}");
-    assemble(sys, env, cfg, &name, writes, wlat, reads, rlat, end)
+    let spec = WorkloadSpec::from_bench(
+        format!("readwhilewriting {ratio_write}:{ratio_read}"),
+        cfg,
+    )
+    .with_clients(vec![
+        ClientConfig::writer(),
+        ClientConfig::reader()
+            .with_seed_tag(0xDEAD_BEEF)
+            .with_pace_against(0, ratio_read, ratio_write),
+    ]);
+    run_spec(sys, env, &spec)
 }
 
 /// Workload D: seekrandom — `seeks` range queries of (Seek + `nexts`
@@ -162,35 +117,20 @@ pub fn seekrandom(
     nexts: usize,
     start_at: Nanos,
 ) -> RunResult {
-    let mut gen = KeyGen::new(cfg.seed ^ 0x5EEC, cfg.key_space, cfg.value_size);
-    let mut reads = OpSeries::default();
-    let mut rlat = Histogram::new();
-    let mut t = start_at;
-    let t0 = start_at;
-    for _ in 0..seeks {
-        let start = gen.random_key();
-        let issue = t;
-        let (got, done) = sys.scan(env, t, start, nexts);
-        // ops counted the db_bench way: the Seek plus every Next
-        for _ in 0..=got.len() {
-            reads.record(done.min(issue + NS_PER_SEC));
-        }
-        rlat.record(done - issue);
-        t = done;
+    let client = ClientConfig {
+        mix: OpMix::scan_only(),
+        scan_len: nexts,
+        max_ops: Some(seeks as u64),
+        seed_tag: 0x5EEC,
+        ..ClientConfig::default()
+    };
+    let spec = WorkloadSpec {
+        start_at,
+        duration: Nanos::MAX, // bounded by max_ops, not the horizon
+        ..WorkloadSpec::from_bench("D/seekrandom", cfg)
     }
-    let mut r = assemble(
-        sys,
-        env,
-        cfg,
-        "D/seekrandom",
-        OpSeries::default(),
-        Histogram::new(),
-        reads,
-        rlat,
-        t,
-    );
-    r.duration_s = (t - t0) as f64 / NS_PER_SEC as f64;
-    r
+    .with_clients(vec![client]);
+    run_spec(sys, env, &spec)
 }
 
 /// Preload helper for workload D (the paper's "initial 20 GB
@@ -213,67 +153,75 @@ pub fn preload(
     sys.finish(env, t)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn assemble(
-    sys: &dyn KvEngine,
-    env: &SimEnv,
-    cfg: &BenchConfig,
+/// Build the spec behind a named workload (A|B|C) with scheduler knobs
+/// exposed: client count, loop mode, key distribution. This is what the
+/// CLI's `--clients/--rate/--loop-mode/--dist` flags construct.
+///
+/// - A: `clients` concurrent writers; an open-loop `rate` is the
+///   aggregate offered load, split evenly across them.
+/// - B/C closed loop: `clients` writers plus one read client paced to
+///   the workload's write:read op ratio against the *total* write
+///   count (approximated as `clients` x client 0, which is exact for
+///   the symmetric writers the preset builds).
+/// - B/C open loop: the aggregate `rate` is divided by the workload's
+///   op mix — writers share `rate * w/(w+r)`, the reader offers
+///   `rate * r/(w+r)` — so both the total offered load and the
+///   write:read mix match the named workload.
+pub fn preset_spec(
     workload: &str,
-    writes: OpSeries,
-    wlat: Histogram,
-    reads: OpSeries,
-    rlat: Histogram,
-    end: Nanos,
-) -> RunResult {
-    let duration_s = (end.max(1)) as f64 / NS_PER_SEC as f64;
-    let db = sys.main_db();
-    let stall = sys.stall_stats();
-    let cpu_percent = env.cpu.host_cpu_percent(end.max(1), 8);
-    let write_mbps = writes.total as f64 * (16 + cfg.value_size as u64) as f64
-        / duration_s
-        / (1024.0 * 1024.0);
-    let read_mbps = reads.total as f64 * (16 + cfg.value_size as u64) as f64
-        / duration_s
-        / (1024.0 * 1024.0);
-    let efficiency = if cpu_percent > 0.0 {
-        (write_mbps + read_mbps) / cpu_percent
-    } else {
-        0.0
+    cfg: &BenchConfig,
+    clients: usize,
+    mode: LoopMode,
+    dist: KeyDist,
+) -> Result<WorkloadSpec> {
+    let clients = clients.max(1);
+    let (name, ratio) = match workload {
+        "A" => ("A/fillrandom", None),
+        "B" => ("B/readwhilewriting 9:1", Some((9u64, 1u64))),
+        "C" => ("C/readwhilewriting 8:2", Some((8u64, 2u64))),
+        other => return Err(anyhow!("no preset spec for workload {other:?}")),
     };
-    let total_secs = duration_s.ceil() as usize;
-    let stall_seconds: Vec<usize> = (0..total_secs)
-        .filter(|&s| stall.second_in_stall(s))
-        .collect();
-    let (redirected, rollbacks) = sys
-        .kvaccel()
-        .map(|k| {
-            (
-                k.controller.stats.writes_to_dev,
-                k.rollback.stats.rollbacks,
-            )
+    let write_frac = match ratio {
+        Some((w, r)) if !matches!(mode, LoopMode::Closed { .. }) => {
+            w as f64 / (w + r) as f64
+        }
+        _ => 1.0,
+    };
+    let writer_mode = scale_rate(mode, write_frac / clients as f64);
+    let mut list: Vec<ClientConfig> = (0..clients)
+        .map(|i| {
+            ClientConfig::writer()
+                .with_mode(writer_mode)
+                .with_dist(dist)
+                .with_seed_tag(i as u64)
         })
-        .unwrap_or((0, 0));
-    RunResult {
-        system: String::new(), // caller labels
-        workload: workload.to_string(),
-        threads: db.compaction_threads(),
-        duration_s,
-        write_lat: HistogramSummary::from(&wlat),
-        read_lat: HistogramSummary::from(&rlat),
-        writes,
-        reads,
-        write_mbps,
-        read_mbps,
-        cpu_percent,
-        efficiency,
-        stop_events: stall.stop_events,
-        slowdown_events: stall.slowdown_events,
-        stopped_s: stall.stopped_ns_total as f64 / NS_PER_SEC as f64,
-        write_amplification: db.stats.write_amplification(),
-        pcie_mbps: env.device.pcie.stats.combined_mbps(),
-        stall_seconds,
-        redirected_writes: redirected,
-        rollbacks,
+        .collect();
+    if let Some((w, r)) = ratio {
+        let reader = ClientConfig::reader()
+            .with_dist(dist)
+            .with_seed_tag(0xDEAD_BEEF);
+        list.push(match mode {
+            // reader tracks r/w of the TOTAL write count; writers are
+            // symmetric, so client 0 carries 1/clients of it
+            LoopMode::Closed { .. } => {
+                reader.with_pace_against(0, r * clients as u64, w)
+            }
+            _ => reader.with_mode(scale_rate(mode, 1.0 - write_frac)),
+        });
+    }
+    Ok(WorkloadSpec::from_bench(name, cfg).with_clients(list))
+}
+
+/// Scale an open-loop rate by `frac` (closed mode passes through).
+fn scale_rate(mode: LoopMode, frac: f64) -> LoopMode {
+    match mode {
+        LoopMode::OpenFixed { ops_per_sec } => {
+            LoopMode::OpenFixed { ops_per_sec: ops_per_sec * frac }
+        }
+        LoopMode::OpenPoisson { ops_per_sec } => {
+            LoopMode::OpenPoisson { ops_per_sec: ops_per_sec * frac }
+        }
+        closed => closed,
     }
 }
 
@@ -319,6 +267,9 @@ mod tests {
         assert!(r.writes.total > 0 && r.reads.total > 0);
         let ratio = r.writes.total as f64 / r.reads.total as f64;
         assert!((6.0..14.0).contains(&ratio), "ratio {ratio}");
+        // the concurrent read client reports visibility separately
+        assert_eq!(r.read_hits + r.read_misses, r.reads.total);
+        assert!(r.read_lat.count > 0);
     }
 
     #[test]
@@ -360,5 +311,54 @@ mod tests {
             );
             assert!(r.workload.contains("batched"));
         }
+    }
+
+    #[test]
+    fn preset_spec_builds_multi_client_variants() {
+        let cfg = tiny_cfg();
+        let a = preset_spec("A", &cfg, 4, LoopMode::Closed { think: 0 }, KeyDist::Uniform)
+            .unwrap();
+        assert_eq!(a.clients.len(), 4);
+        let b = preset_spec(
+            "B",
+            &cfg,
+            2,
+            LoopMode::OpenFixed { ops_per_sec: 1000.0 },
+            KeyDist::Zipfian { theta: 0.99 },
+        )
+        .unwrap();
+        assert_eq!(b.clients.len(), 3, "2 writers + 1 reader");
+        // the aggregate 1000 ops/s divides 9:1 across writes and reads,
+        // and the write share splits across the 2 writers
+        match b.clients[0].mode {
+            LoopMode::OpenFixed { ops_per_sec } => {
+                assert!((ops_per_sec - 450.0).abs() < 1e-9, "writer {ops_per_sec}")
+            }
+            other => panic!("unexpected mode {other:?}"),
+        }
+        match b.clients[2].mode {
+            LoopMode::OpenFixed { ops_per_sec } => {
+                assert!((ops_per_sec - 100.0).abs() < 1e-9, "reader {ops_per_sec}")
+            }
+            other => panic!("unexpected mode {other:?}"),
+        }
+        // closed-loop B with N writers paces the reader on the total
+        let b2 = preset_spec("B", &cfg, 4, LoopMode::Closed { think: 0 }, KeyDist::Uniform)
+            .unwrap();
+        let pace = b2.clients[4].pace.expect("reader is paced");
+        assert_eq!((pace.num, pace.den), (4, 9), "1/9 of 4x client 0's ops");
+        assert!(preset_spec("D", &cfg, 1, LoopMode::Closed { think: 0 }, KeyDist::Uniform)
+            .is_err());
+    }
+
+    #[test]
+    fn multi_writer_workload_a_scales_clients() {
+        let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
+        let cfg = tiny_cfg();
+        let spec =
+            preset_spec("A", &cfg, 3, LoopMode::Closed { think: 0 }, KeyDist::Uniform)
+                .unwrap();
+        let r = super::super::client::run_spec(&mut *s, &mut env, &spec);
+        assert!(r.writes.total > 300);
     }
 }

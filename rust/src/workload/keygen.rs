@@ -1,8 +1,114 @@
 //! Deterministic key/value generation matching the paper's db_bench
-//! configuration: 4 B keys, 4 KB values (Table IV).
+//! configuration: 4 B keys, 4 KB values (Table IV), plus YCSB-style key
+//! distributions (Uniform / Zipfian / Latest) for the multi-client
+//! scheduler.
 
 use crate::lsm::entry::{Key, ValueDesc, MAX_USER_KEY};
 use crate::sim::SimRng;
+
+/// Key popularity distribution (YCSB naming).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum KeyDist {
+    /// Every key equally likely (db_bench fillrandom).
+    #[default]
+    Uniform,
+    /// Scrambled zipfian over the whole key space: a few hot keys draw
+    /// most of the traffic, hash-spread across the space. `theta` in
+    /// (0, 1); YCSB default is 0.99.
+    Zipfian { theta: f64 },
+    /// Latest-biased: writes append fresh keys, reads prefer the most
+    /// recently written ones (zipfian over recency rank).
+    Latest,
+}
+
+/// Precomputed zipfian sampler (Gray et al., as used by YCSB).
+#[derive(Clone, Debug)]
+struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+}
+
+/// Per-thread memo for `zeta` — every client of a multi-client spec
+/// shares the same (n, theta), and the 1M-term series is the only
+/// expensive part of Zipfian construction.
+type ZetaCache = std::cell::RefCell<Vec<((u64, u64), f64)>>;
+
+fn zeta_cached(n: u64, theta: f64) -> f64 {
+    thread_local! {
+        static CACHE: ZetaCache = ZetaCache::new(Vec::new());
+    }
+    CACHE.with(|c| {
+        let key = (n, theta.to_bits());
+        if let Some(&(_, v)) = c.borrow().iter().find(|(k, _)| *k == key) {
+            return v;
+        }
+        let v = zeta(n, theta);
+        c.borrow_mut().push((key, v));
+        v
+    })
+}
+
+/// Generalized harmonic number sum(1/i^theta, i=1..n). Exact up to 1M
+/// terms, integral-approximated beyond (workload skew, not number
+/// theory — the tail error is <0.1% for the spaces we use).
+fn zeta(n: u64, theta: f64) -> f64 {
+    const EXACT: u64 = 1_000_000;
+    let m = n.min(EXACT);
+    let mut z = 0.0;
+    for i in 1..=m {
+        z += (i as f64).powf(-theta);
+    }
+    if n > m {
+        if (theta - 1.0).abs() < 1e-9 {
+            z += (n as f64 / m as f64).ln();
+        } else {
+            z += ((n as f64).powf(1.0 - theta) - (m as f64).powf(1.0 - theta))
+                / (1.0 - theta);
+        }
+    }
+    z
+}
+
+impl Zipfian {
+    fn new(n: u64, theta: f64) -> Self {
+        assert!(
+            theta > 0.0 && theta < 1.0,
+            "zipfian theta must be in (0,1), got {theta}"
+        );
+        let n = n.max(2);
+        let zetan = zeta_cached(n, theta);
+        let zeta2 = zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self { n, theta, alpha, zetan, eta }
+    }
+
+    /// Draw a popularity rank in [0, n): rank 0 is the hottest item.
+    fn draw(&self, rng: &mut SimRng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let rank = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        rank.min(self.n - 1)
+    }
+}
+
+/// Stateless integer hash (splitmix64 finalizer): spreads zipfian ranks
+/// across the key space so hot keys are not all adjacent.
+fn scramble(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
 
 #[derive(Clone, Debug)]
 pub struct KeyGen {
@@ -10,23 +116,101 @@ pub struct KeyGen {
     /// upper bound (exclusive) of the key space
     pub key_space: Key,
     pub value_size: u32,
+    dist: KeyDist,
+    zipf: Option<Zipfian>,
+    /// Latest: number of keys written so far (write high-water mark).
+    inserted: u64,
+    /// Folded from the generator seed: distinguishes values written by
+    /// different clients for the same (key, op#) pair.
+    value_salt: u32,
 }
 
 impl KeyGen {
+    /// Uniform keys — byte-compatible with the pre-scheduler generator:
+    /// the draw sequence of `random_key` is unchanged.
     pub fn new(seed: u64, key_space: Key, value_size: u32) -> Self {
+        Self::with_dist(seed, key_space, value_size, KeyDist::Uniform)
+    }
+
+    pub fn with_dist(seed: u64, key_space: Key, value_size: u32, dist: KeyDist) -> Self {
         assert!(key_space > 0 && key_space <= MAX_USER_KEY);
-        Self { rng: SimRng::new(seed), key_space, value_size }
+        let zipf = match dist {
+            KeyDist::Uniform => None,
+            KeyDist::Zipfian { theta } => Some(Zipfian::new(key_space as u64, theta)),
+            // Latest draws a recency *rank*; 0.99 is the YCSB default.
+            KeyDist::Latest => Some(Zipfian::new(key_space as u64, 0.99)),
+        };
+        Self {
+            rng: SimRng::new(seed),
+            key_space,
+            value_size,
+            dist,
+            zipf,
+            inserted: 0,
+            value_salt: (seed ^ (seed >> 32)) as u32,
+        }
     }
 
-    /// fillrandom: uniform key over the whole space.
+    pub fn dist(&self) -> KeyDist {
+        self.dist
+    }
+
+    /// Write high-water mark (Latest: number of appended keys).
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Adopt a higher write high-water mark observed elsewhere (the
+    /// scheduler shares the newest frontier across Latest clients, so a
+    /// read-only client follows the writers' appends — YCSB's latest
+    /// distribution uses one global insert counter).
+    pub fn observe_inserted(&mut self, high_water: u64) {
+        if high_water > self.inserted {
+            self.inserted = high_water;
+        }
+    }
+
+    /// Read-side key draw. Uniform/Zipfian: the stationary distribution.
+    /// Latest: zipfian over recency, newest keys hottest.
     pub fn random_key(&mut self) -> Key {
-        self.rng.gen_range_u32(self.key_space)
+        match self.dist {
+            KeyDist::Uniform => self.rng.gen_range_u32(self.key_space),
+            KeyDist::Zipfian { .. } => {
+                let rank = self.zipf.as_ref().unwrap().draw(&mut self.rng);
+                (scramble(rank) % self.key_space as u64) as Key
+            }
+            KeyDist::Latest => {
+                if self.inserted == 0 {
+                    return 0;
+                }
+                let window = self.inserted.min(self.key_space as u64);
+                let z = self.zipf.as_ref().unwrap().draw(&mut self.rng) % window;
+                // newest written key minus its recency rank, modulo wrap
+                ((self.inserted - 1 - z) % self.key_space as u64) as Key
+            }
+        }
     }
 
-    /// Fresh value: the seed encodes (key, op#) so overwrites are
-    /// distinguishable and verifiable.
+    /// Write-side key draw. Latest appends sequentially (YCSB insert
+    /// order, wrapping at the space bound); other distributions write
+    /// where they read.
+    pub fn write_key(&mut self) -> Key {
+        match self.dist {
+            KeyDist::Latest => {
+                let k = (self.inserted % self.key_space as u64) as Key;
+                self.inserted += 1;
+                k
+            }
+            _ => self.random_key(),
+        }
+    }
+
+    /// Fresh value: the seed encodes (generator, key, op#) so
+    /// overwrites are distinguishable and verifiable, including across
+    /// concurrent clients writing the same key.
     pub fn value_for(&mut self, key: Key, op: u64) -> ValueDesc {
-        let seed = (key ^ (op as u32).rotate_left(16)).wrapping_mul(0x9E37_79B1);
+        let seed = (key ^ (op as u32).rotate_left(16) ^ self.value_salt)
+            .wrapping_mul(0x9E37_79B1);
         ValueDesc::new(seed, self.value_size)
     }
 
@@ -63,5 +247,75 @@ mod tests {
         let v2 = g.value_for(5, 2);
         assert_ne!(v1, v2);
         assert_eq!(v1.len, 4096);
+    }
+
+    #[test]
+    fn zipfian_is_skewed_and_bounded() {
+        let space: Key = 10_000;
+        let mut g = KeyGen::with_dist(3, space, 64, KeyDist::Zipfian { theta: 0.99 });
+        let mut counts = std::collections::HashMap::new();
+        let draws = 20_000;
+        for _ in 0..draws {
+            let k = g.random_key();
+            assert!(k < space);
+            *counts.entry(k).or_insert(0u32) += 1;
+        }
+        let hottest = counts.values().max().copied().unwrap();
+        // uniform expectation is 2 per key; the zipfian head must be far
+        // above that, and the space must not collapse to a handful of keys
+        assert!(hottest > 1000, "no skew: hottest={hottest}");
+        assert!(counts.len() > 500, "collapsed: {} distinct", counts.len());
+    }
+
+    #[test]
+    fn zipfian_deterministic() {
+        let mk = || KeyGen::with_dist(9, 5000, 64, KeyDist::Zipfian { theta: 0.8 });
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..1000 {
+            assert_eq!(a.random_key(), b.random_key());
+        }
+    }
+
+    #[test]
+    fn latest_prefers_recent_writes() {
+        let space: Key = 100_000;
+        let mut g = KeyGen::with_dist(5, space, 64, KeyDist::Latest);
+        // before any write, reads fall back to key 0
+        assert_eq!(g.random_key(), 0);
+        for i in 0..10_000u32 {
+            assert_eq!(g.write_key(), i, "latest writes append sequentially");
+        }
+        let mut recent = 0;
+        let reads = 5_000;
+        for _ in 0..reads {
+            let k = g.random_key();
+            assert!(k < 10_000, "read beyond high-water mark: {k}");
+            if k >= 9_000 {
+                recent += 1;
+            }
+        }
+        // zipf(0.99) over recency: the newest 10% of keys should draw a
+        // clear majority of reads
+        assert!(recent * 2 > reads, "latest not biased: {recent}/{reads}");
+    }
+
+    #[test]
+    fn latest_write_wraps_at_space_bound() {
+        let mut g = KeyGen::with_dist(5, 10, 64, KeyDist::Latest);
+        for _ in 0..25 {
+            let k = g.write_key();
+            assert!(k < 10);
+        }
+        for _ in 0..100 {
+            assert!(g.random_key() < 10);
+        }
+    }
+
+    #[test]
+    fn zeta_tail_approximation_close() {
+        // compare the integral tail against brute force on a crossable size
+        let exact: f64 = (1..=2_000_000u64).map(|i| (i as f64).powf(-0.9)).sum();
+        let approx = zeta(2_000_000, 0.9);
+        assert!((exact - approx).abs() / exact < 1e-3, "{exact} vs {approx}");
     }
 }

@@ -1,11 +1,22 @@
 //! Workload generation + measurement (the db_bench stand-in).
+//!
+//! `client` is the event-driven multi-client scheduler (open/closed
+//! loop); `db_bench` keeps the paper's Table IV workloads as thin mix
+//! presets over it; `keygen` provides the deterministic key/value
+//! streams (Uniform/Zipfian/Latest); `stats` the measurement plumbing.
 
+pub mod client;
 pub mod db_bench;
 pub mod keygen;
 pub mod stats;
 
-pub use db_bench::{
-    fillrandom, fillrandom_batched, preload, readwhilewriting, seekrandom, BenchConfig,
+pub use client::{
+    run_spec, run_spec_traced, ClientConfig, LoopMode, OpKind, OpMix, OpTrace, Pace,
+    WorkloadSpec,
 };
-pub use keygen::KeyGen;
+pub use db_bench::{
+    fillrandom, fillrandom_batched, preload, preset_spec, readwhilewriting, seekrandom,
+    BenchConfig,
+};
+pub use keygen::{KeyDist, KeyGen};
 pub use stats::{cdf, Histogram, OpSeries, RunResult};

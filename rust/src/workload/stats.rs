@@ -167,6 +167,18 @@ pub struct RunResult {
     /// KVACCEL extras
     pub redirected_writes: u64,
     pub rollbacks: u64,
+    /// Point reads that found a value / found nothing (reported
+    /// separately from the write series — workload B/C read visibility).
+    pub read_hits: u64,
+    pub read_misses: u64,
+    /// Open-loop only: time ops waited in their client's FIFO before
+    /// service (closed-loop runs have no queue, so this stays empty).
+    /// `write_lat`/`read_lat` are *total* latency = queueing + service.
+    pub queue_delay: HistogramSummary,
+    /// Mean queueing delay (us) per arrival-second — the signal that
+    /// grows without bound when the offered rate exceeds what the
+    /// engine sustains.
+    pub queue_delay_series_us: Vec<f64>,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -199,6 +211,16 @@ impl RunResult {
 
     pub fn read_kops(&self) -> f64 {
         self.reads.total as f64 / self.duration_s.max(1e-9) / 1e3
+    }
+
+    /// Fraction of point reads that found a value (0.0 when no reads).
+    pub fn read_hit_rate(&self) -> f64 {
+        let n = self.read_hits + self.read_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.read_hits as f64 / n as f64
+        }
     }
 }
 

@@ -1,0 +1,267 @@
+//! Scheduler conformance: the event-driven workload layer must be
+//! deterministic (same seed + config => identical op trace and final
+//! stats, for every engine kind), must preserve the pre-refactor
+//! db_bench semantics (fillrandom op stream bit-compat, write:read
+//! ratios within 1%), and must expose the open-loop overload pathology
+//! (growing queueing delay on the plain LSM, bounded tail on KVACCEL).
+
+use kvaccel::engine::{EngineBuilder, EngineStats, KvEngine};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::LsmOptions;
+use kvaccel::sim::{Nanos, NS_PER_SEC};
+use kvaccel::ssd::SsdConfig;
+use kvaccel::workload::{
+    fillrandom, preset_spec, readwhilewriting, run_spec, run_spec_traced, BenchConfig,
+    ClientConfig, KeyDist, KeyGen, LoopMode, OpMix, WorkloadSpec,
+};
+
+const ENGINES: [&str; 6] = [
+    "rocksdb",
+    "rocksdb-nosd",
+    "adoc",
+    "kvaccel",
+    "kvaccel-eager",
+    "kvaccel-lazy",
+];
+
+fn build(name: &str) -> (Box<dyn KvEngine>, SimEnv) {
+    let opts = LsmOptions::small_for_test();
+    let sys = match name {
+        "rocksdb" => EngineBuilder::rocksdb(true).opts(opts).build(),
+        "rocksdb-nosd" => EngineBuilder::rocksdb(false).opts(opts).build(),
+        "adoc" => EngineBuilder::adoc().opts(opts).build(),
+        "kvaccel" => EngineBuilder::kvaccel().opts(opts).build(),
+        "kvaccel-eager" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Eager).opts(opts).build()
+        }
+        "kvaccel-lazy" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Lazy).opts(opts).build()
+        }
+        other => panic!("unknown engine {other}"),
+    };
+    (sys, SimEnv::new(21, SsdConfig::default()))
+}
+
+/// A spec exercising every scheduler feature at once: closed-loop
+/// writer, Poisson mixed client with a zipfian stream, fixed-rate
+/// open-loop reader.
+fn mixed_spec(duration: Nanos) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "conformance-mix".into(),
+        clients: vec![
+            ClientConfig::writer(),
+            ClientConfig {
+                mix: OpMix { put: 3, get: 1, delete: 1, scan: 1, batch: 0 },
+                mode: LoopMode::OpenPoisson { ops_per_sec: 2_000.0 },
+                dist: KeyDist::Zipfian { theta: 0.9 },
+                scan_len: 8,
+                seed_tag: 17,
+                ..ClientConfig::default()
+            },
+            ClientConfig::reader()
+                .with_mode(LoopMode::OpenFixed { ops_per_sec: 1_000.0 })
+                .with_seed_tag(99),
+        ],
+        duration,
+        start_at: 0,
+        key_space: 20_000,
+        value_size: 4096,
+        seed: 7,
+    }
+}
+
+#[test]
+fn scheduler_deterministic_and_stall_clean_for_all_engines() {
+    let spec = mixed_spec(NS_PER_SEC / 2);
+    for name in ENGINES {
+        let (mut s1, mut env1) = build(name);
+        let (r1, t1) = run_spec_traced(&mut *s1, &mut env1, &spec, true);
+        let (mut s2, mut env2) = build(name);
+        let (r2, t2) = run_spec_traced(&mut *s2, &mut env2, &spec, true);
+
+        assert_eq!(t1.len(), t2.len(), "{name}: trace lengths differ");
+        assert_eq!(t1, t2, "{name}: op traces diverge");
+        assert_eq!(r1.writes.total, r2.writes.total, "{name}");
+        assert_eq!(r1.reads.total, r2.reads.total, "{name}");
+        assert_eq!(r1.read_hits, r2.read_hits, "{name}");
+        assert_eq!(r1.write_lat.p99_us, r2.write_lat.p99_us, "{name}");
+        assert_eq!(r1.queue_delay.p99_us, r2.queue_delay.p99_us, "{name}");
+        assert_eq!(r1.slowdown_events, r2.slowdown_events, "{name}");
+        assert_eq!(
+            s1.db_stats().stall_anomalies,
+            0,
+            "{name}: stall anomaly under scheduler load"
+        );
+        assert_eq!(s2.db_stats().stall_anomalies, 0, "{name}");
+        assert!(r1.writes.total > 0 && r1.reads.total > 0, "{name}: degenerate run");
+    }
+}
+
+#[test]
+fn fillrandom_preset_matches_prerefactor_op_stream() {
+    // the preset must issue the exact op stream of the pre-scheduler
+    // single-writer loop: same keys, same values, same timing
+    let cfg = BenchConfig {
+        duration: NS_PER_SEC,
+        key_space: 30_000,
+        ..Default::default()
+    };
+    let spec = WorkloadSpec {
+        name: "A/fillrandom".into(),
+        clients: vec![ClientConfig::writer()],
+        duration: cfg.duration,
+        start_at: 0,
+        key_space: cfg.key_space,
+        value_size: cfg.value_size,
+        seed: cfg.seed,
+    };
+    let (mut s1, mut env1) = build("rocksdb");
+    let (_, trace) = run_spec_traced(&mut *s1, &mut env1, &spec, true);
+
+    // hand-rolled pre-refactor reference loop
+    let (mut s2, mut env2) = build("rocksdb");
+    let mut gen = KeyGen::new(cfg.seed, cfg.key_space, cfg.value_size);
+    let mut reference = Vec::new();
+    let mut t: Nanos = 0;
+    let mut op: u64 = 0;
+    while t < cfg.duration {
+        let key = gen.random_key();
+        let val = gen.value_for(key, op);
+        let r = s2.put(&mut env2, t, key, val);
+        reference.push((key, t, r.done));
+        t = r.done;
+        op += 1;
+    }
+    assert_eq!(trace.len(), reference.len());
+    for (got, want) in trace.iter().zip(&reference) {
+        assert_eq!((got.key, got.issue, got.done), *want);
+    }
+}
+
+#[test]
+fn readwhilewriting_ratio_within_one_percent() {
+    // Paper-default engine options: the reader has ample headroom, so
+    // both the pre-refactor interleaving loop and the scheduler's paced
+    // read client converge to the configured op ratio. (Under the
+    // deliberately tiny test options, a saturated reader caps the read
+    // count — in both implementations — which is a different regime.)
+    for (w, r) in [(9u64, 1u64), (8, 2)] {
+        let cfg = BenchConfig {
+            duration: NS_PER_SEC,
+            key_space: 50_000,
+            ..Default::default()
+        };
+        let mut s = EngineBuilder::rocksdb(true)
+            .opts(LsmOptions::default().with_threads(2))
+            .build();
+        let mut env = SimEnv::new(21, SsdConfig::default());
+        let res = readwhilewriting(&mut *s, &mut env, &cfg, w, r);
+        assert!(res.reads.total > 100, "{w}:{r} too few reads: {}", res.reads.total);
+        let got = res.writes.total as f64 / res.reads.total as f64;
+        let want = w as f64 / r as f64;
+        assert!(
+            (got - want).abs() / want < 0.01,
+            "{w}:{r} ratio drifted by >1%: got {got:.4}, want {want}"
+        );
+        assert_eq!(res.read_hits + res.read_misses, res.reads.total);
+    }
+}
+
+#[test]
+fn open_loop_overload_grows_lsm_queue_kvaccel_stays_bounded() {
+    // measure the LSM's sustainable closed-loop rate, then offer 3x that
+    let cfg = BenchConfig {
+        duration: 2 * NS_PER_SEC,
+        key_space: 100_000,
+        ..Default::default()
+    };
+    let (mut probe, mut env0) = build("rocksdb");
+    let closed = fillrandom(&mut *probe, &mut env0, &cfg);
+    let sustainable = closed.writes.total as f64 / closed.duration_s;
+    assert!(sustainable > 100.0, "probe run degenerate: {sustainable}");
+    let rate = sustainable * 3.0;
+
+    let over_cfg = BenchConfig { duration: 3 * NS_PER_SEC, ..cfg };
+    let spec = preset_spec(
+        "A",
+        &over_cfg,
+        2,
+        LoopMode::OpenFixed { ops_per_sec: rate },
+        KeyDist::Uniform,
+    )
+    .unwrap();
+
+    let (mut lsm, mut env1) = build("rocksdb");
+    let rl = run_spec(&mut *lsm, &mut env1, &spec);
+    let (mut kva, mut env2) = build("kvaccel");
+    let rk = run_spec(&mut *kva, &mut env2, &spec);
+
+    // LSM: arrivals outpace service, so per-second mean queueing delay
+    // must climb from the first half of the run to the second
+    let series = &rl.queue_delay_series_us;
+    assert!(series.len() >= 2, "no queue-delay series: {series:?}");
+    let half = series.len() / 2;
+    let first: f64 = series[..half].iter().sum::<f64>() / half as f64;
+    let second: f64 =
+        series[half..].iter().sum::<f64>() / (series.len() - half) as f64;
+    assert!(
+        second > first * 1.5 && second > 1_000.0,
+        "LSM queueing delay not growing under overload: first-half {first:.0} us, second-half {second:.0} us"
+    );
+
+    // KVACCEL under the same offered load engages redirection and keeps
+    // both the queue and the total-latency tail below the LSM baseline
+    assert!(rk.redirected_writes > 0, "KVACCEL never redirected under overload");
+    assert_eq!(rk.stop_events, 0, "KVACCEL must not hard-stop");
+    assert!(
+        rk.queue_delay.p99_us < rl.queue_delay.p99_us,
+        "KVACCEL queue p99 {} >= LSM {}",
+        rk.queue_delay.p99_us,
+        rl.queue_delay.p99_us
+    );
+    assert!(
+        rk.write_lat.p99_us < rl.write_lat.p99_us,
+        "KVACCEL total p99 {} >= LSM {}",
+        rk.write_lat.p99_us,
+        rl.write_lat.p99_us
+    );
+}
+
+#[test]
+fn zipfian_and_latest_clients_run_on_every_engine() {
+    for name in ENGINES {
+        for dist in [KeyDist::Zipfian { theta: 0.99 }, KeyDist::Latest] {
+            let spec = WorkloadSpec {
+                name: format!("dist-{dist:?}"),
+                clients: vec![
+                    ClientConfig::writer().with_dist(dist),
+                    ClientConfig {
+                        mix: OpMix::put_get(1, 1),
+                        dist,
+                        seed_tag: 5,
+                        ..ClientConfig::default()
+                    },
+                ],
+                duration: NS_PER_SEC / 4,
+                start_at: 0,
+                key_space: 10_000,
+                value_size: 1024,
+                seed: 13,
+            };
+            let (mut s, mut env) = build(name);
+            let r = run_spec(&mut *s, &mut env, &spec);
+            assert!(r.writes.total > 50, "{name}/{dist:?}: {}", r.writes.total);
+            assert!(r.reads.total > 0, "{name}/{dist:?}");
+            // latest-biased reads against a writer that appends should
+            // hit much more often than uniform cold reads
+            if dist == KeyDist::Latest {
+                assert!(
+                    r.read_hit_rate() > 0.5,
+                    "{name}: latest reads mostly missing ({:.2})",
+                    r.read_hit_rate()
+                );
+            }
+        }
+    }
+}
