@@ -11,9 +11,11 @@
 
 use anyhow::Result;
 
-use crate::engine::{BatchResult, EngineStats, KvEngine, WriteBatch};
+use crate::engine::{
+    BatchResult, DbIterator, EngineStats, IterOptions, KvEngine, Snapshot, WriteBatch,
+};
 use crate::env::SimEnv;
-use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::lsm::entry::{Key, ValueDesc};
 use crate::lsm::{LsmDb, LsmOptions, PutResult, WriteCondition};
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::{CpuClass, Nanos, MILLIS};
@@ -183,14 +185,19 @@ impl KvEngine for AdocEngine {
         self.db.write_batch(env, at, batch)
     }
 
-    fn scan(
+    fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.snapshot(env, at)
+    }
+
+    fn iter(
         &mut self,
         env: &mut SimEnv,
         at: Nanos,
-        start: Key,
-        count: usize,
-    ) -> (Vec<Entry>, Nanos) {
-        self.db.scan(env, at, start, count)
+        opts: IterOptions,
+    ) -> Box<dyn DbIterator> {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        KvEngine::iter(&mut self.db, env, at, opts)
     }
 
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {

@@ -1,0 +1,751 @@
+//! First-class snapshots and cursor-based iterators — the read-path
+//! counterpart of the unified `KvEngine` write API.
+//!
+//! A [`Snapshot`] *pins* a point-in-time view by refcount: the memtable
+//! and immutable runs are materialized once at snapshot creation, SSTs
+//! and Dev-LSM runs are shared `Arc`s, and the KVACCEL metadata routing
+//! table (the cross-interface recency authority) is captured as a pinned
+//! key set. Because every source is either immutable-by-construction or
+//! owned by the snapshot, background flushes, compactions and even a
+//! KVACCEL rollback (which resets the device buffer and clears the
+//! metadata table) cannot drop versions a live snapshot still sees —
+//! the `Arc` refcount keeps them alive until the last iterator drops.
+//!
+//! An [`EngineIterator`] is the paper's Fig 10 aggregated range scan as
+//! a *cursor*: one seekable/reversible merging iterator over the host
+//! LSM plus (on KVACCEL) the `DevIterator` over the in-device write
+//! buffer, switching interfaces at key-order crossovers. Every movement
+//! op charges simulated latency — per-Next CPU, block-cache-aware SST
+//! block reads on the host side, amortized NAND page reads on the
+//! device side — and feeds the read-amplification counters
+//! ([`ScanCounters`]) surfaced through `EngineStats`.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::env::SimEnv;
+use crate::kvaccel::range_query::DevIterator;
+use crate::lsm::entry::{Entry, Key, Seq, ValueDesc, MAX_USER_KEY};
+use crate::lsm::iterator::LsmIterator;
+use crate::lsm::sst::Sst;
+use crate::lsm::LsmOptions;
+use crate::sim::{CpuClass, Nanos};
+use crate::util::LruCache;
+
+// ---------------------------------------------------------------------
+// Read-amplification accounting
+// ---------------------------------------------------------------------
+
+/// Engine-lifetime cursor counters (shared by every iterator the engine
+/// hands out; `Arc` so iterators stay detached from the engine borrow).
+#[derive(Debug, Default)]
+pub struct ScanCounters {
+    pub seeks: AtomicU64,
+    pub nexts: AtomicU64,
+    /// SST data blocks touched by Main-LSM cursors.
+    pub main_blocks: AtomicU64,
+    /// NAND pages read by Dev-LSM cursors (KVACCEL only).
+    pub dev_pages: AtomicU64,
+}
+
+impl ScanCounters {
+    pub fn snapshot(&self) -> ScanAmp {
+        ScanAmp {
+            seeks: self.seeks.load(Ordering::Relaxed),
+            nexts: self.nexts.load(Ordering::Relaxed),
+            main_blocks: self.main_blocks.load(Ordering::Relaxed),
+            dev_pages: self.dev_pages.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`ScanCounters`] — Table V's per-interface
+/// read amplification: blocks (host) and pages (device) touched per
+/// Next().
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ScanAmp {
+    pub seeks: u64,
+    pub nexts: u64,
+    pub main_blocks: u64,
+    pub dev_pages: u64,
+}
+
+impl ScanAmp {
+    pub fn main_blocks_per_next(&self) -> f64 {
+        if self.nexts == 0 {
+            0.0
+        } else {
+            self.main_blocks as f64 / self.nexts as f64
+        }
+    }
+
+    pub fn dev_pages_per_next(&self) -> f64 {
+        if self.nexts == 0 {
+            0.0
+        } else {
+            self.dev_pages as f64 / self.nexts as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------
+
+/// The Dev-LSM half of a KVACCEL snapshot: the device write buffer's
+/// runs (run 0 is the materialized device memtable) plus the metadata
+/// routing set pinned at snapshot time.
+#[derive(Clone, Debug)]
+pub struct DevPin {
+    pub runs: Vec<Arc<Vec<Entry>>>,
+    /// Keys whose latest version lived in the Dev-LSM at snapshot time.
+    pub live: Arc<HashSet<Key>>,
+    /// NAND page size (amortized read granularity for Dev-LSM Next()s).
+    pub page_bytes: u64,
+    /// Average encoded entry size (entries per page estimate).
+    pub avg_entry: u64,
+}
+
+/// Pinned state backing a [`Snapshot`]; immutable once built.
+#[derive(Debug)]
+pub struct SnapshotInner {
+    /// Highest Main-LSM sequence number visible to this snapshot.
+    pub seq: Seq,
+    /// Highest Dev-LSM sequence number visible (0 without a device pin).
+    pub dev_seq: Seq,
+    pub taken_at: Nanos,
+    /// Materialized memtable + immutable runs, newest first.
+    pub mem_runs: Vec<Arc<Vec<Entry>>>,
+    /// L0 tables, newest first.
+    pub l0: Vec<Arc<Sst>>,
+    /// Levels 1..N (disjoint, key-sorted).
+    pub levels: Vec<Vec<Arc<Sst>>>,
+    pub dev: Option<DevPin>,
+}
+
+/// A refcounted, sequence-number-stamped pinned view of an engine.
+/// Cloning is cheap (`Arc`); the pin releases when the last clone and
+/// every iterator reading through it drop.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    inner: Arc<SnapshotInner>,
+}
+
+impl Snapshot {
+    #[allow(clippy::too_many_arguments)]
+    pub fn pin(
+        seq: Seq,
+        dev_seq: Seq,
+        taken_at: Nanos,
+        mem_runs: Vec<Arc<Vec<Entry>>>,
+        l0: Vec<Arc<Sst>>,
+        levels: Vec<Vec<Arc<Sst>>>,
+        dev: Option<DevPin>,
+    ) -> Self {
+        Self {
+            inner: Arc::new(SnapshotInner {
+                seq,
+                dev_seq,
+                taken_at,
+                mem_runs,
+                l0,
+                levels,
+                dev,
+            }),
+        }
+    }
+
+    pub fn seq(&self) -> Seq {
+        self.inner.seq
+    }
+
+    pub fn taken_at(&self) -> Nanos {
+        self.inner.taken_at
+    }
+
+    /// Does this snapshot pin device-buffer state (KVACCEL)?
+    pub fn spans_device(&self) -> bool {
+        self.inner.dev.is_some()
+    }
+
+    pub fn inner(&self) -> &SnapshotInner {
+        &self.inner
+    }
+
+    pub(crate) fn downgrade(&self) -> Weak<SnapshotInner> {
+        Arc::downgrade(&self.inner)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Iterator options + trait
+// ---------------------------------------------------------------------
+
+/// Options for [`crate::engine::KvEngine::iter`]: key bounds, initial
+/// direction, and an optional pre-pinned snapshot (without one, the
+/// engine pins a fresh snapshot at iterator creation).
+#[derive(Clone, Debug, Default)]
+pub struct IterOptions {
+    /// Inclusive lower key bound.
+    pub lower_bound: Option<Key>,
+    /// Exclusive upper key bound (RocksDB's `iterate_upper_bound`).
+    pub upper_bound: Option<Key>,
+    /// Mirror the cursor's movement ops: on a reverse cursor `seek`
+    /// floor-positions, `next` descends, and `seek_to_first` lands on
+    /// the range's last entry — so generic Seek+Next drivers walk the
+    /// range descending without changing their loop.
+    pub reverse: bool,
+    pub snapshot: Option<Snapshot>,
+}
+
+impl IterOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Iterate `[lower, upper)`.
+    pub fn range(lower: Key, upper: Key) -> Self {
+        Self::new().lower(lower).upper(upper)
+    }
+
+    pub fn lower(mut self, key: Key) -> Self {
+        self.lower_bound = Some(key);
+        self
+    }
+
+    pub fn upper(mut self, key: Key) -> Self {
+        self.upper_bound = Some(key);
+        self
+    }
+
+    pub fn backward(mut self) -> Self {
+        self.reverse = true;
+        self
+    }
+
+    /// Read through a pinned snapshot instead of the live store.
+    pub fn at(mut self, snap: &Snapshot) -> Self {
+        self.snapshot = Some(snap.clone());
+        self
+    }
+}
+
+/// A RocksDB-shaped cursor over one engine. Movement ops take an issue
+/// time and return the virtual completion time (per-op latency is
+/// charged against the simulated CPU/device); accessors are free.
+///
+/// Iterators are *detached*: they own their pinned sources, so the
+/// engine can keep serving writes — including flushes, compactions and
+/// rollbacks — while a cursor is open, without invalidating it.
+pub trait DbIterator {
+    /// Position at the first visible entry with key >= `key`.
+    fn seek(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos;
+    /// Position at the first in-bounds entry.
+    fn seek_to_first(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
+    /// Position at the last in-bounds entry.
+    fn seek_to_last(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
+    /// Position at the last visible entry with key <= `key`.
+    fn seek_for_prev(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos;
+    /// Advance to the next visible entry (ascending key order).
+    fn next(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
+    /// Retreat to the previous visible entry.
+    fn prev(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
+
+    fn valid(&self) -> bool;
+    fn entry(&self) -> Option<Entry>;
+    fn key(&self) -> Option<Key> {
+        self.entry().map(|e| e.key)
+    }
+    fn value(&self) -> Option<ValueDesc> {
+        self.entry().map(|e| e.val)
+    }
+
+    /// Read-amplification incurred by *this* cursor so far.
+    fn amp(&self) -> ScanAmp;
+}
+
+/// Latency model constants an iterator needs from the engine's options
+/// (copied so the cursor stays detached from the engine borrow).
+#[derive(Clone, Copy, Debug)]
+pub struct IterCost {
+    pub next_cpu_ns: Nanos,
+    pub get_cpu_ns: Nanos,
+    pub block_bytes: u64,
+}
+
+impl IterCost {
+    pub fn from_opts(opts: &LsmOptions) -> Self {
+        Self {
+            next_cpu_ns: opts.next_cpu_ns,
+            get_cpu_ns: opts.get_cpu_ns,
+            block_bytes: opts.block_bytes,
+        }
+    }
+}
+
+/// Scan-path block cache shared by every cursor an engine hands out,
+/// so repeated scans over a hot range warm each other (the engine's
+/// point-read cache stays separate).
+pub type SharedBlockCache = Arc<Mutex<LruCache<(u64, usize), ()>>>;
+
+pub fn new_block_cache(blocks: usize) -> SharedBlockCache {
+    Arc::new(Mutex::new(LruCache::new(blocks.max(1))))
+}
+
+// ---------------------------------------------------------------------
+// The engine iterator (Fig 10 aggregated cursor)
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    Fwd,
+    Bwd,
+}
+
+/// The concrete [`DbIterator`] every engine hands out: a merge of the
+/// Main-LSM cursor ([`LsmIterator`]) and, when the snapshot pins device
+/// state, the Dev-LSM cursor ([`DevIterator`]) — the comparator
+/// switches between the two interfaces as key order dictates, with the
+/// pinned metadata set deciding cross-interface recency.
+pub struct EngineIterator {
+    main: LsmIterator,
+    dev: Option<DevIterator>,
+    live: Option<Arc<HashSet<Key>>>,
+    snap: Snapshot,
+
+    lower: Option<Key>,
+    upper: Option<Key>,
+    reverse: bool,
+    dir: Dir,
+    current: Option<Entry>,
+
+    next_cpu_ns: Nanos,
+    get_cpu_ns: Nanos,
+    block_bytes: u64,
+    /// Scan-path block cache, shared with the engine (and so with every
+    /// other cursor it hands out): repeated scans warm each other.
+    cache: SharedBlockCache,
+
+    counters: Arc<ScanCounters>,
+    local: ScanAmp,
+    dev_pages_synced: u64,
+}
+
+impl EngineIterator {
+    pub fn new(
+        snap: Snapshot,
+        opts: &IterOptions,
+        cost: IterCost,
+        counters: Arc<ScanCounters>,
+        cache: SharedBlockCache,
+    ) -> Self {
+        let inner = snap.inner();
+        let main = LsmIterator::from_runs(
+            inner.mem_runs.clone(),
+            inner.l0.clone(),
+            inner.levels.clone(),
+        )
+        .with_visible_seq(inner.seq)
+        .with_tombstones(true);
+        let (dev, live) = match &inner.dev {
+            Some(pin) => (
+                Some(
+                    DevIterator::new(pin.runs.clone(), pin.page_bytes, pin.avg_entry)
+                        .with_visible_seq(inner.dev_seq),
+                ),
+                Some(pin.live.clone()),
+            ),
+            None => (None, None),
+        };
+        Self {
+            main,
+            dev,
+            live,
+            snap,
+            lower: opts.lower_bound,
+            upper: opts.upper_bound,
+            reverse: opts.reverse,
+            dir: Dir::Fwd,
+            current: None,
+            next_cpu_ns: cost.next_cpu_ns,
+            get_cpu_ns: cost.get_cpu_ns,
+            block_bytes: cost.block_bytes,
+            cache,
+            counters,
+            local: ScanAmp::default(),
+            dev_pages_synced: 0,
+        }
+    }
+
+    pub fn snapshot(&self) -> &Snapshot {
+        &self.snap
+    }
+
+    fn dev_live(&self, key: Key) -> bool {
+        self.live.as_ref().is_some_and(|s| s.contains(&key))
+    }
+
+    /// Charge every Main-LSM block touched since the last drain: a
+    /// cursor-cache hit costs CPU only, a miss reads through the device.
+    fn charge_main_blocks(&mut self, env: &mut SimEnv, mut t: Nanos) -> Nanos {
+        for (sst, block) in self.main.drain_blocks() {
+            self.local.main_blocks += 1;
+            self.counters.main_blocks.fetch_add(1, Ordering::Relaxed);
+            let mut cache = self.cache.lock().expect("scan cache poisoned");
+            if cache.get(&(sst, block)).is_some() {
+                env.cpu.charge(CpuClass::Foreground, t, self.get_cpu_ns / 2);
+                t += self.get_cpu_ns / 2;
+            } else {
+                t = env.device.read_block(t, self.block_bytes);
+                cache.insert((sst, block), ());
+            }
+        }
+        t
+    }
+
+    /// Fold the Dev-LSM cursor's page-read counter into the shared
+    /// engine counters.
+    fn sync_dev_pages(&mut self) {
+        if let Some(d) = &self.dev {
+            let n = d.pages_read();
+            let delta = n.saturating_sub(self.dev_pages_synced);
+            if delta > 0 {
+                self.local.dev_pages += delta;
+                self.counters.dev_pages.fetch_add(delta, Ordering::Relaxed);
+                self.dev_pages_synced = n;
+            }
+        }
+    }
+
+    fn count_seek(&mut self) {
+        self.local.seeks += 1;
+        self.counters.seeks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn count_next(&mut self) {
+        self.local.nexts += 1;
+        self.counters.nexts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The Fig 10 comparator, ascending: emit from whichever interface
+    /// holds the smaller key; on equal keys, the pinned metadata set
+    /// decides which copy is the newest; tombstones and stale device
+    /// copies are consumed silently.
+    fn settle_fwd(&mut self, env: &mut SimEnv, mut t: Nanos) -> Nanos {
+        self.current = None;
+        loop {
+            let m = self.main.entry();
+            let d = self.dev.as_ref().and_then(|x| x.entry());
+            // every future winner's key is >= the smallest head: once
+            // that crosses the upper bound, stop without consuming the
+            // (possibly long, possibly stale) out-of-range tails
+            if let (Some(up), Some(head)) = (
+                self.upper,
+                match (d, m) {
+                    (Some(de), Some(me)) => Some(de.key.min(me.key)),
+                    (Some(de), None) => Some(de.key),
+                    (None, Some(me)) => Some(me.key),
+                    (None, None) => None,
+                },
+            ) {
+                if head >= up {
+                    return t;
+                }
+            }
+            let winner = match (d, m) {
+                (None, None) => return t,
+                (Some(de), me) if me.map_or(true, |me| de.key <= me.key) => {
+                    let same = me.is_some_and(|me| me.key == de.key);
+                    let live = self.dev_live(de.key);
+                    t = self.dev.as_mut().unwrap().step_forward(env, t);
+                    self.sync_dev_pages();
+                    if same {
+                        let me = me.unwrap();
+                        self.main.step_forward();
+                        t = self.charge_main_blocks(env, t);
+                        if live {
+                            de
+                        } else {
+                            me
+                        }
+                    } else if live {
+                        de
+                    } else {
+                        // stale device copy: a newer Main-LSM write owns
+                        // this key; whatever the main side holds (possibly
+                        // nothing, if the newer write was a compacted-away
+                        // tombstone) is the truth.
+                        continue;
+                    }
+                }
+                (_, Some(me)) => {
+                    self.main.step_forward();
+                    t = self.charge_main_blocks(env, t);
+                    me
+                }
+                (Some(_), None) => unreachable!("covered by the guard arm"),
+            };
+            if let Some(up) = self.upper {
+                if winner.key >= up {
+                    return t;
+                }
+            }
+            if winner.val.is_tombstone() {
+                continue;
+            }
+            self.current = Some(winner);
+            return t;
+        }
+    }
+
+    /// The comparator, descending (largest key wins).
+    fn settle_bwd(&mut self, env: &mut SimEnv, mut t: Nanos) -> Nanos {
+        self.current = None;
+        loop {
+            let m = self.main.entry();
+            let d = self.dev.as_ref().and_then(|x| x.entry());
+            // mirror of settle_fwd: heads only descend, so stop as soon
+            // as the largest head falls below the lower bound
+            if let (Some(lo), Some(head)) = (
+                self.lower,
+                match (d, m) {
+                    (Some(de), Some(me)) => Some(de.key.max(me.key)),
+                    (Some(de), None) => Some(de.key),
+                    (None, Some(me)) => Some(me.key),
+                    (None, None) => None,
+                },
+            ) {
+                if head < lo {
+                    return t;
+                }
+            }
+            let winner = match (d, m) {
+                (None, None) => return t,
+                (Some(de), me) if me.map_or(true, |me| de.key >= me.key) => {
+                    let same = me.is_some_and(|me| me.key == de.key);
+                    let live = self.dev_live(de.key);
+                    t = self.dev.as_mut().unwrap().step_backward(env, t);
+                    self.sync_dev_pages();
+                    if same {
+                        let me = me.unwrap();
+                        self.main.step_backward();
+                        t = self.charge_main_blocks(env, t);
+                        if live {
+                            de
+                        } else {
+                            me
+                        }
+                    } else if live {
+                        de
+                    } else {
+                        continue;
+                    }
+                }
+                (_, Some(me)) => {
+                    self.main.step_backward();
+                    t = self.charge_main_blocks(env, t);
+                    me
+                }
+                (Some(_), None) => unreachable!("covered by the guard arm"),
+            };
+            if let Some(lo) = self.lower {
+                if winner.key < lo {
+                    return t;
+                }
+            }
+            if winner.val.is_tombstone() {
+                continue;
+            }
+            self.current = Some(winner);
+            return t;
+        }
+    }
+}
+
+impl EngineIterator {
+    /// Position at the first visible entry with key >= `key`.
+    fn seek_ascending(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        self.count_seek();
+        let key = match self.lower {
+            Some(lo) => key.max(lo),
+            None => key,
+        };
+        env.cpu.charge(CpuClass::Foreground, at, self.get_cpu_ns);
+        let mut t = at + self.get_cpu_ns;
+        self.main.seek(key);
+        t = self.charge_main_blocks(env, t);
+        if let Some(d) = &mut self.dev {
+            t = d.seek(env, t, key);
+        }
+        self.sync_dev_pages();
+        self.dir = Dir::Fwd;
+        t = self.settle_fwd(env, t);
+        env.clock.advance_to(t);
+        t
+    }
+
+    /// Position at the last visible entry with key <= `key`.
+    fn seek_descending(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        self.count_seek();
+        let mut key = key;
+        if let Some(up) = self.upper {
+            if up == 0 {
+                self.current = None;
+                return at;
+            }
+            key = key.min(up - 1);
+        }
+        if let Some(lo) = self.lower {
+            if key < lo {
+                self.current = None;
+                return at;
+            }
+        }
+        env.cpu.charge(CpuClass::Foreground, at, self.get_cpu_ns);
+        let mut t = at + self.get_cpu_ns;
+        self.main.seek_for_prev(key);
+        t = self.charge_main_blocks(env, t);
+        if let Some(d) = &mut self.dev {
+            t = d.seek_for_prev(env, t, key);
+        }
+        self.sync_dev_pages();
+        self.dir = Dir::Bwd;
+        t = self.settle_bwd(env, t);
+        env.clock.advance_to(t);
+        t
+    }
+
+    fn first_in_bounds(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let lo = self.lower.unwrap_or(0);
+        self.seek_ascending(env, at, lo)
+    }
+
+    fn last_in_bounds(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let hi = match self.upper {
+            Some(0) => {
+                self.current = None;
+                return at;
+            }
+            Some(up) => up - 1,
+            None => MAX_USER_KEY,
+        };
+        self.seek_descending(env, at, hi)
+    }
+
+    /// Advance toward larger keys.
+    fn step_ascending(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let Some(cur) = self.current else { return at };
+        self.count_next();
+        env.cpu.charge(CpuClass::Foreground, at, self.next_cpu_ns);
+        let mut t = at + self.next_cpu_ns;
+        if self.dir == Dir::Bwd {
+            // direction switch: re-position both interfaces past the
+            // current key
+            if cur.key >= MAX_USER_KEY {
+                self.current = None;
+                return t;
+            }
+            let from = cur.key + 1;
+            self.main.seek(from);
+            t = self.charge_main_blocks(env, t);
+            if let Some(d) = &mut self.dev {
+                t = d.seek(env, t, from);
+            }
+            self.sync_dev_pages();
+            self.dir = Dir::Fwd;
+        }
+        t = self.settle_fwd(env, t);
+        env.clock.advance_to(t);
+        t
+    }
+
+    /// Advance toward smaller keys.
+    fn step_descending(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let Some(cur) = self.current else { return at };
+        self.count_next();
+        env.cpu.charge(CpuClass::Foreground, at, self.next_cpu_ns);
+        let mut t = at + self.next_cpu_ns;
+        if self.dir == Dir::Fwd {
+            if cur.key == 0 {
+                self.current = None;
+                return t;
+            }
+            let to = cur.key - 1;
+            self.main.seek_for_prev(to);
+            t = self.charge_main_blocks(env, t);
+            if let Some(d) = &mut self.dev {
+                t = d.seek_for_prev(env, t, to);
+            }
+            self.sync_dev_pages();
+            self.dir = Dir::Bwd;
+        }
+        t = self.settle_bwd(env, t);
+        env.clock.advance_to(t);
+        t
+    }
+}
+
+// A reverse cursor (`IterOptions::reverse`) mirrors every movement op,
+// so a generic Seek + N×Next driver walks the range descending.
+impl DbIterator for EngineIterator {
+    fn seek(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        if self.reverse {
+            self.seek_descending(env, at, key)
+        } else {
+            self.seek_ascending(env, at, key)
+        }
+    }
+
+    fn seek_to_first(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.last_in_bounds(env, at)
+        } else {
+            self.first_in_bounds(env, at)
+        }
+    }
+
+    fn seek_to_last(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.first_in_bounds(env, at)
+        } else {
+            self.last_in_bounds(env, at)
+        }
+    }
+
+    fn seek_for_prev(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        if self.reverse {
+            self.seek_ascending(env, at, key)
+        } else {
+            self.seek_descending(env, at, key)
+        }
+    }
+
+    fn next(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.step_descending(env, at)
+        } else {
+            self.step_ascending(env, at)
+        }
+    }
+
+    fn prev(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.step_ascending(env, at)
+        } else {
+            self.step_descending(env, at)
+        }
+    }
+
+    fn valid(&self) -> bool {
+        self.current.is_some()
+    }
+
+    fn entry(&self) -> Option<Entry> {
+        self.current
+    }
+
+    fn amp(&self) -> ScanAmp {
+        self.local
+    }
+}

@@ -12,15 +12,22 @@
 //! impls live next to the concrete types) and below `workload`/
 //! `experiments`/`examples`, which only see `&mut dyn KvEngine`.
 
+pub mod iter;
+
 use anyhow::Result;
 
 use crate::baselines::{AdocConfig, AdocEngine, SystemKind};
 use crate::env::SimEnv;
 use crate::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
-use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::lsm::entry::{Entry, Key, Seq, ValueDesc};
 use crate::lsm::{DbStats, LsmDb, LsmOptions, PutResult, StallStats, WriteCondition};
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::Nanos;
+
+pub use iter::{
+    new_block_cache, DbIterator, DevPin, EngineIterator, IterCost, IterOptions,
+    ScanAmp, ScanCounters, SharedBlockCache, Snapshot, SnapshotInner,
+};
 
 // ---------------------------------------------------------------------
 // Write batches
@@ -129,6 +136,11 @@ pub struct EngineHealth {
     pub dev_resident_keys: usize,
     /// Detector's current verdict (false for non-KVACCEL engines).
     pub stall_imminent: bool,
+    /// Snapshots currently pinning versions against flush/compaction/
+    /// rollback reclamation.
+    pub live_snapshots: usize,
+    /// Oldest sequence number a live snapshot still sees.
+    pub min_pinned_seq: Option<Seq>,
 }
 
 /// Read-only accessors shared by every engine; supertrait of
@@ -151,6 +163,12 @@ pub trait EngineStats {
         &self.main_db().stats
     }
 
+    /// Cursor read-amplification totals (Seeks/Nexts issued, blocks and
+    /// device pages touched) accumulated over the engine's lifetime.
+    fn scan_amp(&self) -> ScanAmp {
+        self.main_db().scan_counters.snapshot()
+    }
+
     fn health(&self) -> EngineHealth {
         let db = self.main_db();
         EngineHealth {
@@ -164,6 +182,8 @@ pub trait EngineStats {
             stall_imminent: self
                 .kvaccel()
                 .is_some_and(|k| k.detector.stall_imminent()),
+            live_snapshots: db.live_snapshots(),
+            min_pinned_seq: db.min_pinned_seq(),
         }
     }
 }
@@ -192,15 +212,43 @@ pub trait KvEngine: EngineStats {
     /// WAL commit, single routing decision on KVACCEL).
     fn write_batch(&mut self, env: &mut SimEnv, at: Nanos, batch: &WriteBatch) -> BatchResult;
 
+    /// Pin a refcounted point-in-time view: later writes, flushes,
+    /// compactions — and on KVACCEL, rollbacks — are invisible to
+    /// iterators opened at this snapshot, and cannot reclaim versions
+    /// it still sees.
+    fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot;
+
+    /// Open a cursor (`seek`/`seek_for_prev`/`next`/`prev`) honoring
+    /// `opts` bounds and direction. Without `opts.snapshot`, a fresh
+    /// snapshot is pinned at `at`. The cursor is detached: the engine
+    /// keeps serving writes while it is open.
+    fn iter(&mut self, env: &mut SimEnv, at: Nanos, opts: IterOptions)
+        -> Box<dyn DbIterator>;
+
     /// Snapshot range scan: seek to `start`, return up to `count` live
     /// entries in ascending key order, newest version per key.
+    ///
+    /// Compatibility wrapper over [`KvEngine::iter`] (Seek + Nexts on a
+    /// fresh pinned snapshot); kept so pre-cursor callers and the
+    /// unbounded-scan presets keep their exact semantics.
     fn scan(
         &mut self,
         env: &mut SimEnv,
         at: Nanos,
         start: Key,
         count: usize,
-    ) -> (Vec<Entry>, Nanos);
+    ) -> (Vec<Entry>, Nanos) {
+        let mut it = self.iter(env, at, IterOptions::default());
+        let mut t = it.seek(env, at, start);
+        let mut out = Vec::with_capacity(count.min(4096));
+        while out.len() < count {
+            let Some(e) = it.entry() else { break };
+            out.push(e);
+            t = it.next(env, t);
+        }
+        env.clock.advance_to(t);
+        (out, t)
+    }
 
     /// Force-rotate the memtable and drain all background work.
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;

@@ -1,5 +1,5 @@
 //! Experiment registry: one entry per figure/table of the paper's
-//! evaluation (see DESIGN.md §5 for the index). Each experiment prints
+//! evaluation (see DESIGN.md §6 for the index). Each experiment prints
 //! the rows/series the paper reports and writes CSV into `results/`.
 //!
 //! Absolute numbers come from the simulator, not the authors' OpenSSD

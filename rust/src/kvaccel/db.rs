@@ -10,6 +10,7 @@
 
 use anyhow::Result;
 
+use crate::engine::{DbIterator, DevPin, IterOptions, Snapshot};
 use crate::env::SimEnv;
 use crate::lsm::entry::{Entry, Key, Seq, ValueDesc};
 use crate::lsm::{LsmDb, LsmOptions, PutResult};
@@ -20,7 +21,6 @@ use crate::ssd::kv_if::NamespaceId;
 use super::controller::{Controller, ControllerConfig, ReadPath, WritePath};
 use super::detector::{Detector, DetectorConfig};
 use super::metadata::{MetadataConfig, MetadataManager};
-use super::range_query::{AggregatedScan, DevIterator};
 use super::rollback::{RollbackConfig, RollbackManager, RollbackScheme};
 
 #[derive(Clone, Debug)]
@@ -281,7 +281,43 @@ impl KvaccelDb {
         }
     }
 
-    /// Aggregated dual-iterator range scan (paper §V-F).
+    /// Pin a snapshot spanning both interfaces: the Main-LSM parts plus
+    /// the Dev-LSM runs and the metadata routing set (the Fig 10
+    /// cross-interface recency authority). A rollback occurring after
+    /// this point resets the live device buffer and clears the live
+    /// metadata table, but the pinned `Arc`s keep this view intact.
+    pub fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        self.tick(env, at);
+        self.main.catch_up(env, at);
+        let (seq, runs, l0, levels) = self.main.pin_parts();
+        let dev_snap = env.device.kv_snapshot(self.ns).expect("kv snapshot");
+        let pin = DevPin {
+            runs: dev_snap.runs,
+            live: self.metadata.pin(),
+            page_bytes: env.device.nand.config().page_bytes,
+            avg_entry: 16 + 4096,
+        };
+        let snap = Snapshot::pin(seq, self.dev_seq, at, runs, l0, levels, Some(pin));
+        self.main.register_snapshot(&snap);
+        snap
+    }
+
+    /// Open the aggregated dual-interface cursor (paper §V-F, Fig 10).
+    pub fn iter(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        opts: IterOptions,
+    ) -> Box<dyn DbIterator> {
+        let snap = match &opts.snapshot {
+            Some(s) => s.clone(),
+            None => self.snapshot(env, at),
+        };
+        self.main.make_iter(snap, &opts)
+    }
+
+    /// Aggregated dual-iterator range scan — a thin wrapper over the
+    /// cursor API.
     pub fn scan(
         &mut self,
         env: &mut SimEnv,
@@ -289,30 +325,7 @@ impl KvaccelDb {
         start: Key,
         count: usize,
     ) -> (Vec<Entry>, Nanos) {
-        self.tick(env, at);
-        self.main.catch_up(env, at);
-        let snap = env.device.kv_snapshot(self.ns).expect("kv snapshot");
-        let page = env.device.nand.config().page_bytes;
-        let mut dev_it = DevIterator::new(self.ns, snap, page, 16 + 4096);
-        let main_it = self.main.iter();
-        let (mut scan, mut t) = AggregatedScan::new(
-            main_it, &mut dev_it, &self.metadata, env, at, start,
-        );
-        let mut out = Vec::with_capacity(count);
-        while out.len() < count {
-            let (e, blocks, nt) = scan.next(env, t);
-            t = nt;
-            let Some(e) = e else { break };
-            env.cpu
-                .charge(CpuClass::Foreground, t, self.main.opts.next_cpu_ns);
-            t += self.main.opts.next_cpu_ns;
-            for (sst, block) in blocks {
-                t = self.main.charge_block_access(env, t, sst, block);
-            }
-            out.push(e);
-        }
-        env.clock.advance_to(t);
-        (out, t)
+        crate::engine::KvEngine::scan(self, env, at, start, count)
     }
 
     /// End-of-run cleanup: final rollback (lazy/disabled schemes hold
@@ -372,14 +385,17 @@ impl crate::engine::KvEngine for KvaccelDb {
         KvaccelDb::write_batch(self, env, at, batch)
     }
 
-    fn scan(
+    fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        KvaccelDb::snapshot(self, env, at)
+    }
+
+    fn iter(
         &mut self,
         env: &mut SimEnv,
         at: Nanos,
-        start: Key,
-        count: usize,
-    ) -> (Vec<Entry>, Nanos) {
-        KvaccelDb::scan(self, env, at, start, count)
+        opts: IterOptions,
+    ) -> Box<dyn DbIterator> {
+        KvaccelDb::iter(self, env, at, opts)
     }
 
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {

@@ -9,6 +9,7 @@
 //! (Table VI: insert 0.45 us, check 0.20 us, delete 0.28 us).
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::env::SimEnv;
 use crate::lsm::entry::{Entry, Key};
@@ -39,12 +40,20 @@ pub struct MetadataStats {
 pub struct MetadataManager {
     cfg: MetadataConfig,
     in_dev: HashSet<Key>,
+    /// Cached refcounted copy of `in_dev` handed to snapshots;
+    /// invalidated by any mutation (copy-on-write pinning).
+    pinned: Option<Arc<HashSet<Key>>>,
     pub stats: MetadataStats,
 }
 
 impl MetadataManager {
     pub fn new(cfg: MetadataConfig) -> Self {
-        Self { cfg, in_dev: HashSet::new(), stats: MetadataStats::default() }
+        Self {
+            cfg,
+            in_dev: HashSet::new(),
+            pinned: None,
+            stats: MetadataStats::default(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -59,6 +68,7 @@ impl MetadataManager {
     pub fn insert(&mut self, env: &mut SimEnv, at: Nanos, key: Key) {
         self.stats.inserts += 1;
         env.cpu.charge(CpuClass::Kvaccel, at, self.cfg.insert_cost_ns);
+        self.pinned = None;
         self.in_dev.insert(key);
     }
 
@@ -74,19 +84,36 @@ impl MetadataManager {
     pub fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> bool {
         self.stats.deletes += 1;
         env.cpu.charge(CpuClass::Kvaccel, at, self.cfg.delete_cost_ns);
+        self.pinned = None;
         self.in_dev.remove(&key)
     }
 
-    /// Drop everything (rollback completed; Dev-LSM was reset).
+    /// Drop everything (rollback completed; Dev-LSM was reset). Live
+    /// snapshots keep their own pinned copy of the routing set, so a
+    /// scan spanning the rollback window stays consistent.
     pub fn clear(&mut self) {
+        self.pinned = None;
         self.in_dev.clear();
     }
 
     /// Crash recovery: rebuild from a full KV-interface range scan.
     pub fn rebuild_from(&mut self, entries: &[Entry]) {
         self.stats.rebuilds += 1;
+        self.pinned = None;
         self.in_dev.clear();
         self.in_dev.extend(entries.iter().map(|e| e.key));
+    }
+
+    /// Refcounted copy of the routing set for snapshot pinning. Cached
+    /// until the next mutation, so read-only phases (e.g. seekrandom)
+    /// pin in O(1).
+    pub fn pin(&mut self) -> Arc<HashSet<Key>> {
+        if let Some(p) = &self.pinned {
+            return p.clone();
+        }
+        let p = Arc::new(self.in_dev.clone());
+        self.pinned = Some(p.clone());
+        p
     }
 
     /// Zero-cost read used by rollback filtering (no Table VI charge: the

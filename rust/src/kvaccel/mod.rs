@@ -13,5 +13,5 @@ pub use controller::{Controller, ControllerConfig, ReadPath, WritePath};
 pub use db::{KvaccelConfig, KvaccelDb};
 pub use detector::{Detector, DetectorConfig, DetectorSample};
 pub use metadata::{MetadataConfig, MetadataManager};
-pub use range_query::{AggregatedScan, DevIterator};
+pub use range_query::DevIterator;
 pub use rollback::{RollbackConfig, RollbackManager, RollbackScheme};

@@ -1,191 +1,357 @@
-//! Range query support (paper §V-F, Fig 10): one iterator per interface,
-//! aggregated by a comparator that switches between them as key order
-//! dictates. The Dev-LSM iterator has no read cache — every few Next()s
-//! cross a NAND page, which is exactly the Table V performance gap.
+//! Range query support (paper §V-F, Fig 10): the Dev-LSM side of the
+//! dual-interface cursor. [`DevIterator`] is a host-side
+//! seekable/reversible merge over the device write buffer's runs (SEEK +
+//! NEXT/PREV through the KV interface); it plugs into
+//! [`crate::engine::EngineIterator`] as one source of the aggregated
+//! merge, where a comparator switches between interfaces as key order
+//! dictates.
+//!
+//! The Dev-LSM has no read cache — a SEEK pays one NAND page read per
+//! on-flash run (the device walks its run indexes), and every
+//! `entries_per_page` NEXTs cross a page boundary and pay another.
+//! That amortization restarts on every re-seek (a fresh SEEK lands on a
+//! fresh page), which is exactly the Table V performance gap between
+//! Main-LSM and Dev-LSM range reads.
 
 use std::sync::Arc;
 
 use crate::env::SimEnv;
-use crate::lsm::entry::{Entry, Key};
+use crate::lsm::entry::{Entry, Key, Seq};
 use crate::sim::Nanos;
-use crate::ssd::devlsm::DevSnapshot;
-use crate::ssd::kv_if::NamespaceId;
 
-/// Host-side cursor over a Dev-LSM snapshot (SEEK + NEXT through the KV
-/// interface). Charges a device page read per run on seek and an
-/// amortized page read while scanning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    Fwd,
+    Bwd,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct RunPos {
+    idx: usize,
+    valid: bool,
+}
+
+/// Host-side cursor over a pinned set of Dev-LSM runs (run 0 is the
+/// materialized device memtable — DRAM, so it never pays NAND reads).
+/// Entries newer than `visible_seq` are skipped (snapshot visibility on
+/// the device-side sequence domain).
 pub struct DevIterator {
-    ns: NamespaceId,
     runs: Vec<Arc<Vec<Entry>>>,
-    idx: Vec<usize>,
+    pos: Vec<RunPos>,
+    visible_seq: Seq,
     /// entries per NAND page (amortized read granularity)
     entries_per_page: usize,
     nexts_since_read: usize,
+    pages_read: u64,
+    dir: Dir,
+    current: Option<Entry>,
 }
 
 impl DevIterator {
-    pub fn new(ns: NamespaceId, snap: DevSnapshot, page_bytes: u64, avg_entry: u64) -> Self {
-        let n = snap.runs.len();
+    pub fn new(runs: Vec<Arc<Vec<Entry>>>, page_bytes: u64, avg_entry: u64) -> Self {
+        let n = runs.len();
         Self {
-            ns,
-            runs: snap.runs,
-            idx: vec![0; n],
+            runs,
+            pos: vec![RunPos { idx: 0, valid: false }; n],
+            visible_seq: Seq::MAX,
             entries_per_page: (page_bytes / avg_entry.max(1)).max(1) as usize,
             nexts_since_read: 0,
+            pages_read: 0,
+            dir: Dir::Fwd,
+            current: None,
         }
     }
 
-    /// SEEK: position every run at the first key >= `key`. Each NAND run
-    /// pays one page read (the device walks its run index).
-    pub fn seek(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
-        let mut t = at;
-        for (i, run) in self.runs.iter().enumerate() {
-            self.idx[i] = run.partition_point(|e| e.key < key);
-            if i > 0 && !run.is_empty() {
-                // run 0 is the device memtable (DRAM) — no NAND read
-                t = env.device.kv_iter_page_read(t);
+    /// Hide device entries newer than `seq` (snapshot visibility).
+    pub fn with_visible_seq(mut self, seq: Seq) -> Self {
+        self.visible_seq = seq;
+        self
+    }
+
+    /// NAND pages this cursor has read so far.
+    pub fn pages_read(&self) -> u64 {
+        self.pages_read
+    }
+
+    pub fn valid(&self) -> bool {
+        self.current.is_some()
+    }
+
+    /// Current entry without advancing (comparator input).
+    pub fn entry(&self) -> Option<Entry> {
+        self.current
+    }
+
+    /// Current head key without advancing.
+    pub fn peek_key(&self) -> Option<Key> {
+        self.current.map(|e| e.key)
+    }
+
+    fn page_read(&mut self, env: &mut SimEnv, t: Nanos) -> Nanos {
+        self.pages_read += 1;
+        env.device.kv_iter_page_read(t)
+    }
+
+    // ----- per-run cursor helpers -------------------------------------
+
+    fn run_norm_fwd(&mut self, i: usize) {
+        loop {
+            let run = &self.runs[i];
+            let p = &mut self.pos[i];
+            if !p.valid {
+                return;
+            }
+            match run.get(p.idx) {
+                Some(e) if e.seq > self.visible_seq => {
+                    p.idx += 1;
+                    if p.idx >= run.len() {
+                        p.valid = false;
+                        return;
+                    }
+                }
+                Some(_) => return,
+                None => {
+                    p.valid = false;
+                    return;
+                }
             }
         }
-        let _ = self.ns;
-        t
     }
 
-    fn peek(&self) -> Option<(usize, Entry)> {
-        let mut best: Option<(usize, Entry)> = None;
-        for (i, run) in self.runs.iter().enumerate() {
-            if let Some(&e) = run.get(self.idx[i]) {
-                match best {
-                    None => best = Some((i, e)),
-                    // strictly-less keeps the newest (lowest run idx) on ties
-                    Some((_, b)) if e.key < b.key => best = Some((i, e)),
-                    _ => {}
+    fn run_norm_bwd(&mut self, i: usize) {
+        loop {
+            let run = &self.runs[i];
+            let p = &mut self.pos[i];
+            if !p.valid {
+                return;
+            }
+            match run.get(p.idx) {
+                Some(e) if e.seq > self.visible_seq => {
+                    if p.idx == 0 {
+                        p.valid = false;
+                        return;
+                    }
+                    p.idx -= 1;
                 }
+                Some(_) => return,
+                None => {
+                    p.valid = false;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn seek_run_fwd(&mut self, i: usize, key: Key) {
+        let run = &self.runs[i];
+        let idx = run.partition_point(|e| e.key < key);
+        self.pos[i] = RunPos { idx, valid: idx < run.len() };
+        self.run_norm_fwd(i);
+    }
+
+    fn seek_run_bwd(&mut self, i: usize, key: Key) {
+        let run = &self.runs[i];
+        let pp = run.partition_point(|e| e.key <= key);
+        self.pos[i] = RunPos { idx: pp.saturating_sub(1), valid: pp > 0 };
+        self.run_norm_bwd(i);
+    }
+
+    fn skip_past_run_fwd(&mut self, i: usize, key: Key) {
+        loop {
+            let run = &self.runs[i];
+            let p = &mut self.pos[i];
+            if !p.valid {
+                return;
+            }
+            match run.get(p.idx) {
+                Some(e) if e.key <= key => {
+                    p.idx += 1;
+                    if p.idx >= run.len() {
+                        p.valid = false;
+                        return;
+                    }
+                }
+                Some(_) => break,
+                None => {
+                    p.valid = false;
+                    return;
+                }
+            }
+        }
+        self.run_norm_fwd(i);
+    }
+
+    fn skip_past_run_bwd(&mut self, i: usize, key: Key) {
+        loop {
+            let run = &self.runs[i];
+            let p = &mut self.pos[i];
+            if !p.valid {
+                return;
+            }
+            match run.get(p.idx) {
+                Some(e) if e.key >= key => {
+                    if p.idx == 0 {
+                        p.valid = false;
+                        return;
+                    }
+                    p.idx -= 1;
+                }
+                Some(_) => break,
+                None => {
+                    p.valid = false;
+                    return;
+                }
+            }
+        }
+        self.run_norm_bwd(i);
+    }
+
+    // ----- merge across runs ------------------------------------------
+
+    fn pick(&self, backward: bool) -> Option<Entry> {
+        let mut best: Option<Entry> = None;
+        for (i, run) in self.runs.iter().enumerate() {
+            let p = self.pos[i];
+            if !p.valid {
+                continue;
+            }
+            if let Some(&e) = run.get(p.idx) {
+                best = Some(match best {
+                    None => e,
+                    Some(b)
+                        if (!backward && e.key < b.key)
+                            || (backward && e.key > b.key)
+                            || (e.key == b.key && e.seq > b.seq) =>
+                    {
+                        e
+                    }
+                    Some(b) => b,
+                });
             }
         }
         best
     }
 
-    /// Current head without advancing (comparator input).
-    pub fn peek_key(&self) -> Option<Key> {
-        self.peek().map(|(_, e)| e.key)
+    fn settle_fwd(&mut self) {
+        match self.pick(false) {
+            Some(e) => {
+                for i in 0..self.runs.len() {
+                    self.skip_past_run_fwd(i, e.key);
+                }
+                self.current = Some(e);
+            }
+            None => self.current = None,
+        }
     }
 
-    /// NEXT: return the next entry (newest version per key), charging an
-    /// amortized NAND page read.
-    pub fn next(&mut self, env: &mut SimEnv, at: Nanos) -> (Option<Entry>, Nanos) {
-        let Some((_, entry)) = self.peek() else { return (None, at) };
-        // advance all runs past this key (dedup older versions)
-        for (i, run) in self.runs.iter().enumerate() {
-            while run
-                .get(self.idx[i])
-                .map(|e| e.key == entry.key)
-                .unwrap_or(false)
-            {
-                self.idx[i] += 1;
+    fn settle_bwd(&mut self) {
+        match self.pick(true) {
+            Some(e) => {
+                for i in 0..self.runs.len() {
+                    self.skip_past_run_bwd(i, e.key);
+                }
+                self.current = Some(e);
             }
+            None => self.current = None,
+        }
+    }
+
+    // ----- movement ---------------------------------------------------
+
+    /// SEEK: position every run at the first visible key >= `key`. Each
+    /// on-flash run pays one NAND page read; the per-page NEXT
+    /// amortization restarts (a fresh SEEK reads a fresh page).
+    pub fn seek(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        let mut t = at;
+        self.dir = Dir::Fwd;
+        self.nexts_since_read = 0;
+        for i in 0..self.runs.len() {
+            self.seek_run_fwd(i, key);
+            if i > 0 && !self.runs[i].is_empty() {
+                // run 0 is the device memtable (DRAM) — no NAND read
+                t = self.page_read(env, t);
+            }
+        }
+        self.settle_fwd();
+        t
+    }
+
+    /// SEEK-FOR-PREV: position at the last visible key <= `key`.
+    pub fn seek_for_prev(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        let mut t = at;
+        self.dir = Dir::Bwd;
+        self.nexts_since_read = 0;
+        for i in 0..self.runs.len() {
+            self.seek_run_bwd(i, key);
+            if i > 0 && !self.runs[i].is_empty() {
+                t = self.page_read(env, t);
+            }
+        }
+        self.settle_bwd();
+        t
+    }
+
+    /// NEXT: consume the current entry and move to the next visible key
+    /// (newest version per key), charging an amortized NAND page read.
+    pub fn step_forward(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let Some(cur) = self.current else { return at };
+        if self.dir == Dir::Bwd {
+            // direction switch: a fresh device SEEK past the current key
+            return self.seek(env, at, cur.key.saturating_add(1));
         }
         let mut t = at;
         self.nexts_since_read += 1;
         if self.nexts_since_read >= self.entries_per_page {
             self.nexts_since_read = 0;
-            t = env.device.kv_iter_page_read(t);
+            t = self.page_read(env, t);
         }
-        (Some(entry), t)
-    }
-}
-
-/// The aggregated dual-interface range scan (Fig 10): Seek both, then
-/// repeatedly emit from whichever iterator holds the smaller key,
-/// switching iterators at crossover points. The Metadata Manager is the
-/// recency authority across interfaces: a Dev-LSM entry is live only if
-/// the metadata table still routes its key to the device — otherwise a
-/// newer Main-LSM write superseded it and the device copy is stale
-/// (awaiting the next rollback's reset).
-pub struct AggregatedScan<'a> {
-    pub main: crate::lsm::iterator::LsmIterator,
-    pub dev: &'a mut DevIterator,
-    meta: &'a super::metadata::MetadataManager,
-    main_head: Option<Entry>,
-}
-
-impl<'a> AggregatedScan<'a> {
-    pub fn new(
-        mut main: crate::lsm::iterator::LsmIterator,
-        dev: &'a mut DevIterator,
-        meta: &'a super::metadata::MetadataManager,
-        env: &mut SimEnv,
-        at: Nanos,
-        start: Key,
-    ) -> (Self, Nanos) {
-        main.seek(start);
-        let t = dev.seek(env, at, start);
-        let main_head = main.next();
-        (Self { main, dev, meta, main_head }, t)
+        self.settle_fwd();
+        t
     }
 
-    /// Produce the next merged entry; returns (entry, blocks_touched_in_main, time).
-    pub fn next(
-        &mut self,
-        env: &mut SimEnv,
-        at: Nanos,
-    ) -> (Option<Entry>, Vec<(u64, usize)>, Nanos) {
-        let mut t = at;
-        loop {
-            let dev_key = self.dev.peek_key();
-            let main_key = self.main_head.map(|e| e.key);
-            match (dev_key, main_key) {
-                (None, None) => return (None, self.main.drain_blocks(), t),
-                // dev head is at or before main head
-                (Some(d), m) if m.map_or(true, |mk| d <= mk) => {
-                    let dev_live = self.meta.contains(d);
-                    let (e, nt) = self.dev.next(env, t);
-                    t = nt;
-                    let e = e.expect("peeked dev entry must exist");
-                    if !dev_live {
-                        // stale device copy: a newer Main-LSM write owns
-                        // this key; let the main side emit it.
-                        continue;
-                    }
-                    // dev copy is the newest: drop the superseded main copy
-                    if Some(d) == m {
-                        self.main_head = self.main.next();
-                    }
-                    if e.val.is_tombstone() {
-                        // live deletion buffered in the device
-                        continue;
-                    }
-                    return (Some(e), self.main.drain_blocks(), t);
-                }
-                _ => {
-                    let e = self.main_head.take();
-                    self.main_head = self.main.next();
-                    return (e, self.main.drain_blocks(), t);
-                }
+    /// PREV: consume the current entry and move to the previous visible
+    /// key.
+    pub fn step_backward(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let Some(cur) = self.current else { return at };
+        if self.dir == Dir::Fwd {
+            if cur.key == 0 {
+                self.current = None;
+                return at;
             }
+            return self.seek_for_prev(env, at, cur.key - 1);
         }
+        let mut t = at;
+        self.nexts_since_read += 1;
+        if self.nexts_since_read >= self.entries_per_page {
+            self.nexts_since_read = 0;
+            t = self.page_read(env, t);
+        }
+        self.settle_bwd();
+        t
+    }
+
+    /// Streaming accessor: return the current entry and advance.
+    pub fn next(&mut self, env: &mut SimEnv, at: Nanos) -> (Option<Entry>, Nanos) {
+        let Some(e) = self.current else { return (None, at) };
+        let t = self.step_forward(env, at);
+        (Some(e), t)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{
+        new_block_cache, DbIterator, DevPin, EngineIterator, IterCost, IterOptions,
+        ScanCounters, Snapshot,
+    };
     use crate::lsm::entry::ValueDesc;
-    use crate::lsm::iterator::LsmIterator;
+    use crate::lsm::LsmOptions;
     use crate::ssd::SsdConfig;
+    use std::collections::HashSet;
 
     fn env() -> SimEnv {
         SimEnv::new(11, SsdConfig::default())
-    }
-
-    /// metadata table routing every listed key to the device
-    fn meta_with(keys: &[Key]) -> crate::kvaccel::MetadataManager {
-        let mut m = crate::kvaccel::MetadataManager::new(Default::default());
-        let entries: Vec<Entry> = keys
-            .iter()
-            .map(|&k| Entry::new(k, 1, ValueDesc::new(k, 8)))
-            .collect();
-        m.rebuild_from(&entries);
-        m
     }
 
     fn e(k: Key, s: u32) -> Entry {
@@ -198,7 +364,38 @@ mod tests {
             t = env.device.kv_put(0, t, e(k, s)).unwrap();
         }
         let snap = env.device.kv_snapshot(0).unwrap();
-        DevIterator::new(0, snap, 16 * 1024, 4112)
+        DevIterator::new(snap.runs, 16 * 1024, 4112)
+    }
+
+    /// Aggregated cursor over a materialized main run + the given dev
+    /// runs, with `live` as the pinned metadata routing set.
+    fn dual(
+        main: Vec<Entry>,
+        dev_runs: Vec<Arc<Vec<Entry>>>,
+        live: &[Key],
+    ) -> EngineIterator {
+        let pin = DevPin {
+            runs: dev_runs,
+            live: Arc::new(live.iter().copied().collect::<HashSet<Key>>()),
+            page_bytes: 16 * 1024,
+            avg_entry: 4112,
+        };
+        let snap = Snapshot::pin(
+            Seq::MAX,
+            Seq::MAX,
+            0,
+            vec![Arc::new(main)],
+            vec![],
+            vec![],
+            Some(pin),
+        );
+        EngineIterator::new(
+            snap,
+            &IterOptions::default(),
+            IterCost::from_opts(&LsmOptions::default()),
+            Arc::new(ScanCounters::default()),
+            new_block_cache(64),
+        )
     }
 
     #[test]
@@ -224,22 +421,65 @@ mod tests {
     }
 
     #[test]
-    fn aggregated_scan_interleaves_sources() {
+    fn dev_reverse_iteration() {
+        let mut env = env();
+        let mut it = dev_iter(&mut env, &[(1, 1), (5, 1), (9, 1), (5, 7)]);
+        it.seek_for_prev(&mut env, 0, 100);
+        let mut got = Vec::new();
+        let mut t = 0;
+        while let Some(x) = it.entry() {
+            got.push((x.key, x.seq));
+            t = it.step_backward(&mut env, t);
+        }
+        assert_eq!(got, vec![(9, 1), (5, 7), (1, 1)]);
+    }
+
+    #[test]
+    fn dev_direction_switch() {
+        let mut env = env();
+        let mut it = dev_iter(&mut env, &[(1, 1), (5, 1), (9, 1)]);
+        it.seek(&mut env, 0, 5);
+        assert_eq!(it.peek_key(), Some(5));
+        it.step_backward(&mut env, 0);
+        assert_eq!(it.peek_key(), Some(1));
+        it.step_forward(&mut env, 0);
+        assert_eq!(it.peek_key(), Some(5));
+    }
+
+    #[test]
+    fn reseek_resets_page_amortization() {
+        // regression: `nexts_since_read` must reset on SEEK, otherwise
+        // the first run of NEXTs after a re-seek is undercharged
+        let mut env = env();
+        let pairs: Vec<(Key, u32)> = (0..8).map(|k| (k, 1)).collect();
+        let mut it = dev_iter(&mut env, &pairs);
+        it.seek(&mut env, 0, 0);
+        // walk just below the per-page amortization threshold
+        let steps = it.entries_per_page - 1;
+        let mut t = 0;
+        for _ in 0..steps.min(7) {
+            t = it.step_forward(&mut env, t);
+        }
+        let counted = it.nexts_since_read;
+        assert!(counted > 0, "walk should accrue toward the next page");
+        it.seek(&mut env, t, 0);
+        assert_eq!(
+            it.nexts_since_read, 0,
+            "SEEK must restart the page-read amortization window"
+        );
+    }
+
+    #[test]
+    fn aggregated_cursor_interleaves_sources() {
         let mut env = env();
         // dev holds 2, 6; main holds 1, 4, 9
-        let mut dev = dev_iter(&mut env, &[(2, 10), (6, 10)]);
-        let meta = meta_with(&[2, 6]);
-        let main = LsmIterator::new(vec![e(1, 1), e(4, 1), e(9, 1)], vec![], vec![], vec![]);
-        let (mut scan, t0) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
+        let dev_runs = vec![Arc::new(vec![e(2, 10), e(6, 10)])];
+        let mut it = dual(vec![e(1, 1), e(4, 1), e(9, 1)], dev_runs, &[2, 6]);
+        let mut t = it.seek(&mut env, 0, 0);
         let mut keys = Vec::new();
-        let mut t = t0;
-        loop {
-            let (x, _blocks, nt) = scan.next(&mut env, t);
-            t = nt;
-            match x {
-                Some(x) => keys.push(x.key),
-                None => break,
-            }
+        while let Some(x) = it.entry() {
+            keys.push(x.key);
+            t = it.next(&mut env, t);
         }
         assert_eq!(keys, vec![1, 2, 4, 6, 9]);
     }
@@ -247,62 +487,108 @@ mod tests {
     #[test]
     fn dev_wins_on_duplicate_key() {
         let mut env = env();
-        let mut dev = dev_iter(&mut env, &[(4, 99)]);
-        let meta = meta_with(&[4]);
-        let main = LsmIterator::new(vec![e(4, 1), e(5, 1)], vec![], vec![], vec![]);
-        let (mut scan, t0) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
-        let (x, _, t) = scan.next(&mut env, t0);
-        assert_eq!(x.unwrap().seq, 99, "dev (redirected, newest) must win");
-        let (y, _, _) = scan.next(&mut env, t);
-        assert_eq!(y.unwrap().key, 5, "main's stale copy skipped");
+        let dev_runs = vec![Arc::new(vec![e(4, 99)])];
+        let mut it = dual(vec![e(4, 1), e(5, 1)], dev_runs, &[4]);
+        let t = it.seek(&mut env, 0, 0);
+        assert_eq!(it.entry().unwrap().seq, 99, "dev (redirected, newest) must win");
+        it.next(&mut env, t);
+        assert_eq!(it.entry().unwrap().key, 5, "main's stale copy skipped");
     }
 
     #[test]
     fn stale_dev_copy_loses_to_newer_main_write() {
         // dev holds key 4, but metadata says main owns it now
         let mut env = env();
-        let mut dev = dev_iter(&mut env, &[(4, 1)]);
-        let meta = meta_with(&[]);
-        let main = LsmIterator::new(vec![e(4, 50), e(5, 1)], vec![], vec![], vec![]);
-        let (mut scan, t0) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
-        let (x, _, t) = scan.next(&mut env, t0);
-        assert_eq!(x.unwrap().seq, 50, "main's newer copy must win");
-        let (y, _, _) = scan.next(&mut env, t);
-        assert_eq!(y.unwrap().key, 5);
+        let dev_runs = vec![Arc::new(vec![e(4, 1)])];
+        let mut it = dual(vec![e(4, 50), e(5, 1)], dev_runs, &[]);
+        let t = it.seek(&mut env, 0, 0);
+        assert_eq!(it.entry().unwrap().seq, 50, "main's newer copy must win");
+        it.next(&mut env, t);
+        assert_eq!(it.entry().unwrap().key, 5);
     }
 
     #[test]
     fn dev_tombstone_hides_older_main_copy() {
         let mut env = env();
-        let mut t0 = 0;
-        t0 = env
-            .device
-            .kv_put(0, t0, Entry::new(4, 9, ValueDesc::TOMBSTONE))
-            .unwrap();
-        let _ = t0;
-        let snap = env.device.kv_snapshot(0).unwrap();
-        let mut dev = DevIterator::new(0, snap, 16 * 1024, 4112);
-        let meta = meta_with(&[4]);
-        let main = LsmIterator::new(vec![e(4, 2), e(5, 1)], vec![], vec![], vec![]);
-        let (mut scan, t) = AggregatedScan::new(main, &mut dev, &meta, &mut env, 0, 0);
-        let (x, _, _) = scan.next(&mut env, t);
-        assert_eq!(x.unwrap().key, 5, "deleted key must not appear");
+        let dev_runs = vec![Arc::new(vec![Entry::new(4, 9, ValueDesc::TOMBSTONE)])];
+        let mut it = dual(vec![e(4, 2), e(5, 1)], dev_runs, &[4]);
+        it.seek(&mut env, 0, 0);
+        assert_eq!(it.entry().unwrap().key, 5, "deleted key must not appear");
+    }
+
+    #[test]
+    fn aggregated_reverse_interleaves() {
+        let mut env = env();
+        let dev_runs = vec![Arc::new(vec![e(2, 10), e(6, 10)])];
+        let mut it = dual(vec![e(1, 1), e(4, 1), e(9, 1)], dev_runs, &[2, 6]);
+        let mut t = it.seek_for_prev(&mut env, 0, 100);
+        let mut keys = Vec::new();
+        while let Some(x) = it.entry() {
+            keys.push(x.key);
+            t = it.prev(&mut env, t);
+        }
+        assert_eq!(keys, vec![9, 6, 4, 2, 1]);
+    }
+
+    #[test]
+    fn bounds_clip_the_aggregated_cursor() {
+        let mut env = env();
+        let dev_runs = vec![Arc::new(vec![e(2, 10), e(6, 10)])];
+        let pin = DevPin {
+            runs: dev_runs,
+            live: Arc::new([2u32, 6].into_iter().collect::<HashSet<Key>>()),
+            page_bytes: 16 * 1024,
+            avg_entry: 4112,
+        };
+        let snap = Snapshot::pin(
+            Seq::MAX,
+            Seq::MAX,
+            0,
+            vec![Arc::new(vec![e(1, 1), e(4, 1), e(9, 1)])],
+            vec![],
+            vec![],
+            Some(pin),
+        );
+        let mut it = EngineIterator::new(
+            snap,
+            &IterOptions::range(2, 9),
+            IterCost::from_opts(&LsmOptions::default()),
+            Arc::new(ScanCounters::default()),
+            new_block_cache(64),
+        );
+        let mut t = it.seek(&mut env, 0, 0); // clamped up to the lower bound
+        let mut keys = Vec::new();
+        while let Some(x) = it.entry() {
+            keys.push(x.key);
+            t = it.next(&mut env, t);
+        }
+        assert_eq!(keys, vec![2, 4, 6], "upper bound 9 is exclusive");
     }
 
     #[test]
     fn dev_nexts_charge_device_reads() {
         let mut env = env();
-        let pairs: Vec<(Key, u32)> = (0..40).map(|k| (k, 1)).collect();
-        let mut it = dev_iter(&mut env, &pairs);
+        let mut t0 = 0;
+        for k in 0..40u32 {
+            t0 = env.device.kv_put(0, t0, e(k, 1)).unwrap();
+        }
         // force data into NAND runs so reads are charged
-        env.device.kv.ns_mut(0).unwrap().flush(0, &mut env.device.nand, &mut env.device.ftl).ok();
-        let t0 = it.seek(&mut env, 0, 0);
-        let mut t = t0;
+        env.device
+            .kv
+            .ns_mut(0)
+            .unwrap()
+            .flush(0, &mut env.device.nand, &mut env.device.ftl)
+            .ok();
+        let snap = env.device.kv_snapshot(0).unwrap();
+        let mut it = DevIterator::new(snap.runs, 16 * 1024, 4112);
+        let t1 = it.seek(&mut env, t0, 0);
+        let mut t = t1;
         for _ in 0..40 {
             let (x, nt) = it.next(&mut env, t);
             assert!(x.is_some());
             t = nt;
         }
-        assert!(t > t0, "page-crossing nexts must cost device time");
+        assert!(t > t1, "page-crossing nexts must cost device time");
+        assert!(it.pages_read() > 0);
     }
 }

@@ -12,8 +12,10 @@
 //!   compaction hot path.
 //!
 //! All systems are driven through one store interface: the
-//! [`engine::KvEngine`] trait (put/get/delete/write_batch/scan/flush/
-//! finish), constructed by [`engine::EngineBuilder`], and loaded by the
+//! [`engine::KvEngine`] trait (put/get/delete/write_batch/snapshot/
+//! iter/scan/flush/finish — reads are cursor-first, with refcounted
+//! pinned snapshots; see `engine::iter`), constructed by
+//! [`engine::EngineBuilder`], and loaded by the
 //! event-driven multi-client scheduler ([`workload::client`] over
 //! [`sim::sched`]): N concurrent clients, open- or closed-loop, driven
 //! in global virtual-time order.

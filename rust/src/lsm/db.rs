@@ -8,9 +8,11 @@
 //! their *effects* apply when the clock catches up to their end.
 
 use std::collections::{HashSet, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 
 use anyhow::Result;
+
+use crate::engine::{new_block_cache, ScanCounters, SharedBlockCache, Snapshot, SnapshotInner};
 
 use crate::env::SimEnv;
 use crate::runtime::{BloomBuilder, MergeEngine};
@@ -106,6 +108,15 @@ pub struct LsmDb {
 
     cache: LruCache<(u64, usize), ()>,
 
+    /// Live snapshot registry (weak: a snapshot unpins by dropping).
+    snapshots: Vec<Weak<SnapshotInner>>,
+    /// Cursor read-amplification counters, shared with every iterator
+    /// this engine hands out.
+    pub scan_counters: Arc<ScanCounters>,
+    /// Scan-path block cache shared across cursors (repeated scans over
+    /// a hot range warm each other; the point-read cache is separate).
+    pub scan_cache: SharedBlockCache,
+
     pub stall: StallStats,
     pub stats: DbStats,
 }
@@ -128,6 +139,9 @@ impl LsmDb {
             busy: HashSet::new(),
             inflight_flushes: 0,
             inflight_compactions: 0,
+            snapshots: Vec::new(),
+            scan_counters: Arc::new(ScanCounters::default()),
+            scan_cache: new_block_cache(opts.block_cache_blocks),
             stall: StallStats::default(),
             stats: DbStats::default(),
             opts,
@@ -661,7 +675,9 @@ impl LsmDb {
         (None, at)
     }
 
-    /// Snapshot iterator over the whole store.
+    /// Snapshot iterator over the whole store (raw merging cursor; the
+    /// engine-level [`crate::engine::DbIterator`] adds latency charging,
+    /// bounds and the Dev-LSM source).
     pub fn iter(&self) -> LsmIterator {
         let mem = self.mem.to_entries();
         let imms: Vec<Vec<Entry>> = self.imms.iter().rev().map(|m| m.to_entries()).collect();
@@ -670,7 +686,72 @@ impl LsmDb {
         LsmIterator::new(mem, imms, l0, levels)
     }
 
-    /// Range scan: seek + up to `count` nexts, with block-touch charging.
+    /// Pin the current read view: materialize the memtable/immutable
+    /// runs, share the SST lists by refcount. Flushes and compactions
+    /// replace `Arc`s in the live version, so the pinned clones keep
+    /// every version this view can see alive.
+    pub fn pin_parts(
+        &mut self,
+    ) -> (
+        Seq,
+        Vec<Arc<Vec<Entry>>>,
+        Vec<Arc<super::sst::Sst>>,
+        Vec<Vec<Arc<super::sst::Sst>>>,
+    ) {
+        let mut runs: Vec<Arc<Vec<Entry>>> = Vec::with_capacity(1 + self.imms.len());
+        runs.push(self.mem.pin());
+        for m in self.imms.iter_mut().rev() {
+            runs.push(m.pin());
+        }
+        let l0 = self.version.levels[0].clone();
+        let levels = self.version.levels[1..].to_vec();
+        (self.seq, runs, l0, levels)
+    }
+
+    /// Take a refcounted snapshot of this store at `at`.
+    pub fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        self.catch_up(env, at);
+        let (seq, runs, l0, levels) = self.pin_parts();
+        let snap = Snapshot::pin(seq, 0, at, runs, l0, levels, None);
+        self.register_snapshot(&snap);
+        snap
+    }
+
+    /// Track a live snapshot (for `EngineHealth` reporting and so the
+    /// store can answer "what is the oldest pinned seq").
+    pub fn register_snapshot(&mut self, snap: &Snapshot) {
+        self.snapshots.retain(|w| w.strong_count() > 0);
+        self.snapshots.push(snap.downgrade());
+    }
+
+    pub fn live_snapshots(&self) -> usize {
+        self.snapshots.iter().filter(|w| w.strong_count() > 0).count()
+    }
+
+    /// Oldest sequence number a live snapshot still pins.
+    pub fn min_pinned_seq(&self) -> Option<Seq> {
+        self.snapshots.iter().filter_map(|w| w.upgrade()).map(|s| s.seq).min()
+    }
+
+    /// Build the engine cursor over `snap` — one construction site for
+    /// every engine (KVACCEL delegates here with its dual-interface
+    /// snapshot).
+    pub fn make_iter(
+        &self,
+        snap: Snapshot,
+        opts: &crate::engine::IterOptions,
+    ) -> Box<dyn crate::engine::DbIterator> {
+        Box::new(crate::engine::EngineIterator::new(
+            snap,
+            opts,
+            crate::engine::IterCost::from_opts(&self.opts),
+            self.scan_counters.clone(),
+            self.scan_cache.clone(),
+        ))
+    }
+
+    /// Range scan: a thin compatibility wrapper over the cursor API
+    /// (Seek + up to `count` Nexts through a fresh pinned snapshot).
     pub fn scan(
         &mut self,
         env: &mut SimEnv,
@@ -678,22 +759,7 @@ impl LsmDb {
         start: Key,
         count: usize,
     ) -> (Vec<Entry>, Nanos) {
-        self.catch_up(env, at);
-        let mut it = self.iter();
-        it.seek(start);
-        let mut out = Vec::with_capacity(count);
-        let mut at = at;
-        while out.len() < count {
-            let Some(e) = it.next() else { break };
-            env.cpu.charge(CpuClass::Foreground, at, self.opts.next_cpu_ns);
-            at += self.opts.next_cpu_ns;
-            for (sst, block) in it.drain_blocks() {
-                at = self.block_access(env, at, sst, block);
-            }
-            out.push(e);
-        }
-        env.clock.advance_to(at);
-        (out, at)
+        crate::engine::KvEngine::scan(self, env, at, start, count)
     }
 
     // -----------------------------------------------------------------
@@ -764,14 +830,21 @@ impl crate::engine::KvEngine for LsmDb {
         LsmDb::write_batch(self, env, at, batch)
     }
 
-    fn scan(
+    fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        LsmDb::snapshot(self, env, at)
+    }
+
+    fn iter(
         &mut self,
         env: &mut SimEnv,
         at: Nanos,
-        start: Key,
-        count: usize,
-    ) -> (Vec<Entry>, Nanos) {
-        LsmDb::scan(self, env, at, start, count)
+        opts: crate::engine::IterOptions,
+    ) -> Box<dyn crate::engine::DbIterator> {
+        let snap = match &opts.snapshot {
+            Some(s) => s.clone(),
+            None => LsmDb::snapshot(self, env, at),
+        };
+        self.make_iter(snap, &opts)
     }
 
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {

@@ -1,163 +1,447 @@
-//! Merging iterators over the Main-LSM (memtable + immutables + L0 files
-//! + one cursor per deeper level). Newest-wins dedup by source priority;
-//! tombstones are skipped for user-visible scans.
+//! The Main-LSM merging cursor: seekable, reversible, k-way merge over
+//! the memtable/immutable runs, L0 files and one cursor per deeper
+//! level, with *sequence-number visibility filtering* — entries newer
+//! than `visible_seq` are skipped, which is how snapshot reads see a
+//! frozen history instead of eagerly-deduped "latest" state.
 //!
-//! Block touches are accumulated in `blocks_touched` so the DB can charge
-//! cache lookups / device reads per Next() — Table V's read-amplification
-//! difference between Main-LSM and Dev-LSM iterators comes from exactly
-//! this accounting.
+//! Tombstones are filtered here only when `keep_tombstones` is false;
+//! the engine-level dual-interface cursor keeps them (a device-buffer
+//! copy may supersede or be superseded by a host tombstone — that
+//! decision needs the tombstone to surface).
+//!
+//! Block touches accumulate in `blocks_touched` so the owner can charge
+//! cache lookups / device reads per movement — Table V's
+//! read-amplification difference between Main-LSM and Dev-LSM cursors
+//! comes from exactly this accounting.
 
 use std::sync::Arc;
 
-use super::entry::{Entry, Key};
+use super::entry::{Entry, Key, Seq, MAX_USER_KEY};
 use super::sst::Sst;
 
-/// One sorted input source. Priority = position in the source list
-/// (lower index == newer data wins ties).
+/// One sorted input source.
 enum Source {
     /// Materialized sorted run (memtable/immutable snapshot).
-    Run(Vec<Entry>),
+    Run(Arc<Vec<Entry>>),
     /// A single SST.
     Table(Arc<Sst>),
     /// A level >= 1: disjoint tables sorted by key.
     Level(Vec<Arc<Sst>>),
 }
 
+/// A positional cursor over one source. Invariant: when `valid`,
+/// `(tbl, idx)` addresses an entry whose seq passed the visibility
+/// filter applied by the last movement.
 struct Cursor {
     src: Source,
-    /// entry index within the current table / run
-    idx: usize,
-    /// table index (Level sources)
     tbl: usize,
+    idx: usize,
+    valid: bool,
 }
 
 impl Cursor {
-    fn seek(&mut self, key: Key) {
+    fn new(src: Source) -> Self {
+        Self { src, tbl: 0, idx: 0, valid: false }
+    }
+
+    fn tables(&self) -> usize {
         match &self.src {
-            Source::Run(v) => {
-                self.idx = v.partition_point(|e| e.key < key);
-            }
-            Source::Table(t) => {
-                self.idx = t.lower_bound(key);
-            }
-            Source::Level(tables) => {
-                self.tbl = tables.partition_point(|t| t.largest < key);
-                self.idx = match tables.get(self.tbl) {
-                    Some(t) => t.lower_bound(key),
-                    None => 0,
-                };
+            Source::Run(_) | Source::Table(_) => 1,
+            Source::Level(v) => v.len(),
+        }
+    }
+
+    fn seg(&self, tbl: usize) -> &[Entry] {
+        match &self.src {
+            Source::Run(v) => v.as_slice(),
+            Source::Table(t) => t.entries.as_slice(),
+            Source::Level(v) => v[tbl].entries.as_slice(),
+        }
+    }
+
+    /// Record a block touch for the entry at `(tbl, idx)` (SST sources
+    /// only; in-memory runs are free).
+    fn charge(&self, tbl: usize, idx: usize, blocks: &mut Vec<(u64, usize)>) {
+        match &self.src {
+            Source::Run(_) => {}
+            Source::Table(t) => blocks.push((t.id, t.block_of(idx))),
+            Source::Level(v) => {
+                let t = &v[tbl];
+                blocks.push((t.id, t.block_of(idx)));
             }
         }
     }
 
     fn peek(&self) -> Option<Entry> {
-        match &self.src {
-            Source::Run(v) => v.get(self.idx).copied(),
-            Source::Table(t) => t.entries.get(self.idx).copied(),
-            Source::Level(tables) => {
-                let t = tables.get(self.tbl)?;
-                t.entries.get(self.idx).copied()
+        if !self.valid {
+            return None;
+        }
+        self.seg(self.tbl).get(self.idx).copied()
+    }
+
+    /// Raw forward step across table boundaries.
+    fn raw_next(&mut self) -> bool {
+        self.idx += 1;
+        while self.tbl < self.tables() && self.idx >= self.seg(self.tbl).len() {
+            self.tbl += 1;
+            self.idx = 0;
+        }
+        self.valid = self.tbl < self.tables();
+        self.valid
+    }
+
+    /// Raw backward step across table boundaries.
+    fn raw_prev(&mut self) -> bool {
+        loop {
+            if self.idx > 0 {
+                self.idx -= 1;
+                self.valid = true;
+                return true;
+            }
+            if self.tbl == 0 {
+                self.valid = false;
+                return false;
+            }
+            self.tbl -= 1;
+            self.idx = self.seg(self.tbl).len();
+            // loop decrements into the new table (skips it when empty)
+        }
+    }
+
+    /// Skip entries invisible to the snapshot (seq > `vis`), forward.
+    fn norm_fwd(&mut self, vis: Seq, blocks: &mut Vec<(u64, usize)>) {
+        while let Some(e) = self.peek() {
+            if e.seq <= vis {
+                return;
+            }
+            self.charge(self.tbl, self.idx, blocks);
+            if !self.raw_next() {
+                return;
             }
         }
     }
 
-    /// Advance; push any (sst_id, block) touched into `blocks`.
-    fn advance(&mut self, blocks: &mut Vec<(u64, usize)>) {
-        match &self.src {
-            Source::Run(_) => self.idx += 1,
-            Source::Table(t) => {
-                blocks.push((t.id, t.block_of(self.idx)));
-                self.idx += 1;
+    fn norm_bwd(&mut self, vis: Seq, blocks: &mut Vec<(u64, usize)>) {
+        while let Some(e) = self.peek() {
+            if e.seq <= vis {
+                return;
             }
-            Source::Level(tables) => {
-                if let Some(t) = tables.get(self.tbl) {
-                    blocks.push((t.id, t.block_of(self.idx)));
-                    self.idx += 1;
-                    if self.idx >= t.entries.len() {
-                        self.tbl += 1;
-                        self.idx = 0;
-                    }
-                }
+            self.charge(self.tbl, self.idx, blocks);
+            if !self.raw_prev() {
+                return;
             }
         }
     }
+
+    /// Position at the first visible entry with key >= `key`.
+    fn seek_fwd(&mut self, key: Key, vis: Seq, blocks: &mut Vec<(u64, usize)>) {
+        match &self.src {
+            Source::Run(v) => {
+                self.tbl = 0;
+                self.idx = v.partition_point(|e| e.key < key);
+                self.valid = self.idx < v.len();
+            }
+            Source::Table(t) => {
+                self.tbl = 0;
+                self.idx = t.lower_bound(key);
+                self.valid = self.idx < t.entries.len();
+            }
+            Source::Level(tables) => {
+                self.tbl = tables.partition_point(|t| t.largest < key);
+                if self.tbl < tables.len() {
+                    // this table's largest >= key, so lower_bound is in
+                    // range
+                    self.idx = tables[self.tbl].lower_bound(key);
+                    self.valid = true;
+                } else {
+                    self.idx = 0;
+                    self.valid = false;
+                }
+            }
+        }
+        if self.valid {
+            self.norm_fwd(vis, blocks);
+        }
+    }
+
+    /// Position at the last visible entry with key <= `key`.
+    fn seek_bwd(&mut self, key: Key, vis: Seq, blocks: &mut Vec<(u64, usize)>) {
+        match &self.src {
+            Source::Run(v) => {
+                self.tbl = 0;
+                let pp = v.partition_point(|e| e.key <= key);
+                self.valid = pp > 0;
+                self.idx = pp.saturating_sub(1);
+            }
+            Source::Table(t) => {
+                self.tbl = 0;
+                let pp = t.entries.partition_point(|e| e.key <= key);
+                self.valid = pp > 0;
+                self.idx = pp.saturating_sub(1);
+            }
+            Source::Level(tables) => {
+                // last table whose smallest key is <= `key`
+                let tb = tables.partition_point(|t| t.smallest <= key);
+                if tb == 0 {
+                    self.tbl = 0;
+                    self.idx = 0;
+                    self.valid = false;
+                } else {
+                    self.tbl = tb - 1;
+                    let ents = &tables[self.tbl].entries;
+                    let pp = ents.partition_point(|e| e.key <= key);
+                    // smallest <= key implies pp >= 1
+                    self.idx = pp.saturating_sub(1);
+                    self.valid = pp > 0;
+                }
+            }
+        }
+        if self.valid {
+            self.norm_bwd(vis, blocks);
+        }
+    }
+
+    /// Consume every entry with key <= `key` (forward direction), then
+    /// re-apply the visibility filter.
+    fn skip_past_fwd(&mut self, key: Key, vis: Seq, blocks: &mut Vec<(u64, usize)>) {
+        while let Some(e) = self.peek() {
+            if e.key > key {
+                break;
+            }
+            self.charge(self.tbl, self.idx, blocks);
+            if !self.raw_next() {
+                return;
+            }
+        }
+        self.norm_fwd(vis, blocks);
+    }
+
+    /// Consume every entry with key >= `key` (backward direction).
+    fn skip_past_bwd(&mut self, key: Key, vis: Seq, blocks: &mut Vec<(u64, usize)>) {
+        while let Some(e) = self.peek() {
+            if e.key < key {
+                break;
+            }
+            self.charge(self.tbl, self.idx, blocks);
+            if !self.raw_prev() {
+                return;
+            }
+        }
+        self.norm_bwd(vis, blocks);
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    Forward,
+    Backward,
 }
 
 pub struct LsmIterator {
     sources: Vec<Cursor>,
     /// (sst_id, block_idx) touched since last drain — caller charges I/O.
     pub blocks_touched: Vec<(u64, usize)>,
-    /// include tombstones in output (internal scans want them)
+    /// include tombstones in output (the engine-level merge wants them)
     pub keep_tombstones: bool,
+    visible_seq: Seq,
+    dir: Dir,
+    current: Option<Entry>,
 }
 
 impl LsmIterator {
-    /// Build from snapshot pieces, newest first:
-    /// memtable run, imm runs (newest first), L0 tables (newest first),
-    /// then levels 1..N.
+    /// Build from snapshot pieces, newest first: memtable run, imm runs
+    /// (newest first), L0 tables (newest first), then levels 1..N.
     pub fn new(
         mem: Vec<Entry>,
         imms: Vec<Vec<Entry>>,
         l0: Vec<Arc<Sst>>,
         levels: Vec<Vec<Arc<Sst>>>,
     ) -> Self {
-        let mut sources = Vec::new();
-        sources.push(Cursor { src: Source::Run(mem), idx: 0, tbl: 0 });
-        for run in imms {
-            sources.push(Cursor { src: Source::Run(run), idx: 0, tbl: 0 });
+        let mut runs = Vec::with_capacity(1 + imms.len());
+        runs.push(Arc::new(mem));
+        runs.extend(imms.into_iter().map(Arc::new));
+        Self::from_runs(runs, l0, levels)
+    }
+
+    /// Build from refcount-shared runs (the snapshot-pinned path).
+    pub fn from_runs(
+        runs: Vec<Arc<Vec<Entry>>>,
+        l0: Vec<Arc<Sst>>,
+        levels: Vec<Vec<Arc<Sst>>>,
+    ) -> Self {
+        let mut sources = Vec::with_capacity(runs.len() + l0.len() + levels.len());
+        for r in runs {
+            sources.push(Cursor::new(Source::Run(r)));
         }
         for t in l0 {
-            sources.push(Cursor { src: Source::Table(t), idx: 0, tbl: 0 });
+            sources.push(Cursor::new(Source::Table(t)));
         }
         for lvl in levels {
-            sources.push(Cursor { src: Source::Level(lvl), idx: 0, tbl: 0 });
+            sources.push(Cursor::new(Source::Level(lvl)));
         }
         Self {
             sources,
             blocks_touched: Vec::new(),
             keep_tombstones: false,
+            visible_seq: Seq::MAX,
+            dir: Dir::Forward,
+            current: None,
         }
     }
 
+    /// Hide entries with seq beyond this bound (snapshot visibility).
+    pub fn with_visible_seq(mut self, seq: Seq) -> Self {
+        self.visible_seq = seq;
+        self
+    }
+
+    pub fn with_tombstones(mut self, keep: bool) -> Self {
+        self.keep_tombstones = keep;
+        self
+    }
+
+    pub fn valid(&self) -> bool {
+        self.current.is_some()
+    }
+
+    /// Current entry without advancing.
+    pub fn entry(&self) -> Option<Entry> {
+        self.current
+    }
+
+    /// Position at the first visible entry with key >= `key`.
     pub fn seek(&mut self, key: Key) {
-        for s in &mut self.sources {
-            s.seek(key);
+        self.dir = Dir::Forward;
+        let vis = self.visible_seq;
+        for c in &mut self.sources {
+            c.seek_fwd(key, vis, &mut self.blocks_touched);
         }
+        self.settle_fwd();
     }
 
-    /// Next user-visible entry in ascending key order (newest version per
-    /// key; tombstoned keys skipped unless `keep_tombstones`).
-    pub fn next(&mut self) -> Option<Entry> {
+    pub fn seek_to_first(&mut self) {
+        self.seek(0);
+    }
+
+    /// Position at the last visible entry with key <= `key`.
+    pub fn seek_for_prev(&mut self, key: Key) {
+        self.dir = Dir::Backward;
+        let vis = self.visible_seq;
+        for c in &mut self.sources {
+            c.seek_bwd(key, vis, &mut self.blocks_touched);
+        }
+        self.settle_bwd();
+    }
+
+    pub fn seek_to_last(&mut self) {
+        self.seek_for_prev(MAX_USER_KEY);
+    }
+
+    /// Winner among source heads: smallest key; equal keys resolve to
+    /// the highest (newest) visible sequence number.
+    fn pick_fwd(&self) -> Option<Entry> {
+        let mut best: Option<Entry> = None;
+        for c in &self.sources {
+            if let Some(e) = c.peek() {
+                best = Some(match best {
+                    None => e,
+                    Some(b) if e.key < b.key || (e.key == b.key && e.seq > b.seq) => e,
+                    Some(b) => b,
+                });
+            }
+        }
+        best
+    }
+
+    fn pick_bwd(&self) -> Option<Entry> {
+        let mut best: Option<Entry> = None;
+        for c in &self.sources {
+            if let Some(e) = c.peek() {
+                best = Some(match best {
+                    None => e,
+                    Some(b) if e.key > b.key || (e.key == b.key && e.seq > b.seq) => e,
+                    Some(b) => b,
+                });
+            }
+        }
+        best
+    }
+
+    fn settle_fwd(&mut self) {
         loop {
-            // find the smallest key among sources; lowest source index
-            // wins ties (it is the newest).
-            let mut best: Option<(Key, usize)> = None;
-            for (i, s) in self.sources.iter().enumerate() {
-                if let Some(e) = s.peek() {
-                    match best {
-                        None => best = Some((e.key, i)),
-                        Some((bk, _)) if e.key < bk => best = Some((e.key, i)),
-                        _ => {}
-                    }
-                }
+            let Some(e) = self.pick_fwd() else {
+                self.current = None;
+                return;
+            };
+            let vis = self.visible_seq;
+            for c in &mut self.sources {
+                c.skip_past_fwd(e.key, vis, &mut self.blocks_touched);
             }
-            let (key, winner) = best?;
-            let entry = self.sources[winner].peek().unwrap();
-            // advance every source sitting on this key (skips older dups)
-            for s in &mut self.sources {
-                while let Some(e) = s.peek() {
-                    if e.key == key {
-                        s.advance(&mut self.blocks_touched);
-                    } else {
-                        break;
-                    }
-                }
-            }
-            if entry.val.is_tombstone() && !self.keep_tombstones {
+            if e.val.is_tombstone() && !self.keep_tombstones {
                 continue;
             }
-            return Some(entry);
+            self.current = Some(e);
+            return;
         }
+    }
+
+    fn settle_bwd(&mut self) {
+        loop {
+            let Some(e) = self.pick_bwd() else {
+                self.current = None;
+                return;
+            };
+            let vis = self.visible_seq;
+            for c in &mut self.sources {
+                c.skip_past_bwd(e.key, vis, &mut self.blocks_touched);
+            }
+            if e.val.is_tombstone() && !self.keep_tombstones {
+                continue;
+            }
+            self.current = Some(e);
+            return;
+        }
+    }
+
+    /// Move to the next visible entry (ascending). Direction switches
+    /// re-seek every cursor past the current key.
+    pub fn step_forward(&mut self) {
+        let Some(cur) = self.current else { return };
+        if self.dir == Dir::Backward {
+            let from = cur.key.saturating_add(1);
+            let vis = self.visible_seq;
+            for c in &mut self.sources {
+                c.seek_fwd(from, vis, &mut self.blocks_touched);
+            }
+            self.dir = Dir::Forward;
+        }
+        self.settle_fwd();
+    }
+
+    /// Move to the previous visible entry (descending).
+    pub fn step_backward(&mut self) {
+        let Some(cur) = self.current else { return };
+        if self.dir == Dir::Forward {
+            if cur.key == 0 {
+                self.current = None;
+                self.dir = Dir::Backward;
+                return;
+            }
+            let vis = self.visible_seq;
+            for c in &mut self.sources {
+                c.seek_bwd(cur.key - 1, vis, &mut self.blocks_touched);
+            }
+            self.dir = Dir::Backward;
+        }
+        self.settle_bwd();
+    }
+
+    /// Streaming accessor: return the current entry and advance
+    /// (ascending) — the shape the scan wrapper and tests consume.
+    pub fn next(&mut self) -> Option<Entry> {
+        let e = self.current?;
+        self.step_forward();
+        Some(e)
     }
 
     pub fn drain_blocks(&mut self) -> Vec<(u64, usize)> {
@@ -245,5 +529,102 @@ mod tests {
         let mut it = LsmIterator::new(mem, imms, l0, vec![]);
         it.seek(0);
         assert_eq!(it.next().unwrap().seq, 80);
+    }
+
+    #[test]
+    fn reverse_iteration_descends() {
+        let mem = vec![e(2, 100)];
+        let l0 = vec![sst(1, vec![e(1, 50), e(2, 50), e(5, 50)])];
+        let levels = vec![vec![sst(2, vec![e(3, 10), e(9, 10)])]];
+        let mut it = LsmIterator::new(mem, vec![], l0, levels);
+        it.seek_to_last();
+        let mut got = Vec::new();
+        while let Some(x) = it.entry() {
+            got.push((x.key, x.seq));
+            it.step_backward();
+        }
+        assert_eq!(got, vec![(9, 10), (5, 50), (3, 10), (2, 100), (1, 50)]);
+    }
+
+    #[test]
+    fn seek_for_prev_lands_on_floor_key() {
+        let l0 = vec![sst(1, vec![e(10, 1), e(20, 1), e(30, 1)])];
+        let mut it = LsmIterator::new(vec![], vec![], l0, vec![]);
+        it.seek_for_prev(25);
+        assert_eq!(it.entry().unwrap().key, 20);
+        it.seek_for_prev(30);
+        assert_eq!(it.entry().unwrap().key, 30);
+        it.seek_for_prev(9);
+        assert!(!it.valid());
+    }
+
+    #[test]
+    fn direction_switch_mid_iteration() {
+        let l0 = vec![sst(1, (0..10).map(|k| e(k, 1)).collect())];
+        let mut it = LsmIterator::new(vec![], vec![], l0, vec![]);
+        it.seek(4);
+        assert_eq!(it.entry().unwrap().key, 4);
+        it.step_forward();
+        assert_eq!(it.entry().unwrap().key, 5);
+        it.step_backward();
+        assert_eq!(it.entry().unwrap().key, 4);
+        it.step_backward();
+        assert_eq!(it.entry().unwrap().key, 3);
+        it.step_forward();
+        assert_eq!(it.entry().unwrap().key, 4);
+    }
+
+    #[test]
+    fn visible_seq_filters_newer_writes() {
+        // two versions of key 1 across sources; a snapshot at seq 40
+        // must see the older one, and must not see key 3 at all
+        let mem = vec![e(1, 90), e(3, 95)];
+        let l0 = vec![sst(1, vec![e(1, 30), e(2, 30)])];
+        let mut it = LsmIterator::new(mem, vec![], l0, vec![]).with_visible_seq(40);
+        it.seek(0);
+        let got: Vec<(Key, u32)> =
+            std::iter::from_fn(|| it.next()).map(|x| (x.key, x.seq)).collect();
+        assert_eq!(got, vec![(1, 30), (2, 30)]);
+    }
+
+    #[test]
+    fn visible_seq_filters_in_reverse() {
+        let mem = vec![e(1, 90), e(3, 95)];
+        let l0 = vec![sst(1, vec![e(1, 30), e(2, 30)])];
+        let mut it = LsmIterator::new(mem, vec![], l0, vec![]).with_visible_seq(40);
+        it.seek_to_last();
+        let mut got = Vec::new();
+        while let Some(x) = it.entry() {
+            got.push((x.key, x.seq));
+            it.step_backward();
+        }
+        assert_eq!(got, vec![(2, 30), (1, 30)]);
+    }
+
+    #[test]
+    fn kept_tombstones_surface_in_output() {
+        let mem = vec![Entry::new(1, 9, ValueDesc::TOMBSTONE)];
+        let l0 = vec![sst(1, vec![e(1, 5), e(2, 5)])];
+        let mut it =
+            LsmIterator::new(mem, vec![], l0, vec![]).with_tombstones(true);
+        it.seek(0);
+        let first = it.next().unwrap();
+        assert_eq!(first.key, 1);
+        assert!(first.val.is_tombstone());
+        assert_eq!(it.next().unwrap().key, 2);
+    }
+
+    #[test]
+    fn reverse_tombstones_hide_keys() {
+        let mem = vec![Entry::new(2, 9, ValueDesc::TOMBSTONE)];
+        let l0 = vec![sst(1, vec![e(1, 5), e(2, 5), e(3, 5)])];
+        let mut it = LsmIterator::new(mem, vec![], l0, vec![]);
+        it.seek_to_last();
+        let mut keys = Vec::new();
+        while let Some(x) = it.entry() {
+            keys.push(x.key);
+            it.step_backward();
+        }
+        assert_eq!(keys, vec![3, 1]);
     }
 }

@@ -2,6 +2,7 @@
 //! the skiplist: same ordering semantics, deterministic iteration.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use super::entry::{Entry, Key, Seq, ValueDesc};
 
@@ -12,6 +13,9 @@ pub struct Memtable {
     /// Sequence range held (for WAL release bookkeeping).
     pub min_seq: Seq,
     pub max_seq: Seq,
+    /// Cached materialized run handed to snapshots; invalidated on
+    /// insert (copy-on-write pinning — immutable memtables pin in O(1)).
+    pinned: Option<Arc<Vec<Entry>>>,
 }
 
 impl Memtable {
@@ -21,6 +25,7 @@ impl Memtable {
             bytes: 0,
             min_seq: Seq::MAX,
             max_seq: 0,
+            pinned: None,
         }
     }
 
@@ -28,6 +33,7 @@ impl Memtable {
         self.bytes += e.encoded_len();
         self.min_seq = self.min_seq.min(e.seq);
         self.max_seq = self.max_seq.max(e.seq);
+        self.pinned = None;
         self.map.insert(e.key, (e.seq, e.val));
     }
 
@@ -55,6 +61,17 @@ impl Memtable {
             .iter()
             .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
             .collect()
+    }
+
+    /// Refcounted materialized run for snapshot pinning; cached until
+    /// the next insert, so read-only phases pin in O(1).
+    pub fn pin(&mut self) -> Arc<Vec<Entry>> {
+        if let Some(p) = &self.pinned {
+            return p.clone();
+        }
+        let p = Arc::new(self.to_entries());
+        self.pinned = Some(p.clone());
+        p
     }
 
     /// Range scan over [start, end) — newest value per key by

@@ -1,17 +1,19 @@
 //! KVACCEL CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   run <workload>      run a single workload (A|B|C|D) on one system
+//!   run <workload>      run a single workload (A|B|C|D|E / ycsb-e) on one system
 //!   experiment <id|all> regenerate a paper figure/table (see DESIGN.md)
-//!   bench               fixed open-loop comparison -> BENCH_PR2.json
+//!   bench               fixed open-loop comparison -> BENCH_PR2.json,
+//!                       plus the scan-path bench -> BENCH_PR3.json
 //!   inspect             print artifact + device model info
 //!
 //! Examples:
 //!   kvaccel run A --system kvaccel --threads 4 --scale 0.1
 //!   kvaccel run A --clients 8 --loop-mode open --rate 50000 --dist zipfian
 //!   kvaccel run B --system rocksdb --clients 2 --loop-mode poisson --rate 20000
+//!   kvaccel run ycsb-e --system kvaccel --scan-len 1:100 --dist zipfian
 //!   kvaccel experiment fig12 --scale 0.25 --engine xla
-//!   kvaccel bench --out BENCH_PR2.json --scale 0.02
+//!   kvaccel bench --out BENCH_PR2.json --scan-out BENCH_PR3.json --scale 0.02
 //!
 //! Workload scheduler flags (run):
 //!   --clients N          concurrent clients (default 1)
@@ -20,6 +22,8 @@
 //!   --think-ms T         closed-loop think time per op (default 0)
 //!   --dist D             uniform | zipfian | latest (default uniform)
 //!   --theta F            zipfian skew in (0,1) (default 0.99)
+//!   --scan-len L[:H]     YCSB-E Next count per scan: fixed L, or
+//!                        uniform in [L, H] (default 1:100)
 
 use anyhow::{anyhow, Result};
 
@@ -53,13 +57,14 @@ fn real_main() -> Result<()> {
             println!("kvaccel — host-SSD collaborative write accelerator (paper reproduction)");
             println!();
             println!("usage:");
-            println!("  kvaccel run <A|B|C|D> [--system rocksdb|rocksdb-nosd|adoc|kvaccel|kvaccel-lazy|kvaccel-eager]");
+            println!("  kvaccel run <A|B|C|D|E|ycsb-e> [--system rocksdb|rocksdb-nosd|adoc|kvaccel|kvaccel-lazy|kvaccel-eager]");
             println!("              [--threads N] [--scale F] [--seed N] [--engine rust|xla]");
             println!("              [--clients N] [--loop-mode closed|open|poisson] [--rate OPS_S]");
             println!("              [--think-ms T] [--dist uniform|zipfian|latest] [--theta F]");
+            println!("              [--scan-len L[:H]]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
-            println!("  kvaccel bench [--out BENCH_PR2.json] [--scale F] [--rate OPS_S] [--clients N]");
+            println!("  kvaccel bench [--out BENCH_PR2.json] [--scan-out BENCH_PR3.json] [--scale F] [--rate OPS_S] [--clients N]");
             println!("  kvaccel inspect");
             Ok(())
         }
@@ -95,6 +100,32 @@ fn parse_loop_mode(args: &Args) -> Result<LoopMode> {
         "poisson" | "open-poisson" => LoopMode::OpenPoisson { ops_per_sec: rate },
         other => return Err(anyhow!("unknown loop mode {other:?} (closed|open|poisson)")),
     })
+}
+
+/// `--scan-len L` (fixed) or `--scan-len L:H` (uniform in [L, H]);
+/// defaults to YCSB-E's uniform 1..100.
+fn parse_scan_len(args: &Args) -> Result<(usize, usize)> {
+    let Some(s) = args.get("scan-len") else { return Ok((1, 100)) };
+    let parse = |v: &str| -> Result<usize> {
+        v.parse()
+            .map_err(|_| anyhow!("--scan-len expects an integer or L:H, got {v:?}"))
+    };
+    match s.split_once(':') {
+        Some((lo, hi)) => {
+            let (lo, hi) = (parse(lo)?, parse(hi)?);
+            if lo == 0 || hi < lo {
+                return Err(anyhow!("--scan-len L:H needs 1 <= L <= H, got {s:?}"));
+            }
+            Ok((lo, hi))
+        }
+        None => {
+            let n = parse(s)?;
+            if n == 0 {
+                return Err(anyhow!("--scan-len must be >= 1"));
+            }
+            Ok((n, n))
+        }
+    }
 }
 
 fn parse_dist(args: &Args) -> Result<KeyDist> {
@@ -152,16 +183,32 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         "D" => {
             // seekrandom is a single sequential scanner; scheduler knobs
-            // apply to A/B/C
+            // apply to A/B/C/E
             let preload_bytes = ((20u64 << 30) as f64 * scale) as u64;
             let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
             let r = workload::seekrandom(
                 &mut *sys, &mut env, &cfg, (60_000f64 * scale) as usize, 1024, t0,
             );
             let line = "clients       1 (sequential seekrandom; \
-                --clients/--loop-mode/--rate/--dist apply to A|B|C)"
+                --clients/--loop-mode/--rate/--dist apply to A|B|C|E)"
                 .to_string();
             (r, line)
+        }
+        "E" | "YCSB-E" => {
+            // YCSB-E: preload a working set, then the scan-heavy mix
+            let (slo, shi) = parse_scan_len(args)?;
+            let preload_bytes = ((4u64 << 30) as f64 * scale) as u64;
+            let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
+            let spec = workload::WorkloadSpec {
+                start_at: t0,
+                ..workload::ycsb_e(&cfg, clients, mode, dist, slo, shi)
+            };
+            let line = format!(
+                "clients       {} [{}] dist {dist:?} scan-len {slo}..{shi}",
+                spec.clients.len(),
+                describe_clients(&spec)
+            );
+            (workload::run_spec(&mut *sys, &mut env, &spec), line)
         }
         other => return Err(anyhow!("unknown workload {other:?}")),
     };
@@ -179,7 +226,13 @@ fn describe_clients(spec: &kvaccel::workload::WorkloadSpec) -> String {
     spec.clients
         .iter()
         .map(|c| {
-            let role = if c.mix.get > 0 && c.mix.put == 0 { "reader" } else { "writer" };
+            let role = if c.mix.scan > 0 && c.mix.scan >= c.mix.put {
+                "scanner"
+            } else if c.mix.get > 0 && c.mix.put == 0 {
+                "reader"
+            } else {
+                "writer"
+            };
             let paced = if c.pace.is_some() { "(paced)" } else { "" };
             match c.mode {
                 LoopMode::Closed { think: 0 } => format!("{role}{paced}:closed"),
@@ -211,6 +264,20 @@ fn print_result(r: &RunResult) {
             "queue delay   p50 {} / p99 {} (open-loop wait before service)",
             fmt::nanos(r.queue_delay.p50_us * 1e3),
             fmt::nanos(r.queue_delay.p99_us * 1e3)
+        );
+    }
+    if r.scans.total > 0 {
+        println!(
+            "scans         {} cursors ({:.1} Kops/s), p50/p99 {} / {}",
+            r.scans.total,
+            r.scan_kops(),
+            fmt::nanos(r.scan_lat.p50_us * 1e3),
+            fmt::nanos(r.scan_lat.p99_us * 1e3)
+        );
+        println!(
+            "scan read-amp {:.3} blocks/next (main-lsm), {:.3} pages/next (dev-lsm)",
+            r.scan_amp.main_blocks_per_next(),
+            r.scan_amp.dev_pages_per_next()
         );
     }
     println!("throughput    {:.1} MB/s user writes", r.write_mbps);
@@ -304,6 +371,74 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
     std::fs::write(&out, &json)?;
     println!("\nwrote {out}");
+
+    // scan-path bench (PR3): YCSB-E cursors after a preload, reporting
+    // scan throughput/p99 and per-Next read amplification per interface
+    let scan_out = args.get_or("scan-out", "BENCH_PR3.json").to_string();
+    let mut srows = Vec::new();
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        let mut sys = EngineBuilder::new(kind)
+            .opts(LsmOptions::default().with_threads(threads))
+            .build();
+        let mut env = SimEnv::new(seed, SsdConfig::default());
+        let preload_bytes = ((4u64 << 30) as f64 * scale) as u64;
+        let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
+        let spec = workload::WorkloadSpec {
+            start_at: t0,
+            ..workload::ycsb_e(
+                &cfg,
+                clients,
+                LoopMode::Closed { think: 0 },
+                KeyDist::Uniform,
+                1,
+                100,
+            )
+        };
+        let r = workload::run_spec(&mut *sys, &mut env, &spec);
+        println!("== {} (ycsb-e) ==", kind.label());
+        print_result(&r);
+        srows.push(format!(
+            concat!(
+                "    \"{}\": {{\"scan_ops\": {}, \"scan_kops\": {:.3}, ",
+                "\"scan_p50_us\": {:.2}, \"scan_p99_us\": {:.2}, ",
+                "\"nexts\": {}, \"seeks\": {}, ",
+                "\"read_amp_main_blocks_per_next\": {:.4}, ",
+                "\"read_amp_dev_pages_per_next\": {:.4}, ",
+                "\"write_ops\": {}, \"stall_stopped_s\": {:.3}}}"
+            ),
+            kind.label(),
+            r.scans.total,
+            r.scan_kops(),
+            r.scan_lat.p50_us,
+            r.scan_lat.p99_us,
+            r.scan_amp.nexts,
+            r.scan_amp.seeks,
+            r.scan_amp.main_blocks_per_next(),
+            r.scan_amp.dev_pages_per_next(),
+            r.writes.total,
+            r.stopped_s,
+        ));
+    }
+    let scan_json = format!(
+        concat!(
+            "{{\n  \"schema\": \"kvaccel-scanbench-v1\",\n",
+            "  \"config\": {{\"workload\": \"E/ycsb-e\", \"scan_len\": \"uniform 1..100\", ",
+            "\"loop_mode\": \"closed\", \"clients\": {}, \"threads\": {}, ",
+            "\"scale\": {}, \"seed\": {}}},\n",
+            "  \"systems\": {{\n{}\n  }}\n}}\n"
+        ),
+        clients,
+        threads,
+        scale,
+        seed,
+        srows.join(",\n"),
+    );
+    std::fs::write(&scan_out, &scan_json)?;
+    println!("\nwrote {scan_out}");
     Ok(())
 }
 

@@ -203,7 +203,7 @@ impl SsdDevice {
     }
 
     /// Snapshot for host-side dual iterators (range queries).
-    pub fn kv_snapshot(&self, ns: NamespaceId) -> Result<DevSnapshot> {
+    pub fn kv_snapshot(&mut self, ns: NamespaceId) -> Result<DevSnapshot> {
         self.kv.snapshot(ns)
     }
 

@@ -76,6 +76,9 @@ pub struct DevLsm {
     runs: Vec<DevRun>, // newest first
     /// Single ARM core busy horizon.
     arm_free: Nanos,
+    /// Cached materialized memtable run handed to snapshots;
+    /// invalidated on every memtable mutation (copy-on-write pinning).
+    pinned_mem: Option<Arc<Vec<Entry>>>,
     pub stats: DevLsmStats,
 }
 
@@ -87,6 +90,7 @@ impl DevLsm {
             mem_bytes: 0,
             runs: Vec::new(),
             arm_free: 0,
+            pinned_mem: None,
             stats: DevLsmStats::default(),
         }
     }
@@ -128,6 +132,7 @@ impl DevLsm {
         let ack = self.arm(t, self.cfg.arm_put_ns);
         let sz = entry.encoded_len();
         self.mem_bytes += sz;
+        self.pinned_mem = None;
         self.mem.insert(entry.key, (entry.seq, entry.val));
         if self.mem_bytes >= self.cfg.memtable_bytes {
             charged += self.flush(ack, nand, ftl)?;
@@ -164,6 +169,7 @@ impl DevLsm {
         );
         self.mem.clear();
         self.mem_bytes = 0;
+        self.pinned_mem = None;
         if self.cfg.compact_run_trigger > 0 && self.runs.len() > self.cfg.compact_run_trigger
         {
             return Ok(work + self.compact_runs(ready, nand, ftl)?);
@@ -284,17 +290,24 @@ impl DevLsm {
         }
         self.mem.clear();
         self.mem_bytes = 0;
+        self.pinned_mem = None;
         self.arm(t, 10 * MICROS)
     }
 
     /// Snapshot for a range iterator (memtable materialized + run refs).
-    pub fn iter_snapshot(&self) -> DevSnapshot {
-        let mem_run: Vec<Entry> = self
-            .mem
-            .iter()
-            .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
-            .collect();
-        let mut runs: Vec<Arc<Vec<Entry>>> = vec![Arc::new(mem_run)];
+    /// The memtable run is cached copy-on-write, so read-only stretches
+    /// (seekrandom, scan-heavy mixes) snapshot in O(runs).
+    pub fn iter_snapshot(&mut self) -> DevSnapshot {
+        if self.pinned_mem.is_none() {
+            let mem_run: Vec<Entry> = self
+                .mem
+                .iter()
+                .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
+                .collect();
+            self.pinned_mem = Some(Arc::new(mem_run));
+        }
+        let mut runs: Vec<Arc<Vec<Entry>>> =
+            vec![self.pinned_mem.as_ref().expect("just pinned").clone()];
         runs.extend(self.runs.iter().map(|r| r.entries.clone()));
         DevSnapshot { runs }
     }

@@ -81,8 +81,8 @@ impl KvInterface {
         Ok(self.ns_mut(ns)?.reset(t, ftl))
     }
 
-    pub fn snapshot(&self, ns: NamespaceId) -> Result<DevSnapshot> {
-        Ok(self.ns(ns)?.iter_snapshot())
+    pub fn snapshot(&mut self, ns: NamespaceId) -> Result<DevSnapshot> {
+        Ok(self.ns_mut(ns)?.iter_snapshot())
     }
 }
 

@@ -19,7 +19,7 @@
 //! The old db_bench drivers (`workload::db_bench`) are thin mix presets
 //! over this scheduler.
 
-use crate::engine::{EngineStats, KvEngine, WriteBatch};
+use crate::engine::{DbIterator, EngineStats, IterOptions, KvEngine, WriteBatch};
 use crate::env::SimEnv;
 use crate::lsm::entry::Key;
 use crate::sim::sched::{ActorId, EventKind, EventQueue};
@@ -140,8 +140,12 @@ pub struct ClientConfig {
     pub mix: OpMix,
     pub mode: LoopMode,
     pub dist: KeyDist,
-    /// Next count per Scan op.
+    /// Next count per Scan op (the minimum when `scan_len_max` is set).
     pub scan_len: usize,
+    /// When > `scan_len`, each Scan draws its Next count uniformly from
+    /// `[scan_len, scan_len_max]` (YCSB-E's uniform scan lengths);
+    /// 0 (the default) keeps the fixed length.
+    pub scan_len_max: usize,
     /// Puts per Batch op.
     pub batch_size: usize,
     /// Stop after this many issued ops (None = run to the horizon).
@@ -161,6 +165,7 @@ impl Default for ClientConfig {
             mode: LoopMode::Closed { think: 0 },
             dist: KeyDist::Uniform,
             scan_len: 16,
+            scan_len_max: 0,
             batch_size: 16,
             max_ops: None,
             pace: None,
@@ -197,6 +202,24 @@ impl ClientConfig {
     pub fn with_pace_against(mut self, against: ActorId, num: u64, den: u64) -> Self {
         self.pace = Some(Pace { against, num, den });
         self
+    }
+
+    /// Fixed or uniform scan length: `max == len` (or 0) keeps it fixed.
+    pub fn with_scan_len(mut self, len: usize, max: usize) -> Self {
+        self.scan_len = len;
+        self.scan_len_max = max;
+        self
+    }
+
+    /// Draw this op's Next count (uniform in `[scan_len, scan_len_max]`
+    /// when a spread is configured).
+    pub fn draw_scan_len(&self, rng: &mut SimRng) -> usize {
+        if self.scan_len_max > self.scan_len {
+            let span = (self.scan_len_max - self.scan_len + 1) as u32;
+            self.scan_len + rng.gen_range_u32(span) as usize
+        } else {
+            self.scan_len
+        }
     }
 }
 
@@ -286,6 +309,8 @@ struct RunStats {
     wlat: Histogram,
     reads: OpSeries,
     rlat: Histogram,
+    scans: OpSeries,
+    scan_lat: Histogram,
     read_hits: u64,
     read_misses: u64,
     qdelay: Histogram,
@@ -303,6 +328,8 @@ impl RunStats {
             wlat: Histogram::new(),
             reads: OpSeries::default(),
             rlat: Histogram::new(),
+            scans: OpSeries::default(),
+            scan_lat: Histogram::new(),
             read_hits: 0,
             read_misses: 0,
             qdelay: Histogram::new(),
@@ -349,6 +376,13 @@ impl RunStats {
             Some(false) => self.read_misses += 1,
             None => {}
         }
+    }
+
+    /// One whole Scan op (Seek + Nexts) — latency and per-op series,
+    /// reported separately from point reads.
+    fn scan_op(&mut self, from: Nanos, done: Nanos, cap: bool) {
+        self.scan_lat.record(done.saturating_sub(from));
+        self.scans.record(self.series_at(done, cap));
     }
 
     fn queue_wait(&mut self, arrived: Nanos, start: Nanos) {
@@ -578,9 +612,20 @@ fn issue_one(
         }
         OpKind::Scan => {
             let start = c.gen.random_key();
-            let (got, done) = sys.scan(env, at, start, c.cfg.scan_len);
+            let len = c.cfg.draw_scan_len(&mut c.rng);
+            // a real cursor: Seek + up to `len` Nexts, each movement
+            // individually charged (per-Next latency and per-block /
+            // per-page read amplification land where they occur)
+            let mut it = sys.iter(env, at, IterOptions::default());
+            let mut done = it.seek(env, at, start);
+            let mut nexts = 0usize;
+            while nexts < len && it.valid() {
+                nexts += 1;
+                done = it.next(env, done);
+            }
             // counted the db_bench way: the Seek plus every Next
-            stats.read_op(lat_from, done, None, got.len() + 1, cap_series);
+            stats.read_op(lat_from, done, None, nexts + 1, cap_series);
+            stats.scan_op(lat_from, done, cap_series);
             (start, done)
         }
         OpKind::Batch => {
@@ -668,6 +713,9 @@ fn assemble(
         read_misses: stats.read_misses,
         queue_delay: HistogramSummary::from(&stats.qdelay),
         queue_delay_series_us,
+        scans: stats.scans,
+        scan_lat: HistogramSummary::from(&stats.scan_lat),
+        scan_amp: sys.scan_amp(),
     }
 }
 

@@ -133,6 +133,37 @@ pub fn seekrandom(
     run_spec(sys, env, &spec)
 }
 
+/// Workload E: YCSB-E scan-heavy mix — 95% range scans driven through
+/// real cursors (Seek + N Nexts, per-Next latency charged), 5% inserts.
+/// Scan lengths draw uniformly from `[scan_len, scan_len_max]` (YCSB's
+/// default is uniform 1..100); `scan_len_max <= scan_len` fixes them.
+pub fn ycsb_e(
+    cfg: &BenchConfig,
+    clients: usize,
+    mode: LoopMode,
+    dist: KeyDist,
+    scan_len: usize,
+    scan_len_max: usize,
+) -> WorkloadSpec {
+    let clients = clients.max(1);
+    // like the A/B/C presets, an open-loop rate is the aggregate
+    // offered load, split evenly across the clients
+    let per_client = scale_rate(mode, 1.0 / clients as f64);
+    let list: Vec<ClientConfig> = (0..clients)
+        .map(|i| {
+            ClientConfig {
+                mix: OpMix { put: 5, get: 0, delete: 0, scan: 95, batch: 0 },
+                mode: per_client,
+                dist,
+                seed_tag: i as u64,
+                ..ClientConfig::default()
+            }
+            .with_scan_len(scan_len.max(1), scan_len_max)
+        })
+        .collect();
+    WorkloadSpec::from_bench("E/ycsb-e scan:insert 95:5", cfg).with_clients(list)
+}
+
 /// Preload helper for workload D (the paper's "initial 20 GB
 /// fillrandom"): returns the time after preload + settle.
 pub fn preload(
@@ -179,6 +210,11 @@ pub fn preset_spec(
         "A" => ("A/fillrandom", None),
         "B" => ("B/readwhilewriting 9:1", Some((9u64, 1u64))),
         "C" => ("C/readwhilewriting 8:2", Some((8u64, 2u64))),
+        // YCSB-E with its default uniform 1..100 scan lengths; use
+        // [`ycsb_e`] directly for custom lengths
+        "E" | "ycsb-e" | "YCSB-E" => {
+            return Ok(ycsb_e(cfg, clients, mode, dist, 1, 100));
+        }
         other => return Err(anyhow!("no preset spec for workload {other:?}")),
     };
     let write_frac = match ratio {

@@ -16,7 +16,7 @@ pub use client::{
 };
 pub use db_bench::{
     fillrandom, fillrandom_batched, preload, preset_spec, readwhilewriting, seekrandom,
-    BenchConfig,
+    ycsb_e, BenchConfig,
 };
 pub use keygen::{KeyDist, KeyGen};
 pub use stats::{cdf, Histogram, OpSeries, RunResult};

@@ -2,6 +2,7 @@
 //! (P50/P99/P999), per-second op series, and the paper's efficiency
 //! metric (Eq. 1: avg throughput MB/s / avg CPU%).
 
+use crate::engine::ScanAmp;
 use crate::sim::{Nanos, NS_PER_SEC};
 
 /// Log-bucketed latency histogram: 64 powers of two x 16 linear
@@ -179,6 +180,14 @@ pub struct RunResult {
     /// grows without bound when the offered rate exceeds what the
     /// engine sustains.
     pub queue_delay_series_us: Vec<f64>,
+    /// Cursor scans: one entry per Scan op (Seek + Nexts); whole-scan
+    /// latency in `scan_lat`. Scans also count into `reads` (the
+    /// db_bench convention: the Seek plus every Next is a read op).
+    pub scans: OpSeries,
+    pub scan_lat: HistogramSummary,
+    /// Engine-lifetime cursor read amplification (blocks/pages touched
+    /// per Next, per interface).
+    pub scan_amp: ScanAmp,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -211,6 +220,10 @@ impl RunResult {
 
     pub fn read_kops(&self) -> f64 {
         self.reads.total as f64 / self.duration_s.max(1e-9) / 1e3
+    }
+
+    pub fn scan_kops(&self) -> f64 {
+        self.scans.total as f64 / self.duration_s.max(1e-9) / 1e3
     }
 
     /// Fraction of point reads that found a value (0.0 when no reads).

@@ -1,0 +1,386 @@
+//! Cursor/snapshot conformance: the Snapshot + DbIterator API run
+//! against every `KvEngine` implementation (plain LSM, ADOC, KVACCEL in
+//! all three rollback schemes). Ordering, bounds, reverse iteration,
+//! tombstone hiding and snapshot isolation must agree across engines —
+//! including a KVACCEL rollback landing in the middle of a scan.
+
+use std::collections::BTreeMap;
+
+use kvaccel::engine::{
+    DbIterator, EngineBuilder, EngineStats, IterOptions, KvEngine,
+};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::{LsmOptions, ValueDesc};
+use kvaccel::sim::Nanos;
+use kvaccel::ssd::SsdConfig;
+
+const ENGINES: [&str; 6] = [
+    "rocksdb",
+    "rocksdb-nosd",
+    "adoc",
+    "kvaccel",
+    "kvaccel-eager",
+    "kvaccel-lazy",
+];
+
+fn build(name: &str) -> (Box<dyn KvEngine>, SimEnv) {
+    let opts = LsmOptions::small_for_test();
+    let sys = match name {
+        "rocksdb" => EngineBuilder::rocksdb(true).opts(opts).build(),
+        "rocksdb-nosd" => EngineBuilder::rocksdb(false).opts(opts).build(),
+        "adoc" => EngineBuilder::adoc().opts(opts).build(),
+        "kvaccel" => EngineBuilder::kvaccel().opts(opts).build(),
+        "kvaccel-eager" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Eager).opts(opts).build()
+        }
+        "kvaccel-lazy" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Lazy).opts(opts).build()
+        }
+        other => panic!("unknown engine {other}"),
+    };
+    (sys, SimEnv::new(21, SsdConfig::default()))
+}
+
+fn v(tag: u32) -> ValueDesc {
+    ValueDesc::new(tag, 4096)
+}
+
+/// Drain up to `limit` entries ascending from the cursor's position.
+fn collect_fwd(
+    it: &mut dyn DbIterator,
+    env: &mut SimEnv,
+    mut t: Nanos,
+    limit: usize,
+) -> (Vec<(u32, ValueDesc)>, Nanos) {
+    let mut out = Vec::new();
+    while out.len() < limit {
+        let Some(e) = it.entry() else { break };
+        out.push((e.key, e.val));
+        t = it.next(env, t);
+    }
+    (out, t)
+}
+
+/// Drain up to `limit` entries descending from the cursor's position.
+fn collect_bwd(
+    it: &mut dyn DbIterator,
+    env: &mut SimEnv,
+    mut t: Nanos,
+    limit: usize,
+) -> (Vec<(u32, ValueDesc)>, Nanos) {
+    let mut out = Vec::new();
+    while out.len() < limit {
+        let Some(e) = it.entry() else { break };
+        out.push((e.key, e.val));
+        t = it.prev(env, t);
+    }
+    (out, t)
+}
+
+/// Puts + deletes + mid-stream flush: enough churn that entries live in
+/// the memtable, immutables, L0 and (on KVACCEL) the device buffer.
+fn populate(
+    sys: &mut dyn KvEngine,
+    env: &mut SimEnv,
+    oracle: &mut BTreeMap<u32, ValueDesc>,
+) -> Nanos {
+    let mut t = 0;
+    for k in 0..400u32 {
+        t = sys.put(env, t, k, v(k)).done;
+        oracle.insert(k, v(k));
+    }
+    t = sys.flush(env, t);
+    for k in (0..400u32).step_by(3) {
+        t = sys.put(env, t, k, v(k + 1000)).done;
+        oracle.insert(k, v(k + 1000));
+    }
+    for k in (0..400u32).step_by(10) {
+        t = sys.delete(env, t, k).done;
+        oracle.remove(&k);
+    }
+    t
+}
+
+fn oracle_range(
+    oracle: &BTreeMap<u32, ValueDesc>,
+    lo: u32,
+    hi: u32,
+) -> Vec<(u32, ValueDesc)> {
+    oracle.range(lo..hi).map(|(&k, &val)| (k, val)).collect()
+}
+
+#[test]
+fn forward_cursor_matches_oracle_with_bounds() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut oracle = BTreeMap::new();
+        let t = populate(&mut *sys, &mut env, &mut oracle);
+
+        let mut it = sys.iter(&mut env, t, IterOptions::range(50, 333));
+        let t1 = it.seek_to_first(&mut env, t);
+        let (got, _) = collect_fwd(&mut *it, &mut env, t1, usize::MAX);
+        assert_eq!(got, oracle_range(&oracle, 50, 333), "{name}: bounded forward scan");
+        assert!(
+            got.windows(2).all(|w| w[0].0 < w[1].0),
+            "{name}: cursor output must be strictly ascending"
+        );
+
+        // seek inside the range clamps to bounds on both ends
+        let mut it = sys.iter(&mut env, t, IterOptions::range(100, 200));
+        let t1 = it.seek(&mut env, t, 0); // below lower bound: clamped up
+        let (got, _) = collect_fwd(&mut *it, &mut env, t1, usize::MAX);
+        assert_eq!(got, oracle_range(&oracle, 100, 200), "{name}: clamped seek");
+    }
+}
+
+#[test]
+fn scan_wrapper_is_bit_identical_to_cursor_on_interior_ranges() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut oracle = BTreeMap::new();
+        let t = populate(&mut *sys, &mut env, &mut oracle);
+
+        for (start, count) in [(0u32, 40usize), (77, 25), (201, 60), (390, 50)] {
+            let (scanned, t1) = sys.scan(&mut env, t, start, count);
+            let scanned: Vec<(u32, ValueDesc)> =
+                scanned.iter().map(|e| (e.key, e.val)).collect();
+            // the same range through the cursor API
+            let mut it = sys.iter(&mut env, t1, IterOptions::default());
+            let t2 = it.seek(&mut env, t1, start);
+            let (cursored, _) = collect_fwd(&mut *it, &mut env, t2, count);
+            assert_eq!(scanned, cursored, "{name}: scan({start},{count}) != cursor");
+            // and both match the oracle (pre-refactor scan semantics)
+            let want: Vec<(u32, ValueDesc)> = oracle
+                .range(start..)
+                .map(|(&k, &val)| (k, val))
+                .take(count)
+                .collect();
+            assert_eq!(scanned, want, "{name}: scan({start},{count}) oracle");
+        }
+    }
+}
+
+#[test]
+fn reverse_iteration_mirrors_forward() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut oracle = BTreeMap::new();
+        let t = populate(&mut *sys, &mut env, &mut oracle);
+
+        let mut fwd = oracle_range(&oracle, 60, 300);
+        let mut it = sys.iter(&mut env, t, IterOptions::range(60, 300));
+        let t1 = it.seek_to_last(&mut env, t);
+        let (got, _) = collect_bwd(&mut *it, &mut env, t1, usize::MAX);
+        fwd.reverse();
+        assert_eq!(got, fwd, "{name}: reverse scan must mirror forward");
+    }
+}
+
+#[test]
+fn reverse_option_mirrors_movement_ops() {
+    // IterOptions::reverse flips the cursor's principal direction, so a
+    // generic Seek + N×Next loop walks the range descending
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut oracle = BTreeMap::new();
+        let t = populate(&mut *sys, &mut env, &mut oracle);
+
+        let mut want = oracle_range(&oracle, 60, 300);
+        want.reverse();
+
+        let mut it = sys.iter(&mut env, t, IterOptions::range(60, 300).backward());
+        let t1 = it.seek_to_first(&mut env, t); // reverse: lands on the last entry
+        let (got, _) = collect_fwd(&mut *it, &mut env, t1, usize::MAX);
+        assert_eq!(got, want, "{name}: reverse cursor via generic seek+next");
+
+        // floor-seek through the mirrored seek()
+        let mut it = sys.iter(&mut env, t, IterOptions::new().backward());
+        it.seek(&mut env, t, 130);
+        let floor = oracle.range(..=130u32).next_back().map(|(&k, _)| k);
+        assert_eq!(it.key(), floor, "{name}: reverse seek floor-positions");
+    }
+}
+
+#[test]
+fn seek_for_prev_lands_on_floor_and_switches_direction() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut oracle = BTreeMap::new();
+        let t = populate(&mut *sys, &mut env, &mut oracle);
+
+        // 130 is deleted (multiple of 10): floor must land below it
+        let probe = 130u32;
+        let want_floor = oracle.range(..=probe).next_back().map(|(&k, _)| k);
+        let mut it = sys.iter(&mut env, t, IterOptions::default());
+        let t1 = it.seek_for_prev(&mut env, t, probe);
+        assert_eq!(it.key(), want_floor, "{name}: seek_for_prev floor");
+
+        // prev then next returns to the same key (direction switch)
+        let floor = it.key().unwrap();
+        let t2 = it.prev(&mut env, t1);
+        let below = it.key().unwrap();
+        assert!(below < floor, "{name}: prev must descend");
+        it.next(&mut env, t2);
+        assert_eq!(it.key(), Some(floor), "{name}: next after prev returns");
+    }
+}
+
+#[test]
+fn tombstones_hidden_in_both_directions() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut t = 0;
+        for k in 0..100u32 {
+            t = sys.put(&mut env, t, k, v(k)).done;
+        }
+        for k in (0..100u32).step_by(7) {
+            t = sys.delete(&mut env, t, k).done;
+        }
+        t = sys.flush(&mut env, t);
+
+        let mut it = sys.iter(&mut env, t, IterOptions::default());
+        let t1 = it.seek(&mut env, t, 0);
+        let (fwd, _) = collect_fwd(&mut *it, &mut env, t1, usize::MAX);
+        assert!(
+            fwd.iter().all(|&(k, _)| k % 7 != 0),
+            "{name}: deleted keys leaked forward"
+        );
+        assert_eq!(fwd.len(), 100 - 15, "{name}: live-key count");
+
+        let mut it = sys.iter(&mut env, t, IterOptions::default());
+        let t1 = it.seek_to_last(&mut env, t);
+        let (bwd, _) = collect_bwd(&mut *it, &mut env, t1, usize::MAX);
+        assert!(
+            bwd.iter().all(|&(k, _)| k % 7 != 0),
+            "{name}: deleted keys leaked backward"
+        );
+        assert_eq!(bwd.len(), fwd.len(), "{name}: direction-symmetric count");
+    }
+}
+
+#[test]
+fn snapshot_is_isolated_from_later_writes_flushes_and_deletes() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut oracle = BTreeMap::new();
+        let mut t = populate(&mut *sys, &mut env, &mut oracle);
+        let frozen = oracle.clone();
+
+        let snap = sys.snapshot(&mut env, t);
+
+        // post-snapshot churn: overwrites, fresh keys, deletes, a flush
+        for k in 0..400u32 {
+            t = sys.put(&mut env, t, k, v(k + 50_000)).done;
+        }
+        for k in 400..500u32 {
+            t = sys.put(&mut env, t, k, v(k)).done;
+        }
+        for k in (0..400u32).step_by(2) {
+            t = sys.delete(&mut env, t, k).done;
+        }
+        t = sys.flush(&mut env, t);
+        assert!(sys.health().live_snapshots >= 1, "{name}: snapshot not tracked");
+
+        let mut it = sys.iter(&mut env, t, IterOptions::new().at(&snap));
+        let t1 = it.seek(&mut env, t, 0);
+        let (got, _) = collect_fwd(&mut *it, &mut env, t1, usize::MAX);
+        let want: Vec<(u32, ValueDesc)> =
+            frozen.iter().map(|(&k, &val)| (k, val)).collect();
+        assert_eq!(got, want, "{name}: pinned snapshot saw post-snapshot writes");
+
+        // the live view has moved on
+        let (live, _) = sys.scan(&mut env, t, 0, 10_000);
+        assert!(
+            live.iter().any(|e| e.val == v(50_001)),
+            "{name}: live view must see the new writes"
+        );
+    }
+}
+
+#[test]
+fn kvaccel_scan_stays_consistent_across_a_mid_scan_rollback() {
+    for name in ["kvaccel", "kvaccel-eager", "kvaccel-lazy"] {
+        let (mut sys, mut env) = build(name);
+        let mut t = 0;
+        // enough pressure that writes redirect into the device buffer
+        for k in 0..4000u32 {
+            t = sys.put(&mut env, t, k, v(k)).done;
+        }
+        let redirected = sys.kvaccel().unwrap().controller.stats.writes_to_dev;
+        assert!(redirected > 0, "{name}: setup must redirect writes");
+
+        // open the cursor (pins main + device runs + metadata routing),
+        // read a prefix...
+        let dev_busy = !env.device.kv_is_empty(0);
+        let mut it = sys.iter(&mut env, t, IterOptions::default());
+        let t1 = it.seek(&mut env, t, 0);
+        let (head, t2) = collect_fwd(&mut *it, &mut env, t1, 1000);
+
+        // ...then a rollback lands mid-scan: finish() drains the device
+        // buffer into the Main-LSM and resets it (eager/lazy schemes may
+        // have already drained it during the load phase)
+        let rollbacks_before = sys.kvaccel().unwrap().rollback.stats.rollbacks;
+        let t3 = sys.finish(&mut env, t2).unwrap();
+        if dev_busy {
+            assert!(
+                sys.kvaccel().unwrap().rollback.stats.rollbacks > rollbacks_before,
+                "{name}: finish must roll back the non-empty device buffer"
+            );
+        }
+        assert!(env.device.kv_is_empty(0), "{name}: device buffer must drain");
+
+        // ...and the open cursor keeps reading the pinned pre-rollback view
+        let (tail, _) = collect_fwd(&mut *it, &mut env, t3, usize::MAX);
+        let got: Vec<(u32, ValueDesc)> =
+            head.into_iter().chain(tail).collect();
+        let want: Vec<(u32, ValueDesc)> = (0..4000u32).map(|k| (k, v(k))).collect();
+        assert_eq!(
+            got, want,
+            "{name}: scan spanning a rollback must see one consistent view"
+        );
+    }
+}
+
+#[test]
+fn read_amp_counters_accumulate_per_interface() {
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut t = 0;
+        for k in 0..2000u32 {
+            t = sys.put(&mut env, t, k, v(k)).done;
+        }
+        t = sys.flush(&mut env, t);
+        let before = sys.scan_amp();
+        let (got, _) = sys.scan(&mut env, t, 0, 500);
+        assert_eq!(got.len(), 500, "{name}");
+        let after = sys.scan_amp();
+        assert!(after.seeks > before.seeks, "{name}: seek not counted");
+        assert!(
+            after.nexts >= before.nexts + 500,
+            "{name}: nexts not counted"
+        );
+        assert!(
+            after.main_blocks > before.main_blocks,
+            "{name}: flushed data must touch SST blocks"
+        );
+    }
+}
+
+#[test]
+fn upper_bound_stops_tail_scans_exactly() {
+    // the pre-cursor scan() had no end bound; IterOptions::upper_bound
+    // must clip exactly, including at the keyspace tail
+    for name in ENGINES {
+        let (mut sys, mut env) = build(name);
+        let mut t = 0;
+        for k in 0..200u32 {
+            t = sys.put(&mut env, t, k, v(k)).done;
+        }
+        let mut it = sys.iter(&mut env, t, IterOptions::new().upper(150));
+        let t1 = it.seek(&mut env, t, 140);
+        let (got, _) = collect_fwd(&mut *it, &mut env, t1, usize::MAX);
+        let keys: Vec<u32> = got.iter().map(|&(k, _)| k).collect();
+        assert_eq!(keys, (140..150).collect::<Vec<_>>(), "{name}: upper bound");
+    }
+}
