@@ -12,11 +12,12 @@
 use anyhow::Result;
 
 use crate::engine::{
-    BatchResult, DbIterator, EngineStats, IterOptions, KvEngine, Snapshot, WriteBatch,
+    BatchResult, DbIterator, DurableImage, EngineStats, IterOptions, KvEngine,
+    Snapshot, WriteBatch,
 };
 use crate::env::SimEnv;
-use crate::lsm::entry::{Key, ValueDesc};
-use crate::lsm::{LsmDb, LsmOptions, PutResult, WriteCondition};
+use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::lsm::{LsmDb, LsmOptions, Manifest, PutResult, WriteCondition};
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::{CpuClass, Nanos, MILLIS};
 
@@ -133,6 +134,8 @@ impl AdocTuner {
 pub struct AdocEngine {
     pub db: LsmDb,
     pub tuner: AdocTuner,
+    /// Original configuration, retained for the durable image.
+    cfg: AdocConfig,
 }
 
 impl AdocEngine {
@@ -148,8 +151,46 @@ impl AdocEngine {
         let db = LsmDb::new(opts.with_slowdown(true), engine, bloom);
         Self {
             db,
-            tuner: AdocTuner::new(cfg, base_threads, base_buffer),
+            tuner: AdocTuner::new(cfg.clone(), base_threads, base_buffer),
+            cfg,
         }
+    }
+
+    /// Reopen from a durable image: the tuned Main-LSM recovers (manifest
+    /// + WAL replay); the feedback controller restarts from its baseline
+    /// (its state is volatile by design — it re-learns from live signals).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        env: &mut SimEnv,
+        at: Nanos,
+        opts: LsmOptions,
+        cfg: AdocConfig,
+        merge: MergeEngine,
+        bloom: BloomBuilder,
+        manifest: Manifest,
+        wal: Vec<Entry>,
+        clean: bool,
+    ) -> (Self, Nanos) {
+        let base_threads = opts.compaction_threads;
+        let base_buffer = opts.write_buffer_size;
+        let (db, t) = LsmDb::open(
+            env,
+            at,
+            opts.with_slowdown(true),
+            merge,
+            bloom,
+            manifest,
+            wal,
+            clean,
+        );
+        (
+            Self {
+                db,
+                tuner: AdocTuner::new(cfg.clone(), base_threads, base_buffer),
+                cfg,
+            },
+            t,
+        )
     }
 }
 
@@ -206,6 +247,29 @@ impl KvEngine for AdocEngine {
 
     fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
         Ok(self.db.flush_and_wait(env, at))
+    }
+
+    fn close(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> Result<DurableImage> {
+        let AdocEngine { mut db, tuner, cfg } = *self;
+        // the image carries the CONFIGURED baseline, not the tuner's
+        // transient escalation — controller state is volatile, and a
+        // reopen must not ratchet the baseline upward
+        db.opts.compaction_threads = tuner.base_threads;
+        db.opts.write_buffer_size = tuner.base_buffer;
+        let mut img = db.close_into_image(env, at)?;
+        img.kind = crate::baselines::SystemKind::Adoc;
+        img.adoc_cfg = Some(cfg);
+        Ok(img)
+    }
+
+    fn crash(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> DurableImage {
+        let AdocEngine { mut db, tuner, cfg } = *self;
+        db.opts.compaction_threads = tuner.base_threads;
+        db.opts.write_buffer_size = tuner.base_buffer;
+        let mut img = db.crash_into_image(env, at);
+        img.kind = crate::baselines::SystemKind::Adoc;
+        img.adoc_cfg = Some(cfg);
+        img
     }
 }
 

@@ -20,7 +20,9 @@ use crate::baselines::{AdocConfig, AdocEngine, SystemKind};
 use crate::env::SimEnv;
 use crate::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
 use crate::lsm::entry::{Entry, Key, Seq, ValueDesc};
-use crate::lsm::{DbStats, LsmDb, LsmOptions, PutResult, StallStats, WriteCondition};
+use crate::lsm::{
+    DbStats, LsmDb, LsmOptions, Manifest, PutResult, StallStats, WriteCondition,
+};
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::Nanos;
 
@@ -119,6 +121,47 @@ pub struct BatchResult {
 }
 
 // ---------------------------------------------------------------------
+// Durable lifecycle
+// ---------------------------------------------------------------------
+
+/// Everything that survives a power loss or clean shutdown, as captured
+/// by [`KvEngine::close`] / [`KvEngine::crash`] and consumed by
+/// [`EngineBuilder::open`]:
+///
+/// - the **manifest** — the durable version edit log whose SST handles
+///   stand in for the on-flash files;
+/// - the **durable WAL prefix** — records whose bytes reached flash
+///   before the cut (empty after a clean close);
+/// - the configuration needed to rebuild the engine.
+///
+/// Device-side durable state (Dev-LSM runs, the FTL map, the block FS)
+/// survives *inside the device* (`SimEnv`), not in this image —
+/// recovery re-reads it over the KV interface, exactly like the paper's
+/// §V-C metadata rebuild.
+pub struct DurableImage {
+    pub kind: SystemKind,
+    pub opts: LsmOptions,
+    pub merge: MergeEngine,
+    pub bloom: BloomBuilder,
+    pub manifest: Manifest,
+    /// Durable WAL records in append order.
+    pub wal: Vec<Entry>,
+    pub kvaccel_cfg: Option<KvaccelConfig>,
+    pub adoc_cfg: Option<AdocConfig>,
+    /// True when produced by a clean close (sealed + fsync'd WAL and a
+    /// final CleanShutdown manifest edit).
+    pub clean: bool,
+    pub taken_at: Nanos,
+}
+
+impl DurableImage {
+    /// WAL records a reopen would replay (0 after a clean close).
+    pub fn wal_records(&self) -> usize {
+        self.wal.len()
+    }
+}
+
+// ---------------------------------------------------------------------
 // Stats / health
 // ---------------------------------------------------------------------
 
@@ -141,6 +184,14 @@ pub struct EngineHealth {
     pub live_snapshots: usize,
     /// Oldest sequence number a live snapshot still sees.
     pub min_pinned_seq: Option<Seq>,
+    /// 1 when this engine life was opened from a durable image, 0 when
+    /// built fresh (per-life, like all recovery stats).
+    pub recoveries: u64,
+    /// WAL records replayed into the memtable at the last open.
+    pub recovered_wal_records: u64,
+    /// Device-resident keys routed back to the Dev-LSM at the last open
+    /// (0 for non-KVACCEL engines).
+    pub recovered_dev_keys: u64,
 }
 
 /// Read-only accessors shared by every engine; supertrait of
@@ -184,6 +235,9 @@ pub trait EngineStats {
                 .is_some_and(|k| k.detector.stall_imminent()),
             live_snapshots: db.live_snapshots(),
             min_pinned_seq: db.min_pinned_seq(),
+            recoveries: db.recovery.recoveries,
+            recovered_wal_records: db.recovery.wal_records_replayed,
+            recovered_dev_keys: db.recovery.dev_keys_rerouted,
         }
     }
 }
@@ -256,6 +310,18 @@ pub trait KvEngine: EngineStats {
     /// End-of-run cleanup: final rollback (KVACCEL) + drain. After
     /// `finish`, the engine holds single-store semantics.
     fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos>;
+
+    /// Clean shutdown: final rollback/flush, seal + fsync the WAL, write
+    /// the CleanShutdown manifest edit, and hand back the durable image.
+    /// Reopening a cleanly-closed image replays zero WAL records.
+    fn close(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> Result<DurableImage>;
+
+    /// Power loss at `at`: background jobs that finished before `at`
+    /// have applied (their manifest edits are durable); host memory and
+    /// the page cache (unsynced WAL bytes — the sync=false ack-vs-
+    /// durable gap) are lost; NAND contents, the FTL map and the Dev-LSM
+    /// write buffer survive in the device. Returns what recovery gets.
+    fn crash(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> DurableImage;
 }
 
 // ---------------------------------------------------------------------
@@ -352,6 +418,59 @@ impl EngineBuilder {
     pub fn adoc_config(mut self, cfg: AdocConfig) -> Self {
         self.adoc_cfg = cfg;
         self
+    }
+
+    /// Reopen an engine from a durable image (crash recovery or clean
+    /// restart): rebuild the Version from the manifest, replay the
+    /// durable WAL records, and — on KVACCEL — rescan the device write
+    /// buffer and reconcile the routing set against the recovered host
+    /// state by sequence number. Returns the engine and the virtual time
+    /// recovery completed.
+    pub fn open(
+        env: &mut SimEnv,
+        at: Nanos,
+        image: DurableImage,
+    ) -> (Box<dyn KvEngine>, Nanos) {
+        let DurableImage {
+            kind,
+            opts,
+            merge,
+            bloom,
+            manifest,
+            wal,
+            kvaccel_cfg,
+            adoc_cfg,
+            clean,
+            ..
+        } = image;
+        match kind {
+            SystemKind::RocksDb { .. } => {
+                let (db, t) =
+                    LsmDb::open(env, at, opts, merge, bloom, manifest, wal, clean);
+                (Box::new(db), t)
+            }
+            SystemKind::Adoc => {
+                let (eng, t) = AdocEngine::open(
+                    env,
+                    at,
+                    opts,
+                    adoc_cfg.unwrap_or_default(),
+                    merge,
+                    bloom,
+                    manifest,
+                    wal,
+                    clean,
+                );
+                (Box::new(eng), t)
+            }
+            SystemKind::Kvaccel { scheme } => {
+                let cfg = kvaccel_cfg.unwrap_or_default().with_scheme(scheme);
+                let (eng, t) = KvaccelDb::open(
+                    env, at, opts, cfg, merge, bloom, manifest, wal, clean,
+                );
+                (Box::new(eng), t)
+            }
+        }
     }
 
     pub fn build(self) -> Box<dyn KvEngine> {

@@ -1,5 +1,5 @@
 //! Experiment registry: one entry per figure/table of the paper's
-//! evaluation (see DESIGN.md §6 for the index). Each experiment prints
+//! evaluation (see DESIGN.md §7 for the index). Each experiment prints
 //! the rows/series the paper reports and writes CSV into `results/`.
 //!
 //! Absolute numbers come from the simulator, not the authors' OpenSSD
@@ -7,6 +7,7 @@
 //! fall) are the reproduction target — see EXPERIMENTS.md.
 
 pub mod figs;
+pub mod recovery;
 pub mod tables;
 
 use std::io::Write;
@@ -175,6 +176,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "fig13" => figs::fig13(ctx),
         "fig14" => figs::fig14(ctx),
         "qdelay" => figs::qdelay(ctx),
+        "recovery" => recovery::recovery(ctx),
         "table5" => tables::table5(ctx),
         "table6" => tables::table6(ctx),
         "all" => {
@@ -191,7 +193,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 11] = [
+pub const ALL_EXPERIMENTS: [&str; 12] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "qdelay", "table5", "table6",
+    "qdelay", "recovery", "table5", "table6",
 ];

@@ -10,10 +10,11 @@
 
 use anyhow::Result;
 
-use crate::engine::{DbIterator, DevPin, IterOptions, Snapshot};
+use crate::baselines::SystemKind;
+use crate::engine::{DbIterator, DevPin, DurableImage, IterOptions, Snapshot};
 use crate::env::SimEnv;
 use crate::lsm::entry::{Entry, Key, Seq, ValueDesc};
-use crate::lsm::{LsmDb, LsmOptions, PutResult};
+use crate::lsm::{LsmDb, LsmOptions, Manifest, ManifestEdit, PutResult};
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::{CpuClass, Nanos};
 use crate::ssd::kv_if::NamespaceId;
@@ -63,9 +64,14 @@ pub struct KvaccelDb {
     pub metadata: MetadataManager,
     pub rollback: RollbackManager,
     ns: NamespaceId,
-    /// device-side version counter for redirected writes (intra-Dev-LSM
-    /// recency; cross-LSM recency is owned by the Metadata Manager).
+    /// Sequence number of the newest redirected write. Dev-LSM seqs are
+    /// drawn from the Main-LSM's domain (`LsmDb::alloc_seq`), so
+    /// cross-interface recency is totally ordered — the authority crash
+    /// recovery reconciles by. Interface routing on the hot path is
+    /// still owned by the Metadata Manager.
     dev_seq: Seq,
+    /// Original configuration, retained for the durable image.
+    cfg: KvaccelConfig,
 }
 
 impl KvaccelDb {
@@ -77,19 +83,40 @@ impl KvaccelDb {
     ) -> Self {
         // KVACCEL does not employ slowdowns (paper §VI-B).
         opts.enable_slowdown = false;
+        Self::from_parts(LsmDb::new(opts, engine, bloom), cfg)
+    }
+
+    /// Assemble the managers around an existing Main-LSM (fresh build or
+    /// the recovery path).
+    fn from_parts(main: LsmDb, cfg: KvaccelConfig) -> Self {
         Self {
-            main: LsmDb::new(opts, engine, bloom),
-            detector: Detector::new(cfg.detector),
-            controller: Controller::new(cfg.controller),
-            metadata: MetadataManager::new(cfg.metadata),
-            rollback: RollbackManager::new(cfg.rollback),
+            main,
+            detector: Detector::new(cfg.detector.clone()),
+            controller: Controller::new(cfg.controller.clone()),
+            metadata: MetadataManager::new(cfg.metadata.clone()),
+            rollback: RollbackManager::new(cfg.rollback.clone()),
             ns: cfg.namespace,
             dev_seq: 0,
+            cfg,
         }
     }
 
     pub fn namespace(&self) -> NamespaceId {
         self.ns
+    }
+
+    /// Close the open rollback window, if any: fsync the merged copies,
+    /// reset the device buffer, clear the routing table, and write the
+    /// RollbackEnd manifest edit. Returns the completion time.
+    fn finalize_window(&mut self, env: &mut SimEnv) -> Result<Option<Nanos>> {
+        let Some((done, returned)) =
+            self.rollback.finalize(env, self.ns, &mut self.metadata)?
+        else {
+            return Ok(None);
+        };
+        self.main
+            .manifest_append(env, done, ManifestEdit::RollbackEnd { returned });
+        Ok(Some(done))
     }
 
     /// Detector tick + rollback trigger — the detached 0.1 s thread of
@@ -99,6 +126,11 @@ impl KvaccelDb {
         // redirected the Main-LSM sees no operations, and without this the
         // Detector would sample a frozen (stalled-forever) snapshot.
         self.main.catch_up(env, at);
+        // Close a rollback window whose horizon has passed (Fig 9 step
+        // 8: device reset + routing clear, deferred from `begin`).
+        if self.rollback.pending_end().is_some_and(|end| end <= at) {
+            self.finalize_window(env).expect("rollback finalize failed");
+        }
         if !self.detector.maybe_sample(env, at, &self.main) {
             return;
         }
@@ -108,10 +140,24 @@ impl KvaccelDb {
             .rollback
             .should_rollback(at, &self.detector, dev_empty, occ)
         {
+            self.main
+                .manifest_append(env, at, ManifestEdit::RollbackBegin { at });
             self.rollback
-                .perform(env, at, self.ns, &mut self.main, &mut self.metadata)
+                .begin(env, at, self.ns, &mut self.main, &mut self.metadata)
                 .expect("rollback failed");
         }
+    }
+
+    /// One routing decision: during an open rollback window every write
+    /// takes the Main path (redirecting into a buffer that is being
+    /// drained would race the deferred reset); otherwise the Controller
+    /// decides from the stall signal and KV-region occupancy.
+    fn route_write(&mut self, at: Nanos, stall: bool, occ: f64) -> WritePath {
+        if self.rollback.in_flight(at) {
+            self.controller.stats.writes_to_main += 1;
+            return WritePath::Main;
+        }
+        self.controller.write_path(stall, occ)
     }
 
     /// Write path (paper §V-C): detector check, then either redirect to
@@ -123,9 +169,9 @@ impl KvaccelDb {
         let stall = self.detector.stall_imminent()
             || self.main.write_condition().is_stopped();
         let occ = env.device.kv_occupancy();
-        match self.controller.write_path(stall, occ) {
+        match self.route_write(at, stall, occ) {
             WritePath::Dev => {
-                self.dev_seq += 1;
+                self.dev_seq = self.main.alloc_seq();
                 let entry = Entry::new(key, self.dev_seq, val);
                 self.metadata.insert(env, at, key);
                 let ack = env
@@ -175,7 +221,7 @@ impl KvaccelDb {
         let stall = self.detector.stall_imminent()
             || self.main.write_condition().is_stopped();
         let occ = env.device.kv_occupancy();
-        match self.controller.write_path(stall, occ) {
+        match self.route_write(at, stall, occ) {
             WritePath::Dev => {
                 // The routing decision covers the whole batch, but the KV
                 // region is finite NAND space: re-check the same occupancy
@@ -188,7 +234,7 @@ impl KvaccelDb {
                     if env.device.kv_occupancy() >= cap {
                         break;
                     }
-                    self.dev_seq += 1;
+                    self.dev_seq = self.main.alloc_seq();
                     let entry = Entry::new(op.key(), self.dev_seq, op.value());
                     self.metadata.insert(env, at, op.key());
                     if op.is_delete() {
@@ -328,14 +374,27 @@ impl KvaccelDb {
         crate::engine::KvEngine::scan(self, env, at, start, count)
     }
 
-    /// End-of-run cleanup: final rollback (lazy/disabled schemes hold
-    /// data in the Dev-LSM) + drain background work.
+    /// End-of-run cleanup: close any open rollback window, final
+    /// rollback (lazy/disabled schemes hold data in the Dev-LSM), drain
+    /// background work.
     pub fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
         let mut t = at;
+        if let Some(end) = self.rollback.pending_end() {
+            t = t.max(end);
+            if let Some(done) = self.finalize_window(env)? {
+                t = t.max(done);
+            }
+        }
         if !env.device.kv_is_empty(self.ns) {
+            self.main
+                .manifest_append(env, t, ManifestEdit::RollbackBegin { at: t });
+            let before = self.rollback.stats.entries_returned;
             t = self
                 .rollback
                 .perform(env, t, self.ns, &mut self.main, &mut self.metadata)?;
+            let returned = self.rollback.stats.entries_returned - before;
+            self.main
+                .manifest_append(env, t, ManifestEdit::RollbackEnd { returned });
         }
         Ok(self.main.flush_and_wait(env, t))
     }
@@ -346,6 +405,125 @@ impl KvaccelDb {
         let (entries, done) = env.device.kv_bulk_scan(self.ns, at)?;
         self.metadata.rebuild_from(&entries);
         Ok(done)
+    }
+
+    // -----------------------------------------------------------------
+    // Durable lifecycle: close / crash / open
+    // -----------------------------------------------------------------
+
+    /// Clean shutdown: final rollback + drain (single-store semantics),
+    /// seal + fsync the WAL, CleanShutdown manifest edit.
+    pub fn close_into_image(
+        mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> Result<DurableImage> {
+        let t = self.finish(env, at)?;
+        let t = env.device.wal_sync(t);
+        let last_seq = self.main.last_seq();
+        let t = self
+            .main
+            .manifest_append(env, t, ManifestEdit::CleanShutdown { last_seq });
+        env.clock.advance_to(t);
+        let KvaccelDb { main, cfg, .. } = self;
+        let scheme = cfg.rollback.scheme;
+        let (opts, merge, bloom, manifest, wal) = main.into_image_parts(None);
+        Ok(DurableImage {
+            kind: SystemKind::Kvaccel { scheme },
+            opts,
+            merge,
+            bloom,
+            manifest,
+            wal,
+            kvaccel_cfg: Some(cfg),
+            adoc_cfg: None,
+            clean: true,
+            taken_at: t,
+        })
+    }
+
+    /// Power loss at `at`. A rollback window open at the cut — even one
+    /// whose horizon has passed but was never finalized by a tick —
+    /// stays open in the manifest (dangling RollbackBegin): the device
+    /// buffer keeps its runs (the lazy deferred reset genuinely never
+    /// ran), the merged-back copies sit in the (partially durable) WAL,
+    /// and recovery reconciles per key by sequence number, leaving the
+    /// routing set pointing at whichever copy is durable. Finalizing
+    /// here instead would fabricate an fsync + reset at the instant of
+    /// power loss.
+    pub fn crash_into_image(mut self, env: &mut SimEnv, at: Nanos) -> DurableImage {
+        self.main.catch_up(env, at);
+        // capture the durability cut BEFORE the power loss wipes the
+        // page-cache accounting (those bytes are lost, not durable)
+        let watermark = env.device.wal_durable_watermark();
+        env.device.crash(at);
+        let KvaccelDb { main, cfg, .. } = self;
+        let scheme = cfg.rollback.scheme;
+        let (opts, merge, bloom, manifest, wal) =
+            main.into_image_parts(Some(watermark));
+        DurableImage {
+            kind: SystemKind::Kvaccel { scheme },
+            opts,
+            merge,
+            bloom,
+            manifest,
+            wal,
+            kvaccel_cfg: Some(cfg),
+            adoc_cfg: None,
+            clean: false,
+            taken_at: at,
+        }
+    }
+
+    /// Reopen from a durable image: recover the Main-LSM (manifest +
+    /// WAL replay), then rebuild the volatile routing set with a full
+    /// KV-interface range scan (paper §V-C) **reconciled against the
+    /// recovered host state**: a device copy superseded by a newer
+    /// durable Main-LSM version is stale and stays unrouted (the
+    /// rollback drain will skip it); otherwise the device copy — always
+    /// durable, the buffer is capacitor-backed NAND — owns the key.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        env: &mut SimEnv,
+        at: Nanos,
+        mut opts: LsmOptions,
+        cfg: KvaccelConfig,
+        merge: MergeEngine,
+        bloom: BloomBuilder,
+        manifest: Manifest,
+        wal: Vec<Entry>,
+        clean: bool,
+    ) -> (Self, Nanos) {
+        opts.enable_slowdown = false;
+        let (main, t0) =
+            LsmDb::open(env, at, opts, merge, bloom, manifest, wal, clean);
+        let mut db = Self::from_parts(main, cfg);
+        // full recovery scan of the device write buffer (charges the
+        // NAND reads + chunked DMA of the paper's Fig 9 path)
+        let (entries, scan_done) = env
+            .device
+            .kv_bulk_scan(db.ns, t0)
+            .expect("recovery device scan failed");
+        let mut routed: Vec<Key> = Vec::with_capacity(entries.len());
+        let mut stale = 0u64;
+        let mut max_dev_seq: Seq = 0;
+        for e in &entries {
+            max_dev_seq = max_dev_seq.max(e.seq);
+            if db.main.latest_seq(e.key).is_some_and(|s| s > e.seq) {
+                stale += 1;
+            } else {
+                routed.push(e.key);
+            }
+        }
+        let rerouted = routed.len() as u64;
+        let t = db.metadata.rebuild_routing(env, scan_done, routed);
+        db.main.bump_seq_to(max_dev_seq);
+        db.dev_seq = max_dev_seq;
+        db.main.recovery.dev_entries_scanned = entries.len() as u64;
+        db.main.recovery.dev_keys_rerouted = rerouted;
+        db.main.recovery.dev_keys_stale = stale;
+        env.clock.advance_to(t);
+        (db, t)
     }
 }
 
@@ -404,6 +582,14 @@ impl crate::engine::KvEngine for KvaccelDb {
 
     fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
         KvaccelDb::finish(self, env, at)
+    }
+
+    fn close(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> Result<DurableImage> {
+        (*self).close_into_image(env, at)
+    }
+
+    fn crash(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> DurableImage {
+        (*self).crash_into_image(env, at)
     }
 }
 

@@ -58,17 +58,48 @@ pub struct RollbackStats {
     pub last_completion: Nanos,
 }
 
+/// An open rollback window: the merge-back (Fig 9 steps 3-7) has run,
+/// the device reset + metadata clear (step 8) are deferred to
+/// [`RollbackManager::finalize`] at the completion horizon. A crash
+/// inside the window leaves both copies in place — the device runs
+/// intact, the merged copies in the (possibly unsynced) Main-LSM WAL —
+/// and recovery reconciles per key by sequence number.
+#[derive(Clone, Copy, Debug)]
+struct PendingRollback {
+    started: Nanos,
+    end: Nanos,
+    returned: u64,
+}
+
 #[derive(Debug)]
 pub struct RollbackManager {
     pub cfg: RollbackConfig,
     /// completion horizon of an in-flight rollback (no re-trigger before).
     in_flight_until: Nanos,
+    pending: Option<PendingRollback>,
     pub stats: RollbackStats,
 }
 
 impl RollbackManager {
     pub fn new(cfg: RollbackConfig) -> Self {
-        Self { cfg, in_flight_until: 0, stats: RollbackStats::default() }
+        Self {
+            cfg,
+            in_flight_until: 0,
+            pending: None,
+            stats: RollbackStats::default(),
+        }
+    }
+
+    /// Is a rollback window open at `at`? While it is, the Controller
+    /// routes every write through the Main-LSM (redirecting into a
+    /// buffer that is being drained would race the deferred reset).
+    pub fn in_flight(&self, at: Nanos) -> bool {
+        self.pending.is_some() && at < self.in_flight_until
+    }
+
+    /// Completion horizon of the open window, if any.
+    pub fn pending_end(&self) -> Option<Nanos> {
+        self.pending.map(|p| p.end)
     }
 
     /// Should a rollback start now? Consulted on detector ticks.
@@ -92,19 +123,23 @@ impl RollbackManager {
         }
     }
 
-    /// Execute one rollback (paper Fig 9):
+    /// Phase 1 of a rollback (paper Fig 9 steps 3-7):
     ///  3-4: device iterator scans the whole Dev-LSM;
     ///  5-6: bulk-serialized pairs DMA to host in 512 KB chunks;
     ///  7:   host merges them into the Main-LSM (stale pairs — already
     ///       superseded by newer Main-LSM writes per the Metadata Manager
-    ///       — are dropped);
-    ///  8:   Dev-LSM reset + metadata cleared.
+    ///       — are dropped).
+    ///
+    /// The device reset and metadata clear (step 8) are DEFERRED to
+    /// [`RollbackManager::finalize`] at the returned completion horizon,
+    /// so a crash inside the window never tears the redirection: the
+    /// device copy stays durable until the merged-back copy is.
     ///
     /// Runs as a detached background activity in virtual time: device and
     /// CPU costs are charged, Main-LSM state changes apply immediately,
     /// and the foreground is not blocked (`at` is not advanced for the
     /// caller). Returns the completion horizon.
-    pub fn perform(
+    pub fn begin(
         &mut self,
         env: &mut SimEnv,
         at: Nanos,
@@ -112,7 +147,6 @@ impl RollbackManager {
         main: &mut LsmDb,
         metadata: &mut MetadataManager,
     ) -> Result<Nanos> {
-        self.stats.rollbacks += 1;
         let (entries, dma_done) = env.device.kv_bulk_scan(ns, at)?;
         let mut t = dma_done;
         let mut returned = 0u64;
@@ -127,14 +161,57 @@ impl RollbackManager {
             env.cpu.charge(CpuClass::Kvaccel, t, self.cfg.merge_cpu_ns_per_entry);
             t = main.put_internal(env, t, e.key, e.val);
         }
-        let reset_done = env.device.kv_reset(ns, t)?;
-        metadata.clear();
         self.stats.entries_returned += returned;
-        let end = reset_done.max(t);
-        self.stats.total_rollback_ns += end.saturating_sub(at);
-        self.stats.last_completion = end;
+        let end = t.max(at + 1);
+        self.pending = Some(PendingRollback { started: at, end, returned });
         self.in_flight_until = end;
         Ok(end)
+    }
+
+    /// Phase 2 (Fig 9 step 8), at/after the window's completion horizon:
+    /// fsync the merged-back copies, then reset the Dev-LSM and clear
+    /// the routing table. The sync-before-reset ordering is the
+    /// consistency linchpin: the device copy is only dropped once the
+    /// host copy is durable, so no crash point can lose an acked
+    /// redirected write. Returns `Some((done, entries_returned))` if a
+    /// window was open.
+    pub fn finalize(
+        &mut self,
+        env: &mut SimEnv,
+        ns: NamespaceId,
+        metadata: &mut MetadataManager,
+    ) -> Result<Option<(Nanos, u64)>> {
+        let Some(p) = self.pending.take() else {
+            return Ok(None);
+        };
+        let synced = env.device.wal_sync(p.end);
+        let reset_done = env.device.kv_reset(ns, synced)?;
+        metadata.clear();
+        let done = reset_done.max(p.end);
+        // a rollback counts once it has fully completed (reset issued)
+        self.stats.rollbacks += 1;
+        self.stats.total_rollback_ns += done.saturating_sub(p.started);
+        self.stats.last_completion = done;
+        self.in_flight_until = done;
+        Ok(Some((done, p.returned)))
+    }
+
+    /// One-shot rollback: begin + immediate finalize (the end-of-run
+    /// drain in `finish`, and direct test use). Returns the completion
+    /// horizon.
+    pub fn perform(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        ns: NamespaceId,
+        main: &mut LsmDb,
+        metadata: &mut MetadataManager,
+    ) -> Result<Nanos> {
+        self.begin(env, at, ns, main, metadata)?;
+        let (done, _) = self
+            .finalize(env, ns, metadata)?
+            .expect("begin just opened a window");
+        Ok(done)
     }
 }
 
@@ -224,6 +301,25 @@ mod tests {
         assert!(!off.should_rollback(0, &det, false, 0.9));
         // nothing to do when dev empty
         assert!(!eager.should_rollback(0, &det, true, 0.0));
+    }
+
+    #[test]
+    fn window_defers_reset_until_finalize() {
+        let (mut main, mut env, _det, mut meta, mut rb) = rig();
+        for k in 0..10u32 {
+            dev_put(&mut env, &mut meta, k, k + 1);
+        }
+        let end = rb.begin(&mut env, 0, 0, &mut main, &mut meta).unwrap();
+        // inside the window: device buffer + routing table still intact
+        assert!(rb.in_flight(end - 1));
+        assert!(!env.device.kv_is_empty(0), "reset must be deferred");
+        assert!(!meta.is_empty(), "routing cleared only at finalize");
+        let (done, returned) = rb.finalize(&mut env, 0, &mut meta).unwrap().unwrap();
+        assert!(done >= end);
+        assert_eq!(returned, 10);
+        assert!(env.device.kv_is_empty(0));
+        assert!(meta.is_empty());
+        assert!(rb.finalize(&mut env, 0, &mut meta).unwrap().is_none());
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //! [`engine::KvEngine`] trait (put/get/delete/write_batch/snapshot/
 //! iter/scan/flush/finish — reads are cursor-first, with refcounted
 //! pinned snapshots; see `engine::iter`), constructed by
-//! [`engine::EngineBuilder`], and loaded by the
+//! [`engine::EngineBuilder`], living a durable open → run →
+//! (close | crash) → reopen lifecycle ([`engine::DurableImage`],
+//! `EngineBuilder::open`: manifest replay + WAL recovery + host-device
+//! reconciliation), and loaded by the
 //! event-driven multi-client scheduler ([`workload::client`] over
 //! [`sim::sched`]): N concurrent clients, open- or closed-loop, driven
 //! in global virtual-time order.

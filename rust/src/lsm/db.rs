@@ -22,6 +22,7 @@ use crate::util::LruCache;
 use super::compaction::{concat_inputs, run_merge, shape_of};
 use super::entry::{Entry, Key, Seq, ValueDesc};
 use super::iterator::LsmIterator;
+use super::manifest::{Manifest, ManifestEdit};
 use super::memtable::Memtable;
 use super::options::LsmOptions;
 use super::stall::{evaluate, StallStats, WriteCondition};
@@ -67,6 +68,39 @@ impl DbStats {
     }
 }
 
+/// What the last `EngineBuilder::open` recovered — surfaced through
+/// `EngineHealth` so drivers can report recovery work uniformly. All
+/// counters are per-life: a durable image carries no stats history, so
+/// a freshly reopened engine reports exactly its own recovery.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    /// 1 when this life was opened from a durable image, 0 when built
+    /// fresh (images do not carry prior lives' counts).
+    pub recoveries: u64,
+    /// Durable WAL records replayed into the memtable at the last open.
+    pub wal_records_replayed: u64,
+    /// Durable WAL records already covered by flushed SSTs (skipped so
+    /// an older WAL copy can't shadow the newer SST version).
+    pub wal_records_discarded: u64,
+    /// Block-FS files deleted because no recovered SST references them
+    /// (outputs of jobs that were mid-write at the crash).
+    pub orphan_files_removed: u64,
+    /// Entries returned by the recovery scan of the device write buffer.
+    pub dev_entries_scanned: u64,
+    /// Device-resident keys routed back to the Dev-LSM (their device
+    /// copy is the newest durable version).
+    pub dev_keys_rerouted: u64,
+    /// Device-resident keys superseded by a newer durable Main-LSM
+    /// version (stale copies; excluded from routing).
+    pub dev_keys_stale: u64,
+    /// Manifest ended inside a rollback window (crash mid-rollback).
+    pub interrupted_rollbacks: u64,
+    /// The image came from a clean close (zero WAL records by contract).
+    pub clean_reopen: bool,
+    /// Virtual time the last recovery took, open() call to ready.
+    pub last_recovery_ns: Nanos,
+}
+
 enum JobKind {
     Flush {
         sst: Arc<super::sst::Sst>,
@@ -96,6 +130,8 @@ pub struct LsmDb {
     imms: VecDeque<Memtable>, // oldest at front
     version: Version,
     wal: Wal,
+    /// Durable edit log mirroring every Version change (crash recovery).
+    manifest: Manifest,
     seq: Seq,
     next_sst_id: u64,
 
@@ -119,6 +155,7 @@ pub struct LsmDb {
 
     pub stall: StallStats,
     pub stats: DbStats,
+    pub recovery: RecoveryStats,
 }
 
 impl LsmDb {
@@ -132,6 +169,7 @@ impl LsmDb {
             mem: Memtable::new(),
             imms: VecDeque::new(),
             wal: Wal::new(),
+            manifest: Manifest::new(),
             seq: 0,
             next_sst_id: 1,
             flush_free_at: 0,
@@ -144,6 +182,7 @@ impl LsmDb {
             scan_cache: new_block_cache(opts.block_cache_blocks),
             stall: StallStats::default(),
             stats: DbStats::default(),
+            recovery: RecoveryStats::default(),
             opts,
         }
     }
@@ -174,6 +213,67 @@ impl LsmDb {
 
     pub fn last_seq(&self) -> Seq {
         self.seq
+    }
+
+    /// Allocate the next sequence number. KVACCEL draws Dev-LSM write
+    /// seqs from this same domain, so cross-interface recency is totally
+    /// ordered — the authority crash recovery reconciles by.
+    pub fn alloc_seq(&mut self) -> Seq {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Resume the sequence domain above externally-durable writes (the
+    /// recovery scan of the device buffer may hold higher seqs than the
+    /// recovered host state).
+    pub fn bump_seq_to(&mut self, seq: Seq) {
+        self.seq = self.seq.max(seq);
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Append a durable manifest edit (KVACCEL writes its rollback
+    /// window markers through this). Returns the fsync completion time.
+    pub fn manifest_append(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        edit: ManifestEdit,
+    ) -> Nanos {
+        self.manifest.append(env, at, edit)
+    }
+
+    /// Newest visible sequence number for `key` across every source, in
+    /// read-path recency order. No latency is charged — recovery
+    /// reconciliation walks this in bulk and charges CPU once.
+    pub fn latest_seq(&self, key: Key) -> Option<Seq> {
+        if let Some((seq, _)) = self.mem.get(key) {
+            return Some(seq);
+        }
+        for imm in self.imms.iter().rev() {
+            if let Some((seq, _)) = imm.get(key) {
+                return Some(seq);
+            }
+        }
+        for sst in &self.version.levels[0] {
+            if !sst.overlaps(key, key) {
+                continue;
+            }
+            if let Some((e, _)) = sst.get(key) {
+                return Some(e.seq);
+            }
+        }
+        for level in 1..self.version.levels.len() {
+            let files = &self.version.levels[level];
+            let idx = files.partition_point(|s| s.largest < key);
+            let Some(sst) = files.get(idx) else { continue };
+            if let Some((e, _)) = sst.get(key) {
+                return Some(e.seq);
+            }
+        }
+        None
     }
 
     pub fn has_pending_jobs(&self) -> bool {
@@ -228,10 +328,18 @@ impl LsmDb {
     }
 
     fn complete(&mut self, env: &mut SimEnv, job: PendingJob) {
+        let end = job.end;
         match job.kind {
             JobKind::Flush { sst, max_seq } => {
                 self.stats.flush_count += 1;
                 self.stats.bytes_flushed += sst.bytes;
+                // the install is durable once its manifest edit is; the
+                // fsync tail only occupies device bandwidth
+                self.manifest.append(
+                    env,
+                    end,
+                    ManifestEdit::AddL0 { sst: sst.clone(), max_seq },
+                );
                 self.version.add_l0(sst);
                 self.imms.pop_front();
                 self.inflight_flushes -= 1;
@@ -251,6 +359,17 @@ impl LsmDb {
                 for id in &removed {
                     self.busy.remove(id);
                 }
+                let mut removed_ids: Vec<u64> = removed.iter().copied().collect();
+                removed_ids.sort_unstable();
+                self.manifest.append(
+                    env,
+                    end,
+                    ManifestEdit::CompactionInstall {
+                        level,
+                        removed: removed_ids,
+                        installed: outputs.clone(),
+                    },
+                );
                 self.version.apply_compaction(level, &removed, outputs);
                 for f in removed_files {
                     // files may already be gone in pathological shutdowns
@@ -796,6 +915,172 @@ impl LsmDb {
     pub fn cache_hit_rate(&self) -> f64 {
         self.cache.hit_rate()
     }
+
+    // -----------------------------------------------------------------
+    // Durable lifecycle: close / crash / open
+    // -----------------------------------------------------------------
+
+    /// Split into the parts a `DurableImage` carries. `watermark`
+    /// selects the WAL cut: `Some(w)` keeps only records whose bytes
+    /// reached flash by stream offset `w` (crash); `None` keeps every
+    /// retained record (clean close — empty by then).
+    pub fn into_image_parts(
+        self,
+        watermark: Option<u64>,
+    ) -> (LsmOptions, MergeEngine, BloomBuilder, Manifest, Vec<Entry>) {
+        let LsmDb { opts, engine, bloom, manifest, wal, .. } = self;
+        let records = match watermark {
+            Some(w) => wal.durable_entries(w),
+            None => wal.replay(),
+        };
+        (opts, engine, bloom, manifest, records)
+    }
+
+    /// Clean shutdown: drain all work, seal + fsync the WAL, write the
+    /// CleanShutdown manifest edit. The returned image reopens with zero
+    /// WAL records to replay.
+    pub fn close_into_image(
+        mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> Result<crate::engine::DurableImage> {
+        let t = self.flush_and_wait(env, at);
+        let t = env.device.wal_sync(t);
+        let last_seq = self.seq;
+        let t = self
+            .manifest
+            .append(env, t, ManifestEdit::CleanShutdown { last_seq });
+        env.clock.advance_to(t);
+        let slowdown = self.opts.enable_slowdown;
+        let (opts, merge, bloom, manifest, wal) = self.into_image_parts(None);
+        Ok(crate::engine::DurableImage {
+            kind: crate::baselines::SystemKind::RocksDb { slowdown },
+            opts,
+            merge,
+            bloom,
+            manifest,
+            wal,
+            kvaccel_cfg: None,
+            adoc_cfg: None,
+            clean: true,
+            taken_at: t,
+        })
+    }
+
+    /// Power loss at `at`: background jobs finished before `at` have
+    /// applied (their manifest edits are durable); everything else —
+    /// memtables, page-cached WAL bytes, in-flight job outputs — is
+    /// lost. The device keeps NAND contents and the FTL map.
+    pub fn crash_into_image(
+        mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> crate::engine::DurableImage {
+        self.catch_up(env, at);
+        // capture the durability cut BEFORE the power loss wipes the
+        // page-cache accounting (those bytes are lost, not durable)
+        let watermark = env.device.wal_durable_watermark();
+        env.device.crash(at);
+        let slowdown = self.opts.enable_slowdown;
+        let (opts, merge, bloom, manifest, wal) =
+            self.into_image_parts(Some(watermark));
+        crate::engine::DurableImage {
+            kind: crate::baselines::SystemKind::RocksDb { slowdown },
+            opts,
+            merge,
+            bloom,
+            manifest,
+            wal,
+            kvaccel_cfg: None,
+            adoc_cfg: None,
+            clean: false,
+            taken_at: at,
+        }
+    }
+
+    /// Reopen from a durable image: rebuild the Version from the
+    /// manifest edit log, delete orphan files, replay the durable WAL
+    /// records into the memtable with their original sequence numbers,
+    /// and resume the sequence domain. Returns the store and the virtual
+    /// time recovery completed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        env: &mut SimEnv,
+        at: Nanos,
+        opts: LsmOptions,
+        merge: MergeEngine,
+        bloom: BloomBuilder,
+        manifest: Manifest,
+        wal_records: Vec<Entry>,
+        clean: bool,
+    ) -> (Self, Nanos) {
+        let mut db = LsmDb::new(opts, merge, bloom);
+        // a reopen starts a fresh WAL log: restart the device's stream
+        // accounting so the durable watermark matches the new offsets
+        env.device.wal_reset_stream();
+        // read the manifest log back from flash
+        let mut t = env.device.read_block(at, manifest.bytes().max(64));
+        let rec = manifest.rebuild(db.opts.num_levels);
+        db.version = rec.version;
+        db.next_sst_id = rec.next_sst_id;
+        // resume the sequence domain above everything durable: flushed
+        // SSTs, plus the clean-shutdown marker (seqs may have been
+        // allocated to writes that compacted away entirely)
+        db.seq = rec.flushed_upto.max(rec.clean.unwrap_or(0));
+        db.manifest = manifest;
+        db.recovery.recoveries += 1;
+        db.recovery.clean_reopen = clean;
+        db.recovery.interrupted_rollbacks = rec.dangling_rollback as u64;
+        // orphan cleanup: block-FS files no recovered SST references
+        // were mid-write at the crash
+        let live = db.version.live_file_ids();
+        for id in env.device.fs.file_ids() {
+            if !live.contains(&id) {
+                let _ = env.device.delete_file(id);
+                db.recovery.orphan_files_removed += 1;
+            }
+        }
+        // WAL replay: stream the durable records back, skip anything a
+        // flushed SST already covers, re-insert the rest at their
+        // original seqs (rotating the memtable when it fills)
+        let wal_bytes: u64 =
+            wal_records.iter().map(|e| 12 + e.encoded_len()).sum();
+        if wal_bytes > 0 {
+            t = env.device.read_block(t, wal_bytes);
+        }
+        let mut replayed = 0u64;
+        for e in wal_records {
+            if e.seq <= rec.flushed_upto {
+                db.recovery.wal_records_discarded += 1;
+                continue;
+            }
+            db.seq = db.seq.max(e.seq);
+            let bytes = db.wal.append(e);
+            env.device.wal_append(t, bytes);
+            db.mem.insert(e);
+            replayed += 1;
+            if db.mem.approximate_bytes() >= db.opts.write_buffer_size
+                && db.imms.len() + 1 < db.opts.max_write_buffer_number
+            {
+                db.rotate_memtable(env, t);
+            }
+        }
+        let replay_cpu = replayed * db.opts.flush_cpu_ns_per_entry;
+        env.cpu.charge(CpuClass::Flush, t, replay_cpu);
+        t += replay_cpu;
+        // replayed records are made durable again before serving traffic
+        t = env.device.wal_sync(t);
+        db.recovery.wal_records_replayed = replayed;
+        // a reopened log starts a fresh epoch: rebase so the edit log
+        // stays bounded across restarts
+        t = db
+            .manifest
+            .rebase(env, t, &db.version, db.next_sst_id, rec.flushed_upto);
+        db.recovery.last_recovery_ns = t.saturating_sub(at);
+        db.maybe_schedule(env, t);
+        env.clock.advance_to(t);
+        (db, t)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -853,6 +1138,18 @@ impl crate::engine::KvEngine for LsmDb {
 
     fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
         Ok(self.flush_and_wait(env, at))
+    }
+
+    fn close(
+        self: Box<Self>,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> Result<crate::engine::DurableImage> {
+        (*self).close_into_image(env, at)
+    }
+
+    fn crash(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> crate::engine::DurableImage {
+        (*self).crash_into_image(env, at)
     }
 }
 
@@ -1112,6 +1409,92 @@ mod tests {
             t = nt;
             assert_eq!(got, Some(v(k)), "key {k}");
         }
+    }
+
+    #[test]
+    fn manifest_mirrors_installs() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..3000u32 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        db.flush_and_wait(&mut env, t);
+        assert!(db.stats.flush_count > 0 && db.stats.compaction_count > 0);
+        assert_eq!(
+            db.manifest().edit_count() as u64,
+            db.stats.flush_count + db.stats.compaction_count,
+            "every install must write exactly one manifest edit"
+        );
+        // replaying the edit log reproduces the live version exactly
+        let rec = db.manifest().rebuild(db.opts.num_levels);
+        for (l, files) in db.version().levels.iter().enumerate() {
+            let got: Vec<u64> = rec.version.levels[l].iter().map(|s| s.id).collect();
+            let want: Vec<u64> = files.iter().map(|s| s.id).collect();
+            assert_eq!(got, want, "level {l} diverged");
+        }
+    }
+
+    #[test]
+    fn lifecycle_close_open_roundtrip() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..300u32 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        let img = db.close_into_image(&mut env, t).unwrap();
+        assert!(img.clean);
+        assert!(img.wal.is_empty(), "clean close must drain the WAL");
+        let (mut db2, mut t2) = LsmDb::open(
+            &mut env, t, img.opts, img.merge, img.bloom, img.manifest, img.wal,
+            img.clean,
+        );
+        assert_eq!(db2.recovery.wal_records_replayed, 0);
+        assert_eq!(db2.recovery.recoveries, 1);
+        for k in (0..300u32).step_by(37) {
+            let (got, nt) = db2.get(&mut env, t2, k);
+            t2 = nt;
+            assert_eq!(got, Some(v(k)), "key {k} after clean reopen");
+        }
+    }
+
+    #[test]
+    fn crash_open_recovers_everything_flushed() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        for k in 0..200u32 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        t = db.flush_and_wait(&mut env, t);
+        // unsynced tail, possibly lost (page cache)
+        for k in 200..260u32 {
+            t = db.put(&mut env, t, k, v(k)).done;
+        }
+        let img = db.crash_into_image(&mut env, t);
+        assert!(!img.clean);
+        let (mut db2, mut t2) = LsmDb::open(
+            &mut env, t, img.opts, img.merge, img.bloom, img.manifest, img.wal,
+            img.clean,
+        );
+        assert_eq!(db2.recovery.recoveries, 1);
+        for k in 0..200u32 {
+            let (got, nt) = db2.get(&mut env, t2, k);
+            t2 = nt;
+            assert_eq!(got, Some(v(k)), "flushed key {k} lost");
+        }
+    }
+
+    #[test]
+    fn latest_seq_tracks_read_priority() {
+        let (mut db, mut env) = rig();
+        let mut t = 0;
+        t = db.put(&mut env, t, 9, v(1)).done;
+        let s1 = db.latest_seq(9).unwrap();
+        t = db.flush_and_wait(&mut env, t);
+        assert_eq!(db.latest_seq(9), Some(s1), "flush preserves the seq");
+        t = db.put(&mut env, t, 9, v(2)).done;
+        assert!(db.latest_seq(9).unwrap() > s1, "memtable shadows the SST");
+        assert_eq!(db.latest_seq(123_456), None);
+        let _ = t;
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Versioned manifest: the durable edit log behind crash recovery
+//! (RocksDB's MANIFEST). Every structural change to the store — a flush
+//! installing an L0 SST, a compaction swapping files, a KVACCEL rollback
+//! window opening/closing, a clean shutdown — appends one fsync'd edit
+//! record; reopening replays the log to rebuild the [`Version`] exactly.
+//!
+//! In this simulation the SST *handles* (`Arc<Sst>`) stand in for
+//! re-opening the files by id: the edit log is the durable record, the
+//! `Arc` is the NAND content it points at. Edit bytes are charged to the
+//! device synchronously (manifest writes are fsync'd even under the
+//! paper's sync=false db_bench config — exactly like RocksDB).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::env::SimEnv;
+use crate::sim::Nanos;
+
+use super::entry::Seq;
+use super::sst::Sst;
+use super::version::Version;
+
+/// One durable edit record.
+#[derive(Clone, Debug)]
+pub enum ManifestEdit {
+    /// Full base image written at reopen: compacts the log so the edit
+    /// history stays bounded across restarts.
+    Rebase {
+        levels: Vec<Vec<Arc<Sst>>>,
+        /// Highest sequence number covered by the flushed SSTs.
+        flushed_upto: Seq,
+        next_sst_id: u64,
+    },
+    /// Flush install: a new L0 SST covering WAL records up to `max_seq`.
+    AddL0 { sst: Arc<Sst>, max_seq: Seq },
+    /// Compaction install: `removed` ids leave `level`/`level+1`,
+    /// `installed` enters `level+1`.
+    CompactionInstall {
+        level: usize,
+        removed: Vec<u64>,
+        installed: Vec<Arc<Sst>>,
+    },
+    /// KVACCEL rollback window opened (device buffer being merged back).
+    /// A crash that leaves this edit dangling (no matching
+    /// [`ManifestEdit::RollbackEnd`]) tells recovery the redirection was
+    /// in flight — reconciliation then decides per key which copy is
+    /// durable (paper Fig 8's consistency protocol).
+    RollbackBegin { at: Nanos },
+    /// Rollback window closed: the device buffer was reset.
+    RollbackEnd { returned: u64 },
+    /// Clean shutdown: memtable flushed, WAL sealed + fsync'd and empty.
+    CleanShutdown { last_seq: Seq },
+}
+
+impl ManifestEdit {
+    /// Logical encoded size for device charging: a fixed record header
+    /// plus one file descriptor per SST reference.
+    fn encoded_len(&self) -> u64 {
+        let refs = match self {
+            ManifestEdit::Rebase { levels, .. } => {
+                levels.iter().map(|l| l.len()).sum::<usize>()
+            }
+            ManifestEdit::AddL0 { .. } => 1,
+            ManifestEdit::CompactionInstall { removed, installed, .. } => {
+                removed.len() + installed.len()
+            }
+            _ => 0,
+        };
+        32 + 16 * refs as u64
+    }
+}
+
+/// What [`Manifest::rebuild`] recovers from the edit log.
+#[derive(Clone, Debug)]
+pub struct RecoveredVersion {
+    pub version: Version,
+    pub next_sst_id: u64,
+    /// Highest sequence number durably covered by flushed SSTs — WAL
+    /// records at or below it are already in the tree and must NOT be
+    /// replayed (an older WAL copy re-entering the memtable would shadow
+    /// the newer SST version on the read path).
+    pub flushed_upto: Seq,
+    /// `Some(last_seq)` when the log ends in a clean shutdown.
+    pub clean: Option<Seq>,
+    /// A rollback window was open when the log ended (crash mid-rollback).
+    pub dangling_rollback: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ManifestStats {
+    pub edits: u64,
+    pub bytes_written: u64,
+    pub rebases: u64,
+}
+
+/// The durable edit log. Cloning is cheap (SST handles are `Arc`s); the
+/// clone carried inside a `DurableImage` is the on-flash copy.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// (version number, edit), append order.
+    edits: Vec<(u64, ManifestEdit)>,
+    next_version: u64,
+    /// Bytes of the CURRENT log on flash (reset by `rebase`;
+    /// `stats.bytes_written` stays cumulative).
+    live_bytes: u64,
+    pub stats: ManifestStats,
+}
+
+impl Manifest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn edit_count(&self) -> usize {
+        self.edits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edits.is_empty()
+    }
+
+    /// Current log size on flash (recovery read charging; rewritten logs
+    /// only pay for the live edits, not the rebased-away history).
+    pub fn bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Version number the next edit will carry.
+    pub fn next_version(&self) -> u64 {
+        self.next_version
+    }
+
+    /// Append one edit, charging a synchronous small device write
+    /// (manifest records are fsync'd). Returns the sync completion time;
+    /// the install itself is effective at `at` — the fsync tail only
+    /// occupies device bandwidth.
+    pub fn append(&mut self, env: &mut SimEnv, at: Nanos, edit: ManifestEdit) -> Nanos {
+        let bytes = edit.encoded_len();
+        let done = env.device.meta_sync_write(at, bytes);
+        self.stats.edits += 1;
+        self.stats.bytes_written += bytes;
+        self.live_bytes += bytes;
+        self.edits.push((self.next_version, edit));
+        self.next_version += 1;
+        done
+    }
+
+    /// Rewrite the log as a single [`ManifestEdit::Rebase`] snapshot of
+    /// `version` (called at reopen so the log stays bounded).
+    pub fn rebase(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        version: &Version,
+        next_sst_id: u64,
+        flushed_upto: Seq,
+    ) -> Nanos {
+        self.edits.clear();
+        self.live_bytes = 0;
+        self.stats.rebases += 1;
+        self.append(
+            env,
+            at,
+            ManifestEdit::Rebase {
+                levels: version.levels.clone(),
+                flushed_upto,
+                next_sst_id,
+            },
+        )
+    }
+
+    /// Replay the edit log into a fresh [`Version`] — the recovery path.
+    pub fn rebuild(&self, num_levels: usize) -> RecoveredVersion {
+        let mut version = Version::new(num_levels);
+        let mut next_sst_id = 1u64;
+        let mut flushed_upto: Seq = 0;
+        let mut clean = None;
+        let mut dangling_rollback = false;
+        for (_, edit) in &self.edits {
+            match edit {
+                ManifestEdit::Rebase { levels, flushed_upto: f, next_sst_id: n } => {
+                    version = Version::new(num_levels.max(levels.len()));
+                    for (l, files) in levels.iter().enumerate() {
+                        version.set_level(l, files.clone());
+                    }
+                    flushed_upto = *f;
+                    next_sst_id = *n;
+                    clean = None;
+                    dangling_rollback = false;
+                }
+                ManifestEdit::AddL0 { sst, max_seq } => {
+                    next_sst_id = next_sst_id.max(sst.id + 1);
+                    flushed_upto = flushed_upto.max(*max_seq);
+                    version.add_l0(sst.clone());
+                    clean = None;
+                }
+                ManifestEdit::CompactionInstall { level, removed, installed } => {
+                    let rm: HashSet<u64> = removed.iter().copied().collect();
+                    for s in installed {
+                        next_sst_id = next_sst_id.max(s.id + 1);
+                    }
+                    version.apply_compaction(*level, &rm, installed.clone());
+                    clean = None;
+                }
+                ManifestEdit::RollbackBegin { .. } => {
+                    dangling_rollback = true;
+                    clean = None;
+                }
+                ManifestEdit::RollbackEnd { .. } => {
+                    dangling_rollback = false;
+                }
+                ManifestEdit::CleanShutdown { last_seq } => {
+                    clean = Some(*last_seq);
+                }
+            }
+        }
+        RecoveredVersion { version, next_sst_id, flushed_upto, clean, dangling_rollback }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::entry::{Entry, ValueDesc};
+    use crate::runtime::bloom::BloomBuilder;
+    use crate::ssd::SsdConfig;
+
+    fn sst(id: u64, keys: std::ops::Range<u32>, seq_base: Seq) -> Arc<Sst> {
+        let entries: Vec<Entry> = keys
+            .map(|k| Entry::new(k, seq_base + k, ValueDesc::new(k, 512)))
+            .collect();
+        Arc::new(
+            Sst::build(id, id, entries, &BloomBuilder::rust(), 7, 1024, 32 * 1024)
+                .unwrap(),
+        )
+    }
+
+    fn env() -> SimEnv {
+        SimEnv::new(11, SsdConfig::default())
+    }
+
+    #[test]
+    fn replay_reproduces_flush_and_compaction() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        m.append(&mut env, 0, ManifestEdit::AddL0 { sst: sst(1, 0..10, 100), max_seq: 109 });
+        m.append(&mut env, 0, ManifestEdit::AddL0 { sst: sst(2, 5..15, 200), max_seq: 214 });
+        m.append(
+            &mut env,
+            0,
+            ManifestEdit::CompactionInstall {
+                level: 0,
+                removed: vec![1, 2],
+                installed: vec![sst(3, 0..15, 300)],
+            },
+        );
+        let rec = m.rebuild(3);
+        assert_eq!(rec.version.l0_count(), 0);
+        assert_eq!(rec.version.levels[1].len(), 1);
+        assert_eq!(rec.version.levels[1][0].id, 3);
+        assert_eq!(rec.flushed_upto, 214);
+        assert!(rec.next_sst_id >= 4);
+        assert!(rec.clean.is_none());
+        assert!(!rec.dangling_rollback);
+    }
+
+    #[test]
+    fn l0_replay_keeps_newest_first() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        m.append(&mut env, 0, ManifestEdit::AddL0 { sst: sst(1, 0..5, 10), max_seq: 14 });
+        m.append(&mut env, 0, ManifestEdit::AddL0 { sst: sst(2, 0..5, 20), max_seq: 24 });
+        let rec = m.rebuild(3);
+        assert_eq!(rec.version.levels[0][0].id, 2, "newest flush first");
+    }
+
+    #[test]
+    fn dangling_rollback_detected() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        m.append(&mut env, 0, ManifestEdit::RollbackBegin { at: 5 });
+        assert!(m.rebuild(3).dangling_rollback);
+        m.append(&mut env, 0, ManifestEdit::RollbackEnd { returned: 7 });
+        assert!(!m.rebuild(3).dangling_rollback);
+    }
+
+    #[test]
+    fn clean_marker_cleared_by_later_edits() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        m.append(&mut env, 0, ManifestEdit::CleanShutdown { last_seq: 42 });
+        assert_eq!(m.rebuild(3).clean, Some(42));
+        m.append(&mut env, 0, ManifestEdit::AddL0 { sst: sst(1, 0..5, 50), max_seq: 54 });
+        assert!(m.rebuild(3).clean.is_none());
+    }
+
+    #[test]
+    fn rebase_compacts_the_log() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        for i in 1..=5u64 {
+            let base = i as Seq * 100;
+            m.append(
+                &mut env,
+                0,
+                ManifestEdit::AddL0 { sst: sst(i, 0..5, base), max_seq: base + 4 },
+            );
+        }
+        let rec = m.rebuild(3);
+        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto);
+        assert_eq!(m.edit_count(), 1);
+        let rec2 = m.rebuild(3);
+        assert_eq!(rec2.version.l0_count(), 5);
+        assert_eq!(rec2.flushed_upto, rec.flushed_upto);
+        assert_eq!(rec2.next_sst_id, rec.next_sst_id);
+    }
+
+    #[test]
+    fn rebase_resets_the_live_log_size() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        for i in 1..=8u64 {
+            m.append(
+                &mut env,
+                0,
+                ManifestEdit::AddL0 { sst: sst(i, 0..5, i as Seq * 10), max_seq: i as Seq * 10 + 4 },
+            );
+        }
+        let before = m.bytes();
+        let rec = m.rebuild(3);
+        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto);
+        assert!(m.bytes() < before, "rebased log must shed the history");
+        assert!(m.stats.bytes_written > before, "cumulative stats keep growing");
+    }
+
+    #[test]
+    fn appends_charge_the_device() {
+        let mut env = env();
+        let mut m = Manifest::new();
+        let done = m.append(&mut env, 0, ManifestEdit::CleanShutdown { last_seq: 1 });
+        assert!(done > 0, "manifest fsync must take device time");
+        assert!(m.bytes() > 0);
+    }
+}

@@ -9,6 +9,7 @@ pub mod compaction;
 pub mod db;
 pub mod entry;
 pub mod iterator;
+pub mod manifest;
 pub mod memtable;
 pub mod options;
 pub mod sst;
@@ -16,7 +17,8 @@ pub mod stall;
 pub mod version;
 pub mod wal;
 
-pub use db::{DbStats, LsmDb, PutResult};
+pub use db::{DbStats, LsmDb, PutResult, RecoveryStats};
 pub use entry::{Entry, Key, Seq, ValueDesc, MAX_USER_KEY};
+pub use manifest::{Manifest, ManifestEdit, RecoveredVersion};
 pub use options::LsmOptions;
 pub use stall::{StallReason, StallStats, WriteCondition};

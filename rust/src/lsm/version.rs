@@ -161,6 +161,13 @@ impl Version {
         self.levels[level] = files;
     }
 
+    /// Device file ids referenced by any live SST — recovery's orphan
+    /// cleanup deletes block-FS files outside this set (outputs of jobs
+    /// that were mid-write at the crash).
+    pub fn live_file_ids(&self) -> HashSet<crate::ssd::block_if::FileId> {
+        self.levels.iter().flatten().map(|s| s.file).collect()
+    }
+
     /// Pick the highest-score level needing compaction, excluding files
     /// already being compacted. L0->L1 is serialized (only one at a time —
     /// the paper's write-stall event #2): if any L0 file is busy, L0 is

@@ -1,13 +1,18 @@
 //! Write-ahead log bookkeeping. Bytes are charged to the device through
 //! `SsdDevice::wal_append` (page-cache semantics, sync=false as in the
-//! paper's db_bench runs); segments retain typed entries so recovery can
-//! be tested end-to-end.
+//! paper's db_bench runs); segments retain typed entries plus their
+//! cumulative stream offsets, so crash recovery can cut the log at the
+//! device's durable watermark and replay exactly the records that
+//! reached flash before the power loss.
 
 use super::entry::{Entry, Seq};
 
 #[derive(Clone, Debug, Default)]
 pub struct WalSegment {
     pub entries: Vec<Entry>,
+    /// Cumulative stream offset (bytes since WAL creation) at the END of
+    /// each record; parallel to `entries`. Monotone across segments.
+    ends: Vec<u64>,
     pub bytes: u64,
     pub max_seq: Seq,
 }
@@ -29,10 +34,11 @@ impl Wal {
     pub fn append(&mut self, e: Entry) -> u64 {
         // WAL record: 12 B header + key + seq + value payload.
         let sz = 12 + e.encoded_len();
+        self.total_appended += sz;
         self.current.entries.push(e);
+        self.current.ends.push(self.total_appended);
         self.current.bytes += sz;
         self.current.max_seq = self.current.max_seq.max(e.seq);
-        self.total_appended += sz;
         sz
     }
 
@@ -64,6 +70,22 @@ impl Wal {
             out.extend_from_slice(&s.entries);
         }
         out.extend_from_slice(&self.current.entries);
+        out
+    }
+
+    /// Records whose bytes had reached the device by stream offset
+    /// `watermark` — the crash durability cut: with sync=false, the tail
+    /// still sitting in the host page cache is lost at power loss
+    /// (`SsdDevice::wal_durable_watermark` reports the cut).
+    pub fn durable_entries(&self, watermark: u64) -> Vec<Entry> {
+        let mut out: Vec<Entry> = Vec::new();
+        for s in self.segments.iter().chain(std::iter::once(&self.current)) {
+            for (e, &end) in s.entries.iter().zip(&s.ends) {
+                if end <= watermark {
+                    out.push(*e);
+                }
+            }
+        }
         out
     }
 
@@ -130,5 +152,34 @@ mod tests {
         }
         let seqs: Vec<Seq> = w.replay().iter().map(|x| x.seq).collect();
         assert_eq!(seqs, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn durable_cut_respects_watermark() {
+        let mut w = Wal::new();
+        let sz = w.append(e(1, 1));
+        w.append(e(2, 2));
+        w.seal();
+        w.append(e(3, 3));
+        // only the first record's bytes reached the device
+        let durable = w.durable_entries(sz);
+        assert_eq!(durable.len(), 1);
+        assert_eq!(durable[0].seq, 1);
+        // everything durable once the full stream is written back
+        assert_eq!(w.durable_entries(w.total_appended).len(), 3);
+        // mid-record watermarks exclude the torn record
+        assert_eq!(w.durable_entries(sz + 1).len(), 1);
+    }
+
+    #[test]
+    fn durable_cut_survives_release() {
+        let mut w = Wal::new();
+        w.append(e(1, 1));
+        w.seal();
+        w.append(e(2, 2));
+        let total = w.total_appended;
+        w.release_upto(1); // flushed: segment gone, offsets still global
+        assert_eq!(w.durable_entries(total).len(), 1);
+        assert_eq!(w.durable_entries(total)[0].seq, 2);
     }
 }

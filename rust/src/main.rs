@@ -24,17 +24,20 @@
 //!   --theta F            zipfian skew in (0,1) (default 0.99)
 //!   --scan-len L[:H]     YCSB-E Next count per scan: fixed L, or
 //!                        uniform in [L, H] (default 1:100)
+//!   --crash-at P         inject a power loss after P issued ops (plain
+//!                        integer) or at virtual time P (s|ms|ns
+//!                        suffix), then reopen and report recovery
 
 use anyhow::{anyhow, Result};
 
 use kvaccel::baselines::SystemKind;
-use kvaccel::engine::EngineBuilder;
+use kvaccel::engine::{EngineBuilder, EngineStats, KvEngine};
 use kvaccel::env::SimEnv;
 use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EXPERIMENTS};
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::LsmOptions;
 use kvaccel::runtime::{default_artifacts_dir, XlaRuntime};
-use kvaccel::sim::MILLIS;
+use kvaccel::sim::{Nanos, MILLIS, NS_PER_SEC};
 use kvaccel::ssd::SsdConfig;
 use kvaccel::util::{fmt, Args};
 use kvaccel::workload::{self, BenchConfig, KeyDist, LoopMode, RunResult};
@@ -61,7 +64,7 @@ fn real_main() -> Result<()> {
             println!("              [--threads N] [--scale F] [--seed N] [--engine rust|xla]");
             println!("              [--clients N] [--loop-mode closed|open|poisson] [--rate OPS_S]");
             println!("              [--think-ms T] [--dist uniform|zipfian|latest] [--theta F]");
-            println!("              [--scan-len L[:H]]");
+            println!("              [--scan-len L[:H]] [--crash-at OPS|TIME[s|ms|ns]]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
             println!("  kvaccel bench [--out BENCH_PR2.json] [--scan-out BENCH_PR3.json] [--scale F] [--rate OPS_S] [--clients N]");
@@ -128,6 +131,34 @@ fn parse_scan_len(args: &Args) -> Result<(usize, usize)> {
     }
 }
 
+/// Crash-injection point for `run --crash-at`.
+#[derive(Clone, Copy, Debug)]
+enum CrashPoint {
+    /// Power-loss after this many issued ops (all clients combined).
+    Ops(u64),
+    /// Power-loss at this virtual time (caps the workload horizon).
+    At(Nanos),
+}
+
+/// `--crash-at N` (ops) or `--crash-at T[s|ms|ns]` (virtual time).
+fn parse_crash_at(args: &Args) -> Result<Option<CrashPoint>> {
+    let Some(s) = args.get("crash-at") else { return Ok(None) };
+    let num = |v: &str| -> Result<f64> {
+        v.parse().map_err(|_| {
+            anyhow!("--crash-at expects <ops> or <time>[s|ms|ns], got {s:?}")
+        })
+    };
+    Ok(Some(if let Some(v) = s.strip_suffix("ms") {
+        CrashPoint::At((num(v)? * MILLIS as f64) as Nanos)
+    } else if let Some(v) = s.strip_suffix("ns") {
+        CrashPoint::At(num(v)? as Nanos)
+    } else if let Some(v) = s.strip_suffix('s') {
+        CrashPoint::At((num(v)? * NS_PER_SEC as f64) as Nanos)
+    } else {
+        CrashPoint::Ops(num(s)? as u64)
+    }))
+}
+
 fn parse_dist(args: &Args) -> Result<KeyDist> {
     Ok(match args.get_or("dist", "uniform") {
         "uniform" => KeyDist::Uniform,
@@ -158,6 +189,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 1);
     let mode = parse_loop_mode(args)?;
     let dist = parse_dist(args)?;
+    let crash = parse_crash_at(args)?;
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
 
     let opts = LsmOptions::default().with_threads(threads);
@@ -167,11 +199,23 @@ fn cmd_run(args: &Args) -> Result<()> {
         .bloom_builder(ctx.bloom_builder())
         .build();
     let mut env = SimEnv::new(seed, SsdConfig::default());
-    let cfg: BenchConfig = ctx.bench_config();
+    let mut cfg: BenchConfig = ctx.bench_config();
+    // crash injection: a time point caps the workload horizon, an op
+    // point cuts the global issue budget; either way the run ends at the
+    // crash and the engine is power-lost + reopened below
+    if let Some(CrashPoint::At(t)) = crash {
+        cfg.duration = cfg.duration.min(t);
+    }
+    let stop_ops = match crash {
+        Some(CrashPoint::Ops(n)) => Some(n),
+        _ => None,
+    };
 
     let (r, clients_line) = match workload_id.as_str() {
         "A" | "B" | "C" => {
-            let spec = workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?;
+            let mut spec =
+                workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?;
+            spec.stop_after_ops = stop_ops;
             // report the actors that actually ran (B/C add a read
             // client; open-loop rates are split per preset_spec)
             let line = format!(
@@ -199,10 +243,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             let (slo, shi) = parse_scan_len(args)?;
             let preload_bytes = ((4u64 << 30) as f64 * scale) as u64;
             let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
-            let spec = workload::WorkloadSpec {
+            let mut spec = workload::WorkloadSpec {
                 start_at: t0,
                 ..workload::ycsb_e(&cfg, clients, mode, dist, slo, shi)
             };
+            spec.stop_after_ops = stop_ops;
             let line = format!(
                 "clients       {} [{}] dist {dist:?} scan-len {slo}..{shi}",
                 spec.clients.len(),
@@ -217,6 +262,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
     println!("{clients_line}");
     print_result(&r);
+
+    if crash.is_some() {
+        let t_crash = env.now();
+        println!();
+        println!("-- power loss at {} --", fmt::nanos(t_crash as f64));
+        let image = sys.crash(&mut env, t_crash);
+        println!(
+            "durable image {} WAL records, {} manifest edits",
+            image.wal_records(),
+            image.manifest.edit_count()
+        );
+        let (sys2, t_rec) = EngineBuilder::open(&mut env, t_crash, image);
+        let h = sys2.health();
+        println!(
+            "recovered in  {} (virtual): {} WAL records replayed, \
+             {} dev keys re-routed",
+            fmt::nanos(t_rec.saturating_sub(t_crash) as f64),
+            h.recovered_wal_records,
+            h.recovered_dev_keys
+        );
+    }
     Ok(())
 }
 

@@ -59,6 +59,14 @@ impl BlockFs {
         self.files.len()
     }
 
+    /// All live file ids, sorted (deterministic iteration for recovery's
+    /// orphan cleanup).
+    pub fn file_ids(&self) -> Vec<FileId> {
+        let mut ids: Vec<FileId> = self.files.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     pub fn live_bytes(&self) -> u64 {
         self.files.values().map(|f| f.bytes).sum()
     }

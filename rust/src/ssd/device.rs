@@ -57,6 +57,12 @@ pub struct SsdDevice {
     pub kv: KvInterface,
     cfg: SsdConfig,
     wal_buffered: u64,
+    /// Total WAL bytes ever handed to `wal_append` (durable watermark =
+    /// total - still-buffered page-cache bytes).
+    wal_total: u64,
+    /// Power losses survived (each one drops the host page cache and
+    /// capacitor-dumps the Dev-LSM memtables).
+    pub power_losses: u64,
     /// Device ARM busy ns total (reported alongside host CPU).
     pub device_cpu_ns: Nanos,
 }
@@ -73,6 +79,8 @@ impl SsdDevice {
             kv: KvInterface::new(cfg.devlsm.clone()),
             cfg,
             wal_buffered: 0,
+            wal_total: 0,
+            power_losses: 0,
             device_cpu_ns: 0,
         }
     }
@@ -128,6 +136,7 @@ impl SsdDevice {
     /// host RAM and are written back asynchronously once the threshold
     /// accumulates. Returns immediately-visible time (no device wait).
     pub fn wal_append(&mut self, t: Nanos, bytes: u64) -> Nanos {
+        self.wal_total += bytes;
         self.wal_buffered += bytes;
         if self.wal_buffered >= self.cfg.wal_writeback_bytes {
             let flush = self.wal_buffered;
@@ -139,13 +148,55 @@ impl SsdDevice {
         t
     }
 
-    /// Synchronous WAL flush (fsync) — used by durability tests.
+    /// Synchronous WAL flush (fsync) — used by clean shutdown, recovery
+    /// and durability tests.
     pub fn wal_sync(&mut self, t: Nanos) -> Nanos {
         let flush = self.wal_buffered.max(1);
         self.wal_buffered = 0;
         let pcie_done = self.pcie.transfer(t, flush, Direction::HostToDevice);
         let nand_done = self.nand.submit(t, flush, NandOp::Program);
         pcie_done.max(nand_done)
+    }
+
+    /// WAL stream bytes that have reached flash (everything handed to
+    /// `wal_append` minus the host page cache). This is the crash
+    /// durability cut for WAL records — the sync=false ack-vs-durable
+    /// gap of the paper's db_bench configuration.
+    pub fn wal_durable_watermark(&self) -> u64 {
+        self.wal_total - self.wal_buffered
+    }
+
+    /// Recovery opens a fresh WAL log: stream accounting restarts so the
+    /// durable watermark stays aligned with the new log's record offsets
+    /// (a second crash must not treat the new log's page-cached tail as
+    /// durable just because an earlier life wrote more bytes).
+    pub fn wal_reset_stream(&mut self) {
+        self.wal_total = 0;
+        self.wal_buffered = 0;
+    }
+
+    /// Synchronous small metadata write (a fsync'd manifest edit): rides
+    /// the latency-sensitive PCIe path and the priority NAND queue.
+    pub fn meta_sync_write(&mut self, t: Nanos, bytes: u64) -> Nanos {
+        let bytes = bytes.max(64);
+        let pcie_done = self.pcie.transfer_small(t, bytes, Direction::HostToDevice);
+        let nand_done = self.nand.submit_priority(t, bytes, NandOp::Program);
+        pcie_done.max(nand_done)
+    }
+
+    /// Power loss at `t`: the host page cache (unsynced WAL bytes) is
+    /// lost; NAND contents, the FTL map and the block FS survive; the
+    /// capacitor-backed Dev-LSM memtables dump to NAND runs (commercial
+    /// KV-SSD power-loss-protection semantics). Host memory is gone —
+    /// the engine's `crash()` captures the durable host image separately.
+    pub fn crash(&mut self, _t: Nanos) {
+        self.power_losses += 1;
+        // the buffered bytes never reached flash: remove them from the
+        // stream total so the durable watermark stays truthful even if
+        // read after the crash
+        self.wal_total -= self.wal_buffered;
+        self.wal_buffered = 0;
+        self.kv.power_loss(&mut self.ftl);
     }
 
     // ---------------------------------------------------------------
@@ -338,6 +389,39 @@ mod tests {
         // Dev-LSM flushed at least once into the same NAND: programmed
         // bytes exceed the block file alone.
         assert!(dev.nand.bytes_programmed >= 256 << 20);
+    }
+
+    #[test]
+    fn wal_watermark_tracks_page_cache() {
+        let mut dev = SsdDevice::new(small_cfg());
+        dev.wal_append(0, 4096);
+        // still in the page cache: nothing durable yet
+        assert_eq!(dev.wal_durable_watermark(), 0);
+        dev.wal_sync(0);
+        assert_eq!(dev.wal_durable_watermark(), 4096);
+        // crossing the writeback threshold makes the backlog durable
+        dev.wal_append(0, 2 << 20);
+        assert_eq!(dev.wal_durable_watermark(), 4096 + (2 << 20));
+    }
+
+    #[test]
+    fn crash_drops_page_cache_and_dumps_dev_memtable() {
+        let mut dev = SsdDevice::new(small_cfg());
+        dev.wal_append(0, 4096);
+        let t = dev.kv_put(0, 0, entry(7, 1)).unwrap();
+        assert_eq!(dev.kv.ns(0).unwrap().run_count(), 0, "still in device DRAM");
+        dev.crash(t);
+        assert_eq!(dev.wal_durable_watermark(), 0, "page cache lost");
+        assert_eq!(dev.kv.ns(0).unwrap().run_count(), 1, "capacitor dump");
+        let (v, _) = dev.kv_get(0, t, 7).unwrap();
+        assert_eq!(v, Some(ValueDesc::new(7, 4096)), "redirected write survives");
+    }
+
+    #[test]
+    fn meta_sync_write_takes_device_time() {
+        let mut dev = SsdDevice::new(small_cfg());
+        let done = dev.meta_sync_write(0, 48);
+        assert!(done > 0);
     }
 
     #[test]

@@ -140,6 +140,30 @@ impl DevLsm {
         Ok((ack, charged))
     }
 
+    /// Materialize the memtable as a sorted entry run (flush input).
+    fn mem_entries(&self) -> Vec<Entry> {
+        self.mem
+            .iter()
+            .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
+            .collect()
+    }
+
+    /// Install `entries` as the newest run and clear the memtable —
+    /// the structural half shared by the timed flush and the zero-cost
+    /// capacitor dump. Returns the run's byte size.
+    fn install_mem_run(&mut self, entries: Vec<Entry>, ftl: &mut Ftl) -> Result<u64> {
+        let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        let extent = ftl.alloc_bytes(Region::KeyValue, bytes)?;
+        self.runs.insert(
+            0,
+            DevRun { entries: Arc::new(entries), extent, bytes },
+        );
+        self.mem.clear();
+        self.mem_bytes = 0;
+        self.pinned_mem = None;
+        Ok(bytes)
+    }
+
     /// Flush the device memtable to a sorted NAND run. The ARM serializes
     /// entries; NAND programs complete asynchronously (capacitor-backed).
     /// Returns ARM busy-time charged.
@@ -153,23 +177,11 @@ impl DevLsm {
             return Ok(0);
         }
         self.stats.flushes += 1;
-        let entries: Vec<Entry> = self
-            .mem
-            .iter()
-            .map(|(&k, &(seq, val))| Entry { key: k, seq, val })
-            .collect();
-        let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        let entries = self.mem_entries();
         let work = self.cfg.arm_serialize_ns * entries.len() as u64;
         let ready = self.arm(t, work);
-        let extent = ftl.alloc_bytes(Region::KeyValue, bytes)?;
+        let bytes = self.install_mem_run(entries, ftl)?;
         nand.submit(ready, bytes, NandOp::Program);
-        self.runs.insert(
-            0,
-            DevRun { entries: Arc::new(entries), extent, bytes },
-        );
-        self.mem.clear();
-        self.mem_bytes = 0;
-        self.pinned_mem = None;
         if self.cfg.compact_run_trigger > 0 && self.runs.len() > self.cfg.compact_run_trigger
         {
             return Ok(work + self.compact_runs(ready, nand, ftl)?);
@@ -279,6 +291,35 @@ impl DevLsm {
         let ready = self.arm(nand_done, work);
         let payload: u64 = entries.iter().map(|e| e.encoded_len()).sum();
         (entries, ready, work, payload)
+    }
+
+    /// Power-loss capacitor dump: the device memtable (capacitor-backed
+    /// DRAM, commercial KV-SSD PLP semantics) persists as a NAND run with
+    /// no timing cost — the capacitor powers the dump after host power is
+    /// gone. If the KV region can't fit the run the memtable is retained
+    /// in place (the DRAM copy itself is battery-persistent in this
+    /// model), so redirected writes are never lost to a crash.
+    pub fn power_loss_flush(&mut self, ftl: &mut Ftl) {
+        if self.mem.is_empty() {
+            return;
+        }
+        let entries = self.mem_entries();
+        if self.install_mem_run(entries, ftl).is_ok() {
+            self.stats.flushes += 1;
+        }
+    }
+
+    /// Largest sequence number resident anywhere in the buffer (recovery
+    /// resumes the shared sequence domain above it).
+    pub fn max_seq(&self) -> Seq {
+        let mem_max = self.mem.values().map(|&(s, _)| s).max().unwrap_or(0);
+        let run_max = self
+            .runs
+            .iter()
+            .flat_map(|r| r.entries.iter().map(|e| e.seq))
+            .max()
+            .unwrap_or(0);
+        mem_max.max(run_max)
     }
 
     /// Reset after rollback (paper Fig 9 step 8): trim every run, clear
@@ -443,6 +484,22 @@ mod tests {
         d.flush(0, &mut nand, &mut ftl).unwrap();
         assert!(d.run_count() <= 2, "compaction should bound runs");
         assert!(d.stats.compactions > 0);
+    }
+
+    #[test]
+    fn power_loss_dumps_memtable_to_a_run() {
+        let (mut d, mut nand, mut ftl) = rig();
+        for k in 0..6 {
+            d.put(0, e(k, k + 1), &mut nand, &mut ftl).unwrap();
+        }
+        assert_eq!(d.run_count(), 0);
+        assert_eq!(d.max_seq(), 6);
+        d.power_loss_flush(&mut ftl);
+        assert_eq!(d.run_count(), 1);
+        assert!(d.mem.is_empty());
+        assert_eq!(d.max_seq(), 6, "sequence domain preserved across the dump");
+        let m = d.merged_entries();
+        assert_eq!(m.len(), 6, "no entry lost at power loss");
     }
 
     #[test]

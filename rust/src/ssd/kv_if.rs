@@ -84,6 +84,14 @@ impl KvInterface {
     pub fn snapshot(&mut self, ns: NamespaceId) -> Result<DevSnapshot> {
         Ok(self.ns_mut(ns)?.iter_snapshot())
     }
+
+    /// Power loss: every namespace's capacitor-backed memtable dumps to
+    /// a NAND run (runs themselves are already on flash and survive).
+    pub fn power_loss(&mut self, ftl: &mut Ftl) {
+        for ns in &mut self.namespaces {
+            ns.power_loss_flush(ftl);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -235,6 +235,11 @@ pub struct WorkloadSpec {
     pub key_space: Key,
     pub value_size: u32,
     pub seed: u64,
+    /// Global op budget across ALL clients: once this many ops have been
+    /// issued, every client retires and open-loop backlogs are dropped.
+    /// The crash-injection hook (`run --crash-at <ops>`) cuts the run
+    /// here so the driver can power-loss the engine mid-workload.
+    pub stop_after_ops: Option<u64>,
 }
 
 impl WorkloadSpec {
@@ -247,11 +252,18 @@ impl WorkloadSpec {
             key_space: cfg.key_space,
             value_size: cfg.value_size,
             seed: cfg.seed,
+            stop_after_ops: None,
         }
     }
 
     pub fn with_clients(mut self, clients: Vec<ClientConfig>) -> Self {
         self.clients = clients;
+        self
+    }
+
+    /// Cut the run after `n` issued ops in total (crash injection).
+    pub fn with_stop_after(mut self, n: u64) -> Self {
+        self.stop_after_ops = Some(n);
         self
     }
 }
@@ -451,12 +463,16 @@ pub fn run_spec_traced(
     let mut stats = RunStats::new(end_time);
     let mut trace = Vec::new();
     let mut end = spec.start_at;
+    let mut total_issued: u64 = 0;
+    let budget_spent =
+        |total: u64| spec.stop_after_ops.is_some_and(|m| total >= m);
 
     while let Some(ev) = q.pop() {
         let a = ev.actor as usize;
         match ev.kind {
             EventKind::Issue => {
                 if ev.at >= end_time
+                    || budget_spent(total_issued)
                     || clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m)
                 {
                     continue; // client retires
@@ -474,6 +490,7 @@ pub fn run_spec_traced(
                     &mut stats, &mut trace, record_trace,
                 );
                 clients[a].issued += 1;
+                total_issued += 1;
                 clients[a].free_at = done;
                 end = end.max(done);
                 let think = match clients[a].cfg.mode {
@@ -485,6 +502,7 @@ pub fn run_spec_traced(
             }
             EventKind::Arrival => {
                 if ev.at >= end_time
+                    || budget_spent(total_issued)
                     || clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m)
                 {
                     continue; // arrivals stop at the horizon
@@ -498,7 +516,9 @@ pub fn run_spec_traced(
                 }
             }
             EventKind::Dispatch => {
-                if clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m) {
+                if budget_spent(total_issued)
+                    || clients[a].cfg.max_ops.is_some_and(|m| clients[a].issued >= m)
+                {
                     // op cap reached: abandon the queued backlog too
                     clients[a].fifo.clear();
                     clients[a].busy = false;
@@ -518,6 +538,7 @@ pub fn run_spec_traced(
                     &mut stats, &mut trace, record_trace,
                 );
                 clients[a].issued += 1;
+                total_issued += 1;
                 clients[a].free_at = done;
                 end = end.max(done);
                 if clients[a].fifo.is_empty() {
@@ -736,6 +757,7 @@ mod tests {
             key_space: 50_000,
             value_size: 4096,
             seed: 42,
+            stop_after_ops: None,
         }
     }
 
@@ -856,6 +878,24 @@ mod tests {
             "latest reads should find the writer's appends: {:.2}",
             r.read_hit_rate()
         );
+    }
+
+    #[test]
+    fn stop_after_ops_cuts_the_run_globally() {
+        let (mut s, mut env) = build();
+        let clients = vec![
+            ClientConfig::writer(),
+            ClientConfig::writer().with_seed_tag(5),
+            ClientConfig::writer()
+                .with_mode(LoopMode::OpenFixed { ops_per_sec: 5_000.0 })
+                .with_seed_tag(9),
+        ];
+        let r = run_spec(
+            &mut *s,
+            &mut env,
+            &spec(clients, 5).with_stop_after(250),
+        );
+        assert_eq!(r.writes.total, 250, "global budget must cut exactly");
     }
 
     #[test]

@@ -311,9 +311,11 @@ fn kvaccel_scan_stays_consistent_across_a_mid_scan_rollback() {
         assert!(redirected > 0, "{name}: setup must redirect writes");
 
         // open the cursor (pins main + device runs + metadata routing),
-        // read a prefix...
-        let dev_busy = !env.device.kv_is_empty(0);
+        // read a prefix... — the busy probe comes AFTER the cursor's
+        // tick, which may finalize a deferred rollback window from the
+        // load phase
         let mut it = sys.iter(&mut env, t, IterOptions::default());
+        let dev_busy = !env.device.kv_is_empty(0);
         let t1 = it.seek(&mut env, t, 0);
         let (head, t2) = collect_fwd(&mut *it, &mut env, t1, 1000);
 

@@ -1,0 +1,419 @@
+//! Recovery conformance: for any injected crash point, reopening an
+//! engine must yield a prefix-consistent view of the acked writes —
+//! nothing durable lost (flushed SSTs, synced WAL records, the
+//! capacitor-backed device buffer), nothing resurrected over a newer
+//! durable version, no torn KVACCEL redirection — and a clean close must
+//! reopen with zero WAL records to replay.
+//!
+//! Oracle: every write is recorded with a global index. An explicit
+//! `flush()` barrier makes everything before it durable, so for each key
+//! the recovered value must be one of the acked versions at or after the
+//! key's barrier version (sync=false may lose the page-cached tail, but
+//! never a barrier-covered write, and never yield a value that was never
+//! acked).
+
+use std::collections::HashMap;
+
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::{EngineBuilder, EngineStats, IterOptions, KvEngine};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::{KvaccelConfig, KvaccelDb, RollbackScheme};
+use kvaccel::lsm::{Key, LsmOptions, ValueDesc};
+use kvaccel::runtime::{BloomBuilder, MergeEngine};
+use kvaccel::sim::{Nanos, MILLIS};
+use kvaccel::ssd::SsdConfig;
+
+const ENGINE_KINDS: [SystemKind; 6] = [
+    SystemKind::RocksDb { slowdown: true },
+    SystemKind::RocksDb { slowdown: false },
+    SystemKind::Adoc,
+    SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+    SystemKind::Kvaccel { scheme: RollbackScheme::Lazy },
+    SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+];
+
+fn build(kind: SystemKind, seed: u64) -> (Box<dyn KvEngine>, SimEnv) {
+    (
+        EngineBuilder::new(kind)
+            .opts(LsmOptions::small_for_test())
+            .build(),
+        SimEnv::new(seed, SsdConfig::default()),
+    )
+}
+
+fn v(tag: u32) -> ValueDesc {
+    ValueDesc::new(tag, 4096)
+}
+
+/// Per-key acked history + the barrier cut, driving the oracle.
+#[derive(Default)]
+struct Oracle {
+    /// Acked versions per key in write order (None = tombstone).
+    history: HashMap<Key, Vec<Option<ValueDesc>>>,
+    /// Index into `history[k]` of the last version covered by a flush
+    /// barrier (everything at or before it is durable).
+    barrier: HashMap<Key, usize>,
+}
+
+impl Oracle {
+    fn record(&mut self, key: Key, val: Option<ValueDesc>) {
+        self.history.entry(key).or_default().push(val);
+    }
+
+    fn set_barrier(&mut self) {
+        for (k, h) in &self.history {
+            self.barrier.insert(*k, h.len() - 1);
+        }
+    }
+
+    /// Prefix-consistency check for one recovered read.
+    fn check(&self, key: Key, got: Option<ValueDesc>, label: &str) {
+        let Some(h) = self.history.get(&key) else {
+            assert_eq!(got, None, "{label}: key {key} never written");
+            return;
+        };
+        let from = self.barrier.get(&key).copied();
+        let allowed: Vec<Option<ValueDesc>> = match from {
+            Some(b) => h[b..].to_vec(),
+            // no barrier-covered version: post-barrier writes may all be
+            // lost, so absence is allowed too
+            None => {
+                let mut a = h.clone();
+                a.push(None);
+                a
+            }
+        };
+        assert!(
+            allowed.contains(&got),
+            "{label}: key {key} recovered {got:?}, allowed {allowed:?}"
+        );
+    }
+}
+
+/// Write `n1` keys, flush-barrier, write `n2` more (overwrites + a few
+/// deletes), then crash. Returns (engine-less) env, oracle, crash time.
+fn run_workload(
+    sys: &mut dyn KvEngine,
+    env: &mut SimEnv,
+    oracle: &mut Oracle,
+    n1: u32,
+    n2: u32,
+) -> Nanos {
+    let mut t = 0;
+    for i in 0..n1 {
+        let k = (i * 37) % 701;
+        t = sys.put(env, t, k, v(i)).done;
+        oracle.record(k, Some(v(i)));
+    }
+    t = sys.flush(env, t);
+    oracle.set_barrier();
+    for i in 0..n2 {
+        let k = (i * 53) % 701;
+        if i % 29 == 7 {
+            t = sys.delete(env, t, k).done;
+            oracle.record(k, None);
+        } else {
+            t = sys.put(env, t, k, v(10_000 + i)).done;
+            oracle.record(k, Some(v(10_000 + i)));
+        }
+    }
+    t
+}
+
+#[test]
+fn clean_close_reopens_with_zero_wal_records() {
+    for kind in ENGINE_KINDS {
+        let (mut sys, mut env) = build(kind, 21);
+        let mut oracle = Oracle::default();
+        let t = run_workload(&mut *sys, &mut env, &mut oracle, 400, 300);
+        let image = sys.close(&mut env, t).unwrap();
+        assert!(image.clean, "{}: close must mark the image clean", kind.label());
+        assert_eq!(
+            image.wal_records(),
+            0,
+            "{}: clean close must seal + drain the WAL",
+            kind.label()
+        );
+        let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image);
+        let h = sys2.health();
+        assert_eq!(
+            h.recovered_wal_records,
+            0,
+            "{}: clean reopen must replay zero records",
+            kind.label()
+        );
+        assert_eq!(h.recoveries, 1);
+        // after a clean close every acked write is durable: exact check
+        for key in 0..701u32 {
+            let want = oracle
+                .history
+                .get(&key)
+                .and_then(|h| h.last().copied())
+                .flatten();
+            let (got, nt) = sys2.get(&mut env, t2, key);
+            t2 = nt;
+            assert_eq!(got, want, "{}: key {key} after clean reopen", kind.label());
+        }
+    }
+}
+
+#[test]
+fn crash_recovery_is_prefix_consistent_across_engines() {
+    // deterministic pseudo-random crash points per engine kind
+    let mut x: u64 = 0x9E37_79B9;
+    for kind in ENGINE_KINDS {
+        for trial in 0..3u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let n2 = 120 + (x % 1400) as u32;
+            let (mut sys, mut env) = build(kind, 100 + trial);
+            let mut oracle = Oracle::default();
+            let t = run_workload(&mut *sys, &mut env, &mut oracle, 500, n2);
+            let image = sys.crash(&mut env, t);
+            assert!(!image.clean);
+            let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image);
+            let label = format!("{} n2={n2}", kind.label());
+            for key in 0..701u32 {
+                let (got, nt) = sys2.get(&mut env, t2, key);
+                t2 = nt;
+                oracle.check(key, got, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn double_crash_stays_prefix_consistent() {
+    // crash, recover, keep writing, crash again: the second life's WAL
+    // watermark must not inherit the first life's byte count (a reopened
+    // log starts a fresh stream), so the second recovery is still
+    // prefix-consistent
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        let (mut sys, mut env) = build(kind, 33);
+        let mut oracle = Oracle::default();
+        let t = run_workload(&mut *sys, &mut env, &mut oracle, 400, 350);
+        let image = sys.crash(&mut env, t);
+        let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+        // second life: a short burst with NO barrier, then crash again
+        let mut t3 = t2;
+        for i in 0..40u32 {
+            let k = (i * 11) % 701;
+            t3 = sys2.put(&mut env, t3, k, v(20_000 + i)).done;
+            oracle.record(k, Some(v(20_000 + i)));
+        }
+        let image2 = sys2.crash(&mut env, t3);
+        // the fresh-stream invariant: the second-life burst (~165 KB,
+        // far under the 1 MB page cache) must NOT read as durable just
+        // because the first life wrote megabytes to the old log
+        let new_durable = image2
+            .wal
+            .iter()
+            .filter(|e| !e.val.is_tombstone() && e.val.seed >= 20_000)
+            .count();
+        assert_eq!(
+            new_durable,
+            0,
+            "{}: second-life page-cached tail leaked into the durable cut",
+            kind.label()
+        );
+        let (mut sys3, mut t4) = EngineBuilder::open(&mut env, t3, image2);
+        let label = format!("{} double-crash", kind.label());
+        for key in 0..701u32 {
+            let (got, nt) = sys3.get(&mut env, t4, key);
+            t4 = nt;
+            oracle.check(key, got, &label);
+        }
+    }
+}
+
+#[test]
+fn snapshot_and_iterator_conform_on_a_reopened_engine() {
+    for kind in ENGINE_KINDS {
+        let (mut sys, mut env) = build(kind, 77);
+        let mut oracle = Oracle::default();
+        let t = run_workload(&mut *sys, &mut env, &mut oracle, 600, 500);
+        let image = sys.crash(&mut env, t);
+        let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+        // cursor over the full range: keys strictly ascending, every
+        // scanned entry agrees with a point get, every entry passes the
+        // prefix-consistency oracle
+        let snap = sys2.snapshot(&mut env, t2);
+        let mut it = sys2.iter(&mut env, t2, IterOptions::new().at(&snap));
+        let mut t3 = it.seek_to_first(&mut env, t2);
+        let mut last: Option<Key> = None;
+        let mut scanned: Vec<(Key, ValueDesc)> = Vec::new();
+        while it.valid() {
+            let e = it.entry().unwrap();
+            if let Some(l) = last {
+                assert!(e.key > l, "{}: unsorted cursor", kind.label());
+            }
+            last = Some(e.key);
+            scanned.push((e.key, e.val));
+            t3 = it.next(&mut env, t3);
+        }
+        drop(it);
+        let label = format!("{} reopened-scan", kind.label());
+        for &(k, val) in &scanned {
+            oracle.check(k, Some(val), &label);
+            let (got, nt) = sys2.get(&mut env, t3, k);
+            t3 = nt;
+            assert_eq!(
+                got,
+                Some(val),
+                "{}: scan/get divergence at key {k}",
+                kind.label()
+            );
+        }
+        assert!(!scanned.is_empty(), "{}: empty store after reopen", kind.label());
+    }
+}
+
+#[test]
+fn unsynced_tail_is_lost_but_barrier_writes_survive() {
+    // the sync=false ack-vs-durable gap, isolated: a handful of writes
+    // that fit the page cache vanish at power loss; after a flush
+    // barrier they survive
+    let (mut sys, mut env) = build(SystemKind::RocksDb { slowdown: true }, 5);
+    let mut t = 0;
+    for k in 0..5u32 {
+        t = sys.put(&mut env, t, k, v(k)).done;
+    }
+    let image = sys.crash(&mut env, t);
+    assert_eq!(image.wal_records(), 0, "nothing synced, nothing durable");
+    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+    let (got, _) = sys2.get(&mut env, t2, 3);
+    assert_eq!(got, None, "page-cached write must not survive a crash");
+
+    let (mut sys, mut env) = build(SystemKind::RocksDb { slowdown: true }, 5);
+    let mut t = 0;
+    for k in 0..5u32 {
+        t = sys.put(&mut env, t, k, v(k)).done;
+    }
+    t = sys.flush(&mut env, t);
+    let image = sys.crash(&mut env, t);
+    let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image);
+    for k in 0..5u32 {
+        let (got, nt) = sys2.get(&mut env, t2, k);
+        t2 = nt;
+        assert_eq!(got, Some(v(k)), "barrier-covered key {k} lost");
+    }
+}
+
+#[test]
+fn kvaccel_redirected_writes_survive_any_crash() {
+    // redirected writes land in the capacitor-backed device buffer and
+    // are durable at ack — even when every page-cached main-path write
+    // of the same run is lost
+    let (mut db, mut env) = kv_rig(RollbackScheme::Disabled);
+    let mut t = 0;
+    for k in 0..4000u32 {
+        t = db.put(&mut env, t, k, v(k)).done;
+    }
+    assert!(
+        db.controller.stats.writes_to_dev > 0,
+        "pressure should have redirected writes"
+    );
+    let routed = db.metadata.pin();
+    assert!(!routed.is_empty());
+    let mut routed_keys: Vec<Key> = routed.iter().copied().collect();
+    routed_keys.sort_unstable();
+    let image = db.crash_into_image(&mut env, t);
+    let (mut db2, mut t2) = open_kv(&mut env, t, image);
+    assert!(db2.main.recovery.dev_entries_scanned > 0);
+    for k in routed_keys {
+        let (got, nt) = db2.get(&mut env, t2, k);
+        t2 = nt;
+        assert_eq!(got, Some(v(k)), "redirected key {k} lost at crash");
+    }
+}
+
+#[test]
+fn kvaccel_crash_mid_rollback_reconciles_routing() {
+    let (mut db, mut env) = kv_rig(RollbackScheme::Eager);
+    let mut t = 0;
+    // pressure phase: force redirection into the device buffer
+    for k in 0..4000u32 {
+        t = db.put(&mut env, t, k, v(k)).done;
+    }
+    assert!(
+        db.controller.stats.writes_to_dev > 0,
+        "pressure should have redirected writes"
+    );
+    // barrier: make every main-path write durable so the only state the
+    // crash can tear is the rollback window itself
+    t = kvaccel::engine::KvEngine::flush(&mut db, &mut env, t);
+    // calm phase: spaced reads tick the detector until an eager rollback
+    // window opens
+    let mut window: Option<(Nanos, Nanos)> = None;
+    for _ in 0..400 {
+        t += 100 * MILLIS;
+        let (_, nt) = db.get(&mut env, t, 1);
+        t = nt;
+        if let Some(end) = db.rollback.pending_end() {
+            if end > t + 1 {
+                window = Some((t, end));
+                break;
+            }
+        }
+    }
+    let (now, end) = window.expect("eager rollback never opened a window");
+    // crash strictly inside the window: merge-back ran, reset did not
+    let crash_at = now + (end - now) / 2;
+    assert!(db.rollback.in_flight(crash_at));
+    let image = db.crash_into_image(&mut env, crash_at);
+    let (mut db2, mut t2) = open_kv(&mut env, crash_at, image);
+    assert_eq!(
+        db2.main.recovery.interrupted_rollbacks, 1,
+        "dangling RollbackBegin must be detected"
+    );
+    // no torn redirection: every acked key must read one of its acked
+    // values; keys the reconciliation routed to the device must resolve
+    // to their device copy
+    for k in (0..4000u32).step_by(7) {
+        let (got, nt) = db2.get(&mut env, t2, k);
+        t2 = nt;
+        assert_eq!(got, Some(v(k)), "key {k} torn by mid-rollback crash");
+    }
+    assert_eq!(
+        db2.metadata.len() as u64,
+        db2.main.recovery.dev_keys_rerouted,
+        "routing set must match the reconciliation verdict"
+    );
+}
+
+// ---------------------------------------------------------------------
+// helpers for the concrete-KVACCEL tests
+// ---------------------------------------------------------------------
+
+fn kv_rig(scheme: RollbackScheme) -> (KvaccelDb, SimEnv) {
+    (
+        KvaccelDb::new(
+            LsmOptions::small_for_test(),
+            KvaccelConfig::default().with_scheme(scheme),
+            MergeEngine::rust(),
+            BloomBuilder::rust(),
+        ),
+        SimEnv::new(9, SsdConfig::default()),
+    )
+}
+
+fn open_kv(
+    env: &mut SimEnv,
+    at: Nanos,
+    image: kvaccel::engine::DurableImage,
+) -> (KvaccelDb, Nanos) {
+    let cfg = image.kvaccel_cfg.expect("kvaccel image carries its config");
+    KvaccelDb::open(
+        env,
+        at,
+        image.opts,
+        cfg,
+        image.merge,
+        image.bloom,
+        image.manifest,
+        image.wal,
+        image.clean,
+    )
+}

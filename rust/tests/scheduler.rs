@@ -68,6 +68,7 @@ fn mixed_spec(duration: Nanos) -> WorkloadSpec {
         key_space: 20_000,
         value_size: 4096,
         seed: 7,
+        stop_after_ops: None,
     }
 }
 
@@ -115,6 +116,7 @@ fn fillrandom_preset_matches_prerefactor_op_stream() {
         key_space: cfg.key_space,
         value_size: cfg.value_size,
         seed: cfg.seed,
+        stop_after_ops: None,
     };
     let (mut s1, mut env1) = build("rocksdb");
     let (_, trace) = run_spec_traced(&mut *s1, &mut env1, &spec, true);
@@ -248,6 +250,7 @@ fn zipfian_and_latest_clients_run_on_every_engine() {
                 key_space: 10_000,
                 value_size: 1024,
                 seed: 13,
+                stop_after_ops: None,
             };
             let (mut s, mut env) = build(name);
             let r = run_spec(&mut *s, &mut env, &spec);
