@@ -241,6 +241,12 @@ impl KvEngine for AdocEngine {
         KvEngine::iter(&mut self.db, env, at, opts)
     }
 
+    fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.catch_up(env, at);
+        self.db.maybe_schedule(env, at);
+    }
+
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
         self.db.flush_and_wait(env, at)
     }

@@ -122,6 +122,11 @@ pub struct SnapshotInner {
     /// Levels 1..N (disjoint, key-sorted).
     pub levels: Vec<Vec<Arc<Sst>>>,
     pub dev: Option<DevPin>,
+    /// Sharded-store snapshot: one pinned child snapshot per shard, all
+    /// taken at the same virtual instant (the coherent sequence
+    /// horizon). Empty for single-shard engines, whose state lives in
+    /// the flat fields above.
+    pub shards: Vec<Snapshot>,
 }
 
 /// A refcounted, sequence-number-stamped pinned view of an engine.
@@ -152,6 +157,28 @@ impl Snapshot {
                 l0,
                 levels,
                 dev,
+                shards: Vec::new(),
+            }),
+        }
+    }
+
+    /// Pin a sharded-store view from per-shard snapshots taken at one
+    /// virtual instant. The composite `seq` is the highest child horizon
+    /// (shards have independent sequence domains; coherence comes from
+    /// the shared instant, not a shared counter).
+    pub fn pin_sharded(taken_at: Nanos, shards: Vec<Snapshot>) -> Self {
+        let seq = shards.iter().map(|s| s.seq()).max().unwrap_or(0);
+        let dev_seq = shards.iter().map(|s| s.inner.dev_seq).max().unwrap_or(0);
+        Self {
+            inner: Arc::new(SnapshotInner {
+                seq,
+                dev_seq,
+                taken_at,
+                mem_runs: Vec::new(),
+                l0: Vec::new(),
+                levels: Vec::new(),
+                dev: None,
+                shards,
             }),
         }
     }
@@ -167,6 +194,7 @@ impl Snapshot {
     /// Does this snapshot pin device-buffer state (KVACCEL)?
     pub fn spans_device(&self) -> bool {
         self.inner.dev.is_some()
+            || self.inner.shards.iter().any(|s| s.spans_device())
     }
 
     pub fn inner(&self) -> &SnapshotInner {

@@ -148,6 +148,11 @@ pub struct DurableImage {
     pub wal: Vec<Entry>,
     pub kvaccel_cfg: Option<KvaccelConfig>,
     pub adoc_cfg: Option<AdocConfig>,
+    /// Sharded-store image: the top-level shard manifest (ranges → child
+    /// image slots) plus one full child image per shard. When set, the
+    /// flat fields above are placeholders — each shard carries its own
+    /// manifest, WAL and configuration.
+    pub shard: Option<Box<crate::shard::ShardImage>>,
     /// True when produced by a clean close (sealed + fsync'd WAL and a
     /// final CleanShutdown manifest edit).
     pub clean: bool,
@@ -155,9 +160,21 @@ pub struct DurableImage {
 }
 
 impl DurableImage {
-    /// WAL records a reopen would replay (0 after a clean close).
+    /// WAL records a reopen would replay (0 after a clean close),
+    /// summed across shards for a sharded image.
     pub fn wal_records(&self) -> usize {
-        self.wal.len()
+        match &self.shard {
+            Some(s) => s.children.iter().map(|c| c.wal_records()).sum(),
+            None => self.wal.len(),
+        }
+    }
+
+    /// Manifest edits a reopen would read back, summed across shards.
+    pub fn manifest_edits(&self) -> usize {
+        match &self.shard {
+            Some(s) => s.children.iter().map(|c| c.manifest_edits()).sum(),
+            None => self.manifest.edit_count(),
+        }
     }
 }
 
@@ -206,12 +223,29 @@ pub trait EngineStats {
         None
     }
 
+    /// Downcast hook for sharded-store reporting (per-shard breakdown,
+    /// arbiter grants); `None` for single-shard engines.
+    fn sharded(&self) -> Option<&crate::shard::ShardedDb> {
+        None
+    }
+
     fn stall_stats(&self) -> &StallStats {
         &self.main_db().stall
     }
 
     fn db_stats(&self) -> &DbStats {
         &self.main_db().stats
+    }
+
+    /// Writes redirected to the device write buffer (summed across
+    /// shards for a sharded store; 0 for the baselines).
+    fn redirected_writes(&self) -> u64 {
+        self.kvaccel().map_or(0, |k| k.controller.stats.writes_to_dev)
+    }
+
+    /// Completed rollbacks (summed across shards; 0 for the baselines).
+    fn rollbacks(&self) -> u64 {
+        self.kvaccel().map_or(0, |k| k.rollback.stats.rollbacks)
     }
 
     /// Cursor read-amplification totals (Seeks/Nexts issued, blocks and
@@ -304,6 +338,21 @@ pub trait KvEngine: EngineStats {
         (out, t)
     }
 
+    /// Idle-time maintenance at `at`: apply background work that
+    /// completed by now, refresh detectors/tuners, and close elapsed
+    /// rollback windows — everything an operation's entry path would do,
+    /// without issuing an operation. A sharding layer calls this on the
+    /// shards an op does NOT touch, so idle shards' flushes/compactions
+    /// interleave with the hot shard's traffic on virtual time instead
+    /// of freezing until their next op arrives.
+    fn tick(&mut self, _env: &mut SimEnv, _at: Nanos) {}
+
+    /// Mutable KVACCEL downcast (the shard arbiter pushes occupancy
+    /// grants through this); `None` for the baselines.
+    fn kvaccel_mut(&mut self) -> Option<&mut KvaccelDb> {
+        None
+    }
+
     /// Force-rotate the memtable and drain all background work.
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
 
@@ -343,6 +392,7 @@ pub struct EngineBuilder {
     bloom: BloomBuilder,
     kvaccel_cfg: KvaccelConfig,
     adoc_cfg: AdocConfig,
+    shard: Option<crate::shard::ShardSpec>,
 }
 
 impl EngineBuilder {
@@ -354,6 +404,7 @@ impl EngineBuilder {
             bloom: BloomBuilder::rust(),
             kvaccel_cfg: KvaccelConfig::default(),
             adoc_cfg: AdocConfig::default(),
+            shard: None,
         }
     }
 
@@ -420,6 +471,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Partition the keyspace over `n` child engines of this builder's
+    /// kind behind one [`crate::shard::ShardedDb`]. All KVACCEL shards
+    /// share the one simulated device, each in its own KV namespace,
+    /// with the device arbiter partitioning the write-buffer capacity.
+    pub fn sharded(mut self, n: usize, policy: crate::shard::ShardPolicy) -> Self {
+        self.shard = Some(crate::shard::ShardSpec::new(n, policy));
+        self
+    }
+
+    /// Key-space hint for the range router's boundary table (defaults to
+    /// the full key domain; pass the workload's `key_space` so ranges
+    /// split the populated prefix evenly).
+    pub fn shard_key_space(mut self, key_space: Key) -> Self {
+        if let Some(s) = &mut self.shard {
+            s.key_space = key_space;
+        }
+        self
+    }
+
     /// Reopen an engine from a durable image (crash recovery or clean
     /// restart): rebuild the Version from the manifest, replay the
     /// durable WAL records, and — on KVACCEL — rescan the device write
@@ -440,9 +510,14 @@ impl EngineBuilder {
             wal,
             kvaccel_cfg,
             adoc_cfg,
+            shard,
             clean,
             ..
         } = image;
+        if let Some(shard) = shard {
+            let (db, t) = crate::shard::ShardedDb::open(env, at, *shard);
+            return (Box::new(db), t);
+        }
         match kind {
             SystemKind::RocksDb { .. } => {
                 let (db, t) =
@@ -474,23 +549,30 @@ impl EngineBuilder {
     }
 
     pub fn build(self) -> Box<dyn KvEngine> {
-        match self.kind {
-            SystemKind::RocksDb { slowdown } => Box::new(LsmDb::new(
-                self.opts.with_slowdown(slowdown),
-                self.merge,
-                self.bloom,
-            )),
-            SystemKind::Adoc => Box::new(AdocEngine::new(
-                self.opts,
-                self.adoc_cfg,
-                self.merge,
-                self.bloom,
-            )),
+        let Self { kind, opts, merge, bloom, kvaccel_cfg, adoc_cfg, shard } = self;
+        if let Some(spec) = shard {
+            return Box::new(crate::shard::ShardedDb::new(
+                spec,
+                kind,
+                opts,
+                merge,
+                bloom,
+                kvaccel_cfg,
+                adoc_cfg,
+            ));
+        }
+        match kind {
+            SystemKind::RocksDb { slowdown } => {
+                Box::new(LsmDb::new(opts.with_slowdown(slowdown), merge, bloom))
+            }
+            SystemKind::Adoc => {
+                Box::new(AdocEngine::new(opts, adoc_cfg, merge, bloom))
+            }
             SystemKind::Kvaccel { scheme } => Box::new(KvaccelDb::new(
-                self.opts,
-                self.kvaccel_cfg.with_scheme(scheme),
-                self.merge,
-                self.bloom,
+                opts,
+                kvaccel_cfg.with_scheme(scheme),
+                merge,
+                bloom,
             )),
         }
     }

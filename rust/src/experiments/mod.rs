@@ -8,6 +8,7 @@
 
 pub mod figs;
 pub mod recovery;
+pub mod shard_scale;
 pub mod tables;
 
 use std::io::Write;
@@ -177,6 +178,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "fig14" => figs::fig14(ctx),
         "qdelay" => figs::qdelay(ctx),
         "recovery" => recovery::recovery(ctx),
+        "shard-scale" => shard_scale::shard_scale(ctx),
         "table5" => tables::table5(ctx),
         "table6" => tables::table6(ctx),
         "all" => {
@@ -193,7 +195,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 12] = [
+pub const ALL_EXPERIMENTS: [&str; 13] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "qdelay", "recovery", "table5", "table6",
+    "qdelay", "recovery", "shard-scale", "table5", "table6",
 ];

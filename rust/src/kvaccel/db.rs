@@ -70,6 +70,12 @@ pub struct KvaccelDb {
     /// recovery reconciles by. Interface routing on the hot path is
     /// still owned by the Metadata Manager.
     dev_seq: Seq,
+    /// Set by the shard arbiter: compare THIS namespace's share of the
+    /// KV region against the controller cap (the shard's grant), instead
+    /// of the whole region's fill. Per-shard grants sum to the region
+    /// budget, so each shard honoring its own grant bounds the region —
+    /// while a standalone store keeps the region-wide signal.
+    pub scoped_occupancy: bool,
     /// Original configuration, retained for the durable image.
     cfg: KvaccelConfig,
 }
@@ -97,7 +103,26 @@ impl KvaccelDb {
             rollback: RollbackManager::new(cfg.rollback.clone()),
             ns: cfg.namespace,
             dev_seq: 0,
+            scoped_occupancy: false,
             cfg,
+        }
+    }
+
+    /// The occupancy the Controller weighs against its cap: the whole KV
+    /// region's fill for a standalone store, this namespace's share when
+    /// a shard arbiter granted this shard a slice of the region. The
+    /// scoped signal keeps a physical device-full backstop: per-ns
+    /// shares are logical bytes while the FTL allocates whole pages, so
+    /// when the region itself is nearly out of pages, refuse outright
+    /// rather than let rounding overfill it.
+    fn backpressure_occ(&self, env: &SimEnv) -> f64 {
+        if self.scoped_occupancy {
+            if env.device.kv_occupancy() >= 0.98 {
+                return 1.0;
+            }
+            env.device.kv_ns_occupancy(self.ns)
+        } else {
+            env.device.kv_occupancy()
         }
     }
 
@@ -109,8 +134,9 @@ impl KvaccelDb {
     /// reset the device buffer, clear the routing table, and write the
     /// RollbackEnd manifest edit. Returns the completion time.
     fn finalize_window(&mut self, env: &mut SimEnv) -> Result<Option<Nanos>> {
+        let stream = self.main.opts.wal_stream;
         let Some((done, returned)) =
-            self.rollback.finalize(env, self.ns, &mut self.metadata)?
+            self.rollback.finalize(env, self.ns, stream, &mut self.metadata)?
         else {
             return Ok(None);
         };
@@ -135,7 +161,9 @@ impl KvaccelDb {
             return;
         }
         let dev_empty = env.device.kv_is_empty(self.ns);
-        let occ = env.device.kv_occupancy();
+        // same scoping as the routing backpressure: a sharded sibling's
+        // fill must not force-trigger THIS shard's lazy rollback
+        let occ = self.backpressure_occ(env);
         if self
             .rollback
             .should_rollback(at, &self.detector, dev_empty, occ)
@@ -146,6 +174,15 @@ impl KvaccelDb {
                 .begin(env, at, self.ns, &mut self.main, &mut self.metadata)
                 .expect("rollback failed");
         }
+    }
+
+    /// Idle-time maintenance: the same detector/rollback tick operations
+    /// run, exposed so a sharding layer can keep this shard's detector
+    /// and background work current while traffic concentrates elsewhere
+    /// (an idle shard's stall signals must stay fresh for the device
+    /// arbiter to reclaim its grant).
+    pub fn maintain(&mut self, env: &mut SimEnv, at: Nanos) {
+        self.tick(env, at);
     }
 
     /// One routing decision: during an open rollback window every write
@@ -168,7 +205,7 @@ impl KvaccelDb {
         // be up to 0.1 s stale and a hard stop must never block KVACCEL.
         let stall = self.detector.stall_imminent()
             || self.main.write_condition().is_stopped();
-        let occ = env.device.kv_occupancy();
+        let occ = self.backpressure_occ(env);
         match self.route_write(at, stall, occ) {
             WritePath::Dev => {
                 self.dev_seq = self.main.alloc_seq();
@@ -220,7 +257,7 @@ impl KvaccelDb {
         self.tick(env, at);
         let stall = self.detector.stall_imminent()
             || self.main.write_condition().is_stopped();
-        let occ = env.device.kv_occupancy();
+        let occ = self.backpressure_occ(env);
         match self.route_write(at, stall, occ) {
             WritePath::Dev => {
                 // The routing decision covers the whole batch, but the KV
@@ -231,7 +268,7 @@ impl KvaccelDb {
                 let mut ack_done = at;
                 let mut dev_ops: usize = 0;
                 for op in batch.ops() {
-                    if env.device.kv_occupancy() >= cap {
+                    if self.backpressure_occ(env) >= cap {
                         break;
                     }
                     self.dev_seq = self.main.alloc_seq();
@@ -419,7 +456,7 @@ impl KvaccelDb {
         at: Nanos,
     ) -> Result<DurableImage> {
         let t = self.finish(env, at)?;
-        let t = env.device.wal_sync(t);
+        let t = env.device.wal_sync_on(self.main.opts.wal_stream, t);
         let last_seq = self.main.last_seq();
         let t = self
             .main
@@ -437,6 +474,7 @@ impl KvaccelDb {
             wal,
             kvaccel_cfg: Some(cfg),
             adoc_cfg: None,
+            shard: None,
             clean: true,
             taken_at: t,
         })
@@ -455,7 +493,8 @@ impl KvaccelDb {
         self.main.catch_up(env, at);
         // capture the durability cut BEFORE the power loss wipes the
         // page-cache accounting (those bytes are lost, not durable)
-        let watermark = env.device.wal_durable_watermark();
+        let watermark =
+            env.device.wal_durable_watermark_on(self.main.opts.wal_stream);
         env.device.crash(at);
         let KvaccelDb { main, cfg, .. } = self;
         let scheme = cfg.rollback.scheme;
@@ -470,6 +509,7 @@ impl KvaccelDb {
             wal,
             kvaccel_cfg: Some(cfg),
             adoc_cfg: None,
+            shard: None,
             clean: false,
             taken_at: at,
         }
@@ -574,6 +614,14 @@ impl crate::engine::KvEngine for KvaccelDb {
         opts: IterOptions,
     ) -> Box<dyn DbIterator> {
         KvaccelDb::iter(self, env, at, opts)
+    }
+
+    fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
+        KvaccelDb::maintain(self, env, at);
+    }
+
+    fn kvaccel_mut(&mut self) -> Option<&mut KvaccelDb> {
+        Some(self)
     }
 
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {

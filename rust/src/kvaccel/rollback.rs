@@ -179,12 +179,13 @@ impl RollbackManager {
         &mut self,
         env: &mut SimEnv,
         ns: NamespaceId,
+        wal_stream: u32,
         metadata: &mut MetadataManager,
     ) -> Result<Option<(Nanos, u64)>> {
         let Some(p) = self.pending.take() else {
             return Ok(None);
         };
-        let synced = env.device.wal_sync(p.end);
+        let synced = env.device.wal_sync_on(wal_stream, p.end);
         let reset_done = env.device.kv_reset(ns, synced)?;
         metadata.clear();
         let done = reset_done.max(p.end);
@@ -208,8 +209,9 @@ impl RollbackManager {
         metadata: &mut MetadataManager,
     ) -> Result<Nanos> {
         self.begin(env, at, ns, main, metadata)?;
+        let stream = main.opts.wal_stream;
         let (done, _) = self
-            .finalize(env, ns, metadata)?
+            .finalize(env, ns, stream, metadata)?
             .expect("begin just opened a window");
         Ok(done)
     }
@@ -314,12 +316,12 @@ mod tests {
         assert!(rb.in_flight(end - 1));
         assert!(!env.device.kv_is_empty(0), "reset must be deferred");
         assert!(!meta.is_empty(), "routing cleared only at finalize");
-        let (done, returned) = rb.finalize(&mut env, 0, &mut meta).unwrap().unwrap();
+        let (done, returned) = rb.finalize(&mut env, 0, 0, &mut meta).unwrap().unwrap();
         assert!(done >= end);
         assert_eq!(returned, 10);
         assert!(env.device.kv_is_empty(0));
         assert!(meta.is_empty());
-        assert!(rb.finalize(&mut env, 0, &mut meta).unwrap().is_none());
+        assert!(rb.finalize(&mut env, 0, 0, &mut meta).unwrap().is_none());
     }
 
     #[test]

@@ -40,6 +40,8 @@ pub mod baselines;
 
 pub mod engine;
 
+pub mod shard;
+
 pub mod workload;
 
 pub mod experiments;

@@ -418,7 +418,9 @@ impl LsmDb {
         let cpu = n * self.opts.flush_cpu_ns_per_entry;
         env.cpu.charge(CpuClass::Flush, start, cpu);
         let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
-        let (file, io_done) = env.device.write_file_priority(start + cpu, bytes)?;
+        let (file, io_done) = env
+            .device
+            .write_file_priority_for(self.opts.wal_stream, start + cpu, bytes)?;
         let id = self.next_sst_id;
         self.next_sst_id += 1;
         let bits = self.opts.bloom_bits_for(entries.len());
@@ -482,7 +484,8 @@ impl LsmDb {
         let mut write_done = merge_done;
         for set in output_sets {
             let bytes: u64 = set.iter().map(|e| e.encoded_len()).sum();
-            let (file, done) = env.device.write_file(merge_done, bytes)?;
+            let (file, done) =
+                env.device.write_file_for(self.opts.wal_stream, merge_done, bytes)?;
             write_done = write_done.max(done);
             let id = self.next_sst_id;
             self.next_sst_id += 1;
@@ -609,7 +612,7 @@ impl LsmDb {
         self.stats.puts += 1;
         self.stats.user_bytes_written += entry.encoded_len();
         let wal_bytes = self.wal.append(entry);
-        env.device.wal_append(at, wal_bytes);
+        env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
         self.mem.insert(entry);
         env.cpu.charge(CpuClass::Foreground, at, self.opts.put_cpu_ns);
         at += self.opts.put_cpu_ns;
@@ -664,7 +667,7 @@ impl LsmDb {
             self.mem.insert(entry);
         }
         // one group-commit WAL submission for the whole batch
-        env.device.wal_append(at, wal_bytes);
+        env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
         let cpu = self.opts.batch_cpu_ns(batch.len() as u64);
         env.cpu.charge(CpuClass::Foreground, at, cpu);
         at += cpu;
@@ -693,7 +696,7 @@ impl LsmDb {
         let entry = Entry::new(key, self.seq, val);
         self.stats.user_bytes_written += entry.encoded_len();
         let wal_bytes = self.wal.append(entry);
-        env.device.wal_append(at, wal_bytes);
+        env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
         self.mem.insert(entry);
         at += self.opts.flush_cpu_ns_per_entry; // bulk-load cost, not client path
         env.cpu.charge(CpuClass::Kvaccel, at, self.opts.flush_cpu_ns_per_entry);
@@ -945,7 +948,7 @@ impl LsmDb {
         at: Nanos,
     ) -> Result<crate::engine::DurableImage> {
         let t = self.flush_and_wait(env, at);
-        let t = env.device.wal_sync(t);
+        let t = env.device.wal_sync_on(self.opts.wal_stream, t);
         let last_seq = self.seq;
         let t = self
             .manifest
@@ -962,6 +965,7 @@ impl LsmDb {
             wal,
             kvaccel_cfg: None,
             adoc_cfg: None,
+            shard: None,
             clean: true,
             taken_at: t,
         })
@@ -979,7 +983,7 @@ impl LsmDb {
         self.catch_up(env, at);
         // capture the durability cut BEFORE the power loss wipes the
         // page-cache accounting (those bytes are lost, not durable)
-        let watermark = env.device.wal_durable_watermark();
+        let watermark = env.device.wal_durable_watermark_on(self.opts.wal_stream);
         env.device.crash(at);
         let slowdown = self.opts.enable_slowdown;
         let (opts, merge, bloom, manifest, wal) =
@@ -993,6 +997,7 @@ impl LsmDb {
             wal,
             kvaccel_cfg: None,
             adoc_cfg: None,
+            shard: None,
             clean: false,
             taken_at: at,
         }
@@ -1017,7 +1022,7 @@ impl LsmDb {
         let mut db = LsmDb::new(opts, merge, bloom);
         // a reopen starts a fresh WAL log: restart the device's stream
         // accounting so the durable watermark matches the new offsets
-        env.device.wal_reset_stream();
+        env.device.wal_reset_stream_on(db.opts.wal_stream);
         // read the manifest log back from flash
         let mut t = env.device.read_block(at, manifest.bytes().max(64));
         let rec = manifest.rebuild(db.opts.num_levels);
@@ -1031,10 +1036,12 @@ impl LsmDb {
         db.recovery.recoveries += 1;
         db.recovery.clean_reopen = clean;
         db.recovery.interrupted_rollbacks = rec.dangling_rollback as u64;
-        // orphan cleanup: block-FS files no recovered SST references
-        // were mid-write at the crash
+        // orphan cleanup: block-FS files in THIS store's directory that
+        // no recovered SST references were mid-write at the crash (a
+        // sharded sibling's files live in other directories and are
+        // never touched)
         let live = db.version.live_file_ids();
-        for id in env.device.fs.file_ids() {
+        for id in env.device.fs.file_ids_for(db.opts.wal_stream) {
             if !live.contains(&id) {
                 let _ = env.device.delete_file(id);
                 db.recovery.orphan_files_removed += 1;
@@ -1056,7 +1063,7 @@ impl LsmDb {
             }
             db.seq = db.seq.max(e.seq);
             let bytes = db.wal.append(e);
-            env.device.wal_append(t, bytes);
+            env.device.wal_append_on(db.opts.wal_stream, t, bytes);
             db.mem.insert(e);
             replayed += 1;
             if db.mem.approximate_bytes() >= db.opts.write_buffer_size
@@ -1069,7 +1076,7 @@ impl LsmDb {
         env.cpu.charge(CpuClass::Flush, t, replay_cpu);
         t += replay_cpu;
         // replayed records are made durable again before serving traffic
-        t = env.device.wal_sync(t);
+        t = env.device.wal_sync_on(db.opts.wal_stream, t);
         db.recovery.wal_records_replayed = replayed;
         // a reopened log starts a fresh epoch: rebase so the edit log
         // stays bounded across restarts
@@ -1130,6 +1137,11 @@ impl crate::engine::KvEngine for LsmDb {
             None => LsmDb::snapshot(self, env, at),
         };
         self.make_iter(snap, &opts)
+    }
+
+    fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
+        self.catch_up(env, at);
+        self.maybe_schedule(env, at);
     }
 
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {

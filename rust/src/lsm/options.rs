@@ -66,6 +66,13 @@ pub struct LsmOptions {
     /// cost `put_cpu_ns / batch_cpu_divisor` each (one WAL submission and
     /// one client round-trip are shared by the whole batch).
     pub batch_cpu_divisor: u64,
+
+    // ----- sharding -----
+    /// Which device WAL log this store appends to. A sharded store gives
+    /// every shard its own stream (per-shard WAL directory), so each
+    /// shard has an independent crash durability cut; 0 is the default
+    /// log unsharded engines use.
+    pub wal_stream: u32,
 }
 
 impl Default for LsmOptions {
@@ -95,6 +102,7 @@ impl Default for LsmOptions {
             flush_cpu_ns_per_entry: MICROS,
             next_cpu_ns: 2 * MICROS,
             batch_cpu_divisor: 4,
+            wal_stream: 0,
         }
     }
 }
@@ -138,6 +146,12 @@ impl LsmOptions {
 
     pub fn with_slowdown(mut self, enabled: bool) -> Self {
         self.enable_slowdown = enabled;
+        self
+    }
+
+    /// Bind this store to an explicit device WAL log (sharding).
+    pub fn with_wal_stream(mut self, stream: u32) -> Self {
+        self.wal_stream = stream;
         self
     }
 

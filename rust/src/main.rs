@@ -37,6 +37,7 @@ use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EX
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::LsmOptions;
 use kvaccel::runtime::{default_artifacts_dir, XlaRuntime};
+use kvaccel::shard::ShardPolicy;
 use kvaccel::sim::{Nanos, MILLIS, NS_PER_SEC};
 use kvaccel::ssd::SsdConfig;
 use kvaccel::util::{fmt, Args};
@@ -65,9 +66,11 @@ fn real_main() -> Result<()> {
             println!("              [--clients N] [--loop-mode closed|open|poisson] [--rate OPS_S]");
             println!("              [--think-ms T] [--dist uniform|zipfian|latest] [--theta F]");
             println!("              [--scan-len L[:H]] [--crash-at OPS|TIME[s|ms|ns]]");
+            println!("              [--shards N] [--shard-policy range|hash]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
             println!("  kvaccel bench [--out BENCH_PR2.json] [--scan-out BENCH_PR3.json] [--scale F] [--rate OPS_S] [--clients N]");
+            println!("                [--shards N] [--shard-policy range|hash]");
             println!("  kvaccel inspect");
             Ok(())
         }
@@ -159,6 +162,26 @@ fn parse_crash_at(args: &Args) -> Result<Option<CrashPoint>> {
     }))
 }
 
+/// `--shards N [--shard-policy range|hash]`: partition the store over N
+/// child engines (range is the default policy). `--shards 1` still goes
+/// through the sharded layer (useful for conformance checks); omitting
+/// the flag builds the plain unsharded engine.
+fn parse_shards(args: &Args) -> Result<Option<(usize, ShardPolicy)>> {
+    let Some(n) = args.get("shards") else { return Ok(None) };
+    let n: usize = n
+        .parse()
+        .map_err(|_| anyhow!("--shards expects a positive integer, got {n:?}"))?;
+    if n == 0 {
+        return Err(anyhow!("--shards must be >= 1"));
+    }
+    let policy = match args.get_or("shard-policy", "range") {
+        "range" => ShardPolicy::Range,
+        "hash" => ShardPolicy::Hash,
+        other => return Err(anyhow!("unknown shard policy {other:?} (range|hash)")),
+    };
+    Ok(Some((n, policy)))
+}
+
 fn parse_dist(args: &Args) -> Result<KeyDist> {
     Ok(match args.get_or("dist", "uniform") {
         "uniform" => KeyDist::Uniform,
@@ -190,16 +213,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mode = parse_loop_mode(args)?;
     let dist = parse_dist(args)?;
     let crash = parse_crash_at(args)?;
+    let shards = parse_shards(args)?;
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
+    let mut cfg: BenchConfig = ctx.bench_config();
 
     let opts = LsmOptions::default().with_threads(threads);
-    let mut sys = EngineBuilder::new(kind)
+    let mut builder = EngineBuilder::new(kind)
         .opts(opts)
         .merge_engine(ctx.merge_engine())
-        .bloom_builder(ctx.bloom_builder())
-        .build();
+        .bloom_builder(ctx.bloom_builder());
+    if let Some((n, policy)) = shards {
+        builder = builder.sharded(n, policy).shard_key_space(cfg.key_space);
+    }
+    let mut sys = builder.build();
     let mut env = SimEnv::new(seed, SsdConfig::default());
-    let mut cfg: BenchConfig = ctx.bench_config();
     // crash injection: a time point caps the workload horizon, an op
     // point cuts the global issue budget; either way the run ends at the
     // crash and the engine is power-lost + reopened below
@@ -259,9 +286,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     println!("system        {}", kind.label());
+    if let Some((n, policy)) = shards {
+        println!("shards        {n} ({} policy, shared device)", policy.label());
+    }
     println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
     println!("{clients_line}");
     print_result(&r);
+    print_shard_breakdown(&*sys, &env);
 
     if crash.is_some() {
         let t_crash = env.now();
@@ -271,7 +302,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "durable image {} WAL records, {} manifest edits",
             image.wal_records(),
-            image.manifest.edit_count()
+            image.manifest_edits()
         );
         let (sys2, t_rec) = EngineBuilder::open(&mut env, t_crash, image);
         let h = sys2.health();
@@ -315,6 +346,39 @@ fn describe_clients(spec: &kvaccel::workload::WorkloadSpec) -> String {
         })
         .collect::<Vec<_>>()
         .join(", ")
+}
+
+/// Per-shard stall/redirect breakdown (sharded stores only).
+fn print_shard_breakdown(sys: &dyn KvEngine, env: &SimEnv) {
+    let Some(sh) = sys.sharded() else { return };
+    println!("per-shard breakdown:");
+    for rep in sh.shard_reports(env) {
+        let grant = rep
+            .grant
+            .map(|g| format!(" grant {:.0}%", g * 100.0))
+            .unwrap_or_default();
+        println!(
+            "  shard {:>2} {:<16} {:>8} puts  {:>7} redirected  {} rollbacks  \
+             {} stops ({:.2}s)  {} slowdowns  {} dev keys ({:.1}% of KV region){grant}",
+            rep.shard,
+            rep.label,
+            rep.puts,
+            rep.redirected,
+            rep.rollbacks,
+            rep.stop_events,
+            rep.stopped_s,
+            rep.slowdown_events,
+            rep.dev_resident_keys,
+            rep.dev_occupancy * 100.0,
+        );
+    }
+    let a = sh.arbiter().stats;
+    if a.rebalances > 0 || a.recovered_transfers > 0 {
+        println!(
+            "  arbiter: {} grant rebalances, {} recovered transfers",
+            a.rebalances, a.recovered_transfers
+        );
+    }
 }
 
 fn print_result(r: &RunResult) {
@@ -381,6 +445,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 4);
     let rate = args.get_f64("rate", 30_000.0);
     let threads = args.get_usize("threads", 4);
+    let shards = parse_shards(args)?;
     let cfg = BenchConfig { seed, ..Default::default() }.scaled(scale);
     let mode = LoopMode::OpenFixed { ops_per_sec: rate };
 
@@ -390,9 +455,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         SystemKind::Adoc,
         SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
     ] {
-        let mut sys = EngineBuilder::new(kind)
-            .opts(LsmOptions::default().with_threads(threads))
-            .build();
+        let mut builder =
+            EngineBuilder::new(kind).opts(LsmOptions::default().with_threads(threads));
+        if let Some((n, policy)) = shards {
+            builder = builder.sharded(n, policy).shard_key_space(cfg.key_space);
+        }
+        let mut sys = builder.build();
         let mut env = SimEnv::new(seed, SsdConfig::default());
         let spec = workload::preset_spec("A", &cfg, clients, mode, KeyDist::Uniform)?;
         let r = workload::run_spec(&mut *sys, &mut env, &spec);

@@ -1,0 +1,391 @@
+//! Device write-buffer capacity arbiter for KVACCEL shards.
+//!
+//! All KVACCEL shards redirect into the *same* physical KV region (the
+//! paper's Fig 8 disaggregation point) — one shard's redirected burst
+//! eats the capacity every other shard would need for its own stall.
+//! The arbiter partitions the redirection budget (the controller's
+//! `max_kv_occupancy`, 0.9 of the region by default) into per-shard
+//! grants, and rebalances them when one shard's stall detector fires
+//! while others are idle, so redirection capacity follows the hot shard.
+//!
+//! Enforcement is the existing controller backpressure: shard `i`'s
+//! controller refuses redirection once the region occupancy reaches
+//! `grant[i]`, so the grant vector is pushed into each shard's
+//! `ControllerConfig` whenever it changes. With one shard the single
+//! grant equals the default cap and the arbiter is inert — the unsharded
+//! behavior, bit for bit.
+//!
+//! Rebalancing is **revoke-before-grant** two-phase: a transfer first
+//! deducts the donor's grant (refusals start immediately), and only
+//! credits the receiver once the revocation has propagated (one detector
+//! interval later). The region can therefore never be over-granted, and
+//! a crash inside the window leaves a durable pending-transfer record
+//! that recovery rolls *forward* — the recovered grant table always sums
+//! back to the full budget.
+
+use crate::sim::{Nanos, MILLIS};
+
+/// One in-flight revoke-before-grant capacity move.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PendingTransfer {
+    pub from: usize,
+    pub to: usize,
+    /// Occupancy fraction being moved.
+    pub amount: f64,
+    /// When the revocation has propagated and the credit applies.
+    pub effective_at: Nanos,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArbiterStats {
+    /// Completed grant transfers.
+    pub rebalances: u64,
+    /// Transfers rolled forward by crash recovery.
+    pub recovered_transfers: u64,
+    /// Arbitration passes that looked at the shard signals.
+    pub ticks: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArbiterConfig {
+    /// Total redirection budget split across shards (the unsharded
+    /// controller default: 0.9 of the KV region).
+    pub total_occupancy: f64,
+    /// No shard's grant falls below this floor (a cold shard can always
+    /// absorb the first moments of a burst while the arbiter reacts).
+    pub min_grant: f64,
+    /// Fraction of the total budget moved per transfer.
+    pub step: f64,
+    /// Arbitration cadence (the detector's 0.1 s).
+    pub interval: Nanos,
+}
+
+impl Default for ArbiterConfig {
+    fn default() -> Self {
+        Self {
+            total_occupancy: 0.9,
+            min_grant: 0.05,
+            step: 0.1,
+            interval: 100 * MILLIS,
+        }
+    }
+}
+
+/// What the arbiter sees of one KVACCEL shard each pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSignal {
+    /// Detector verdict (stall imminent on this shard's Main-LSM).
+    pub stall_imminent: bool,
+    /// This shard's namespace share of the KV region (0..1).
+    pub occupancy: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceArbiter {
+    cfg: ArbiterConfig,
+    /// Per-KVACCEL-shard occupancy caps; always sums to
+    /// `total_occupancy` minus any revoked-but-not-yet-granted amount.
+    grants: Vec<f64>,
+    pending: Option<PendingTransfer>,
+    last_tick: Nanos,
+    ticked_once: bool,
+    pub stats: ArbiterStats,
+}
+
+impl DeviceArbiter {
+    /// Equal initial partition of the budget across `n` KVACCEL shards.
+    pub fn new(n: usize, cfg: ArbiterConfig) -> Self {
+        let n = n.max(1);
+        let grants = vec![cfg.total_occupancy / n as f64; n];
+        Self {
+            cfg,
+            grants,
+            pending: None,
+            last_tick: 0,
+            ticked_once: false,
+            stats: ArbiterStats::default(),
+        }
+    }
+
+    /// Rebuild from a recovered shard manifest. A pending transfer that
+    /// was mid-flight at the crash is rolled forward (the revocation was
+    /// already durable; granting completes it), so the table comes back
+    /// consistent: every grant within `[min_grant, total]` and the sum
+    /// restored to the full budget.
+    pub fn recover(
+        grants: Vec<f64>,
+        pending: Option<PendingTransfer>,
+        cfg: ArbiterConfig,
+    ) -> Self {
+        let n = grants.len().max(1);
+        let mut a = Self {
+            cfg,
+            grants,
+            pending: None,
+            last_tick: 0,
+            ticked_once: false,
+            stats: ArbiterStats::default(),
+        };
+        if let Some(p) = pending {
+            if p.to < a.grants.len() {
+                a.grants[p.to] += p.amount;
+                a.stats.recovered_transfers += 1;
+            }
+        }
+        // defensive normalization: a torn manifest must never leave the
+        // region over- or under-granted
+        let sum: f64 = a.grants.iter().sum();
+        if sum > 0.0 && (sum - a.cfg.total_occupancy).abs() > 1e-9 {
+            let scale = a.cfg.total_occupancy / sum;
+            for g in &mut a.grants {
+                *g *= scale;
+            }
+        } else if sum == 0.0 {
+            a.grants = vec![a.cfg.total_occupancy / n as f64; n];
+        }
+        // scaling can push a small grant under the floor; lift those back
+        // up and take the deficit from the others' headroom, so the table
+        // keeps both invariants (sum == budget, every grant >= floor)
+        let floor = a
+            .cfg
+            .min_grant
+            .min(a.cfg.total_occupancy / a.grants.len() as f64);
+        let mut deficit = 0.0;
+        for g in &mut a.grants {
+            if *g < floor {
+                deficit += floor - *g;
+                *g = floor;
+            }
+        }
+        if deficit > 0.0 {
+            let headroom: f64 =
+                a.grants.iter().map(|g| (g - floor).max(0.0)).sum();
+            if headroom > 0.0 {
+                for g in &mut a.grants {
+                    let h = (*g - floor).max(0.0);
+                    *g -= deficit * h / headroom;
+                }
+            }
+        }
+        a
+    }
+
+    pub fn config(&self) -> &ArbiterConfig {
+        &self.cfg
+    }
+
+    pub fn grants(&self) -> &[f64] {
+        &self.grants
+    }
+
+    pub fn pending(&self) -> Option<PendingTransfer> {
+        self.pending
+    }
+
+    /// Grant capacity still unassigned because a transfer is mid-flight.
+    pub fn in_flight_amount(&self) -> f64 {
+        self.pending.map_or(0.0, |p| p.amount)
+    }
+
+    /// Would a pass at `at` do any work — a matured transfer to settle,
+    /// or the cadence elapsed? Lets the caller skip collecting per-shard
+    /// signals on the overwhelming majority of operations.
+    pub fn due(&self, at: Nanos) -> bool {
+        self.pending.is_some_and(|p| at >= p.effective_at)
+            || !self.ticked_once
+            || at >= self.last_tick + self.cfg.interval
+    }
+
+    /// Begin a revoke-before-grant transfer: deduct the donor now, credit
+    /// the receiver at `effective_at`. Public as the crash-injection hook
+    /// for the conformance tests (a crash between revoke and grant must
+    /// recover to a consistent table).
+    pub fn begin_transfer(&mut self, at: Nanos, from: usize, to: usize, amount: f64) -> bool {
+        if self.pending.is_some() || from == to || amount <= 0.0 {
+            return false;
+        }
+        let floor = self.cfg.min_grant;
+        let amount = amount.min((self.grants[from] - floor).max(0.0));
+        if amount <= 0.0 {
+            return false;
+        }
+        self.grants[from] -= amount;
+        self.pending = Some(PendingTransfer {
+            from,
+            to,
+            amount,
+            effective_at: at + self.cfg.interval,
+        });
+        true
+    }
+
+    /// Apply a matured pending transfer. Returns true if the grant table
+    /// changed.
+    fn settle(&mut self, at: Nanos) -> bool {
+        let Some(p) = self.pending else { return false };
+        if at < p.effective_at {
+            return false;
+        }
+        self.grants[p.to] += p.amount;
+        self.pending = None;
+        self.stats.rebalances += 1;
+        true
+    }
+
+    /// One arbitration pass at `at` over the per-shard signals (indexed
+    /// like the grant table). Returns true when the grant table changed
+    /// and the new caps must be pushed to the shard controllers.
+    pub fn maybe_rebalance(&mut self, at: Nanos, signals: &[ShardSignal]) -> bool {
+        let mut changed = self.settle(at);
+        if self.grants.len() < 2 || signals.len() != self.grants.len() {
+            return changed;
+        }
+        if self.ticked_once && at < self.last_tick + self.cfg.interval {
+            return changed;
+        }
+        self.last_tick = at;
+        self.ticked_once = true;
+        self.stats.ticks += 1;
+        if self.pending.is_some() {
+            return changed; // one transfer in flight at a time
+        }
+        // hottest claimant: stalling and near its cap (redirection is
+        // about to be refused)
+        let claimant = signals
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.stall_imminent && s.occupancy >= 0.5 * self.grants[*i])
+            .max_by(|a, b| a.1.occupancy.total_cmp(&b.1.occupancy))
+            .map(|(i, _)| i);
+        let Some(to) = claimant else { return changed };
+        // calmest donor: not stalling, with the most unused grant beyond
+        // the floor and its own residency
+        let donor = signals
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| {
+                *i != to
+                    && !s.stall_imminent
+                    && self.grants[*i] - self.cfg.min_grant > 1e-9
+            })
+            .max_by(|a, b| {
+                let ha = self.grants[a.0] - a.1.occupancy;
+                let hb = self.grants[b.0] - b.1.occupancy;
+                ha.total_cmp(&hb)
+            })
+            .map(|(i, _)| i);
+        let Some(from) = donor else { return changed };
+        let step = self.cfg.step * self.cfg.total_occupancy;
+        // never revoke below what the donor already occupies (its
+        // resident data keeps its claim until a rollback drains it)
+        let headroom = (self.grants[from]
+            - self.cfg.min_grant.max(signals[from].occupancy))
+        .max(0.0);
+        let amount = step.min(headroom);
+        if amount > 1e-9 && self.begin_transfer(at, from, to, amount) {
+            changed = true; // donor cap dropped immediately
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(stall: bool, occ: f64) -> ShardSignal {
+        ShardSignal { stall_imminent: stall, occupancy: occ }
+    }
+
+    #[test]
+    fn equal_initial_partition() {
+        let a = DeviceArbiter::new(4, ArbiterConfig::default());
+        for &g in a.grants() {
+            assert!((g - 0.225).abs() < 1e-12);
+        }
+        let one = DeviceArbiter::new(1, ArbiterConfig::default());
+        assert!((one.grants()[0] - 0.9).abs() < 1e-12, "N=1 keeps the default cap");
+    }
+
+    #[test]
+    fn grant_follows_the_hot_shard() {
+        let mut a = DeviceArbiter::new(2, ArbiterConfig::default());
+        let hot = sig(true, 0.40);
+        let cold = sig(false, 0.0);
+        // revoke at t0, credit one interval later
+        assert!(a.maybe_rebalance(0, &[hot, cold]));
+        assert!(a.grants()[1] < 0.45, "donor revoked immediately");
+        assert!(a.grants()[0] < 0.46, "credit not yet applied");
+        assert!(a.pending().is_some());
+        let t1 = a.cfg.interval;
+        assert!(a.maybe_rebalance(t1, &[hot, cold]));
+        assert!(a.grants()[0] > 0.45, "hot shard gained capacity");
+        let sum: f64 = a.grants().iter().sum();
+        assert!((sum - 0.9).abs() < 1e-9, "budget conserved: {sum}");
+        assert_eq!(a.stats.rebalances, 1);
+    }
+
+    #[test]
+    fn donor_never_falls_below_floor_or_residency() {
+        let cfg = ArbiterConfig::default();
+        let mut a = DeviceArbiter::new(2, cfg.clone());
+        // donor already holds 0.42 of the region: nothing to give beyond
+        // its own residency
+        let hot = sig(true, 0.4);
+        let full_cold = sig(false, 0.449);
+        for t in 0..20u64 {
+            a.maybe_rebalance(t * cfg.interval, &[hot, full_cold]);
+        }
+        assert!(
+            a.grants()[1] >= 0.449 - 1e-9,
+            "donor revoked below its resident data: {}",
+            a.grants()[1]
+        );
+    }
+
+    #[test]
+    fn no_rebalance_without_a_calm_donor() {
+        let mut a = DeviceArbiter::new(2, ArbiterConfig::default());
+        let both_hot = [sig(true, 0.3), sig(true, 0.3)];
+        assert!(!a.maybe_rebalance(0, &both_hot));
+        assert_eq!(a.stats.rebalances, 0);
+    }
+
+    #[test]
+    fn crash_mid_transfer_recovers_consistently() {
+        let mut a = DeviceArbiter::new(2, ArbiterConfig::default());
+        assert!(a.begin_transfer(0, 1, 0, 0.09));
+        // crash here: grants sum to 0.81, pending carries the 0.09
+        let grants = a.grants().to_vec();
+        let pending = a.pending();
+        let sum_torn: f64 = grants.iter().sum();
+        assert!((sum_torn - 0.81).abs() < 1e-9);
+        let r = DeviceArbiter::recover(grants, pending, ArbiterConfig::default());
+        let sum: f64 = r.grants().iter().sum();
+        assert!((sum - 0.9).abs() < 1e-9, "recovered sum {sum}");
+        assert!(r.pending().is_none());
+        assert_eq!(r.stats.recovered_transfers, 1);
+        assert!((r.grants()[0] - 0.54).abs() < 1e-9, "transfer rolled forward");
+    }
+
+    #[test]
+    fn recover_normalizes_a_torn_table() {
+        // a manifest written mid-rebalance by a buggy layer: over-granted
+        let r = DeviceArbiter::recover(vec![0.6, 0.6], None, ArbiterConfig::default());
+        let sum: f64 = r.grants().iter().sum();
+        assert!((sum - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recover_normalization_respects_the_floor() {
+        // scaling 0.05 + 0.91 down to the 0.9 budget would push the
+        // small grant under the 0.05 floor; recovery must lift it back
+        // and take the deficit from the big grant
+        let r = DeviceArbiter::recover(vec![0.05, 0.91], None, ArbiterConfig::default());
+        let sum: f64 = r.grants().iter().sum();
+        assert!((sum - 0.9).abs() < 1e-9, "sum {sum}");
+        for &g in r.grants() {
+            assert!(g >= 0.05 - 1e-9, "grant {g} below floor");
+        }
+    }
+}

@@ -1,0 +1,1167 @@
+//! Sharded engine layer: a range- or hash-partitioned store of N child
+//! engines (any [`SystemKind`], including KVACCEL) behind the one
+//! [`KvEngine`] interface, sharing a single dual-interface SSD.
+//!
+//! This is the production topology the survey literature assumes —
+//! many column-family/instance-level LSMs serving a high client count —
+//! and the regime where the paper's device write buffer becomes a
+//! *shared, contended* resource: every KVACCEL shard redirects into the
+//! same KV region, so capacity is partitioned by the
+//! [`arbiter::DeviceArbiter`] and follows whichever shard is stalling.
+//!
+//! - [`router::Router`] resolves every key to exactly one shard
+//!   (boundary table for range, seeded hash for hash policy).
+//! - Cross-shard [`WriteBatch`]es split into per-shard sub-batches, each
+//!   applied through its shard's single admission gate.
+//! - Cross-shard snapshots pin every shard at one virtual instant (the
+//!   coherent sequence horizon) and cross-shard cursors k-way-merge the
+//!   per-shard iterators, lazily touching shards so an idle shard whose
+//!   cursor never yields charges no read amplification.
+//! - The durable lifecycle runs per shard (one WAL stream + manifest per
+//!   shard) under a top-level shard manifest (ranges → child images,
+//!   plus the arbiter grant table), so close/crash/recover round-trips
+//!   and a crash mid-rebalance recovers to a consistent grant table.
+
+pub mod arbiter;
+pub mod router;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baselines::SystemKind;
+use crate::engine::{
+    BatchResult, DbIterator, DurableImage, EngineBuilder, EngineHealth,
+    EngineStats, IterOptions, KvEngine, ScanAmp, ScanCounters, Snapshot,
+    WriteBatch,
+};
+use crate::env::SimEnv;
+use crate::lsm::entry::{Entry, Key, ValueDesc, MAX_USER_KEY};
+use crate::lsm::{
+    DbStats, LsmDb, LsmOptions, Manifest, PutResult, StallStats, WriteCondition,
+};
+use crate::runtime::{BloomBuilder, MergeEngine};
+use crate::sim::{Nanos, NS_PER_SEC};
+
+pub use arbiter::{
+    ArbiterConfig, ArbiterStats, DeviceArbiter, PendingTransfer, ShardSignal,
+};
+pub use router::{Router, ShardPolicy, ShardSpec};
+
+// ---------------------------------------------------------------------
+// Durable shard image
+// ---------------------------------------------------------------------
+
+/// The sharded store's durable state: the top-level shard manifest
+/// (partitioning + arbiter grant table) plus one full child image per
+/// shard. Carried inside [`DurableImage::shard`].
+pub struct ShardImage {
+    pub policy: ShardPolicy,
+    /// Range boundary table (first key per shard; zeros for hash).
+    pub boundaries: Vec<Key>,
+    pub hash_seed: u64,
+    pub child_kind: SystemKind,
+    /// Per-shard images in shard order (each with its own manifest and
+    /// WAL stream — the per-shard directories).
+    pub children: Vec<DurableImage>,
+    /// Arbiter grant table as last durably recorded.
+    pub grants: Vec<f64>,
+    /// A revoke-before-grant transfer that was mid-flight at the cut;
+    /// recovery rolls it forward.
+    pub pending: Option<PendingTransfer>,
+}
+
+/// Estimated on-flash size of the top-level shard manifest record.
+fn shard_manifest_bytes(n: usize) -> u64 {
+    64 + 16 * n as u64
+}
+
+// ---------------------------------------------------------------------
+// Per-shard reporting
+// ---------------------------------------------------------------------
+
+/// One row of the per-shard breakdown (`run` report, experiments).
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// Owned key range (range policy) or hash slot label.
+    pub label: String,
+    pub puts: u64,
+    pub gets: u64,
+    pub redirected: u64,
+    pub rollbacks: u64,
+    pub stop_events: u64,
+    pub stopped_s: f64,
+    pub slowdown_events: u64,
+    pub dev_resident_keys: usize,
+    /// Arbiter occupancy grant (None for non-KVACCEL shards).
+    pub grant: Option<f64>,
+    /// This shard's namespace share of the KV region.
+    pub dev_occupancy: f64,
+}
+
+// ---------------------------------------------------------------------
+// The sharded engine
+// ---------------------------------------------------------------------
+
+pub struct ShardedDb {
+    shards: Vec<Box<dyn KvEngine>>,
+    router: Router,
+    arbiter: DeviceArbiter,
+    kind: SystemKind,
+    /// Sharded-level cursor counters: logical seeks/nexts counted once
+    /// per cross-shard movement, blocks/pages folded from the child
+    /// cursors that actually moved — idle shards contribute nothing.
+    counters: Arc<ScanCounters>,
+    /// Aggregates over the children, refreshed after every operation so
+    /// `EngineStats` getters can hand out references.
+    agg_db: DbStats,
+    agg_stall: StallStats,
+    booted: bool,
+}
+
+impl ShardedDb {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        spec: ShardSpec,
+        kind: SystemKind,
+        opts: LsmOptions,
+        merge: MergeEngine,
+        bloom: BloomBuilder,
+        kvaccel_cfg: crate::kvaccel::KvaccelConfig,
+        adoc_cfg: crate::baselines::AdocConfig,
+    ) -> Self {
+        let router = Router::from_spec(&spec);
+        let n = router.shard_count();
+        // the arbiter partitions the CONFIGURED redirection budget (the
+        // controller's occupancy cap), not a hardcoded one, so a custom
+        // cap survives sharding — and N=1 hands the exact configured cap
+        // back to its only shard
+        let arbiter_cfg = ArbiterConfig {
+            total_occupancy: kvaccel_cfg.controller.max_kv_occupancy,
+            ..ArbiterConfig::default()
+        };
+        let shards: Vec<Box<dyn KvEngine>> = (0..n)
+            .map(|i| {
+                let mut kcfg = kvaccel_cfg.clone();
+                // every KVACCEL shard gets its own Dev-LSM namespace on
+                // the one shared device
+                kcfg.namespace = i as u32;
+                EngineBuilder::new(kind)
+                    .opts(opts.clone().with_wal_stream(i as u32))
+                    .merge_engine(merge.clone())
+                    .bloom_builder(bloom.clone())
+                    .kvaccel_config(kcfg)
+                    .adoc_config(adoc_cfg.clone())
+                    .build()
+            })
+            .collect();
+        let mut db = Self {
+            shards,
+            router,
+            arbiter: DeviceArbiter::new(n, arbiter_cfg),
+            kind,
+            counters: Arc::new(ScanCounters::default()),
+            agg_db: DbStats::default(),
+            agg_stall: StallStats::default(),
+            booted: false,
+        };
+        db.refresh_stats();
+        db
+    }
+
+    fn is_kvaccel(&self) -> bool {
+        matches!(self.kind, SystemKind::Kvaccel { .. })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn arbiter(&self) -> &DeviceArbiter {
+        &self.arbiter
+    }
+
+    /// Mutable arbiter access — the conformance tests' fault-injection
+    /// hook (begin a transfer, crash before it settles).
+    pub fn arbiter_mut(&mut self) -> &mut DeviceArbiter {
+        &mut self.arbiter
+    }
+
+    pub fn shards(&self) -> &[Box<dyn KvEngine>] {
+        &self.shards
+    }
+
+    /// Per-shard stall/redirect breakdown for reports.
+    pub fn shard_reports(&self, env: &SimEnv) -> Vec<ShardReport> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let stats = sh.db_stats();
+                let stall = sh.stall_stats();
+                let kv = sh.kvaccel();
+                ShardReport {
+                    shard: i,
+                    label: self.router.shard_label(i),
+                    puts: stats.puts,
+                    gets: stats.gets,
+                    redirected: sh.redirected_writes(),
+                    rollbacks: sh.rollbacks(),
+                    stop_events: stall.stop_events,
+                    stopped_s: stall.stopped_ns_total as f64 / NS_PER_SEC as f64,
+                    slowdown_events: stall.slowdown_events,
+                    dev_resident_keys: kv.map_or(0, |k| k.metadata.len()),
+                    grant: kv.map(|_| self.arbiter.grants()[i]),
+                    dev_occupancy: kv
+                        .map_or(0.0, |k| env.device.kv_ns_occupancy(k.namespace())),
+                }
+            })
+            .collect()
+    }
+
+    /// First-use provisioning: per-shard WAL streams and (for KVACCEL)
+    /// Dev-LSM namespaces on the shared device, plus the initial grant
+    /// push. Idempotent.
+    fn ensure_boot(&mut self, env: &mut SimEnv) {
+        if self.booted {
+            return;
+        }
+        env.device.wal_ensure_streams(self.shards.len());
+        if self.is_kvaccel() {
+            env.device.kv_ensure_namespaces(self.shards.len());
+        }
+        self.push_grants();
+        self.booted = true;
+    }
+
+    /// Install the arbiter's current grants as each KVACCEL shard's
+    /// controller occupancy cap. With N >= 2, each shard also switches
+    /// to its *own* namespace occupancy as the backpressure signal: the
+    /// grants sum to the region budget, so every shard honoring its own
+    /// grant bounds the region, and one shard's fill never chokes a
+    /// sibling's redirection. (N=1 keeps the region-wide signal and the
+    /// full 0.9 cap — bit-identical to the unsharded engine.)
+    fn push_grants(&mut self) {
+        if !self.is_kvaccel() {
+            return;
+        }
+        let scoped = self.shards.len() > 1;
+        let grants = self.arbiter.grants().to_vec();
+        for (sh, g) in self.shards.iter_mut().zip(grants) {
+            if let Some(k) = sh.kvaccel_mut() {
+                k.controller.cfg.max_kv_occupancy = g;
+                k.scoped_occupancy = scoped;
+            }
+        }
+    }
+
+    /// One arbitration pass: read each shard's detector verdict and
+    /// namespace occupancy, rebalance grants if a hot shard needs the
+    /// capacity an idle shard holds, and durably record a changed table
+    /// (the commit point crash recovery rolls forward from).
+    fn arbitrate(&mut self, env: &mut SimEnv, at: Nanos) {
+        if !self.is_kvaccel() || self.shards.len() < 2 {
+            return;
+        }
+        // signals are only worth collecting when the arbiter would act
+        // (cadence elapsed or a transfer matured) — not on every op
+        if !self.arbiter.due(at) {
+            return;
+        }
+        let signals: Vec<ShardSignal> = self
+            .shards
+            .iter()
+            .map(|sh| {
+                let k = sh.kvaccel().expect("kvaccel shard");
+                ShardSignal {
+                    stall_imminent: k.detector.stall_imminent(),
+                    occupancy: env.device.kv_ns_occupancy(k.namespace()),
+                }
+            })
+            .collect();
+        if self.arbiter.maybe_rebalance(at, &signals) {
+            env.device.meta_sync_write(at, shard_manifest_bytes(self.shards.len()));
+            self.push_grants();
+        }
+    }
+
+    /// Pre-operation maintenance: tick every shard the op does not touch
+    /// (their flushes/compactions apply on virtual time instead of
+    /// freezing) and run arbitration. With one shard this is a no-op, so
+    /// N=1 stays bit-identical to the unsharded engine.
+    fn pre_op(&mut self, env: &mut SimEnv, at: Nanos, target: Option<usize>) {
+        self.ensure_boot(env);
+        if self.shards.len() < 2 {
+            return;
+        }
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            if Some(i) != target {
+                sh.tick(env, at);
+            }
+        }
+        self.arbitrate(env, at);
+    }
+
+    fn refresh_stats(&mut self) {
+        let mut db = DbStats::default();
+        let mut stall = StallStats::default();
+        for sh in &self.shards {
+            let d = sh.db_stats();
+            db.puts += d.puts;
+            db.deletes += d.deletes;
+            db.batches += d.batches;
+            db.gets += d.gets;
+            db.get_hits += d.get_hits;
+            db.flush_count += d.flush_count;
+            db.compaction_count += d.compaction_count;
+            db.bytes_flushed += d.bytes_flushed;
+            db.bytes_compacted_read += d.bytes_compacted_read;
+            db.bytes_compacted_written += d.bytes_compacted_written;
+            db.user_bytes_written += d.user_bytes_written;
+            db.stall_anomalies += d.stall_anomalies;
+            let st = sh.stall_stats();
+            stall.slowdown_events += st.slowdown_events;
+            stall.stop_events += st.stop_events;
+            stall.stopped_ns_total += st.stopped_ns_total;
+            stall.delayed_ns_total += st.delayed_ns_total;
+        }
+        // interval lists only change when a stop completes (one interval
+        // per stop event); keep the previous merged list otherwise, so
+        // the per-op refresh stays O(shards) instead of re-sorting the
+        // whole stall history on every operation
+        if stall.stop_events == self.agg_stall.stop_events {
+            stall.stall_intervals = std::mem::take(&mut self.agg_stall.stall_intervals);
+        } else {
+            for sh in &self.shards {
+                stall
+                    .stall_intervals
+                    .extend(sh.stall_stats().stall_intervals.iter().copied());
+            }
+            stall.stall_intervals.sort_unstable();
+        }
+        self.agg_db = db;
+        self.agg_stall = stall;
+    }
+
+    // -----------------------------------------------------------------
+    // Durable lifecycle
+    // -----------------------------------------------------------------
+
+    /// The top-level shard manifest contents (children filled by the
+    /// caller after closing/crashing each shard).
+    fn shard_image(&self) -> ShardImage {
+        ShardImage {
+            policy: self.router.policy(),
+            boundaries: self.router.boundaries().to_vec(),
+            hash_seed: self.router.hash_seed(),
+            child_kind: self.kind,
+            children: Vec::new(),
+            grants: self.arbiter.grants().to_vec(),
+            pending: self.arbiter.pending(),
+        }
+    }
+
+    /// Reopen from a recovered shard manifest: children recover
+    /// sequentially (manifest replay + WAL replay + device reconcile,
+    /// each against its own WAL stream and namespace), the router comes
+    /// back from the boundary table, and the arbiter grant table rolls
+    /// any mid-flight transfer forward to a consistent state.
+    pub fn open(env: &mut SimEnv, at: Nanos, image: ShardImage) -> (Self, Nanos) {
+        let n = image.children.len().max(1);
+        env.device.wal_ensure_streams(n);
+        if matches!(image.child_kind, SystemKind::Kvaccel { .. }) {
+            env.device.kv_ensure_namespaces(n);
+        }
+        // the recovered children carry the ORIGINAL configured controller
+        // cap (not their last granted slice); that is the budget the
+        // recovered grant table must sum back to
+        let total_occupancy = image
+            .children
+            .first()
+            .and_then(|c| c.kvaccel_cfg.as_ref())
+            .map(|c| c.controller.max_kv_occupancy)
+            .unwrap_or_else(|| ArbiterConfig::default().total_occupancy);
+        // read the top-level shard manifest back
+        let mut t = env.device.read_block(at, shard_manifest_bytes(n));
+        let mut shards: Vec<Box<dyn KvEngine>> = Vec::with_capacity(n);
+        for child in image.children {
+            let (sh, tc) = EngineBuilder::open(env, t, child);
+            t = tc;
+            shards.push(sh);
+        }
+        let router =
+            Router::from_parts(image.policy, image.boundaries, image.hash_seed);
+        let arbiter = DeviceArbiter::recover(
+            image.grants,
+            image.pending,
+            ArbiterConfig { total_occupancy, ..ArbiterConfig::default() },
+        );
+        let mut db = Self {
+            shards,
+            router,
+            arbiter,
+            kind: image.child_kind,
+            counters: Arc::new(ScanCounters::default()),
+            agg_db: DbStats::default(),
+            agg_stall: StallStats::default(),
+            booted: false,
+        };
+        db.ensure_boot(env);
+        db.refresh_stats();
+        env.clock.advance_to(t);
+        (db, t)
+    }
+}
+
+// ---------------------------------------------------------------------
+// EngineStats: cross-shard aggregation
+// ---------------------------------------------------------------------
+
+impl EngineStats for ShardedDb {
+    /// Shard 0's Main-LSM (uniform configuration across shards); the
+    /// aggregated accessors below are the real reporting surface.
+    fn main_db(&self) -> &LsmDb {
+        self.shards[0].main_db()
+    }
+
+    fn sharded(&self) -> Option<&ShardedDb> {
+        Some(self)
+    }
+
+    fn stall_stats(&self) -> &StallStats {
+        &self.agg_stall
+    }
+
+    fn db_stats(&self) -> &DbStats {
+        &self.agg_db
+    }
+
+    fn scan_amp(&self) -> ScanAmp {
+        self.counters.snapshot()
+    }
+
+    fn redirected_writes(&self) -> u64 {
+        self.shards.iter().map(|s| s.redirected_writes()).sum()
+    }
+
+    fn rollbacks(&self) -> u64 {
+        self.shards.iter().map(|s| s.rollbacks()).sum()
+    }
+
+    fn health(&self) -> EngineHealth {
+        let mut agg: Option<EngineHealth> = None;
+        for sh in &self.shards {
+            let h = sh.health();
+            agg = Some(match agg {
+                None => h,
+                Some(mut a) => {
+                    a.write_condition = worst_condition(a.write_condition, h.write_condition);
+                    a.l0_files += h.l0_files;
+                    a.imm_memtables += h.imm_memtables;
+                    a.memtable_bytes += h.memtable_bytes;
+                    a.pending_compaction_bytes += h.pending_compaction_bytes;
+                    a.wal_live_bytes += h.wal_live_bytes;
+                    a.dev_resident_keys += h.dev_resident_keys;
+                    a.stall_imminent |= h.stall_imminent;
+                    // every sharded snapshot pins all shards, so the
+                    // logical count is the per-shard maximum
+                    a.live_snapshots = a.live_snapshots.max(h.live_snapshots);
+                    a.min_pinned_seq = match (a.min_pinned_seq, h.min_pinned_seq) {
+                        (Some(x), Some(y)) => Some(x.min(y)),
+                        (x, y) => x.or(y),
+                    };
+                    a.recoveries = a.recoveries.max(h.recoveries);
+                    a.recovered_wal_records += h.recovered_wal_records;
+                    a.recovered_dev_keys += h.recovered_dev_keys;
+                    a
+                }
+            });
+        }
+        agg.expect("sharded store has at least one shard")
+    }
+}
+
+fn worst_condition(a: WriteCondition, b: WriteCondition) -> WriteCondition {
+    let rank = |c: &WriteCondition| match c {
+        WriteCondition::Normal => 0,
+        WriteCondition::Delayed(_) => 1,
+        WriteCondition::Stopped(_) => 2,
+    };
+    if rank(&b) > rank(&a) {
+        b
+    } else {
+        a
+    }
+}
+
+// ---------------------------------------------------------------------
+// KvEngine
+// ---------------------------------------------------------------------
+
+impl KvEngine for ShardedDb {
+    fn put(&mut self, env: &mut SimEnv, at: Nanos, key: Key, val: ValueDesc) -> PutResult {
+        let s = self.router.shard_of(key);
+        self.pre_op(env, at, Some(s));
+        let r = self.shards[s].put(env, at, key, val);
+        self.refresh_stats();
+        r
+    }
+
+    fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> PutResult {
+        let s = self.router.shard_of(key);
+        self.pre_op(env, at, Some(s));
+        let r = self.shards[s].delete(env, at, key);
+        self.refresh_stats();
+        r
+    }
+
+    fn get(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> (Option<ValueDesc>, Nanos) {
+        let s = self.router.shard_of(key);
+        self.pre_op(env, at, Some(s));
+        let r = self.shards[s].get(env, at, key);
+        self.refresh_stats();
+        r
+    }
+
+    /// Split the batch into per-shard sub-batches (stable order within
+    /// each shard) and apply each through its shard's single admission
+    /// gate at the same issue instant — shards are independent stores,
+    /// so the sub-batches proceed as parallel group commits and the
+    /// caller completes at the slowest shard.
+    fn write_batch(&mut self, env: &mut SimEnv, at: Nanos, batch: &WriteBatch) -> BatchResult {
+        if batch.is_empty() {
+            return BatchResult { done: at, ..Default::default() };
+        }
+        let n = self.shards.len();
+        let mut subs: Vec<WriteBatch> = vec![WriteBatch::new(); n];
+        for op in batch.ops() {
+            let s = self.router.shard_of(op.key());
+            match *op {
+                crate::engine::BatchOp::Put { key, val } => {
+                    subs[s].put(key, val);
+                }
+                crate::engine::BatchOp::Delete { key } => {
+                    subs[s].delete(key);
+                }
+            }
+        }
+        self.ensure_boot(env);
+        if n > 1 {
+            for (i, sub) in subs.iter().enumerate() {
+                if sub.is_empty() {
+                    self.shards[i].tick(env, at);
+                }
+            }
+            self.arbitrate(env, at);
+        }
+        let mut done = at;
+        let mut stalled_ns = 0;
+        let mut delayed_ns = 0;
+        for (i, sub) in subs.iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let r = self.shards[i].write_batch(env, at, sub);
+            done = done.max(r.done);
+            // sub-batches run as parallel group commits: the caller's
+            // stall is the slowest shard's, not the sum (keeps the
+            // single-shard invariant stalled_ns <= done - at)
+            stalled_ns = stalled_ns.max(r.stalled_ns);
+            delayed_ns = delayed_ns.max(r.delayed_ns);
+        }
+        env.clock.advance_to(done);
+        self.refresh_stats();
+        BatchResult { done, stalled_ns, delayed_ns, ops: batch.len() }
+    }
+
+    /// Pin every shard at the same virtual instant — the coherent
+    /// sequence horizon: no operation can interleave between the
+    /// per-shard pins, so the composite view is exactly the store's
+    /// state at `at`.
+    fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        self.ensure_boot(env);
+        let snaps: Vec<Snapshot> = self
+            .shards
+            .iter_mut()
+            .map(|sh| sh.snapshot(env, at))
+            .collect();
+        Snapshot::pin_sharded(at, snaps)
+    }
+
+    fn iter(&mut self, env: &mut SimEnv, at: Nanos, opts: IterOptions) -> Box<dyn DbIterator> {
+        self.ensure_boot(env);
+        let snap = match &opts.snapshot {
+            Some(s) => {
+                // a foreign snapshot (child engine, unsharded store, or a
+                // previous life) cannot provide the coherent horizon this
+                // cursor promises — fail loudly instead of silently
+                // re-pinning current state
+                assert_eq!(
+                    s.inner().shards.len(),
+                    self.shards.len(),
+                    "iterating a sharded store requires a snapshot pinned \
+                     by the same sharded store"
+                );
+                s.clone()
+            }
+            None => self.snapshot(env, at),
+        };
+        let child_snaps = snap.inner().shards.clone();
+        let router = self.router.clone();
+        let is_range = router.policy() == ShardPolicy::Range;
+        let children: Vec<Box<dyn DbIterator>> = self
+            .shards
+            .iter_mut()
+            .zip(child_snaps)
+            .enumerate()
+            .map(|(i, (sh, cs))| {
+                // a range shard wholly outside [lower, upper) can never
+                // yield: stand in a trivially-empty cursor instead of
+                // building a real one (the frontier walk skips it anyway)
+                if is_range
+                    && (router.shard_beyond_upper(i, opts.upper_bound)
+                        || router.shard_below_lower(i, opts.lower_bound))
+                {
+                    return Box::new(EmptyCursor) as Box<dyn DbIterator>;
+                }
+                // children are plain ascending-vocabulary cursors; the
+                // sharded cursor mirrors movement ops itself
+                let child_opts = IterOptions {
+                    lower_bound: opts.lower_bound,
+                    upper_bound: opts.upper_bound,
+                    reverse: false,
+                    snapshot: Some(cs),
+                };
+                sh.iter(env, at, child_opts)
+            })
+            .collect();
+        Box::new(ShardIter::new(
+            children,
+            router,
+            &opts,
+            self.counters.clone(),
+        ))
+    }
+
+    fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        self.ensure_boot(env);
+        let mut t = at;
+        for sh in &mut self.shards {
+            t = t.max(sh.flush(env, at));
+        }
+        self.refresh_stats();
+        t
+    }
+
+    fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
+        self.ensure_boot(env);
+        let mut t = at;
+        for sh in &mut self.shards {
+            t = sh.finish(env, t)?;
+        }
+        self.refresh_stats();
+        Ok(t)
+    }
+
+    fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
+        self.ensure_boot(env);
+        for sh in &mut self.shards {
+            sh.tick(env, at);
+        }
+        self.arbitrate(env, at);
+    }
+
+    /// Clean shutdown: every shard closes (final rollback, sealed +
+    /// fsync'd WAL, CleanShutdown edit), then the top-level shard
+    /// manifest is written durably.
+    fn close(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> Result<DurableImage> {
+        let mut image = self.shard_image();
+        let ShardedDb { shards, kind, .. } = *self;
+        let mut t = at;
+        for sh in shards {
+            let img = sh.close(env, t)?;
+            t = t.max(img.taken_at);
+            image.children.push(img);
+        }
+        let t = env
+            .device
+            .meta_sync_write(t, shard_manifest_bytes(image.children.len()));
+        env.clock.advance_to(t);
+        let opts = image.children[0].opts.clone();
+        Ok(DurableImage {
+            kind,
+            opts,
+            merge: MergeEngine::rust(),
+            bloom: BloomBuilder::rust(),
+            manifest: Manifest::new(),
+            wal: Vec::new(),
+            kvaccel_cfg: None,
+            adoc_cfg: None,
+            shard: Some(Box::new(image)),
+            clean: true,
+            taken_at: t,
+        })
+    }
+
+    /// One physical power loss for the whole store: each shard captures
+    /// its own durable cut (per-shard WAL stream watermark, per-shard
+    /// manifest; device-side state survives in place), and the shard
+    /// manifest carries the grant table exactly as last recorded —
+    /// including a torn mid-rebalance transfer, which recovery rolls
+    /// forward.
+    fn crash(self: Box<Self>, env: &mut SimEnv, at: Nanos) -> DurableImage {
+        let mut image = self.shard_image();
+        let ShardedDb { shards, kind, .. } = *self;
+        let losses_before = env.device.power_losses;
+        for sh in shards {
+            image.children.push(sh.crash(env, at));
+        }
+        // the shards all died in the same power loss, not one each
+        env.device.power_losses = losses_before + 1;
+        let opts = image.children[0].opts.clone();
+        DurableImage {
+            kind,
+            opts,
+            merge: MergeEngine::rust(),
+            bloom: BloomBuilder::rust(),
+            manifest: Manifest::new(),
+            wal: Vec::new(),
+            kvaccel_cfg: None,
+            adoc_cfg: None,
+            shard: Some(Box::new(image)),
+            clean: false,
+            taken_at: at,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-shard cursor
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    Fwd,
+    Bwd,
+}
+
+/// Stand-in cursor for a range shard wholly outside the iterator's key
+/// bounds: always invalid, never charges anything.
+struct EmptyCursor;
+
+impl DbIterator for EmptyCursor {
+    fn seek(&mut self, _env: &mut SimEnv, at: Nanos, _key: Key) -> Nanos {
+        at
+    }
+    fn seek_to_first(&mut self, _env: &mut SimEnv, at: Nanos) -> Nanos {
+        at
+    }
+    fn seek_to_last(&mut self, _env: &mut SimEnv, at: Nanos) -> Nanos {
+        at
+    }
+    fn seek_for_prev(&mut self, _env: &mut SimEnv, at: Nanos, _key: Key) -> Nanos {
+        at
+    }
+    fn next(&mut self, _env: &mut SimEnv, at: Nanos) -> Nanos {
+        at
+    }
+    fn prev(&mut self, _env: &mut SimEnv, at: Nanos) -> Nanos {
+        at
+    }
+    fn valid(&self) -> bool {
+        false
+    }
+    fn entry(&self) -> Option<Entry> {
+        None
+    }
+    fn amp(&self) -> ScanAmp {
+        ScanAmp::default()
+    }
+}
+
+/// The cross-shard [`DbIterator`]: a k-way merge over per-shard cursors.
+///
+/// Range policy walks shards in key order, touching each shard's cursor
+/// only when the scan frontier reaches its range — an idle shard whose
+/// cursor never yields charges zero read amplification (the PR5 bugfix:
+/// no double-charged `ScanAmp` from idle shards). Hash policy is
+/// scatter-gather: every shard may own in-range keys, so every cursor
+/// positions and the merge emits the global key order (a key lives on
+/// exactly one shard, so heads never tie).
+pub struct ShardIter {
+    children: Vec<Box<dyn DbIterator>>,
+    router: Router,
+    lower: Option<Key>,
+    upper: Option<Key>,
+    reverse: bool,
+    dir: Dir,
+    cur: Option<(usize, Entry)>,
+    /// Last folded per-child amp, so each movement folds only the delta.
+    folded: Vec<ScanAmp>,
+    counters: Arc<ScanCounters>,
+    local: ScanAmp,
+}
+
+impl ShardIter {
+    fn new(
+        children: Vec<Box<dyn DbIterator>>,
+        router: Router,
+        opts: &IterOptions,
+        counters: Arc<ScanCounters>,
+    ) -> Self {
+        let n = children.len();
+        Self {
+            children,
+            router,
+            lower: opts.lower_bound,
+            upper: opts.upper_bound,
+            reverse: opts.reverse,
+            dir: Dir::Fwd,
+            cur: None,
+            folded: vec![ScanAmp::default(); n],
+            counters,
+            local: ScanAmp::default(),
+        }
+    }
+
+    fn is_range(&self) -> bool {
+        self.router.policy() == ShardPolicy::Range
+    }
+
+    /// Fold child `i`'s block/page deltas into the sharded counters.
+    fn fold(&mut self, i: usize) {
+        let a = self.children[i].amp();
+        let blocks = a.main_blocks - self.folded[i].main_blocks;
+        let pages = a.dev_pages - self.folded[i].dev_pages;
+        if blocks > 0 {
+            self.local.main_blocks += blocks;
+            self.counters
+                .main_blocks
+                .fetch_add(blocks, std::sync::atomic::Ordering::Relaxed);
+        }
+        if pages > 0 {
+            self.local.dev_pages += pages;
+            self.counters
+                .dev_pages
+                .fetch_add(pages, std::sync::atomic::Ordering::Relaxed);
+        }
+        self.folded[i] = a;
+    }
+
+    fn count_seek(&mut self) {
+        self.local.seeks += 1;
+        self.counters
+            .seeks
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn count_next(&mut self) {
+        self.local.nexts += 1;
+        self.counters
+            .nexts
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Winner among positioned children: smallest key (ascending).
+    fn settle_min(&mut self) {
+        let mut best: Option<(usize, Entry)> = None;
+        for (i, c) in self.children.iter().enumerate() {
+            if let Some(e) = c.entry() {
+                if best.map_or(true, |(_, b)| e.key < b.key) {
+                    best = Some((i, e));
+                }
+            }
+        }
+        self.cur = best;
+    }
+
+    /// Winner among positioned children: largest key (descending).
+    fn settle_max(&mut self) {
+        let mut best: Option<(usize, Entry)> = None;
+        for (i, c) in self.children.iter().enumerate() {
+            if let Some(e) = c.entry() {
+                if best.map_or(true, |(_, b)| e.key > b.key) {
+                    best = Some((i, e));
+                }
+            }
+        }
+        self.cur = best;
+    }
+
+    /// Shard `i` cannot yield under the cursor's upper bound (range
+    /// policy; one shared predicate on the router).
+    fn shard_beyond_upper(&self, i: usize) -> bool {
+        self.router.shard_beyond_upper(i, self.upper)
+    }
+
+    /// Shard `i`'s range lies entirely below the cursor's lower bound.
+    fn shard_below_lower(&self, i: usize) -> bool {
+        self.router.shard_below_lower(i, self.lower)
+    }
+
+    fn seek_ascending(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        self.count_seek();
+        // clamp into bounds first (like the single-shard cursor), so the
+        // range policy resolves the owner of the first key that can
+        // actually be emitted
+        let key = match self.lower {
+            Some(lo) => key.max(lo),
+            None => key,
+        };
+        let mut t = at;
+        if self.is_range() {
+            let mut idx = self.router.shard_of(key);
+            loop {
+                if self.shard_beyond_upper(idx) {
+                    self.cur = None;
+                    break;
+                }
+                t = self.children[idx].seek(env, t, key);
+                self.fold(idx);
+                if let Some(e) = self.children[idx].entry() {
+                    self.cur = Some((idx, e));
+                    break;
+                }
+                if idx + 1 >= self.children.len() {
+                    self.cur = None;
+                    break;
+                }
+                idx += 1;
+            }
+        } else {
+            for i in 0..self.children.len() {
+                t = self.children[i].seek(env, t, key);
+                self.fold(i);
+            }
+            self.settle_min();
+        }
+        self.dir = Dir::Fwd;
+        t
+    }
+
+    fn seek_descending(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        self.count_seek();
+        let mut key = key;
+        if let Some(up) = self.upper {
+            if up == 0 {
+                self.cur = None;
+                self.dir = Dir::Bwd;
+                return at;
+            }
+            key = key.min(up - 1);
+        }
+        if let Some(lo) = self.lower {
+            if key < lo {
+                self.cur = None;
+                self.dir = Dir::Bwd;
+                return at;
+            }
+        }
+        let mut t = at;
+        if self.is_range() {
+            let mut idx = self.router.shard_of(key);
+            loop {
+                if self.shard_below_lower(idx) {
+                    self.cur = None;
+                    break;
+                }
+                t = self.children[idx].seek_for_prev(env, t, key);
+                self.fold(idx);
+                if let Some(e) = self.children[idx].entry() {
+                    self.cur = Some((idx, e));
+                    break;
+                }
+                if idx == 0 {
+                    self.cur = None;
+                    break;
+                }
+                idx -= 1;
+            }
+        } else {
+            for i in 0..self.children.len() {
+                t = self.children[i].seek_for_prev(env, t, key);
+                self.fold(i);
+            }
+            self.settle_max();
+        }
+        self.dir = Dir::Bwd;
+        t
+    }
+
+    fn step_ascending(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let Some((idx, e)) = self.cur else { return at };
+        self.count_next();
+        let mut t = at;
+        if self.is_range() {
+            // the child handles its own direction switch; crossing a
+            // shard boundary re-seeks the successor lazily
+            t = self.children[idx].next(env, t);
+            self.fold(idx);
+            if let Some(ne) = self.children[idx].entry() {
+                self.cur = Some((idx, ne));
+            } else {
+                self.cur = None;
+                let mut i = idx + 1;
+                while i < self.children.len() && e.key < MAX_USER_KEY {
+                    if self.shard_beyond_upper(i) {
+                        break;
+                    }
+                    t = self.children[i].seek(env, t, e.key + 1);
+                    self.fold(i);
+                    if let Some(ne) = self.children[i].entry() {
+                        self.cur = Some((i, ne));
+                        break;
+                    }
+                    i += 1;
+                }
+            }
+        } else if self.dir == Dir::Bwd {
+            // direction switch: re-position every shard past the cursor
+            if e.key >= MAX_USER_KEY {
+                self.cur = None;
+                return t;
+            }
+            for i in 0..self.children.len() {
+                t = self.children[i].seek(env, t, e.key + 1);
+                self.fold(i);
+            }
+            self.settle_min();
+        } else {
+            t = self.children[idx].next(env, t);
+            self.fold(idx);
+            self.settle_min();
+        }
+        self.dir = Dir::Fwd;
+        t
+    }
+
+    fn step_descending(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let Some((idx, e)) = self.cur else { return at };
+        self.count_next();
+        let mut t = at;
+        if self.is_range() {
+            t = self.children[idx].prev(env, t);
+            self.fold(idx);
+            if let Some(ne) = self.children[idx].entry() {
+                self.cur = Some((idx, ne));
+            } else {
+                self.cur = None;
+                let mut i = idx;
+                while i > 0 && e.key > 0 {
+                    i -= 1;
+                    if self.shard_below_lower(i) {
+                        break;
+                    }
+                    t = self.children[i].seek_for_prev(env, t, e.key - 1);
+                    self.fold(i);
+                    if let Some(ne) = self.children[i].entry() {
+                        self.cur = Some((i, ne));
+                        break;
+                    }
+                }
+            }
+        } else if self.dir == Dir::Fwd {
+            if e.key == 0 {
+                self.cur = None;
+                return t;
+            }
+            for i in 0..self.children.len() {
+                t = self.children[i].seek_for_prev(env, t, e.key - 1);
+                self.fold(i);
+            }
+            self.settle_max();
+        } else {
+            t = self.children[idx].prev(env, t);
+            self.fold(idx);
+            self.settle_max();
+        }
+        self.dir = Dir::Bwd;
+        t
+    }
+
+    fn first_in_bounds(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let lo = self.lower.unwrap_or(0);
+        self.seek_ascending(env, at, lo)
+    }
+
+    fn last_in_bounds(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let hi = match self.upper {
+            Some(0) => {
+                self.cur = None;
+                return at;
+            }
+            Some(up) => up - 1,
+            None => MAX_USER_KEY,
+        };
+        self.seek_descending(env, at, hi)
+    }
+}
+
+// The reverse flag mirrors every movement op, exactly like the
+// single-shard `EngineIterator`.
+impl DbIterator for ShardIter {
+    fn seek(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        if self.reverse {
+            self.seek_descending(env, at, key)
+        } else {
+            self.seek_ascending(env, at, key)
+        }
+    }
+
+    fn seek_to_first(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.last_in_bounds(env, at)
+        } else {
+            self.first_in_bounds(env, at)
+        }
+    }
+
+    fn seek_to_last(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.first_in_bounds(env, at)
+        } else {
+            self.last_in_bounds(env, at)
+        }
+    }
+
+    fn seek_for_prev(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> Nanos {
+        if self.reverse {
+            self.seek_ascending(env, at, key)
+        } else {
+            self.seek_descending(env, at, key)
+        }
+    }
+
+    fn next(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.step_descending(env, at)
+        } else {
+            self.step_ascending(env, at)
+        }
+    }
+
+    fn prev(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        if self.reverse {
+            self.step_ascending(env, at)
+        } else {
+            self.step_descending(env, at)
+        }
+    }
+
+    fn valid(&self) -> bool {
+        self.cur.is_some()
+    }
+
+    fn entry(&self) -> Option<Entry> {
+        self.cur.map(|(_, e)| e)
+    }
+
+    fn amp(&self) -> ScanAmp {
+        self.local
+    }
+}

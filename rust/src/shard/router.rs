@@ -1,0 +1,234 @@
+//! Key → shard routing for the sharded engine layer.
+//!
+//! Two policies, mirroring production column-family/instance sharding:
+//!
+//! - **Range**: a boundary table splits the keyspace into contiguous
+//!   shards (`boundaries[i]` is shard `i`'s first key). Locality is
+//!   preserved: a bounded scan touches only the shards whose ranges
+//!   intersect it, and the cross-shard cursor walks shards in key order.
+//! - **Hash**: a seeded multiplicative hash spreads keys uniformly, so
+//!   hot key ranges cannot concentrate on one shard — at the price of
+//!   scatter-gather scans (every shard may hold in-range keys).
+//!
+//! The router is part of the durable shard manifest: the boundary table
+//! (or hash seed) is written at close/crash and restored at open, so a
+//! reopened store routes every key to the shard that owns its data.
+
+use crate::lsm::entry::{Key, MAX_USER_KEY};
+
+/// How the keyspace is partitioned across shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPolicy {
+    Range,
+    Hash,
+}
+
+impl ShardPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardPolicy::Range => "range",
+            ShardPolicy::Hash => "hash",
+        }
+    }
+}
+
+/// Construction parameters for a sharded store.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    pub shards: usize,
+    pub policy: ShardPolicy,
+    /// Range policy: the populated key prefix the boundary table splits
+    /// evenly (keys at or beyond it route to the last shard).
+    pub key_space: Key,
+    /// Hash policy: seed folded into the shard hash.
+    pub hash_seed: u64,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize, policy: ShardPolicy) -> Self {
+        Self {
+            shards: shards.max(1),
+            policy,
+            key_space: MAX_USER_KEY,
+            hash_seed: 0x5A5A_0FF1_CE00_D00D,
+        }
+    }
+}
+
+/// The routing table: resolves every key to exactly one shard.
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: ShardPolicy,
+    /// Range policy: `boundaries[i]` = first key owned by shard `i`
+    /// (`boundaries[0] == 0`); shard `i` owns `[b[i], b[i+1])` and the
+    /// last shard owns the open tail.
+    boundaries: Vec<Key>,
+    hash_seed: u64,
+}
+
+impl Router {
+    pub fn from_spec(spec: &ShardSpec) -> Self {
+        match spec.policy {
+            ShardPolicy::Range => {
+                let n = spec.shards as u64;
+                // split the populated prefix evenly; ceil so the union
+                // covers [0, key_space) exactly with the last shard
+                // absorbing the remainder and the open tail
+                let span = (spec.key_space.max(1) as u64).div_ceil(n).max(1);
+                let boundaries = (0..spec.shards)
+                    .map(|i| ((i as u64 * span).min(MAX_USER_KEY as u64)) as Key)
+                    .collect();
+                Self {
+                    policy: ShardPolicy::Range,
+                    boundaries,
+                    hash_seed: spec.hash_seed,
+                }
+            }
+            ShardPolicy::Hash => Self {
+                policy: ShardPolicy::Hash,
+                boundaries: vec![0; spec.shards],
+                hash_seed: spec.hash_seed,
+            },
+        }
+    }
+
+    /// Rebuild from a recovered shard manifest.
+    pub fn from_parts(policy: ShardPolicy, boundaries: Vec<Key>, hash_seed: u64) -> Self {
+        assert!(!boundaries.is_empty(), "shard manifest has no shards");
+        Self { policy, boundaries, hash_seed }
+    }
+
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// Range policy's boundary table (first key per shard; all zeros for
+    /// hash policy, where the table only records the shard count).
+    pub fn boundaries(&self) -> &[Key] {
+        &self.boundaries
+    }
+
+    pub fn hash_seed(&self) -> u64 {
+        self.hash_seed
+    }
+
+    /// The owning shard for `key`.
+    pub fn shard_of(&self, key: Key) -> usize {
+        match self.policy {
+            ShardPolicy::Range => {
+                // binary search the boundary table: last boundary <= key
+                match self.boundaries.binary_search(&key) {
+                    Ok(i) => i,
+                    Err(i) => i - 1, // b[0] == 0 <= key, so i >= 1
+                }
+            }
+            ShardPolicy::Hash => {
+                // splitmix64-style finalizer over key ^ seed
+                let mut x = key as u64 ^ self.hash_seed;
+                x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                x ^= x >> 31;
+                (x % self.boundaries.len() as u64) as usize
+            }
+        }
+    }
+
+    /// Range of `[lower, upper_first)` for shard `i` (None upper on the
+    /// last shard). Only meaningful for the range policy.
+    pub fn range_of(&self, i: usize) -> (Key, Option<Key>) {
+        let lo = self.boundaries[i];
+        let hi = self.boundaries.get(i + 1).copied();
+        (lo, hi)
+    }
+
+    /// Range policy: does shard `i`'s range start at or beyond the
+    /// exclusive upper bound (so it can never yield)?
+    pub fn shard_beyond_upper(&self, i: usize, upper: Option<Key>) -> bool {
+        upper.is_some_and(|up| self.boundaries[i] >= up)
+    }
+
+    /// Range policy: is shard `i`'s range entirely below the inclusive
+    /// lower bound? (Its exclusive end is shard `i+1`'s start.)
+    pub fn shard_below_lower(&self, i: usize, lower: Option<Key>) -> bool {
+        match (lower, self.boundaries.get(i + 1)) {
+            (Some(lo), Some(&next)) => next <= lo,
+            _ => false,
+        }
+    }
+
+    /// Human label for shard `i` in reports.
+    pub fn shard_label(&self, i: usize) -> String {
+        match self.policy {
+            ShardPolicy::Range => match self.range_of(i) {
+                (lo, Some(hi)) => format!("[{lo}, {hi})"),
+                (lo, None) => format!("[{lo}, ..)"),
+            },
+            ShardPolicy::Hash => format!("hash {i}/{}", self.shard_count()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_router_partitions_the_prefix() {
+        let mut spec = ShardSpec::new(4, ShardPolicy::Range);
+        spec.key_space = 1000;
+        let r = Router::from_spec(&spec);
+        assert_eq!(r.boundaries(), &[0, 250, 500, 750]);
+        assert_eq!(r.shard_of(0), 0);
+        assert_eq!(r.shard_of(249), 0);
+        assert_eq!(r.shard_of(250), 1);
+        assert_eq!(r.shard_of(999), 3);
+        // the open tail routes to the last shard
+        assert_eq!(r.shard_of(1_000_000), 3);
+    }
+
+    #[test]
+    fn hash_router_covers_all_shards_deterministically() {
+        let r = Router::from_spec(&ShardSpec::new(4, ShardPolicy::Hash));
+        let mut counts = [0usize; 4];
+        for k in 0..4000u32 {
+            counts[r.shard_of(k)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((700..1300).contains(&c), "shard {i} got {c} of 4000");
+        }
+        // deterministic: same key, same shard
+        let r2 = Router::from_spec(&ShardSpec::new(4, ShardPolicy::Hash));
+        for k in (0..4000u32).step_by(37) {
+            assert_eq!(r.shard_of(k), r2.shard_of(k));
+        }
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        for policy in [ShardPolicy::Range, ShardPolicy::Hash] {
+            let r = Router::from_spec(&ShardSpec::new(1, policy));
+            for k in [0u32, 1, 12345, MAX_USER_KEY] {
+                assert_eq!(r.shard_of(k), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_manifest_parts() {
+        let mut spec = ShardSpec::new(3, ShardPolicy::Range);
+        spec.key_space = 999;
+        let r = Router::from_spec(&spec);
+        let r2 = Router::from_parts(
+            r.policy(),
+            r.boundaries().to_vec(),
+            r.hash_seed(),
+        );
+        for k in (0..2000u32).step_by(13) {
+            assert_eq!(r.shard_of(k), r2.shard_of(k));
+        }
+    }
+}

@@ -16,6 +16,11 @@ pub type FileId = u64;
 pub struct FileMeta {
     pub extent: Extent,
     pub bytes: u64,
+    /// Directory tag: which store's files these are. Matches the owning
+    /// LSM's WAL stream id (0 for an unsharded store); a sharded store's
+    /// per-shard recovery scans only its own directory, so one shard's
+    /// orphan cleanup can never delete a sibling's live SSTs.
+    pub owner: u32,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -31,12 +36,22 @@ impl BlockFs {
         Self::default()
     }
 
-    /// Allocate a file of `bytes` in the block region.
+    /// Allocate a file of `bytes` in the block region (directory 0).
     pub fn create_file(&mut self, ftl: &mut Ftl, bytes: u64) -> Result<FileId> {
+        self.create_file_for(ftl, 0, bytes)
+    }
+
+    /// Allocate a file in `owner`'s directory.
+    pub fn create_file_for(
+        &mut self,
+        ftl: &mut Ftl,
+        owner: u32,
+        bytes: u64,
+    ) -> Result<FileId> {
         let extent = ftl.alloc_bytes(Region::Block, bytes)?;
         let id = self.next_id;
         self.next_id += 1;
-        self.files.insert(id, FileMeta { extent, bytes });
+        self.files.insert(id, FileMeta { extent, bytes, owner });
         self.bytes_written += bytes;
         Ok(id)
     }
@@ -63,6 +78,19 @@ impl BlockFs {
     /// orphan cleanup).
     pub fn file_ids(&self) -> Vec<FileId> {
         let mut ids: Vec<FileId> = self.files.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Live file ids in `owner`'s directory, sorted — the scope of one
+    /// store's recovery scan.
+    pub fn file_ids_for(&self, owner: u32) -> Vec<FileId> {
+        let mut ids: Vec<FileId> = self
+            .files
+            .iter()
+            .filter(|(_, m)| m.owner == owner)
+            .map(|(&id, _)| id)
+            .collect();
         ids.sort_unstable();
         ids
     }

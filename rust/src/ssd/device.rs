@@ -48,6 +48,17 @@ impl Default for SsdConfig {
     }
 }
 
+/// One host WAL log's page-cache accounting. Each engine life owns a
+/// stream; a sharded store opens one stream per shard (per-shard WAL
+/// "directory"), so every shard has its own independent durability cut.
+#[derive(Clone, Copy, Debug, Default)]
+struct WalStream {
+    /// Total bytes ever handed to `wal_append_on` this stream.
+    total: u64,
+    /// Bytes still in the host page cache (lost on power loss).
+    buffered: u64,
+}
+
 #[derive(Debug)]
 pub struct SsdDevice {
     pub nand: NandArray,
@@ -56,10 +67,9 @@ pub struct SsdDevice {
     pub fs: BlockFs,
     pub kv: KvInterface,
     cfg: SsdConfig,
-    wal_buffered: u64,
-    /// Total WAL bytes ever handed to `wal_append` (durable watermark =
-    /// total - still-buffered page-cache bytes).
-    wal_total: u64,
+    /// Per-log WAL page-cache accounting; stream 0 is the default log
+    /// unsharded engines write.
+    wal_streams: Vec<WalStream>,
     /// Power losses survived (each one drops the host page cache and
     /// capacitor-dumps the Dev-LSM memtables).
     pub power_losses: u64,
@@ -78,8 +88,7 @@ impl SsdDevice {
             fs: BlockFs::new(),
             kv: KvInterface::new(cfg.devlsm.clone()),
             cfg,
-            wal_buffered: 0,
-            wal_total: 0,
+            wal_streams: vec![WalStream::default()],
             power_losses: 0,
             device_cpu_ns: 0,
         }
@@ -96,7 +105,18 @@ impl SsdDevice {
     /// Write a whole file (SST) of `bytes`: PCIe-out and NAND programs
     /// overlap (streamed). Returns (file id, completion time).
     pub fn write_file(&mut self, t: Nanos, bytes: u64) -> Result<(FileId, Nanos)> {
-        let id = self.fs.create_file(&mut self.ftl, bytes)?;
+        self.write_file_for(0, t, bytes)
+    }
+
+    /// [`SsdDevice::write_file`] into an explicit directory (the owning
+    /// store's WAL stream id; shards keep separate directories).
+    pub fn write_file_for(
+        &mut self,
+        owner: u32,
+        t: Nanos,
+        bytes: u64,
+    ) -> Result<(FileId, Nanos)> {
+        let id = self.fs.create_file_for(&mut self.ftl, owner, bytes)?;
         let pcie_done = self.pcie.transfer(t, bytes, Direction::HostToDevice);
         let nand_done = self.nand.submit(t, bytes, NandOp::Program);
         Ok((id, pcie_done.max(nand_done)))
@@ -108,7 +128,17 @@ impl SsdDevice {
     /// from starving is what keeps flush-based stalls (paper stall type
     /// #1) from swamping every other effect.
     pub fn write_file_priority(&mut self, t: Nanos, bytes: u64) -> Result<(FileId, Nanos)> {
-        let id = self.fs.create_file(&mut self.ftl, bytes)?;
+        self.write_file_priority_for(0, t, bytes)
+    }
+
+    /// [`SsdDevice::write_file_priority`] into an explicit directory.
+    pub fn write_file_priority_for(
+        &mut self,
+        owner: u32,
+        t: Nanos,
+        bytes: u64,
+    ) -> Result<(FileId, Nanos)> {
+        let id = self.fs.create_file_for(&mut self.ftl, owner, bytes)?;
         let pcie_done = self.pcie.transfer_small(t, bytes, Direction::HostToDevice);
         let nand_done = self.nand.submit_priority(t, bytes, NandOp::Program);
         Ok((id, pcie_done.max(nand_done)))
@@ -132,15 +162,35 @@ impl SsdDevice {
         self.fs.delete_file(&mut self.ftl, id)
     }
 
+    /// Make WAL streams `0..n` available (a sharded store opens one log
+    /// per shard). Existing streams keep their accounting.
+    pub fn wal_ensure_streams(&mut self, n: usize) {
+        if self.wal_streams.len() < n {
+            self.wal_streams.resize(n, WalStream::default());
+        }
+    }
+
+    fn wal_stream_mut(&mut self, stream: u32) -> &mut WalStream {
+        self.wal_ensure_streams(stream as usize + 1);
+        &mut self.wal_streams[stream as usize]
+    }
+
     /// WAL append with page-cache semantics (sync=false): bytes buffer in
     /// host RAM and are written back asynchronously once the threshold
     /// accumulates. Returns immediately-visible time (no device wait).
     pub fn wal_append(&mut self, t: Nanos, bytes: u64) -> Nanos {
-        self.wal_total += bytes;
-        self.wal_buffered += bytes;
-        if self.wal_buffered >= self.cfg.wal_writeback_bytes {
-            let flush = self.wal_buffered;
-            self.wal_buffered = 0;
+        self.wal_append_on(0, t, bytes)
+    }
+
+    /// [`SsdDevice::wal_append`] against an explicit WAL log.
+    pub fn wal_append_on(&mut self, stream: u32, t: Nanos, bytes: u64) -> Nanos {
+        let threshold = self.cfg.wal_writeback_bytes;
+        let s = self.wal_stream_mut(stream);
+        s.total += bytes;
+        s.buffered += bytes;
+        if s.buffered >= threshold {
+            let flush = s.buffered;
+            s.buffered = 0;
             // async writeback: charge the device, do not wait.
             self.pcie.transfer(t, flush, Direction::HostToDevice);
             self.nand.submit(t, flush, NandOp::Program);
@@ -151,8 +201,14 @@ impl SsdDevice {
     /// Synchronous WAL flush (fsync) — used by clean shutdown, recovery
     /// and durability tests.
     pub fn wal_sync(&mut self, t: Nanos) -> Nanos {
-        let flush = self.wal_buffered.max(1);
-        self.wal_buffered = 0;
+        self.wal_sync_on(0, t)
+    }
+
+    /// [`SsdDevice::wal_sync`] against an explicit WAL log.
+    pub fn wal_sync_on(&mut self, stream: u32, t: Nanos) -> Nanos {
+        let s = self.wal_stream_mut(stream);
+        let flush = s.buffered.max(1);
+        s.buffered = 0;
         let pcie_done = self.pcie.transfer(t, flush, Direction::HostToDevice);
         let nand_done = self.nand.submit(t, flush, NandOp::Program);
         pcie_done.max(nand_done)
@@ -163,7 +219,14 @@ impl SsdDevice {
     /// durability cut for WAL records — the sync=false ack-vs-durable
     /// gap of the paper's db_bench configuration.
     pub fn wal_durable_watermark(&self) -> u64 {
-        self.wal_total - self.wal_buffered
+        self.wal_durable_watermark_on(0)
+    }
+
+    /// [`SsdDevice::wal_durable_watermark`] of an explicit WAL log.
+    pub fn wal_durable_watermark_on(&self, stream: u32) -> u64 {
+        self.wal_streams
+            .get(stream as usize)
+            .map_or(0, |s| s.total - s.buffered)
     }
 
     /// Recovery opens a fresh WAL log: stream accounting restarts so the
@@ -171,8 +234,12 @@ impl SsdDevice {
     /// (a second crash must not treat the new log's page-cached tail as
     /// durable just because an earlier life wrote more bytes).
     pub fn wal_reset_stream(&mut self) {
-        self.wal_total = 0;
-        self.wal_buffered = 0;
+        self.wal_reset_stream_on(0)
+    }
+
+    /// [`SsdDevice::wal_reset_stream`] against an explicit WAL log.
+    pub fn wal_reset_stream_on(&mut self, stream: u32) {
+        *self.wal_stream_mut(stream) = WalStream::default();
     }
 
     /// Synchronous small metadata write (a fsync'd manifest edit): rides
@@ -191,11 +258,13 @@ impl SsdDevice {
     /// the engine's `crash()` captures the durable host image separately.
     pub fn crash(&mut self, _t: Nanos) {
         self.power_losses += 1;
-        // the buffered bytes never reached flash: remove them from the
-        // stream total so the durable watermark stays truthful even if
+        // the buffered bytes never reached flash: remove them from each
+        // stream's total so the durable watermarks stay truthful even if
         // read after the crash
-        self.wal_total -= self.wal_buffered;
-        self.wal_buffered = 0;
+        for s in &mut self.wal_streams {
+            s.total -= s.buffered;
+            s.buffered = 0;
+        }
         self.kv.power_loss(&mut self.ftl);
     }
 
@@ -284,6 +353,27 @@ impl SsdDevice {
     pub fn kv_occupancy(&self) -> f64 {
         let cap = self.ftl.capacity_pages(Region::KeyValue).max(1);
         self.ftl.allocated_pages(Region::KeyValue) as f64 / cap as f64
+    }
+
+    /// Make KV namespaces `0..n` available (one Dev-LSM per KVACCEL
+    /// shard). Existing namespaces keep their contents.
+    pub fn kv_ensure_namespaces(&mut self, n: usize) {
+        while self.kv.namespace_count() < n {
+            self.kv.create_namespace(self.cfg.devlsm.clone());
+        }
+    }
+
+    /// The KV region's byte capacity (the total space the shard arbiter
+    /// partitions into grants).
+    pub fn kv_region_bytes(&self) -> u64 {
+        self.ftl.capacity_pages(Region::KeyValue) * self.cfg.nand.page_bytes
+    }
+
+    /// One namespace's share of the KV region (0..1): the arbiter's
+    /// hot/idle signal when deciding which shard donates grant capacity.
+    /// Approximated from the Dev-LSM's buffered bytes (memtable + runs).
+    pub fn kv_ns_occupancy(&self, ns: NamespaceId) -> f64 {
+        self.kv_buffered_bytes(ns) as f64 / self.kv_region_bytes().max(1) as f64
     }
 }
 

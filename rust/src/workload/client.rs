@@ -683,6 +683,9 @@ fn assemble(
     let end = end.max(spec.start_at + 1);
     let duration_s = (end - spec.start_at) as f64 / NS_PER_SEC as f64;
     let db = sys.main_db();
+    // trait accessors, not `db` fields: a sharded engine aggregates
+    // these across its children
+    let db_stats = sys.db_stats();
     let stall = sys.stall_stats();
     let cpu_percent = env.cpu.host_cpu_percent(end, 8);
     let bytes_per_op = (16 + spec.value_size as u64) as f64;
@@ -699,10 +702,7 @@ fn assemble(
     let stall_seconds: Vec<usize> = (0..total_secs)
         .filter(|&s| stall.second_in_stall(s))
         .collect();
-    let (redirected, rollbacks) = sys
-        .kvaccel()
-        .map(|k| (k.controller.stats.writes_to_dev, k.rollback.stats.rollbacks))
-        .unwrap_or((0, 0));
+    let (redirected, rollbacks) = (sys.redirected_writes(), sys.rollbacks());
     let queue_delay_series_us: Vec<f64> = stats
         .qdelay_sum
         .iter()
@@ -725,7 +725,7 @@ fn assemble(
         stop_events: stall.stop_events,
         slowdown_events: stall.slowdown_events,
         stopped_s: stall.stopped_ns_total as f64 / NS_PER_SEC as f64,
-        write_amplification: db.stats.write_amplification(),
+        write_amplification: db_stats.write_amplification(),
         pcie_mbps: env.device.pcie.stats.combined_mbps(),
         stall_seconds,
         redirected_writes: redirected,
