@@ -7,6 +7,7 @@
 //! fall) are the reproduction target — see EXPERIMENTS.md.
 
 pub mod figs;
+pub mod qos_fairness;
 pub mod recovery;
 pub mod shard_scale;
 pub mod tables;
@@ -177,6 +178,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "fig13" => figs::fig13(ctx),
         "fig14" => figs::fig14(ctx),
         "qdelay" => figs::qdelay(ctx),
+        "qos-fairness" => qos_fairness::qos_fairness(ctx),
         "recovery" => recovery::recovery(ctx),
         "shard-scale" => shard_scale::shard_scale(ctx),
         "table5" => tables::table5(ctx),
@@ -195,7 +197,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 13] = [
+pub const ALL_EXPERIMENTS: [&str; 14] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "qdelay", "recovery", "shard-scale", "table5", "table6",
+    "qdelay", "qos-fairness", "recovery", "shard-scale", "table5", "table6",
 ];

@@ -1,0 +1,317 @@
+//! PR6 noisy-neighbor fairness experiment: one abusive open-loop tenant
+//! against three well-behaved closed-loop tenants on a shared store,
+//! with QoS off (accounting only) vs QoS on (token-bucket admission +
+//! SLO shedding + per-tenant device grants).
+//!
+//! Per system (LSM / ADOC / KVACCEL), three runs on pressure-sized
+//! stores:
+//!
+//! 1. **solo** — victims only, no QoS: the isolation baseline their p99
+//!    is judged against.
+//! 2. **off** — abuser + victims, monitor-only QoS: the abuser floods
+//!    the engine at 3x its sustainable rate, stalls the shared LSM, and
+//!    the victims' p99 collapses (the noisy-neighbor pathology).
+//! 3. **on** — same load, enforced QoS: the abuser's bucket admits a
+//!    small fraction of its offered rate and the SLO shedder drops its
+//!    stale backlog, so the victims stay near their solo baseline while
+//!    the abuser still makes progress (throttled, not deadlocked).
+//!
+//! Emits `results/qos_fairness.csv` and the machine-readable
+//! `results/BENCH_PR6.json` built in CI. `tests/qos_conformance.rs`
+//! asserts the fairness contract on the plain-LSM row.
+
+use anyhow::Result;
+
+use crate::baselines::SystemKind;
+use crate::engine::EngineBuilder;
+use crate::env::SimEnv;
+use crate::lsm::LsmOptions;
+use crate::qos::{QosConfig, TenantSpec};
+use crate::sim::{MILLIS, NS_PER_SEC};
+use crate::ssd::SsdConfig;
+use crate::workload::{
+    self, BenchConfig, ClientConfig, LoopMode, RunResult, TenantResult,
+};
+
+use super::{headline_systems, ExpContext};
+
+/// Victim population: closed-loop writers with human-ish think time, the
+/// tenants whose latency the QoS layer is defending.
+const VICTIMS: usize = 3;
+const VICTIM_THINK: u64 = 10 * MILLIS;
+/// The abuser offers this multiple of the probed sustainable rate.
+const ABUSE_FACTOR: f64 = 3.0;
+/// Enforced abuser admission: this fraction of the sustainable rate,
+/// clamped to a workable ops/s band at any scale.
+const ABUSER_ADMIT_FRACTION: f64 = 0.05;
+/// Victim/abuser p99 SLO when QoS is on.
+const SLO_P99: u64 = 50 * MILLIS;
+
+/// One system's fairness measurements across the three runs.
+#[derive(Clone, Debug)]
+pub struct FairnessOutcome {
+    pub system: String,
+    /// Probed closed-loop sustainable rate (ops/s) on the plain LSM.
+    pub sustainable_ops_s: f64,
+    /// Admission rate granted to the abuser when QoS is on (ops/s).
+    pub admitted_ops_s: f64,
+    /// Victims-only baseline p99 (us).
+    pub solo_p99_us: f64,
+    /// Worst victim p99 with the abuser present, QoS off / on (us).
+    pub off_victim_p99_us: f64,
+    pub on_victim_p99_us: f64,
+    /// Abuser throughput, QoS off / on (Kops/s).
+    pub off_abuser_kops: f64,
+    pub on_abuser_kops: f64,
+    /// Abuser ops served with QoS on (must stay > 0: throttled, not
+    /// deadlocked).
+    pub on_abuser_ops: u64,
+    pub on_abuser_throttled: u64,
+    pub on_abuser_shed: u64,
+    /// Whole-run write-stall stop time, QoS off / on (s).
+    pub off_stopped_s: f64,
+    pub on_stopped_s: f64,
+    /// KVACCEL redirected writes with QoS on (0 on the baselines).
+    pub on_redirected: u64,
+}
+
+fn pressure_cfg(seed: u64, secs: u64) -> BenchConfig {
+    BenchConfig {
+        seed,
+        duration: secs * NS_PER_SEC,
+        key_space: 200_000,
+        ..Default::default()
+    }
+}
+
+fn build(kind: SystemKind) -> Box<dyn crate::engine::KvEngine> {
+    // pressure-sized stores (as in shard-scale/recovery) so the abuser
+    // actually stalls the engine at CI scale
+    EngineBuilder::new(kind)
+        .opts(LsmOptions::small_for_test().with_threads(2))
+        .build()
+}
+
+fn victim_clients() -> Vec<ClientConfig> {
+    (0..VICTIMS)
+        .map(|v| {
+            ClientConfig::writer()
+                .with_mode(LoopMode::Closed { think: VICTIM_THINK })
+                .with_seed_tag(0x51C0 + v as u64)
+                .with_tenant(v as u32 + 1)
+        })
+        .collect()
+}
+
+/// The worst victim p99 across the per-tenant rows (tenant 0 is the
+/// abuser; every other row is a victim).
+fn worst_victim_p99(tenants: &[TenantResult]) -> f64 {
+    tenants
+        .iter()
+        .skip(1)
+        .map(|t| t.lat.p99_us)
+        .fold(0.0, f64::max)
+}
+
+fn run_arm(
+    kind: SystemKind,
+    seed: u64,
+    cfg: &BenchConfig,
+    clients: Vec<ClientConfig>,
+    qos: Option<QosConfig>,
+) -> RunResult {
+    let mut sys = build(kind);
+    let mut env = SimEnv::new(seed, SsdConfig::default());
+    let mut spec =
+        workload::WorkloadSpec::from_bench("qos-fairness", cfg).with_clients(clients);
+    spec.qos = qos;
+    let mut r = workload::run_spec(&mut *sys, &mut env, &spec);
+    r.system = kind.label();
+    r
+}
+
+/// The full solo/off/on comparison for one system. Standalone (no
+/// [`ExpContext`]) so `tests/qos_conformance.rs` can assert on it.
+pub fn run_fairness(kind: SystemKind, seed: u64, secs: u64) -> Result<FairnessOutcome> {
+    let cfg = pressure_cfg(seed, secs);
+
+    // calibrate on the plain LSM: the abuse rate must exceed what the
+    // engine sustains, whatever the scale/options (same probe pattern as
+    // the qdelay experiment)
+    let probe_cfg = BenchConfig { duration: 2 * NS_PER_SEC, ..cfg.clone() };
+    let probe = {
+        let mut sys = build(SystemKind::RocksDb { slowdown: true });
+        let mut env = SimEnv::new(seed, SsdConfig::default());
+        workload::fillrandom(&mut *sys, &mut env, &probe_cfg)
+    };
+    let sustainable = (probe.writes.total as f64 / probe.duration_s).max(100.0);
+    let abuse_rate = sustainable * ABUSE_FACTOR;
+    let admitted_ops_s = (sustainable * ABUSER_ADMIT_FRACTION).clamp(25.0, 400.0);
+
+    let abuser = ClientConfig::writer()
+        .with_mode(LoopMode::OpenFixed { ops_per_sec: abuse_rate })
+        .with_seed_tag(0xAB5E)
+        .with_tenant(0);
+    let mixed_clients = || {
+        let mut cs = vec![abuser.clone()];
+        cs.extend(victim_clients());
+        cs
+    };
+    let tenant_table = |enforced: bool| {
+        let bytes_per_op = 16 + cfg.value_size as u64;
+        let rate_bytes = (admitted_ops_s * bytes_per_op as f64) as u64;
+        let mut tenants = vec![TenantSpec::new("abuser")
+            .with_rate(rate_bytes, (rate_bytes / 4).max(bytes_per_op))
+            .with_slo_p99(SLO_P99)];
+        for v in 0..VICTIMS {
+            tenants.push(TenantSpec::new(format!("victim{v}")).with_slo_p99(SLO_P99));
+        }
+        let mut q = QosConfig::new(tenants);
+        // the enforced abuser admits only tens of ops per 100 ms tick;
+        // the default 16-op window floor would keep its (seconds-deep)
+        // SLO violation invisible at CI scale
+        q.slo_min_window_ops = 4;
+        if enforced {
+            q
+        } else {
+            q.monitor_only()
+        }
+    };
+
+    // 1. solo: victims alone, no QoS — the isolation baseline
+    let solo = run_arm(kind, seed, &cfg, victim_clients(), None);
+    // 2. off: abuser + victims, accounting only
+    let off = run_arm(kind, seed, &cfg, mixed_clients(), Some(tenant_table(false)));
+    // 3. on: same load, enforced
+    let on = run_arm(kind, seed, &cfg, mixed_clients(), Some(tenant_table(true)));
+
+    let dur = cfg.duration as f64 / NS_PER_SEC as f64;
+    Ok(FairnessOutcome {
+        system: kind.label(),
+        sustainable_ops_s: sustainable,
+        admitted_ops_s,
+        solo_p99_us: solo.write_lat.p99_us,
+        off_victim_p99_us: worst_victim_p99(&off.tenants),
+        on_victim_p99_us: worst_victim_p99(&on.tenants),
+        off_abuser_kops: off.tenants[0].ops as f64 / dur / 1e3,
+        on_abuser_kops: on.tenants[0].ops as f64 / dur / 1e3,
+        on_abuser_ops: on.tenants[0].ops,
+        on_abuser_throttled: on.tenants[0].throttled,
+        on_abuser_shed: on.tenants[0].shed,
+        off_stopped_s: off.stopped_s,
+        on_stopped_s: on.stopped_s,
+        on_redirected: on.redirected_writes,
+    })
+}
+
+pub fn qos_fairness(ctx: &ExpContext) -> Result<String> {
+    let mut out = String::from(
+        "== QoS fairness: 1 abusive open-loop tenant vs 3 closed-loop victims ==\n",
+    );
+    let secs = ((600.0 * ctx.scale) as u64).clamp(4, 30);
+    let mut rows: Vec<FairnessOutcome> = Vec::new();
+    for kind in headline_systems() {
+        let f = run_fairness(kind, ctx.seed, secs)?;
+        out.push_str(&format!(
+            "  {:<10} victim p99 solo {:>9.0} us | qos-off {:>10.0} us | qos-on {:>9.0} us   \
+             abuser {:>6.2} -> {:>5.2} Kops/s ({} throttled, {} shed)\n",
+            f.system,
+            f.solo_p99_us,
+            f.off_victim_p99_us,
+            f.on_victim_p99_us,
+            f.off_abuser_kops,
+            f.on_abuser_kops,
+            f.on_abuser_throttled,
+            f.on_abuser_shed,
+        ));
+        rows.push(f);
+    }
+
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|f| {
+            format!(
+                "{},{:.1},{:.1},{:.2},{:.2},{:.2},{:.4},{:.4},{},{},{},{:.4},{:.4},{}",
+                f.system,
+                f.sustainable_ops_s,
+                f.admitted_ops_s,
+                f.solo_p99_us,
+                f.off_victim_p99_us,
+                f.on_victim_p99_us,
+                f.off_abuser_kops,
+                f.on_abuser_kops,
+                f.on_abuser_ops,
+                f.on_abuser_throttled,
+                f.on_abuser_shed,
+                f.off_stopped_s,
+                f.on_stopped_s,
+                f.on_redirected,
+            )
+        })
+        .collect();
+    ctx.write_csv(
+        "qos_fairness.csv",
+        "system,sustainable_ops_s,admitted_ops_s,solo_p99_us,off_victim_p99_us,on_victim_p99_us,off_abuser_kops,on_abuser_kops,on_abuser_ops,on_abuser_throttled,on_abuser_shed,off_stopped_s,on_stopped_s,on_redirected",
+        &csv,
+    )?;
+
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|f| {
+            format!(
+                concat!(
+                    "    {{\"system\": \"{}\", \"sustainable_ops_s\": {:.1}, ",
+                    "\"admitted_ops_s\": {:.1}, \"solo_p99_us\": {:.2}, ",
+                    "\"off_victim_p99_us\": {:.2}, \"on_victim_p99_us\": {:.2}, ",
+                    "\"off_abuser_kops\": {:.4}, \"on_abuser_kops\": {:.4}, ",
+                    "\"on_abuser_ops\": {}, \"on_abuser_throttled\": {}, ",
+                    "\"on_abuser_shed\": {}, \"off_stopped_s\": {:.4}, ",
+                    "\"on_stopped_s\": {:.4}, \"on_redirected\": {}}}"
+                ),
+                f.system,
+                f.sustainable_ops_s,
+                f.admitted_ops_s,
+                f.solo_p99_us,
+                f.off_victim_p99_us,
+                f.on_victim_p99_us,
+                f.off_abuser_kops,
+                f.on_abuser_kops,
+                f.on_abuser_ops,
+                f.on_abuser_throttled,
+                f.on_abuser_shed,
+                f.off_stopped_s,
+                f.on_stopped_s,
+                f.on_redirected,
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n  \"schema\": \"kvaccel-qosfairness-v1\",\n",
+            "  \"config\": {{\"victims\": {}, \"victim_think_ms\": {}, ",
+            "\"abuse_factor\": {}, \"admit_fraction\": {}, \"slo_p99_ms\": {}, ",
+            "\"duration_s\": {}, \"scale\": {}, \"seed\": {}}},\n",
+            "  \"rows\": [\n{}\n  ]\n}}\n"
+        ),
+        VICTIMS,
+        VICTIM_THINK / MILLIS,
+        ABUSE_FACTOR,
+        ABUSER_ADMIT_FRACTION,
+        SLO_P99 / MILLIS,
+        secs,
+        ctx.scale,
+        ctx.seed,
+        json_rows.join(",\n"),
+    );
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("BENCH_PR6.json"), json)?;
+
+    out.push_str(
+        "  shape check: with QoS off the abuser's backlog stalls the shared \
+         engine and the victims' p99 collapses; with QoS on the bucket + \
+         shedder hold the victims near their solo baseline while the abuser \
+         keeps making (throttled) progress\n",
+    );
+    ctx.log(&out);
+    Ok(out)
+}

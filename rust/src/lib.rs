@@ -42,6 +42,8 @@ pub mod engine;
 
 pub mod shard;
 
+pub mod qos;
+
 pub mod workload;
 
 pub mod experiments;

@@ -27,6 +27,16 @@
 //!   --crash-at P         inject a power loss after P issued ops (plain
 //!                        integer) or at virtual time P (s|ms|ns
 //!                        suffix), then reopen and report recovery
+//!   --tenants N          round-robin the clients over N QoS tenants and
+//!                        report a per-tenant breakdown
+//!   --tenant-rate R      token-bucket admission rate per tenant, ops/s
+//!                        (0/omitted = account only, no metering)
+//!   --tenant-slo-p99 MS  p99 SLO per tenant in ms; an over-SLO tenant
+//!                        has its stale open-loop backlog shed first
+//!
+//! Contradictory flags are rejected up front (e.g. --rate with a closed
+//! loop, --theta without --dist zipfian, --shard-policy without
+//! --shards, --tenant-rate without --tenants).
 
 use anyhow::{anyhow, Result};
 
@@ -67,10 +77,12 @@ fn real_main() -> Result<()> {
             println!("              [--think-ms T] [--dist uniform|zipfian|latest] [--theta F]");
             println!("              [--scan-len L[:H]] [--crash-at OPS|TIME[s|ms|ns]]");
             println!("              [--shards N] [--shard-policy range|hash]");
+            println!("              [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
             println!("  kvaccel bench [--out BENCH_PR2.json] [--scan-out BENCH_PR3.json] [--scale F] [--rate OPS_S] [--clients N]");
             println!("                [--shards N] [--shard-policy range|hash]");
+            println!("                [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
             println!("  kvaccel inspect");
             Ok(())
         }
@@ -182,6 +194,78 @@ fn parse_shards(args: &Args) -> Result<Option<(usize, ShardPolicy)>> {
     Ok(Some((n, policy)))
 }
 
+/// Reject contradictory `run` flags up front instead of silently
+/// ignoring the loser (a closed-loop `--rate` used to do nothing).
+fn validate_run_flags(args: &Args) -> Result<()> {
+    let mode = args.get_or("loop-mode", "closed");
+    let closed = mode == "closed";
+    if closed && args.get("rate").is_some() {
+        return Err(anyhow!(
+            "--rate sets an open-loop arrival rate, but --loop-mode is closed \
+             (closed loops reissue on completion; use --think-ms to slow them, \
+             or add --loop-mode open|poisson)"
+        ));
+    }
+    if !closed && args.get("think-ms").is_some() {
+        return Err(anyhow!(
+            "--think-ms is closed-loop think time, but --loop-mode is {mode:?} \
+             (open/poisson arrival spacing comes from --rate)"
+        ));
+    }
+    let dist = args.get_or("dist", "uniform");
+    if args.get("theta").is_some() && !matches!(dist, "zipfian" | "zipf") {
+        return Err(anyhow!(
+            "--theta is the zipfian skew, but --dist is {dist:?} (add --dist zipfian)"
+        ));
+    }
+    validate_bench_flags(args)
+}
+
+/// The dependency rules shared by `run` and `bench`: a qualifier flag
+/// without the flag it qualifies is a mistake, not a no-op.
+fn validate_bench_flags(args: &Args) -> Result<()> {
+    if args.get("shard-policy").is_some() && args.get("shards").is_none() {
+        return Err(anyhow!("--shard-policy has no effect without --shards N"));
+    }
+    for f in ["tenant-rate", "tenant-slo-p99"] {
+        if args.get(f).is_some() && args.get("tenants").is_none() {
+            return Err(anyhow!("--{f} has no effect without --tenants N"));
+        }
+    }
+    Ok(())
+}
+
+/// `--tenants N [--tenant-rate OPS_S] [--tenant-slo-p99 MS]`: spread the
+/// workload's clients round-robin over N tenants, each metered by a
+/// token bucket at OPS_S ops/s (0/omitted = accounting only) with an
+/// optional p99 SLO in milliseconds.
+fn parse_tenants(args: &Args) -> Result<Option<(usize, f64, Option<Nanos>)>> {
+    let Some(n) = args.get("tenants") else { return Ok(None) };
+    let n: usize = n
+        .parse()
+        .map_err(|_| anyhow!("--tenants expects a positive integer, got {n:?}"))?;
+    if n == 0 {
+        return Err(anyhow!("--tenants must be >= 1"));
+    }
+    let rate = args.get_f64("tenant-rate", 0.0);
+    if rate < 0.0 {
+        return Err(anyhow!("--tenant-rate must be >= 0 ops/s"));
+    }
+    let slo = match args.get("tenant-slo-p99") {
+        Some(v) => {
+            let ms: f64 = v.parse().map_err(|_| {
+                anyhow!("--tenant-slo-p99 expects milliseconds, got {v:?}")
+            })?;
+            if ms <= 0.0 {
+                return Err(anyhow!("--tenant-slo-p99 must be > 0 ms"));
+            }
+            Some((ms * MILLIS as f64) as Nanos)
+        }
+        None => None,
+    };
+    Ok(Some((n, rate, slo)))
+}
+
 fn parse_dist(args: &Args) -> Result<KeyDist> {
     Ok(match args.get_or("dist", "uniform") {
         "uniform" => KeyDist::Uniform,
@@ -205,6 +289,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow!("run needs a workload: A|B|C|D"))?
         .to_uppercase();
+    validate_run_flags(args)?;
     let kind = parse_system(args.get_or("system", "kvaccel"))?;
     let threads = args.get_usize("threads", 4);
     let scale = args.get_f64("scale", 0.1);
@@ -214,6 +299,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let dist = parse_dist(args)?;
     let crash = parse_crash_at(args)?;
     let shards = parse_shards(args)?;
+    let tenants = parse_tenants(args)?;
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
     let mut cfg: BenchConfig = ctx.bench_config();
 
@@ -243,6 +329,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             let mut spec =
                 workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?;
             spec.stop_after_ops = stop_ops;
+            if let Some((n, rate, slo)) = tenants {
+                spec = spec.with_tenants(n, rate, slo);
+            }
             // report the actors that actually ran (B/C add a read
             // client; open-loop rates are split per preset_spec)
             let line = format!(
@@ -253,6 +342,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             (workload::run_spec(&mut *sys, &mut env, &spec), line)
         }
         "D" => {
+            if tenants.is_some() {
+                return Err(anyhow!(
+                    "--tenants applies to A|B|C|E (D is a single sequential scanner)"
+                ));
+            }
             // seekrandom is a single sequential scanner; scheduler knobs
             // apply to A/B/C/E
             let preload_bytes = ((20u64 << 30) as f64 * scale) as u64;
@@ -275,6 +369,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 ..workload::ycsb_e(&cfg, clients, mode, dist, slo, shi)
             };
             spec.stop_after_ops = stop_ops;
+            if let Some((n, rate, slo)) = tenants {
+                spec = spec.with_tenants(n, rate, slo);
+            }
             let line = format!(
                 "clients       {} [{}] dist {dist:?} scan-len {slo}..{shi}",
                 spec.clients.len(),
@@ -292,6 +389,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
     println!("{clients_line}");
     print_result(&r);
+    print_tenant_breakdown(&r);
     print_shard_breakdown(&*sys, &env);
 
     if crash.is_some() {
@@ -348,9 +446,50 @@ fn describe_clients(spec: &kvaccel::workload::WorkloadSpec) -> String {
         .join(", ")
 }
 
-/// Per-shard stall/redirect breakdown (sharded stores only).
+/// Per-tenant QoS breakdown (specs carrying a tenant table only).
+fn print_tenant_breakdown(r: &RunResult) {
+    if r.tenants.is_empty() {
+        return;
+    }
+    println!("per-tenant breakdown:");
+    for t in &r.tenants {
+        let slo = if t.slo_p99_us > 0.0 {
+            format!(
+                "  slo {} ({} over-SLO ticks)",
+                fmt::nanos(t.slo_p99_us * 1e3),
+                t.over_slo_ticks
+            )
+        } else {
+            String::new()
+        };
+        let grant = if t.device_grant > 0.0 {
+            format!("  grant {:.0}%", t.device_grant * 100.0)
+        } else {
+            String::new()
+        };
+        println!(
+            "  {:<8} {:>8} ops ({:>8.1}/s, {:>6.1} MB/s)  p50/p99 {} / {}  \
+             {} throttled ({:.2}s)  {} shed{slo}{grant}",
+            t.name,
+            t.ops,
+            t.ops_per_sec,
+            t.mbps,
+            fmt::nanos(t.lat.p50_us * 1e3),
+            fmt::nanos(t.lat.p99_us * 1e3),
+            t.throttled,
+            t.throttle_delay_s,
+            t.shed,
+        );
+    }
+}
+
+/// Per-shard stall/redirect breakdown (sharded stores only; a 1-shard
+/// store is the plain engine, so the headline report already covers it).
 fn print_shard_breakdown(sys: &dyn KvEngine, env: &SimEnv) {
     let Some(sh) = sys.sharded() else { return };
+    if sh.shard_count() <= 1 {
+        return;
+    }
     println!("per-shard breakdown:");
     for rep in sh.shard_reports(env) {
         let grant = rep
@@ -439,6 +578,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 /// Fixed open-loop comparison across the headline systems, emitted as
 /// machine-readable JSON (the perf-trajectory artifact built in CI).
 fn cmd_bench(args: &Args) -> Result<()> {
+    validate_bench_flags(args)?;
     let out = args.get_or("out", "BENCH_PR2.json").to_string();
     let scale = args.get_f64("scale", 0.02);
     let seed = args.get_u64("seed", 42);
@@ -446,6 +586,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 30_000.0);
     let threads = args.get_usize("threads", 4);
     let shards = parse_shards(args)?;
+    let tenants = parse_tenants(args)?;
     let cfg = BenchConfig { seed, ..Default::default() }.scaled(scale);
     let mode = LoopMode::OpenFixed { ops_per_sec: rate };
 
@@ -462,10 +603,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         let mut sys = builder.build();
         let mut env = SimEnv::new(seed, SsdConfig::default());
-        let spec = workload::preset_spec("A", &cfg, clients, mode, KeyDist::Uniform)?;
+        let mut spec =
+            workload::preset_spec("A", &cfg, clients, mode, KeyDist::Uniform)?;
+        if let Some((n, t_rate, slo)) = tenants {
+            spec = spec.with_tenants(n, t_rate, slo);
+        }
         let r = workload::run_spec(&mut *sys, &mut env, &spec);
         println!("== {} ==", kind.label());
         print_result(&r);
+        print_tenant_breakdown(&r);
         rows.push(format!(
             concat!(
                 "    \"{}\": {{\"write_mbps\": {:.3}, \"write_ops\": {}, ",
@@ -600,4 +746,82 @@ fn cmd_inspect() -> Result<()> {
         fmt::bytes(ssd.dma_chunk_bytes as f64)
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn run_flags_reject_contradictions() {
+        // --rate with the (default) closed loop
+        assert!(validate_run_flags(&parse("run A --rate 1000")).is_err());
+        assert!(
+            validate_run_flags(&parse("run A --loop-mode closed --rate 1000")).is_err()
+        );
+        // --think-ms with an open loop
+        assert!(
+            validate_run_flags(&parse("run A --loop-mode open --think-ms 5")).is_err()
+        );
+        // --theta without a zipfian dist
+        assert!(validate_run_flags(&parse("run A --theta 0.9")).is_err());
+        assert!(
+            validate_run_flags(&parse("run A --dist uniform --theta 0.9")).is_err()
+        );
+        // qualifier flags without the flag they qualify
+        assert!(validate_run_flags(&parse("run A --shard-policy hash")).is_err());
+        assert!(validate_run_flags(&parse("run A --tenant-rate 100")).is_err());
+        assert!(validate_run_flags(&parse("run A --tenant-slo-p99 50")).is_err());
+    }
+
+    #[test]
+    fn run_flags_accept_consistent_combinations() {
+        assert!(validate_run_flags(&parse("run A")).is_ok());
+        assert!(validate_run_flags(&parse("run A --loop-mode open --rate 1000")).is_ok());
+        assert!(
+            validate_run_flags(&parse("run A --loop-mode poisson --rate 500")).is_ok()
+        );
+        assert!(validate_run_flags(&parse("run A --think-ms 5")).is_ok());
+        assert!(validate_run_flags(&parse("run A --dist zipfian --theta 0.9")).is_ok());
+        assert!(validate_run_flags(&parse("run A --dist zipf --theta 0.9")).is_ok());
+        assert!(
+            validate_run_flags(&parse("run A --shards 4 --shard-policy hash")).is_ok()
+        );
+        assert!(validate_run_flags(&parse(
+            "run A --tenants 2 --tenant-rate 100 --tenant-slo-p99 50"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn bench_flags_validate_qualifier_dependencies() {
+        assert!(validate_bench_flags(&parse("bench --shard-policy range")).is_err());
+        assert!(validate_bench_flags(&parse("bench --tenant-rate 10")).is_err());
+        assert!(validate_bench_flags(&parse("bench --tenant-slo-p99 20")).is_err());
+        assert!(
+            validate_bench_flags(&parse("bench --shards 2 --shard-policy range")).is_ok()
+        );
+        assert!(validate_bench_flags(&parse("bench --tenants 2")).is_ok());
+        assert!(validate_bench_flags(&parse("bench")).is_ok());
+    }
+
+    #[test]
+    fn tenants_flag_parses_and_validates() {
+        assert!(parse_tenants(&parse("run A")).unwrap().is_none());
+        let (n, rate, slo) = parse_tenants(&parse(
+            "run A --tenants 4 --tenant-rate 250 --tenant-slo-p99 50"
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(n, 4);
+        assert!((rate - 250.0).abs() < 1e-9);
+        assert_eq!(slo, Some(50 * MILLIS));
+        assert!(parse_tenants(&parse("run A --tenants 0")).is_err());
+        assert!(parse_tenants(&parse("run A --tenants x")).is_err());
+        assert!(parse_tenants(&parse("run A --tenants 2 --tenant-slo-p99 0")).is_err());
+    }
 }

@@ -1,0 +1,453 @@
+//! Multi-tenant QoS: token-bucket admission control, SLO-aware overload
+//! shedding, and per-tenant device-budget arbitration (DESIGN.md §10).
+//!
+//! Every workload client is tagged with a [`TenantId`]; a [`QosConfig`]
+//! describes the tenants (token rate, burst, p99 SLO, weight) and the
+//! scheduler threads a [`QosController`] through the event loop:
+//!
+//! - **Admission**: each op is charged to its tenant's deterministic
+//!   [`TokenBucket`] in simulated bytes before it reaches the engine; an
+//!   over-budget op is rescheduled to the bucket's exact ready time
+//!   (closed-loop issues slide, open-loop dispatches wait at the FIFO
+//!   head, so throttling surfaces as queueing delay).
+//! - **SLO shedding**: a periodic tick measures each tenant's windowed
+//!   p99; once a tenant exceeds its target, its *own* stale open-loop
+//!   backlog is dropped first — bounded queues for the abuser instead of
+//!   an engine stall for everyone.
+//! - **Device budget** (KVACCEL): the PR5 revoke-before-grant arbiter is
+//!   reused over tenants — each tenant holds a grant of the redirection
+//!   budget (`max_kv_occupancy`), and the grant follows whichever tenant
+//!   is actually stalling, weighted by the configured shares.
+//!
+//! With `enforce == false` the controller only *measures* (per-tenant
+//! breakdowns in [`RunResult`](crate::workload::RunResult)); the op
+//! stream is bit-identical to a run with no QoS at all — asserted by
+//! `tests/qos_conformance.rs`.
+
+pub mod bucket;
+
+pub use bucket::TokenBucket;
+
+use crate::engine::KvEngine;
+use crate::env::SimEnv;
+use crate::shard::{ArbiterConfig, DeviceArbiter, ShardSignal};
+use crate::sim::{Nanos, MILLIS, NS_PER_SEC};
+use crate::workload::stats::{Histogram, HistogramSummary};
+
+/// Identifies one tenant inside a workload run (an index into
+/// [`QosConfig::tenants`]).
+pub type TenantId = u32;
+
+/// One tenant's contract: how much it may push and what it was promised.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of the device redirection budget (grants are
+    /// seeded proportionally; the arbiter moves them afterwards).
+    pub weight: f64,
+    /// Token-bucket refill rate in simulated bytes/s; 0 = unlimited.
+    pub rate_bytes_per_sec: u64,
+    /// Token-bucket burst in bytes (ignored when unlimited).
+    pub burst_bytes: u64,
+    /// p99 total-latency target; when the measured windowed p99 exceeds
+    /// it, the shedder drops this tenant's stale open-loop backlog.
+    pub slo_p99: Option<Nanos>,
+}
+
+impl TenantSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            weight: 1.0,
+            rate_bytes_per_sec: 0,
+            burst_bytes: 0,
+            slo_p99: None,
+        }
+    }
+
+    pub fn with_rate(mut self, bytes_per_sec: u64, burst_bytes: u64) -> Self {
+        self.rate_bytes_per_sec = bytes_per_sec;
+        self.burst_bytes = burst_bytes;
+        self
+    }
+
+    pub fn with_slo_p99(mut self, target: Nanos) -> Self {
+        self.slo_p99 = Some(target);
+        self
+    }
+
+    pub fn with_weight(mut self, w: f64) -> Self {
+        self.weight = w.max(1e-6);
+        self
+    }
+}
+
+/// Tenant table + controller knobs, carried on the
+/// [`WorkloadSpec`](crate::workload::WorkloadSpec).
+#[derive(Clone, Debug)]
+pub struct QosConfig {
+    pub tenants: Vec<TenantSpec>,
+    /// false = measure per-tenant stats only; the op stream is untouched.
+    pub enforce: bool,
+    /// SLO/arbitration cadence (the detector's 0.1 s by default).
+    pub tick_interval: Nanos,
+    /// Minimum ops in a tick window before its p99 can trip the SLO.
+    pub slo_min_window_ops: u64,
+}
+
+impl QosConfig {
+    pub fn new(tenants: Vec<TenantSpec>) -> Self {
+        Self {
+            tenants,
+            enforce: true,
+            tick_interval: 100 * MILLIS,
+            slo_min_window_ops: 16,
+        }
+    }
+
+    /// Accounting-only mode: per-tenant breakdowns without perturbing
+    /// the run (bit-identical to no QoS).
+    pub fn monitor_only(mut self) -> Self {
+        self.enforce = false;
+        self
+    }
+}
+
+/// Per-tenant slice of a [`RunResult`](crate::workload::RunResult).
+#[derive(Clone, Debug)]
+pub struct TenantResult {
+    pub name: String,
+    pub ops: u64,
+    pub ops_per_sec: f64,
+    pub mbps: f64,
+    /// Total latency (queueing + service for open loop).
+    pub lat: HistogramSummary,
+    /// Open-loop FIFO wait (includes bucket hold time).
+    pub queue_delay: HistogramSummary,
+    /// Token-bucket refusals (an op can be refused more than once).
+    pub throttled: u64,
+    /// Total virtual time ops spent parked on the bucket.
+    pub throttle_delay_s: f64,
+    /// Backlogged ops dropped by the SLO shedder.
+    pub shed: u64,
+    /// Ticks whose windowed p99 exceeded the tenant's target.
+    pub over_slo_ticks: u64,
+    /// Configured target in us (0 = no SLO).
+    pub slo_p99_us: f64,
+    /// Final device redirection grant (0 unless arbitrated on KVACCEL).
+    pub device_grant: f64,
+    /// Redirected writes attributed to this tenant.
+    pub redirected_writes: u64,
+}
+
+/// Scheduler-side QoS state: one bucket + measurement window per tenant,
+/// and the tenant-granular device arbiter.
+#[derive(Clone, Debug)]
+pub struct QosController {
+    cfg: QosConfig,
+    buckets: Vec<TokenBucket>,
+    arbiter: DeviceArbiter,
+    lat: Vec<Histogram>,
+    qdelay: Vec<Histogram>,
+    win_lat: Vec<Histogram>,
+    win_ops: Vec<u64>,
+    ops: Vec<u64>,
+    bytes: Vec<u64>,
+    throttled: Vec<u64>,
+    throttle_delay: Vec<Nanos>,
+    shed: Vec<u64>,
+    over_slo: Vec<bool>,
+    over_slo_ticks: Vec<u64>,
+    redirects: Vec<u64>,
+    /// `writes_to_dev` snapshot taken just before the in-flight op.
+    dev_base: u64,
+    /// True once the device budget was actually pushed to a controller.
+    device_arbitrated: bool,
+}
+
+impl QosController {
+    pub fn new(cfg: &QosConfig) -> Self {
+        let n = cfg.tenants.len().max(1);
+        let buckets = cfg
+            .tenants
+            .iter()
+            .map(|t| {
+                if t.rate_bytes_per_sec == 0 {
+                    TokenBucket::unlimited()
+                } else {
+                    TokenBucket::new(t.rate_bytes_per_sec, t.burst_bytes.max(1))
+                }
+            })
+            .collect();
+        // seed the grant table proportionally to the tenant weights;
+        // recover() normalizes the sum to the budget and applies the
+        // min-grant floor, exactly as a recovered shard table would
+        let acfg = ArbiterConfig::default();
+        let wsum: f64 = cfg.tenants.iter().map(|t| t.weight.max(1e-6)).sum();
+        let grants: Vec<f64> = cfg
+            .tenants
+            .iter()
+            .map(|t| acfg.total_occupancy * t.weight.max(1e-6) / wsum.max(1e-6))
+            .collect();
+        let arbiter = DeviceArbiter::recover(grants, None, acfg);
+        Self {
+            cfg: cfg.clone(),
+            buckets,
+            arbiter,
+            lat: vec![Histogram::new(); n],
+            qdelay: vec![Histogram::new(); n],
+            win_lat: vec![Histogram::new(); n],
+            win_ops: vec![0; n],
+            ops: vec![0; n],
+            bytes: vec![0; n],
+            throttled: vec![0; n],
+            throttle_delay: vec![0; n],
+            shed: vec![0; n],
+            over_slo: vec![false; n],
+            over_slo_ticks: vec![0; n],
+            redirects: vec![0; n],
+            dev_base: 0,
+            device_arbitrated: false,
+        }
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.cfg.tenants.len()
+    }
+
+    pub fn tick_interval(&self) -> Nanos {
+        self.cfg.tick_interval.max(1)
+    }
+
+    pub fn enforcing(&self) -> bool {
+        self.cfg.enforce
+    }
+
+    pub fn arbiter(&self) -> &DeviceArbiter {
+        &self.arbiter
+    }
+
+    /// Charge tenant `t`'s bucket for an op of `cost_bytes` at `now`.
+    /// `None` = admitted; `Some(ready)` = reschedule the op at `ready`.
+    pub fn try_charge(&mut self, t: usize, now: Nanos, cost_bytes: u64) -> Option<Nanos> {
+        if !self.cfg.enforce {
+            return None;
+        }
+        let ready = self.buckets[t].try_charge(now, cost_bytes)?;
+        self.throttled[t] += 1;
+        self.throttle_delay[t] += ready.saturating_sub(now);
+        Some(ready)
+    }
+
+    /// When shedding applies to tenant `t` right now, the staleness
+    /// threshold: backlog entries older than this are dropped.
+    pub fn shed_threshold(&self, t: usize) -> Option<Nanos> {
+        if self.cfg.enforce && self.over_slo[t] {
+            self.cfg.tenants[t].slo_p99
+        } else {
+            None
+        }
+    }
+
+    pub fn note_shed(&mut self, t: usize) {
+        self.shed[t] += 1;
+    }
+
+    pub fn record_queue_wait(&mut self, t: usize, wait: Nanos) {
+        self.qdelay[t].record(wait);
+    }
+
+    /// Called just before an admitted op reaches the engine: snapshot the
+    /// redirect counter for attribution and (when enforcing) push tenant
+    /// `t`'s effective redirection cap into the KVACCEL controller.
+    pub fn before_op(&mut self, sys: &mut dyn KvEngine, env: &SimEnv, t: usize) {
+        let Some(k) = sys.kvaccel_mut() else { return };
+        self.dev_base = k.controller.stats.writes_to_dev;
+        if self.cfg.enforce && self.tenant_count() >= 2 {
+            let occ = env.device.kv_ns_occupancy(k.namespace());
+            k.controller.cfg.max_kv_occupancy = self.device_cap(t, occ);
+            self.device_arbitrated = true;
+        }
+    }
+
+    /// Called right after the op completes: per-tenant measurement and
+    /// redirect attribution.
+    pub fn after_op(
+        &mut self,
+        sys: &mut dyn KvEngine,
+        t: usize,
+        cost_bytes: u64,
+        lat: Nanos,
+    ) {
+        self.ops[t] += 1;
+        self.win_ops[t] += 1;
+        self.bytes[t] += cost_bytes;
+        self.lat[t].record(lat);
+        self.win_lat[t].record(lat);
+        if let Some(k) = sys.kvaccel_mut() {
+            self.redirects[t] +=
+                k.controller.stats.writes_to_dev.saturating_sub(self.dev_base);
+        }
+    }
+
+    /// Tenants share one KV-region namespace, so a tenant's cap is the
+    /// occupancy everyone else already holds plus its own grant: its
+    /// controller refuses redirection once *its* share reaches the grant,
+    /// without revoking data other tenants already landed.
+    fn device_cap(&self, t: usize, region_occupancy: f64) -> f64 {
+        let total = self.arbiter.config().total_occupancy;
+        let others = region_occupancy * (1.0 - self.occupancy_share(t));
+        (others + self.arbiter.grants()[t]).clamp(0.0, total)
+    }
+
+    /// Tenant `t`'s share of redirected writes (proxy for its share of
+    /// the KV region's resident data).
+    fn occupancy_share(&self, t: usize) -> f64 {
+        let total: u64 = self.redirects.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.redirects[t] as f64 / total as f64
+        }
+    }
+
+    /// Periodic controller pass: rotate the SLO windows and, on KVACCEL,
+    /// rebalance the per-tenant device grants (revoke-before-grant, one
+    /// transfer in flight, exactly the PR5 shard machinery).
+    pub fn on_tick(&mut self, at: Nanos, sys: &mut dyn KvEngine, env: &SimEnv) {
+        for t in 0..self.tenant_count() {
+            let over = match self.cfg.tenants[t].slo_p99 {
+                Some(slo) if self.win_lat[t].count() >= self.cfg.slo_min_window_ops => {
+                    self.win_lat[t].p99() > slo
+                }
+                _ => false,
+            };
+            self.over_slo[t] = over;
+            if over {
+                self.over_slo_ticks[t] += 1;
+            }
+            self.win_lat[t] = Histogram::new();
+        }
+        if self.cfg.enforce && self.tenant_count() >= 2 {
+            if let Some(k) = sys.kvaccel_mut() {
+                let stall = k.detector.stall_imminent();
+                let occ = env.device.kv_ns_occupancy(k.namespace());
+                let signals: Vec<ShardSignal> = (0..self.tenant_count())
+                    .map(|t| ShardSignal {
+                        // a tenant only claims capacity while it is
+                        // actually pushing ops into the stalling engine
+                        stall_imminent: stall && self.win_ops[t] > 0,
+                        occupancy: occ * self.occupancy_share(t),
+                    })
+                    .collect();
+                self.arbiter.maybe_rebalance(at, &signals);
+            }
+        }
+        for w in &mut self.win_ops {
+            *w = 0;
+        }
+    }
+
+    /// Fold the controller into the per-tenant result rows.
+    pub fn into_results(self, duration_s: f64) -> Vec<TenantResult> {
+        let dur = duration_s.max(1e-9);
+        self.cfg
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, sp)| TenantResult {
+                name: sp.name.clone(),
+                ops: self.ops[t],
+                ops_per_sec: self.ops[t] as f64 / dur,
+                mbps: self.bytes[t] as f64 / dur / (1024.0 * 1024.0),
+                lat: HistogramSummary::from(&self.lat[t]),
+                queue_delay: HistogramSummary::from(&self.qdelay[t]),
+                throttled: self.throttled[t],
+                throttle_delay_s: self.throttle_delay[t] as f64 / NS_PER_SEC as f64,
+                shed: self.shed[t],
+                over_slo_ticks: self.over_slo_ticks[t],
+                slo_p99_us: sp.slo_p99.map_or(0.0, |s| s as f64 / 1e3),
+                device_grant: if self.device_arbitrated {
+                    self.arbiter.grants()[t]
+                } else {
+                    0.0
+                },
+                redirected_writes: self.redirects[t],
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants(enforce: bool) -> QosController {
+        let mut cfg = QosConfig::new(vec![
+            TenantSpec::new("abuser").with_rate(100_000, 50_000).with_slo_p99(50 * MILLIS),
+            TenantSpec::new("victim"),
+        ]);
+        cfg.enforce = enforce;
+        QosController::new(&cfg)
+    }
+
+    #[test]
+    fn monitor_mode_never_throttles_or_sheds() {
+        let mut q = two_tenants(false);
+        for i in 0..1_000u64 {
+            assert_eq!(q.try_charge(0, i, 1 << 20), None);
+        }
+        assert_eq!(q.shed_threshold(0), None);
+        let r = q.into_results(1.0);
+        assert_eq!(r[0].throttled, 0);
+    }
+
+    #[test]
+    fn enforced_bucket_throttles_only_its_tenant() {
+        let mut q = two_tenants(true);
+        // drain the abuser's burst; the victim stays unlimited
+        let mut refusals = 0;
+        for i in 0..100u64 {
+            if q.try_charge(0, i, 4_096).is_some() {
+                refusals += 1;
+            }
+            assert_eq!(q.try_charge(1, i, 4_096), None, "victim throttled");
+        }
+        assert!(refusals > 0, "abuser never throttled");
+        let r = q.into_results(1.0);
+        assert_eq!(r[0].throttled, refusals);
+        assert_eq!(r[1].throttled, 0);
+    }
+
+    #[test]
+    fn slo_window_trips_and_arms_the_shedder() {
+        let mut q = two_tenants(true);
+        let slo = 50 * MILLIS;
+        for _ in 0..32 {
+            q.ops[0] += 1;
+            q.win_lat[0].record(4 * slo); // way over target
+        }
+        assert_eq!(q.shed_threshold(0), None, "not armed before a tick");
+        let mut sys = crate::engine::EngineBuilder::rocksdb(true)
+            .opts(crate::lsm::LsmOptions::small_for_test())
+            .build();
+        let env = SimEnv::new(1, crate::ssd::SsdConfig::default());
+        q.on_tick(0, &mut *sys, &env);
+        assert_eq!(q.shed_threshold(0), Some(slo), "over-SLO tenant armed");
+        assert_eq!(q.shed_threshold(1), None, "in-SLO tenant untouched");
+        assert_eq!(q.over_slo_ticks[0], 1);
+    }
+
+    #[test]
+    fn weighted_grants_sum_to_budget() {
+        let cfg = QosConfig::new(vec![
+            TenantSpec::new("a").with_weight(3.0),
+            TenantSpec::new("b").with_weight(1.0),
+        ]);
+        let q = QosController::new(&cfg);
+        let g = q.arbiter().grants();
+        let sum: f64 = g.iter().sum();
+        assert!((sum - 0.9).abs() < 1e-9, "sum {sum}");
+        assert!(g[0] > g[1], "weight ignored: {g:?}");
+    }
+}

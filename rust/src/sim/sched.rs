@@ -26,6 +26,10 @@ pub enum EventKind {
     Arrival,
     /// Open-loop: the actor should consider serving its FIFO head.
     Dispatch,
+    /// QoS controller heartbeat: rotate SLO windows, rebalance tenant
+    /// device grants (`qos::QosController::on_tick`). The actor id is
+    /// the reserved slot one past the last client.
+    QosTick,
 }
 
 /// A scheduled wake-up for one actor.

@@ -22,6 +22,7 @@
 use crate::engine::{DbIterator, EngineStats, IterOptions, KvEngine, WriteBatch};
 use crate::env::SimEnv;
 use crate::lsm::entry::Key;
+use crate::qos::{QosConfig, QosController, TenantId, TenantSpec};
 use crate::sim::sched::{ActorId, EventKind, EventQueue};
 use crate::sim::{Nanos, SimRng, NS_PER_SEC};
 
@@ -156,6 +157,9 @@ pub struct ClientConfig {
     pub pace: Option<Pace>,
     /// XOR'd into the spec seed for this client's generator stream.
     pub seed_tag: u64,
+    /// Which tenant this client bills to (an index into
+    /// `WorkloadSpec::qos.tenants`; ignored when the spec has no QoS).
+    pub tenant: TenantId,
 }
 
 impl Default for ClientConfig {
@@ -170,6 +174,7 @@ impl Default for ClientConfig {
             max_ops: None,
             pace: None,
             seed_tag: 0,
+            tenant: 0,
         }
     }
 }
@@ -195,6 +200,11 @@ impl ClientConfig {
 
     pub fn with_seed_tag(mut self, tag: u64) -> Self {
         self.seed_tag = tag;
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -240,6 +250,9 @@ pub struct WorkloadSpec {
     /// The crash-injection hook (`run --crash-at <ops>`) cuts the run
     /// here so the driver can power-loss the engine mid-workload.
     pub stop_after_ops: Option<u64>,
+    /// Multi-tenant QoS: tenant table + admission/SLO/arbitration knobs.
+    /// None = no QoS at all (the pre-PR6 scheduler, bit for bit).
+    pub qos: Option<QosConfig>,
 }
 
 impl WorkloadSpec {
@@ -253,6 +266,7 @@ impl WorkloadSpec {
             value_size: cfg.value_size,
             seed: cfg.seed,
             stop_after_ops: None,
+            qos: None,
         }
     }
 
@@ -264,6 +278,46 @@ impl WorkloadSpec {
     /// Cut the run after `n` issued ops in total (crash injection).
     pub fn with_stop_after(mut self, n: u64) -> Self {
         self.stop_after_ops = Some(n);
+        self
+    }
+
+    /// Attach a fully custom QoS config (tenants assigned per client).
+    pub fn with_qos(mut self, qos: QosConfig) -> Self {
+        self.qos = Some(qos);
+        self
+    }
+
+    /// The `--tenants` CLI shape: round-robin the clients across `n`
+    /// identical tenants (client `i` bills tenant `i % n`), each with a
+    /// token rate of `rate_ops_s` ops/s (0 = unlimited; charged at
+    /// `16 + value_size` bytes per op, a quarter second of burst) and an
+    /// optional shared p99 SLO.
+    pub fn with_tenants(
+        mut self,
+        n: usize,
+        rate_ops_s: f64,
+        slo_p99: Option<Nanos>,
+    ) -> Self {
+        let n = n.max(1);
+        for (i, c) in self.clients.iter_mut().enumerate() {
+            c.tenant = (i % n) as TenantId;
+        }
+        let bytes_per_op = 16 + self.value_size as u64;
+        let rate_bytes = (rate_ops_s.max(0.0) * bytes_per_op as f64) as u64;
+        let burst = (rate_bytes / 4).max(bytes_per_op);
+        let tenants = (0..n)
+            .map(|t| {
+                let mut spec = TenantSpec::new(format!("t{t}"));
+                if rate_bytes > 0 {
+                    spec = spec.with_rate(rate_bytes, burst);
+                }
+                if let Some(slo) = slo_p99 {
+                    spec = spec.with_slo_p99(slo);
+                }
+                spec
+            })
+            .collect();
+        self.qos = Some(QosConfig::new(tenants));
         self
     }
 }
@@ -298,6 +352,9 @@ struct Client {
     fifo: std::collections::VecDeque<Nanos>,
     /// Closed-loop paced client waiting for its ratio budget.
     parked: bool,
+    /// Op kind already drawn for an op the QoS bucket deferred: the RNG
+    /// stream must not re-draw when the op is retried.
+    pending_kind: Option<OpKind>,
 }
 
 impl Client {
@@ -450,6 +507,7 @@ pub fn run_spec_traced(
                 busy: false,
                 fifo: std::collections::VecDeque::new(),
                 parked: false,
+                pending_kind: None,
             }
         })
         .collect();
@@ -458,6 +516,29 @@ pub fn run_spec_traced(
             LoopMode::Closed { .. } => q.push(spec.start_at, i as ActorId, EventKind::Issue),
             _ => q.push(spec.start_at, i as ActorId, EventKind::Arrival),
         }
+    }
+
+    // QoS: one controller for the run, ticked by a reserved actor slot
+    // one past the last client (ticks never enter the op trace)
+    let mut qos: Option<QosController> = spec.qos.as_ref().map(|qc| {
+        assert!(!qc.tenants.is_empty(), "QosConfig has no tenants");
+        for c in &spec.clients {
+            assert!(
+                (c.tenant as usize) < qc.tenants.len(),
+                "client tenant {} out of range ({} tenants)",
+                c.tenant,
+                qc.tenants.len()
+            );
+        }
+        QosController::new(qc)
+    });
+    let tick_actor = clients.len() as ActorId;
+    if let Some(ctl) = &qos {
+        q.push(
+            spec.start_at.saturating_add(ctl.tick_interval()),
+            tick_actor,
+            EventKind::QosTick,
+        );
     }
 
     let mut stats = RunStats::new(end_time);
@@ -485,10 +566,27 @@ pub fn run_spec_traced(
                     }
                 }
                 sync_latest_frontier(&mut clients, a);
+                let kind = take_kind(&mut clients[a]);
+                let cost = op_cost_bytes(kind, &clients[a].cfg, spec.value_size);
+                if let Some(ctl) = qos.as_mut() {
+                    let t = clients[a].cfg.tenant as usize;
+                    if let Some(ready) = ctl.try_charge(t, ev.at, cost) {
+                        // over budget: stash the drawn kind (the RNG
+                        // stream must not re-draw) and retry at refill
+                        clients[a].pending_kind = Some(kind);
+                        q.push(ready, ev.actor, EventKind::Issue);
+                        continue;
+                    }
+                    ctl.before_op(sys, env, t);
+                }
                 let done = issue_one(
-                    sys, env, &mut clients[a], ev.actor, ev.at, ev.at, true,
+                    sys, env, &mut clients[a], ev.actor, ev.at, ev.at, true, kind,
                     &mut stats, &mut trace, record_trace,
                 );
+                if let Some(ctl) = qos.as_mut() {
+                    let t = clients[a].cfg.tenant as usize;
+                    ctl.after_op(sys, t, cost, done.saturating_sub(ev.at));
+                }
                 clients[a].issued += 1;
                 total_issued += 1;
                 clients[a].free_at = done;
@@ -524,6 +622,24 @@ pub fn run_spec_traced(
                     clients[a].busy = false;
                     continue;
                 }
+                // SLO shedder: an over-target tenant drops its *stale*
+                // backlog first — never an op the bucket already
+                // admitted (stashed kind means mid-retry, not backlog)
+                if clients[a].pending_kind.is_none() {
+                    if let Some(ctl) = qos.as_mut() {
+                        let t = clients[a].cfg.tenant as usize;
+                        if let Some(slo) = ctl.shed_threshold(t) {
+                            let horizon = ev.at.max(clients[a].free_at);
+                            while let Some(&arr) = clients[a].fifo.front() {
+                                if horizon.saturating_sub(arr) <= slo {
+                                    break;
+                                }
+                                clients[a].fifo.pop_front();
+                                ctl.note_shed(t);
+                            }
+                        }
+                    }
+                }
                 let Some(arrived) = clients[a].fifo.pop_front() else {
                     clients[a].busy = false;
                     continue;
@@ -531,12 +647,34 @@ pub fn run_spec_traced(
                 // the op was queued at `arrived`; service starts once
                 // the client's previous op is done
                 let start = ev.at.max(clients[a].free_at);
+                let kind = take_kind(&mut clients[a]);
+                let cost = op_cost_bytes(kind, &clients[a].cfg, spec.value_size);
+                if let Some(ctl) = qos.as_mut() {
+                    let t = clients[a].cfg.tenant as usize;
+                    if let Some(ready) = ctl.try_charge(t, start, cost) {
+                        // over budget: the head op waits in place; the
+                        // hold shows up as queueing delay once served
+                        clients[a].pending_kind = Some(kind);
+                        clients[a].fifo.push_front(arrived);
+                        q.push(ready, ev.actor, EventKind::Dispatch);
+                        continue;
+                    }
+                }
                 stats.queue_wait(arrived, start);
+                if let Some(ctl) = qos.as_mut() {
+                    let t = clients[a].cfg.tenant as usize;
+                    ctl.record_queue_wait(t, start.saturating_sub(arrived));
+                    ctl.before_op(sys, env, t);
+                }
                 sync_latest_frontier(&mut clients, a);
                 let done = issue_one(
-                    sys, env, &mut clients[a], ev.actor, start, arrived, false,
+                    sys, env, &mut clients[a], ev.actor, start, arrived, false, kind,
                     &mut stats, &mut trace, record_trace,
                 );
+                if let Some(ctl) = qos.as_mut() {
+                    let t = clients[a].cfg.tenant as usize;
+                    ctl.after_op(sys, t, cost, done.saturating_sub(arrived));
+                }
                 clients[a].issued += 1;
                 total_issued += 1;
                 clients[a].free_at = done;
@@ -548,10 +686,23 @@ pub fn run_spec_traced(
                 }
                 wake_paced(&mut clients, &mut q, ev.actor);
             }
+            EventKind::QosTick => {
+                if ev.at >= end_time {
+                    continue; // controller retires with the arrivals
+                }
+                if let Some(ctl) = qos.as_mut() {
+                    ctl.on_tick(ev.at, sys, env);
+                    q.push(
+                        ev.at.saturating_add(ctl.tick_interval()),
+                        ev.actor,
+                        EventKind::QosTick,
+                    );
+                }
+            }
         }
     }
 
-    (assemble(sys, env, spec, stats, end), trace)
+    (assemble(sys, env, spec, stats, qos, end), trace)
 }
 
 /// Latest-biased clients share one insert frontier (YCSB keeps a global
@@ -592,6 +743,28 @@ fn wake_paced(clients: &mut [Client], q: &mut EventQueue, changed: ActorId) {
     }
 }
 
+/// The op kind for the next issue: either the kind stashed when the QoS
+/// bucket deferred this op (the RNG stream must not re-draw on retry),
+/// or a fresh draw from the client's mix.
+fn take_kind(c: &mut Client) -> OpKind {
+    match c.pending_kind.take() {
+        Some(k) => k,
+        None => c.cfg.mix.pick(&mut c.rng),
+    }
+}
+
+/// Admission cost of one op in simulated bytes (key + value per entry;
+/// batches charge every entry, scans their minimum Next count). Charged
+/// against the tenant's token bucket *before* the op runs.
+fn op_cost_bytes(kind: OpKind, cfg: &ClientConfig, value_size: u32) -> u64 {
+    let per_entry = 16 + value_size as u64;
+    match kind {
+        OpKind::Put | OpKind::Get | OpKind::Delete => per_entry,
+        OpKind::Batch => per_entry * cfg.batch_size.max(1) as u64,
+        OpKind::Scan => per_entry * cfg.scan_len.max(1) as u64,
+    }
+}
+
 /// Issue one operation for a client at `at`; latency is measured from
 /// `lat_from` (arrival time in open loop, issue time in closed loop);
 /// `cap_series` clips the per-second bin to the horizon (closed loop).
@@ -604,11 +777,11 @@ fn issue_one(
     at: Nanos,
     lat_from: Nanos,
     cap_series: bool,
+    kind: OpKind,
     stats: &mut RunStats,
     trace: &mut Vec<OpTrace>,
     record: bool,
 ) -> Nanos {
-    let kind = c.cfg.mix.pick(&mut c.rng);
     let (key, done) = match kind {
         OpKind::Put => {
             let key = c.gen.write_key();
@@ -678,6 +851,7 @@ fn assemble(
     env: &SimEnv,
     spec: &WorkloadSpec,
     stats: RunStats,
+    qos: Option<QosController>,
     end: Nanos,
 ) -> RunResult {
     let end = end.max(spec.start_at + 1);
@@ -737,6 +911,7 @@ fn assemble(
         scans: stats.scans,
         scan_lat: HistogramSummary::from(&stats.scan_lat),
         scan_amp: sys.scan_amp(),
+        tenants: qos.map(|q| q.into_results(duration_s)).unwrap_or_default(),
     }
 }
 
@@ -758,6 +933,7 @@ mod tests {
             value_size: 4096,
             seed: 42,
             stop_after_ops: None,
+            qos: None,
         }
     }
 
@@ -909,5 +1085,63 @@ mod tests {
         assert!(slow.writes.total < fast.writes.total / 2);
         // ~100 ops/s with 10 ms think time
         assert!((50..150).contains(&(slow.writes.total as i64)), "{}", slow.writes.total);
+    }
+
+    #[test]
+    fn tenant_breakdown_accounts_every_op() {
+        let (mut s, mut env) = build();
+        let clients = vec![
+            ClientConfig::writer(),
+            ClientConfig::writer().with_seed_tag(7),
+        ];
+        // two tenants, no rate limit, no SLO: pure accounting
+        let sp = spec(clients, 1).with_tenants(2, 0.0, None);
+        let r = run_spec(&mut *s, &mut env, &sp);
+        assert_eq!(r.tenants.len(), 2);
+        let per_tenant: u64 = r.tenants.iter().map(|t| t.ops).sum();
+        assert_eq!(per_tenant, r.writes.total, "tenant ops must sum to run ops");
+        for t in &r.tenants {
+            assert!(t.ops > 0, "{} issued nothing", t.name);
+            assert_eq!(t.throttled, 0, "unlimited tenant throttled");
+            assert_eq!(t.shed, 0, "unlimited tenant shed");
+        }
+    }
+
+    #[test]
+    fn tenant_bucket_throttles_closed_loop_rate() {
+        let (mut s, mut env) = build();
+        // one writer metered to ~200 ops/s; a closed loop would
+        // otherwise push thousands
+        let sp = spec(vec![ClientConfig::writer()], 2).with_tenants(1, 200.0, None);
+        let r = run_spec(&mut *s, &mut env, &sp);
+        assert!(
+            (300..550).contains(&(r.writes.total as i64)),
+            "metered writer did {} ops in 2 s (want ~400 + burst)",
+            r.writes.total
+        );
+        assert!(r.tenants[0].throttled > 0, "bucket never engaged");
+    }
+
+    #[test]
+    fn monitor_only_matches_unmetered_run() {
+        let clients = || {
+            vec![
+                ClientConfig::writer(),
+                ClientConfig::reader()
+                    .with_mode(LoopMode::OpenFixed { ops_per_sec: 300.0 })
+                    .with_seed_tag(9),
+            ]
+        };
+        let (mut s1, mut env1) = build();
+        let (base, t1) =
+            run_spec_traced(&mut *s1, &mut env1, &spec(clients(), 1), true);
+        let (mut s2, mut env2) = build();
+        let mut sp =
+            spec(clients(), 1).with_tenants(2, 500.0, Some(crate::sim::MILLIS));
+        sp.qos = sp.qos.map(|q| q.monitor_only());
+        let (mon, t2) = run_spec_traced(&mut *s2, &mut env2, &sp, true);
+        assert_eq!(t1, t2, "monitor-only QoS must not perturb the trace");
+        assert_eq!(base.writes.total, mon.writes.total);
+        assert_eq!(mon.tenants.len(), 2, "monitoring still reports tenants");
     }
 }

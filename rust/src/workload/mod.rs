@@ -4,12 +4,15 @@
 //! loop); `db_bench` keeps the paper's Table IV workloads as thin mix
 //! presets over it; `keygen` provides the deterministic key/value
 //! streams (Uniform/Zipfian/Latest); `stats` the measurement plumbing.
+//! Multi-tenant QoS (token buckets, SLO shedding) lives in `crate::qos`
+//! and is re-exported here because specs carry it.
 
 pub mod client;
 pub mod db_bench;
 pub mod keygen;
 pub mod stats;
 
+pub use crate::qos::{QosConfig, TenantId, TenantResult, TenantSpec};
 pub use client::{
     run_spec, run_spec_traced, ClientConfig, LoopMode, OpKind, OpMix, OpTrace, Pace,
     WorkloadSpec,

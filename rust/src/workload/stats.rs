@@ -188,6 +188,10 @@ pub struct RunResult {
     /// Engine-lifetime cursor read amplification (blocks/pages touched
     /// per Next, per interface).
     pub scan_amp: ScanAmp,
+    /// Per-tenant breakdown when the spec carried a `QosConfig`
+    /// (empty otherwise): throughput, latency, queueing, throttling
+    /// and shedding, per tenant.
+    pub tenants: Vec<crate::qos::TenantResult>,
 }
 
 #[derive(Clone, Copy, Debug, Default)]

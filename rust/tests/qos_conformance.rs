@@ -1,0 +1,159 @@
+//! QoS conformance: (1) a spec with QoS disabled — absent or
+//! monitor-only — must produce the *bit-identical* op trace of the
+//! pre-QoS scheduler on every engine kind; (2) the noisy-neighbor
+//! fairness contract on the plain LSM: with QoS off the abusive tenant
+//! degrades the victims' p99 by >= 5x over their isolated baseline,
+//! with QoS on the victims stay within 2x of it while the abuser is
+//! throttled, shedding, and still making progress (never deadlocked).
+
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::{EngineBuilder, KvEngine};
+use kvaccel::env::SimEnv;
+use kvaccel::experiments::qos_fairness::run_fairness;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::LsmOptions;
+use kvaccel::sim::{Nanos, NS_PER_SEC};
+use kvaccel::ssd::SsdConfig;
+use kvaccel::workload::{
+    run_spec_traced, ClientConfig, KeyDist, LoopMode, OpMix, WorkloadSpec,
+};
+
+const ENGINES: [&str; 6] = [
+    "rocksdb",
+    "rocksdb-nosd",
+    "adoc",
+    "kvaccel",
+    "kvaccel-eager",
+    "kvaccel-lazy",
+];
+
+fn build(name: &str) -> (Box<dyn KvEngine>, SimEnv) {
+    let opts = LsmOptions::small_for_test();
+    let sys = match name {
+        "rocksdb" => EngineBuilder::rocksdb(true).opts(opts).build(),
+        "rocksdb-nosd" => EngineBuilder::rocksdb(false).opts(opts).build(),
+        "adoc" => EngineBuilder::adoc().opts(opts).build(),
+        "kvaccel" => EngineBuilder::kvaccel().opts(opts).build(),
+        "kvaccel-eager" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Eager).opts(opts).build()
+        }
+        "kvaccel-lazy" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Lazy).opts(opts).build()
+        }
+        other => panic!("unknown engine {other}"),
+    };
+    (sys, SimEnv::new(21, SsdConfig::default()))
+}
+
+/// Closed + open clients with a mixed op set — every scheduler path the
+/// QoS hooks touch (issue, dispatch, queueing, scans, batches).
+fn mixed_spec(duration: Nanos) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "qos-conformance".into(),
+        clients: vec![
+            ClientConfig::writer(),
+            ClientConfig {
+                mix: OpMix { put: 3, get: 1, delete: 1, scan: 1, batch: 1 },
+                mode: LoopMode::OpenPoisson { ops_per_sec: 1_500.0 },
+                dist: KeyDist::Zipfian { theta: 0.9 },
+                scan_len: 8,
+                seed_tag: 17,
+                ..ClientConfig::default()
+            },
+            ClientConfig::reader()
+                .with_mode(LoopMode::OpenFixed { ops_per_sec: 800.0 })
+                .with_seed_tag(99),
+        ],
+        duration,
+        start_at: 0,
+        key_space: 20_000,
+        value_size: 4096,
+        seed: 7,
+        stop_after_ops: None,
+        qos: None,
+    }
+}
+
+#[test]
+fn qos_off_runs_are_bit_identical_to_pre_qos_traces() {
+    let base = mixed_spec(NS_PER_SEC / 2);
+    // monitor-only: same tenants/rates/SLOs as an enforced config, but
+    // accounting only — the op stream must not move by one nanosecond
+    let mut monitored = base.clone().with_tenants(2, 400.0, Some(10_000_000));
+    monitored.qos = monitored.qos.map(|q| q.monitor_only());
+
+    for name in ENGINES {
+        let (mut s1, mut env1) = build(name);
+        let (r1, t1) = run_spec_traced(&mut *s1, &mut env1, &base, true);
+        let (mut s2, mut env2) = build(name);
+        let (r2, t2) = run_spec_traced(&mut *s2, &mut env2, &monitored, true);
+
+        assert_eq!(t1, t2, "{name}: monitor-only QoS perturbed the op trace");
+        assert_eq!(r1.writes.total, r2.writes.total, "{name}");
+        assert_eq!(r1.reads.total, r2.reads.total, "{name}");
+        assert_eq!(r1.write_lat.p99_us, r2.write_lat.p99_us, "{name}");
+        assert_eq!(r1.queue_delay.p99_us, r2.queue_delay.p99_us, "{name}");
+        // the only difference: the monitored run reports tenants
+        assert!(r1.tenants.is_empty(), "{name}: no-QoS run grew tenant rows");
+        assert_eq!(r2.tenants.len(), 2, "{name}: tenant breakdown missing");
+        // one tenant op per issued op (a batch/scan is one op here, even
+        // though the run stats expand them into per-entry counts)
+        let per_tenant: u64 = r2.tenants.iter().map(|t| t.ops).sum();
+        assert_eq!(per_tenant, t2.len() as u64, "{name}: tenant accounting lost ops");
+        for t in &r2.tenants {
+            assert_eq!(t.throttled, 0, "{name}: monitor mode throttled");
+            assert_eq!(t.shed, 0, "{name}: monitor mode shed");
+        }
+    }
+}
+
+#[test]
+fn fairness_contract_holds_on_the_plain_lsm() {
+    let f = run_fairness(SystemKind::RocksDb { slowdown: true }, 42, 10).unwrap();
+
+    // the victims' isolated baseline must be sane
+    assert!(f.solo_p99_us > 0.0, "degenerate solo run: {f:?}");
+
+    // QoS off: the abuser's flood degrades the victims >= 5x
+    assert!(
+        f.off_victim_p99_us >= 5.0 * f.solo_p99_us,
+        "abuser did not hurt the victims: solo p99 {:.0} us, qos-off p99 {:.0} us",
+        f.solo_p99_us,
+        f.off_victim_p99_us
+    );
+
+    // QoS on: the victims are held within 2x of their isolated baseline
+    assert!(
+        f.on_victim_p99_us <= 2.0 * f.solo_p99_us,
+        "QoS failed to protect the victims: solo p99 {:.0} us, qos-on p99 {:.0} us",
+        f.solo_p99_us,
+        f.on_victim_p99_us
+    );
+
+    // ... while the abuser is throttled and shedding, not deadlocked
+    assert!(f.on_abuser_ops > 0, "abuser deadlocked: {f:?}");
+    assert!(f.on_abuser_throttled > 0, "bucket never engaged: {f:?}");
+    assert!(f.on_abuser_shed > 0, "SLO shedder never engaged: {f:?}");
+    assert!(
+        f.on_abuser_kops < f.off_abuser_kops,
+        "enforcement did not reduce the abuser's throughput: {f:?}"
+    );
+}
+
+#[test]
+fn fairness_run_stays_live_on_kvaccel() {
+    // same harness on the accelerated engine: enforcement must compose
+    // with device redirection without deadlocking anyone
+    let f = run_fairness(
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+        42,
+        6,
+    )
+    .unwrap();
+    assert!(f.on_abuser_ops > 0, "abuser deadlocked on kvaccel: {f:?}");
+    assert!(f.on_abuser_throttled > 0, "bucket never engaged on kvaccel: {f:?}");
+    assert!(
+        f.on_victim_p99_us <= f.off_victim_p99_us.max(f.solo_p99_us * 2.0),
+        "QoS made the victims worse on kvaccel: {f:?}"
+    );
+}

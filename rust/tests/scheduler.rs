@@ -69,6 +69,7 @@ fn mixed_spec(duration: Nanos) -> WorkloadSpec {
         value_size: 4096,
         seed: 7,
         stop_after_ops: None,
+        qos: None,
     }
 }
 
@@ -100,6 +101,31 @@ fn scheduler_deterministic_and_stall_clean_for_all_engines() {
 }
 
 #[test]
+fn scheduler_deterministic_with_qos_enforced() {
+    // the QoS path adds token-bucket reschedules, SLO ticks and backlog
+    // shedding to the event stream; all of it must stay a pure function
+    // of (spec, seed) on every engine kind
+    let spec = mixed_spec(NS_PER_SEC / 2).with_tenants(2, 800.0, Some(20_000_000));
+    for name in ENGINES {
+        let (mut s1, mut env1) = build(name);
+        let (r1, t1) = run_spec_traced(&mut *s1, &mut env1, &spec, true);
+        let (mut s2, mut env2) = build(name);
+        let (r2, t2) = run_spec_traced(&mut *s2, &mut env2, &spec, true);
+        assert_eq!(t1, t2, "{name}: enforced-QoS op traces diverge");
+        assert_eq!(r1.writes.total, r2.writes.total, "{name}");
+        assert_eq!(r1.queue_delay.p99_us, r2.queue_delay.p99_us, "{name}");
+        assert_eq!(r1.tenants.len(), 2, "{name}: missing tenant breakdown");
+        for (a, b) in r1.tenants.iter().zip(&r2.tenants) {
+            assert_eq!(a.ops, b.ops, "{name}: tenant ops diverge");
+            assert_eq!(a.throttled, b.throttled, "{name}: throttle counts diverge");
+            assert_eq!(a.shed, b.shed, "{name}: shed counts diverge");
+        }
+        // the metered run stays live: both tenants make progress
+        assert!(r1.tenants.iter().all(|t| t.ops > 0), "{name}: a tenant starved");
+    }
+}
+
+#[test]
 fn fillrandom_preset_matches_prerefactor_op_stream() {
     // the preset must issue the exact op stream of the pre-scheduler
     // single-writer loop: same keys, same values, same timing
@@ -117,6 +143,7 @@ fn fillrandom_preset_matches_prerefactor_op_stream() {
         value_size: cfg.value_size,
         seed: cfg.seed,
         stop_after_ops: None,
+        qos: None,
     };
     let (mut s1, mut env1) = build("rocksdb");
     let (_, trace) = run_spec_traced(&mut *s1, &mut env1, &spec, true);
@@ -251,6 +278,7 @@ fn zipfian_and_latest_clients_run_on_every_engine() {
                 value_size: 1024,
                 seed: 13,
                 stop_after_ops: None,
+                qos: None,
             };
             let (mut s, mut env) = build(name);
             let r = run_spec(&mut *s, &mut env, &spec);
