@@ -247,6 +247,10 @@ impl KvEngine for AdocEngine {
         self.db.maybe_schedule(env, at);
     }
 
+    fn set_block_cache(&mut self, cache: crate::engine::SharedBlockCache) {
+        self.db.set_block_cache(cache);
+    }
+
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
         self.db.flush_and_wait(env, at)
     }

@@ -300,6 +300,12 @@ pub struct IterCost {
     pub next_cpu_ns: Nanos,
     pub get_cpu_ns: Nanos,
     pub block_bytes: u64,
+    /// On-disk size of one data block under the engine's codec (equals
+    /// `block_bytes` when compression is off).
+    pub disk_block_bytes: u64,
+    /// CPU charged per block materialized off the device (0 when
+    /// compression is off).
+    pub decompress_cpu_ns: Nanos,
 }
 
 impl IterCost {
@@ -308,17 +314,27 @@ impl IterCost {
             next_cpu_ns: opts.next_cpu_ns,
             get_cpu_ns: opts.get_cpu_ns,
             block_bytes: opts.block_bytes,
+            disk_block_bytes: opts.disk_bytes(opts.block_bytes),
+            decompress_cpu_ns: opts.decompress_ns(),
         }
     }
 }
 
-/// Scan-path block cache shared by every cursor an engine hands out,
-/// so repeated scans over a hot range warm each other (the engine's
-/// point-read cache stays separate).
+/// The engine-wide block cache: one instance per engine, shared by the
+/// point-read path (`get()`), every cursor the engine hands out, and —
+/// on KVACCEL — the device write-buffer read path, so scans warm point
+/// reads and vice versa. Keys are `(sst_id, block_idx)`; the device
+/// buffer uses the reserved `sst_id == u64::MAX` namespace (SST ids are
+/// monotonically allocated from 1 and never reused).
 pub type SharedBlockCache = Arc<Mutex<LruCache<(u64, usize), ()>>>;
 
+/// Reserved cache-key namespace for device write-buffer entries.
+pub const DEV_CACHE_NS: u64 = u64::MAX;
+
+/// `blocks == 0` builds a disabled cache: every probe misses and
+/// inserts are dropped (hot paths skip the probe entirely).
 pub fn new_block_cache(blocks: usize) -> SharedBlockCache {
-    Arc::new(Mutex::new(LruCache::new(blocks.max(1))))
+    Arc::new(Mutex::new(LruCache::new(blocks)))
 }
 
 // ---------------------------------------------------------------------
@@ -350,9 +366,11 @@ pub struct EngineIterator {
 
     next_cpu_ns: Nanos,
     get_cpu_ns: Nanos,
-    block_bytes: u64,
-    /// Scan-path block cache, shared with the engine (and so with every
-    /// other cursor it hands out): repeated scans warm each other.
+    disk_block_bytes: u64,
+    decompress_cpu_ns: Nanos,
+    /// Engine-wide block cache, shared with the engine's point-read
+    /// path and every other cursor it hands out: scans warm point reads
+    /// and vice versa.
     cache: SharedBlockCache,
 
     counters: Arc<ScanCounters>,
@@ -398,7 +416,8 @@ impl EngineIterator {
             current: None,
             next_cpu_ns: cost.next_cpu_ns,
             get_cpu_ns: cost.get_cpu_ns,
-            block_bytes: cost.block_bytes,
+            disk_block_bytes: cost.disk_block_bytes,
+            decompress_cpu_ns: cost.decompress_cpu_ns,
             cache,
             counters,
             local: ScanAmp::default(),
@@ -420,12 +439,16 @@ impl EngineIterator {
         for (sst, block) in self.main.drain_blocks() {
             self.local.main_blocks += 1;
             self.counters.main_blocks.fetch_add(1, Ordering::Relaxed);
-            let mut cache = self.cache.lock().expect("scan cache poisoned");
-            if cache.get(&(sst, block)).is_some() {
+            let mut cache = self.cache.lock().expect("block cache poisoned");
+            if cache.capacity() > 0 && cache.get(&(sst, block)).is_some() {
                 env.cpu.charge(CpuClass::Foreground, t, self.get_cpu_ns / 2);
                 t += self.get_cpu_ns / 2;
             } else {
-                t = env.device.read_block(t, self.block_bytes);
+                t = env.device.read_block(t, self.disk_block_bytes);
+                if self.decompress_cpu_ns > 0 {
+                    env.cpu.charge(CpuClass::Foreground, t, self.decompress_cpu_ns);
+                    t += self.decompress_cpu_ns;
+                }
                 cache.insert((sst, block), ());
             }
         }

@@ -29,6 +29,7 @@ use crate::sim::Nanos;
 pub use iter::{
     new_block_cache, DbIterator, DevPin, EngineIterator, IterCost, IterOptions,
     ScanAmp, ScanCounters, SharedBlockCache, Snapshot, SnapshotInner,
+    DEV_CACHE_NS,
 };
 
 // ---------------------------------------------------------------------
@@ -211,6 +212,33 @@ pub struct EngineHealth {
     pub recovered_dev_keys: u64,
 }
 
+/// Counters of the engine-wide block cache (one instance per engine,
+/// shared by point reads, cursors and — on KVACCEL — device write-buffer
+/// reads; a sharded store's children all share it too).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Blocks resident right now.
+    pub cached_blocks: u64,
+    /// Bytes resident right now (blocks × block size).
+    pub cached_bytes: u64,
+    /// Configured capacity in blocks (0 = cache disabled).
+    pub capacity_blocks: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// Read-only accessors shared by every engine; supertrait of
 /// [`KvEngine`] so drivers can report without knowing the concrete type.
 pub trait EngineStats {
@@ -252,6 +280,13 @@ pub trait EngineStats {
     /// device pages touched) accumulated over the engine's lifetime.
     fn scan_amp(&self) -> ScanAmp {
         self.main_db().scan_counters.snapshot()
+    }
+
+    /// Engine-wide block-cache counters. The cache instance is shared by
+    /// every shard/cursor of this engine, so any child's view is the
+    /// engine-wide truth.
+    fn cache_stats(&self) -> CacheStats {
+        self.main_db().cache_stats()
     }
 
     fn health(&self) -> EngineHealth {
@@ -353,6 +388,12 @@ pub trait KvEngine: EngineStats {
         None
     }
 
+    /// Install an externally-owned engine-wide block cache. Engines that
+    /// own an `LsmDb` forward to it (and a sharding layer fans out to
+    /// every child); the default is a no-op so wrappers without a cache
+    /// stay valid.
+    fn set_block_cache(&mut self, _cache: SharedBlockCache) {}
+
     /// Force-rotate the memtable and drain all background work.
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos;
 
@@ -393,6 +434,7 @@ pub struct EngineBuilder {
     kvaccel_cfg: KvaccelConfig,
     adoc_cfg: AdocConfig,
     shard: Option<crate::shard::ShardSpec>,
+    block_cache: Option<SharedBlockCache>,
 }
 
 impl EngineBuilder {
@@ -405,6 +447,7 @@ impl EngineBuilder {
             kvaccel_cfg: KvaccelConfig::default(),
             adoc_cfg: AdocConfig::default(),
             shard: None,
+            block_cache: None,
         }
     }
 
@@ -468,6 +511,15 @@ impl EngineBuilder {
 
     pub fn adoc_config(mut self, cfg: AdocConfig) -> Self {
         self.adoc_cfg = cfg;
+        self
+    }
+
+    /// Share an existing block cache with the engine being built (e.g.
+    /// several standalone engines warming one cache); by default every
+    /// engine builds its own instance sized by
+    /// `LsmOptions::block_cache_blocks`.
+    pub fn block_cache(mut self, cache: SharedBlockCache) -> Self {
+        self.block_cache = Some(cache);
         self
     }
 
@@ -549,9 +601,10 @@ impl EngineBuilder {
     }
 
     pub fn build(self) -> Box<dyn KvEngine> {
-        let Self { kind, opts, merge, bloom, kvaccel_cfg, adoc_cfg, shard } = self;
-        if let Some(spec) = shard {
-            return Box::new(crate::shard::ShardedDb::new(
+        let Self { kind, opts, merge, bloom, kvaccel_cfg, adoc_cfg, shard, block_cache } =
+            self;
+        let mut sys: Box<dyn KvEngine> = if let Some(spec) = shard {
+            Box::new(crate::shard::ShardedDb::new(
                 spec,
                 kind,
                 opts,
@@ -559,22 +612,27 @@ impl EngineBuilder {
                 bloom,
                 kvaccel_cfg,
                 adoc_cfg,
-            ));
-        }
-        match kind {
-            SystemKind::RocksDb { slowdown } => {
-                Box::new(LsmDb::new(opts.with_slowdown(slowdown), merge, bloom))
+            ))
+        } else {
+            match kind {
+                SystemKind::RocksDb { slowdown } => {
+                    Box::new(LsmDb::new(opts.with_slowdown(slowdown), merge, bloom))
+                }
+                SystemKind::Adoc => {
+                    Box::new(AdocEngine::new(opts, adoc_cfg, merge, bloom))
+                }
+                SystemKind::Kvaccel { scheme } => Box::new(KvaccelDb::new(
+                    opts,
+                    kvaccel_cfg.with_scheme(scheme),
+                    merge,
+                    bloom,
+                )),
             }
-            SystemKind::Adoc => {
-                Box::new(AdocEngine::new(opts, adoc_cfg, merge, bloom))
-            }
-            SystemKind::Kvaccel { scheme } => Box::new(KvaccelDb::new(
-                opts,
-                kvaccel_cfg.with_scheme(scheme),
-                merge,
-                bloom,
-            )),
+        };
+        if let Some(cache) = block_cache {
+            sys.set_block_cache(cache);
         }
+        sys
     }
 }
 

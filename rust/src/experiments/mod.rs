@@ -8,6 +8,7 @@
 
 pub mod figs;
 pub mod qos_fairness;
+pub mod read_amp;
 pub mod recovery;
 pub mod shard_scale;
 pub mod tables;
@@ -179,6 +180,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "fig14" => figs::fig14(ctx),
         "qdelay" => figs::qdelay(ctx),
         "qos-fairness" => qos_fairness::qos_fairness(ctx),
+        "read-amp" => read_amp::read_amp(ctx),
         "recovery" => recovery::recovery(ctx),
         "shard-scale" => shard_scale::shard_scale(ctx),
         "table5" => tables::table5(ctx),
@@ -197,7 +199,8 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "qdelay", "qos-fairness", "recovery", "shard-scale", "table5", "table6",
+    "qdelay", "qos-fairness", "read-amp", "recovery", "shard-scale", "table5",
+    "table6",
 ];

@@ -140,6 +140,15 @@ impl KvaccelDb {
         else {
             return Ok(None);
         };
+        // the device buffer was reset: drop its cached keys so later
+        // reads pay real (Main-LSM) latency instead of phantom hits
+        {
+            let mut cache =
+                self.main.block_cache.lock().expect("block cache poisoned");
+            if cache.capacity() > 0 && !cache.is_empty() {
+                cache.retain(|k| k.0 != crate::engine::DEV_CACHE_NS);
+            }
+        }
         self.main
             .manifest_append(env, done, ManifestEdit::RollbackEnd { returned });
         Ok(Some(done))
@@ -346,17 +355,48 @@ impl KvaccelDb {
     }
 
     /// Read path (paper §V-C): metadata membership picks the interface.
+    /// Device-buffer reads go through the engine-wide block cache under
+    /// the reserved `DEV_CACHE_NS` key namespace: a hit serves the live
+    /// buffered value with zero-cost `kv_peek` (no simulated round
+    /// trip), a miss pays the full KV-interface GET and caches the key.
+    /// Correctness never depends on the cache — the metadata routing
+    /// gates this path, and `kv_peek` reads live device state.
     pub fn get(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> (Option<ValueDesc>, Nanos) {
         self.tick(env, at);
         let in_dev = self.metadata.check(env, at, key);
         match self.controller.read_path(in_dev) {
             ReadPath::Dev => {
+                let ckey = (crate::engine::DEV_CACHE_NS, key as usize);
+                let hit = {
+                    let mut cache = self
+                        .main
+                        .block_cache
+                        .lock()
+                        .expect("block cache poisoned");
+                    cache.capacity() > 0 && cache.get(&ckey).is_some()
+                };
+                if hit {
+                    let probe = self.main.opts.get_cpu_ns / 2;
+                    env.cpu.charge(CpuClass::Foreground, at, probe);
+                    let done = at + probe;
+                    env.clock.advance_to(done);
+                    let v = env
+                        .device
+                        .kv_peek(self.ns, key)
+                        .filter(|d| !d.is_tombstone());
+                    return (v, done);
+                }
                 let (v, done) = env
                     .device
                     .kv_get(self.ns, at, key)
                     .expect("kv interface get failed");
                 env.cpu.charge(CpuClass::Foreground, at, self.main.opts.get_cpu_ns);
                 env.clock.advance_to(done);
+                self.main
+                    .block_cache
+                    .lock()
+                    .expect("block cache poisoned")
+                    .insert(ckey, ());
                 let v = v.filter(|d| !d.is_tombstone());
                 (v, done)
             }
@@ -618,6 +658,10 @@ impl crate::engine::KvEngine for KvaccelDb {
 
     fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
         KvaccelDb::maintain(self, env, at);
+    }
+
+    fn set_block_cache(&mut self, cache: crate::engine::SharedBlockCache) {
+        self.main.set_block_cache(cache);
     }
 
     fn kvaccel_mut(&mut self) -> Option<&mut KvaccelDb> {

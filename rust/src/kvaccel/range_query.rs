@@ -389,12 +389,13 @@ mod tests {
             vec![],
             Some(pin),
         );
+        let opts = LsmOptions::default();
         EngineIterator::new(
             snap,
             &IterOptions::default(),
-            IterCost::from_opts(&LsmOptions::default()),
+            IterCost::from_opts(&opts),
             Arc::new(ScanCounters::default()),
-            new_block_cache(64),
+            new_block_cache(opts.block_cache_blocks),
         )
     }
 
@@ -549,12 +550,13 @@ mod tests {
             vec![],
             Some(pin),
         );
+        let opts = LsmOptions::default();
         let mut it = EngineIterator::new(
             snap,
             &IterOptions::range(2, 9),
-            IterCost::from_opts(&LsmOptions::default()),
+            IterCost::from_opts(&opts),
             Arc::new(ScanCounters::default()),
-            new_block_cache(64),
+            new_block_cache(opts.block_cache_blocks),
         );
         let mut t = it.seek(&mut env, 0, 0); // clamped up to the lower bound
         let mut keys = Vec::new();

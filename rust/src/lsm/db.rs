@@ -17,7 +17,6 @@ use crate::engine::{new_block_cache, ScanCounters, SharedBlockCache, Snapshot, S
 use crate::env::SimEnv;
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::{CpuClass, Nanos, ThreadPool};
-use crate::util::LruCache;
 
 use super::compaction::{concat_inputs, run_merge, shape_of};
 use super::entry::{Entry, Key, Seq, ValueDesc};
@@ -52,6 +51,16 @@ pub struct DbStats {
     pub bytes_compacted_read: u64,
     pub bytes_compacted_written: u64,
     pub user_bytes_written: u64,
+    /// Data-block accesses on the point-read path (cache hit or miss) —
+    /// the numerator of blocks-per-get.
+    pub block_reads: u64,
+    /// Bloom-filter consultations where the key turned out to be absent
+    /// from the SST (filter-negative skips + false positives) — the
+    /// denominator of the measured false-positive rate.
+    pub bloom_negative_probes: u64,
+    /// Absent-key consultations the filter answered "maybe" (a wasted
+    /// block read each).
+    pub bloom_false_positives: u64,
     /// force-released stalls with no background job to wait for (should
     /// stay 0; counted instead of deadlocking)
     pub stall_anomalies: u64,
@@ -65,6 +74,23 @@ impl DbStats {
         }
         (self.bytes_flushed + self.bytes_compacted_written) as f64
             / self.user_bytes_written as f64
+    }
+
+    /// Measured bloom false-positive rate: of the filter consultations
+    /// for keys absent from the SST, the fraction answered "maybe".
+    pub fn bloom_fpr(&self) -> f64 {
+        if self.bloom_negative_probes == 0 {
+            return 0.0;
+        }
+        self.bloom_false_positives as f64 / self.bloom_negative_probes as f64
+    }
+
+    /// Data blocks touched per point lookup.
+    pub fn blocks_per_get(&self) -> f64 {
+        if self.gets == 0 {
+            return 0.0;
+        }
+        self.block_reads as f64 / self.gets as f64
     }
 }
 
@@ -142,16 +168,17 @@ pub struct LsmDb {
     inflight_flushes: usize,
     inflight_compactions: usize,
 
-    cache: LruCache<(u64, usize), ()>,
-
     /// Live snapshot registry (weak: a snapshot unpins by dropping).
     snapshots: Vec<Weak<SnapshotInner>>,
     /// Cursor read-amplification counters, shared with every iterator
     /// this engine hands out.
     pub scan_counters: Arc<ScanCounters>,
-    /// Scan-path block cache shared across cursors (repeated scans over
-    /// a hot range warm each other; the point-read cache is separate).
-    pub scan_cache: SharedBlockCache,
+    /// The engine-wide block cache: one instance shared by the `get()`
+    /// point-read path, every cursor this store hands out and (on
+    /// KVACCEL) the device write-buffer read path — scans warm point
+    /// reads and vice versa. A sharded store installs one cache across
+    /// all its children via `set_block_cache`.
+    pub block_cache: SharedBlockCache,
 
     pub stall: StallStats,
     pub stats: DbStats,
@@ -162,7 +189,6 @@ impl LsmDb {
     pub fn new(opts: LsmOptions, engine: MergeEngine, bloom: BloomBuilder) -> Self {
         Self {
             pool: ThreadPool::new(opts.compaction_threads),
-            cache: LruCache::new(opts.block_cache_blocks),
             version: Version::new(opts.num_levels),
             engine,
             bloom,
@@ -179,7 +205,7 @@ impl LsmDb {
             inflight_compactions: 0,
             snapshots: Vec::new(),
             scan_counters: Arc::new(ScanCounters::default()),
-            scan_cache: new_block_cache(opts.block_cache_blocks),
+            block_cache: new_block_cache(opts.block_cache_blocks),
             stall: StallStats::default(),
             stats: DbStats::default(),
             recovery: RecoveryStats::default(),
@@ -375,6 +401,15 @@ impl LsmDb {
                     // files may already be gone in pathological shutdowns
                     let _ = env.device.delete_file(f);
                 }
+                // invalidate the dead inputs' cached blocks: their SST
+                // ids are never reused, so this only releases capacity
+                {
+                    let mut cache =
+                        self.block_cache.lock().expect("block cache poisoned");
+                    if cache.capacity() > 0 && !cache.is_empty() {
+                        cache.retain(|k| !removed.contains(&k.0));
+                    }
+                }
                 self.inflight_compactions -= 1;
             }
         }
@@ -415,16 +450,21 @@ impl LsmDb {
     ) -> Result<()> {
         let start = self.flush_free_at.max(now);
         let n = entries.len() as u64;
-        let cpu = n * self.opts.flush_cpu_ns_per_entry;
-        env.cpu.charge(CpuClass::Flush, start, cpu);
         let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
-        let (file, io_done) = env
-            .device
-            .write_file_priority_for(self.opts.wal_stream, start + cpu, bytes)?;
+        // entry encode cost plus (when a codec is on) per-block
+        // compression of the output
+        let cpu = n * self.opts.flush_cpu_ns_per_entry
+            + bytes.div_ceil(self.opts.block_bytes) * self.opts.compress_ns();
+        env.cpu.charge(CpuClass::Flush, start, cpu);
+        let (file, io_done) = env.device.write_file_priority_for(
+            self.opts.wal_stream,
+            start + cpu,
+            self.opts.disk_bytes(bytes),
+        )?;
         let id = self.next_sst_id;
         self.next_sst_id += 1;
         let bits = self.opts.bloom_bits_for(entries.len());
-        let sst = Arc::new(super::sst::Sst::build(
+        let sst = Arc::new(super::sst::Sst::build_with_codec(
             id,
             file,
             entries,
@@ -432,6 +472,7 @@ impl LsmDb {
             self.opts.bloom_probes,
             bits,
             self.opts.block_bytes,
+            self.opts.compression,
         )?);
         let end = io_done;
         self.flush_free_at = end;
@@ -463,7 +504,15 @@ impl LsmDb {
         // is unchanged but wall time shrinks with thread count — this is
         // how compaction threads buy throughput in the paper's Fig 12.
         let entries = concat_inputs(&pick);
-        let merge_cpu = entries.len() as u64 * self.opts.merge_cpu_ns_per_entry;
+        // materializing compressed inputs pays decompression per block
+        let input_blocks: u64 = pick
+            .inputs
+            .iter()
+            .chain(&pick.targets)
+            .map(|s| s.block_count() as u64)
+            .sum();
+        let merge_cpu = entries.len() as u64 * self.opts.merge_cpu_ns_per_entry
+            + input_blocks * self.opts.decompress_ns();
         env.cpu.charge(CpuClass::Compaction, read_done, merge_cpu);
         let subcompactions = if pick.level == 0 {
             self.pool.threads() as u64
@@ -482,15 +531,28 @@ impl LsmDb {
         let shape = shape_of(&pick, &output_sets);
         let mut outputs = Vec::with_capacity(output_sets.len());
         let mut write_done = merge_done;
+        let mut disk_write_bytes = 0u64;
         for set in output_sets {
             let bytes: u64 = set.iter().map(|e| e.encoded_len()).sum();
-            let (file, done) =
-                env.device.write_file_for(self.opts.wal_stream, merge_done, bytes)?;
+            // per-block compression of this output on the compaction
+            // thread, then the (smaller) compressed file hits the device
+            let compress_cpu =
+                bytes.div_ceil(self.opts.block_bytes) * self.opts.compress_ns();
+            if compress_cpu > 0 {
+                env.cpu.charge(CpuClass::Compaction, merge_done, compress_cpu);
+            }
+            let disk_bytes = self.opts.disk_bytes(bytes);
+            disk_write_bytes += disk_bytes;
+            let (file, done) = env.device.write_file_for(
+                self.opts.wal_stream,
+                merge_done + compress_cpu,
+                disk_bytes,
+            )?;
             write_done = write_done.max(done);
             let id = self.next_sst_id;
             self.next_sst_id += 1;
             let bits = self.opts.bloom_bits_for(set.len());
-            outputs.push(Arc::new(super::sst::Sst::build(
+            outputs.push(Arc::new(super::sst::Sst::build_with_codec(
                 id,
                 file,
                 set,
@@ -498,6 +560,7 @@ impl LsmDb {
                 self.opts.bloom_probes,
                 bits,
                 self.opts.block_bytes,
+                self.opts.compression,
             )?));
         }
         let end = write_done.max(start + 1);
@@ -518,9 +581,14 @@ impl LsmDb {
                 removed_files,
                 outputs,
                 read_bytes,
-                write_bytes: shape.write_bytes,
+                // identical to shape.write_bytes when compression is off
+                write_bytes: disk_write_bytes,
             },
         });
+        debug_assert!(
+            !self.opts.compression.is_none()
+                || disk_write_bytes == shape.write_bytes
+        );
         Ok(())
     }
 
@@ -708,14 +776,23 @@ impl LsmDb {
     // -----------------------------------------------------------------
 
     /// Charge one data-block access: block-cache hit costs CPU only; a
-    /// miss reads through the device. Returns the time the data is ready.
+    /// miss reads the (possibly compressed) block through the device and
+    /// pays the decompression CPU. Returns the time the data is ready.
     fn block_access(&mut self, env: &mut SimEnv, at: Nanos, sst: u64, block: usize) -> Nanos {
-        if self.cache.get(&(sst, block)).is_some() {
+        self.stats.block_reads += 1;
+        let mut cache = self.block_cache.lock().expect("block cache poisoned");
+        if cache.capacity() > 0 && cache.get(&(sst, block)).is_some() {
             env.cpu.charge(CpuClass::Foreground, at, self.opts.get_cpu_ns / 2);
             return at + self.opts.get_cpu_ns / 2;
         }
-        let done = env.device.read_block(at, self.opts.block_bytes);
-        self.cache.insert((sst, block), ());
+        let mut done =
+            env.device.read_block(at, self.opts.disk_bytes(self.opts.block_bytes));
+        let decompress = self.opts.decompress_ns();
+        if decompress > 0 {
+            env.cpu.charge(CpuClass::Foreground, done, decompress);
+            done += decompress;
+        }
+        cache.insert((sst, block), ());
         done
     }
 
@@ -758,7 +835,12 @@ impl LsmDb {
         }
         // L0: newest first, overlapping ranges
         for sst in &self.version.levels[0].clone() {
-            if !sst.overlaps(key, key) || !sst.filter.may_contain(key) {
+            if !sst.overlaps(key, key) {
+                continue;
+            }
+            if !sst.filter.may_contain(key) {
+                // filter said no and the key is indeed absent
+                self.stats.bloom_negative_probes += 1;
                 continue;
             }
             match sst.get(key) {
@@ -770,6 +852,8 @@ impl LsmDb {
                 }
                 None => {
                     // bloom false positive: wasted block read
+                    self.stats.bloom_negative_probes += 1;
+                    self.stats.bloom_false_positives += 1;
                     at = self.block_access(env, at, sst.id, 0);
                 }
             }
@@ -778,7 +862,11 @@ impl LsmDb {
             let files = &self.version.levels[level];
             let idx = files.partition_point(|s| s.largest < key);
             let Some(sst) = files.get(idx).cloned() else { continue };
-            if !sst.overlaps(key, key) || !sst.filter.may_contain(key) {
+            if !sst.overlaps(key, key) {
+                continue;
+            }
+            if !sst.filter.may_contain(key) {
+                self.stats.bloom_negative_probes += 1;
                 continue;
             }
             match sst.get(key) {
@@ -789,6 +877,8 @@ impl LsmDb {
                     return (as_result(e.val), at);
                 }
                 None => {
+                    self.stats.bloom_negative_probes += 1;
+                    self.stats.bloom_false_positives += 1;
                     at = self.block_access(env, at, sst.id, 0);
                 }
             }
@@ -868,7 +958,7 @@ impl LsmDb {
             opts,
             crate::engine::IterCost::from_opts(&self.opts),
             self.scan_counters.clone(),
-            self.scan_cache.clone(),
+            self.block_cache.clone(),
         ))
     }
 
@@ -916,7 +1006,28 @@ impl LsmDb {
     }
 
     pub fn cache_hit_rate(&self) -> f64 {
-        self.cache.hit_rate()
+        self.block_cache.lock().expect("block cache poisoned").hit_rate()
+    }
+
+    /// Snapshot of the engine-wide block cache counters. On a sharded
+    /// store every child shares one instance, so any child reports the
+    /// engine-wide truth.
+    pub fn cache_stats(&self) -> crate::engine::CacheStats {
+        let cache = self.block_cache.lock().expect("block cache poisoned");
+        crate::engine::CacheStats {
+            hits: cache.hits(),
+            misses: cache.misses(),
+            evictions: cache.evictions(),
+            cached_blocks: cache.len() as u64,
+            cached_bytes: cache.len() as u64 * self.opts.block_bytes,
+            capacity_blocks: cache.capacity() as u64,
+        }
+    }
+
+    /// Swap in an externally-owned block cache (the engine builder and
+    /// the sharding layer install one engine-wide instance here).
+    pub fn set_block_cache(&mut self, cache: SharedBlockCache) {
+        self.block_cache = cache;
     }
 
     // -----------------------------------------------------------------
@@ -1142,6 +1253,10 @@ impl crate::engine::KvEngine for LsmDb {
     fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
         self.catch_up(env, at);
         self.maybe_schedule(env, at);
+    }
+
+    fn set_block_cache(&mut self, cache: SharedBlockCache) {
+        LsmDb::set_block_cache(self, cache);
     }
 
     fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {

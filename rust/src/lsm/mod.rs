@@ -20,5 +20,5 @@ pub mod wal;
 pub use db::{DbStats, LsmDb, PutResult, RecoveryStats};
 pub use entry::{Entry, Key, Seq, ValueDesc, MAX_USER_KEY};
 pub use manifest::{Manifest, ManifestEdit, RecoveredVersion};
-pub use options::LsmOptions;
+pub use options::{Compression, LsmOptions};
 pub use stall::{StallReason, StallStats, WriteCondition};

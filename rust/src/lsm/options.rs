@@ -6,6 +6,38 @@
 
 use crate::sim::{Nanos, MICROS};
 
+/// Block-compression codec model. The simulator does not compress real
+/// payloads; the codec is a cost model: data blocks occupy
+/// `ratio_pct`% of their logical bytes on the simulated device (fewer
+/// pages per read and per compaction write), and every block
+/// materialization off the device pays a decompression CPU charge
+/// (flush/compaction outputs pay the compression charge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// No codec: byte-identical accounting to a store built before
+    /// compression existed.
+    None,
+    /// An LZ4-like fast codec; `ratio_pct` is compressed/logical size in
+    /// percent (1..=100).
+    LzLike { ratio_pct: u64 },
+}
+
+impl Compression {
+    /// Compressed size of `logical` bytes on the simulated device.
+    pub fn disk_bytes(&self, logical: u64) -> u64 {
+        match *self {
+            Compression::None => logical,
+            Compression::LzLike { ratio_pct } => {
+                (logical * ratio_pct.clamp(1, 100)) / 100
+            }
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Compression::None)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LsmOptions {
     // ----- structure -----
@@ -46,10 +78,20 @@ pub struct LsmOptions {
     // ----- SST / read path -----
     /// SST data-block size.
     pub block_bytes: u64,
-    /// Block cache capacity in blocks.
+    /// Block cache capacity in blocks (0 disables the cache).
     pub block_cache_blocks: usize,
     pub bloom_bits_per_key: u32,
     pub bloom_probes: usize,
+    /// Data-block compression cost model (None = bit-identical
+    /// accounting to an uncompressed store).
+    pub compression: Compression,
+    /// CPU to decompress one data block when it is materialized from the
+    /// device (cache misses, compaction input reads). Unused when
+    /// `compression` is `None`.
+    pub decompress_block_cpu_ns: Nanos,
+    /// CPU to compress one data block on the write side (flush and
+    /// compaction outputs). Unused when `compression` is `None`.
+    pub compress_block_cpu_ns: Nanos,
 
     // ----- calibrated CPU cost model -----
     /// Foreground cost of one put (client + WAL memcpy + memtable insert).
@@ -96,6 +138,11 @@ impl Default for LsmOptions {
             block_cache_blocks: 16 * 1024, // 512 MB of 32 KB blocks
             bloom_bits_per_key: 10,
             bloom_probes: 7,
+            compression: Compression::None,
+            // LZ4-class costs for a 32 KB block (~1 GB/s compress,
+            // ~3 GB/s decompress)
+            decompress_block_cpu_ns: 10 * MICROS,
+            compress_block_cpu_ns: 30 * MICROS,
             put_cpu_ns: 33 * MICROS,
             get_cpu_ns: 2 * MICROS,
             merge_cpu_ns_per_entry: 10 * MICROS,
@@ -155,6 +202,40 @@ impl LsmOptions {
         self
     }
 
+    /// Block cache capacity in blocks (0 disables the cache).
+    pub fn with_cache_blocks(mut self, blocks: usize) -> Self {
+        self.block_cache_blocks = blocks;
+        self
+    }
+
+    pub fn with_compression(mut self, codec: Compression) -> Self {
+        self.compression = codec;
+        self
+    }
+
+    /// On-disk size of `logical` bytes under the configured codec.
+    pub fn disk_bytes(&self, logical: u64) -> u64 {
+        self.compression.disk_bytes(logical)
+    }
+
+    /// CPU charged when one block is materialized from the device.
+    pub fn decompress_ns(&self) -> Nanos {
+        if self.compression.is_none() {
+            0
+        } else {
+            self.decompress_block_cpu_ns
+        }
+    }
+
+    /// CPU charged per block written by a flush/compaction output.
+    pub fn compress_ns(&self) -> Nanos {
+        if self.compression.is_none() {
+            0
+        } else {
+            self.compress_block_cpu_ns
+        }
+    }
+
     /// Scaled-down configuration for fast tests: small memtables/files so
     /// flushes and compactions trigger after a few hundred entries.
     pub fn small_for_test() -> Self {
@@ -196,5 +277,27 @@ mod tests {
         let o = LsmOptions::default().with_threads(4).with_slowdown(false);
         assert_eq!(o.compaction_threads, 4);
         assert!(!o.enable_slowdown);
+        let o = o
+            .with_cache_blocks(0)
+            .with_compression(Compression::LzLike { ratio_pct: 50 });
+        assert_eq!(o.block_cache_blocks, 0);
+        assert_eq!(o.disk_bytes(1000), 500);
+        assert!(o.decompress_ns() > 0 && o.compress_ns() > 0);
+    }
+
+    #[test]
+    fn compression_none_is_identity() {
+        let o = LsmOptions::default();
+        assert_eq!(o.disk_bytes(12345), 12345);
+        assert_eq!(o.decompress_ns(), 0);
+        assert_eq!(o.compress_ns(), 0);
+    }
+
+    #[test]
+    fn compression_ratio_bounds() {
+        let c = Compression::LzLike { ratio_pct: 0 };
+        assert_eq!(c.disk_bytes(1000), 10); // clamped to 1%
+        let c = Compression::LzLike { ratio_pct: 200 };
+        assert_eq!(c.disk_bytes(1000), 1000); // clamped to 100%
     }
 }

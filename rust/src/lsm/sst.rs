@@ -15,6 +15,7 @@ use crate::runtime::bloom::{may_contain, BloomBuilder};
 use crate::ssd::block_if::FileId;
 
 use super::entry::{Entry, Key};
+use super::options::Compression;
 
 #[derive(Clone, Debug)]
 pub struct BloomFilter {
@@ -50,8 +51,9 @@ pub struct Sst {
 }
 
 impl Sst {
-    /// Assemble an SST from sorted unique entries. The caller provides
-    /// the already-created device file id (I/O is charged there).
+    /// Assemble an uncompressed SST from sorted unique entries. The
+    /// caller provides the already-created device file id (I/O is
+    /// charged there).
     pub fn build(
         id: u64,
         file: FileId,
@@ -61,6 +63,33 @@ impl Sst {
         bits: u32,
         block_bytes: u64,
     ) -> Result<Self> {
+        Self::build_with_codec(
+            id,
+            file,
+            entries,
+            builder,
+            probes,
+            bits,
+            block_bytes,
+            Compression::None,
+        )
+    }
+
+    /// Assemble an SST whose data blocks occupy `codec.disk_bytes` on
+    /// the simulated device. `bytes` (and therefore `block_of`'s
+    /// geometry — entries per on-disk block) shrink with the ratio;
+    /// `Compression::None` is bit-identical to `build`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_codec(
+        id: u64,
+        file: FileId,
+        entries: Vec<Entry>,
+        builder: &BloomBuilder,
+        probes: usize,
+        bits: u32,
+        block_bytes: u64,
+        codec: Compression,
+    ) -> Result<Self> {
         assert!(!entries.is_empty(), "SSTs are never empty");
         debug_assert!(
             entries.windows(2).all(|w| w[0].key < w[1].key),
@@ -68,7 +97,8 @@ impl Sst {
         );
         let keys: Vec<Key> = entries.iter().map(|e| e.key).collect();
         let words = builder.build(&keys, probes, bits)?;
-        let data_bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
+        let data_bytes: u64 =
+            codec.disk_bytes(entries.iter().map(|e| e.encoded_len()).sum());
         let bytes = data_bytes + data_bytes / 50 + 4096; // index+filter+footer
         let max_seq = entries.iter().map(|e| e.seq).max().unwrap();
         Ok(Self {
@@ -184,6 +214,52 @@ mod tests {
         assert!(s.block_count() >= 10); // ~8 entries of 4KB per 32KB block
         assert_eq!(s.block_of(0), 0);
         assert!(s.block_of(99) >= s.block_of(50));
+    }
+
+    #[test]
+    fn compressed_sst_shrinks_and_repacks_blocks() {
+        let entries: Vec<Entry> = (0..100)
+            .map(|k| Entry::new(k, k + 1, ValueDesc::new(k, 4096)))
+            .collect();
+        let plain = Sst::build_with_codec(
+            1,
+            0,
+            entries.clone(),
+            &BloomBuilder::rust(),
+            7,
+            1024,
+            32 * 1024,
+            Compression::None,
+        )
+        .unwrap();
+        let packed = Sst::build_with_codec(
+            1,
+            0,
+            entries.clone(),
+            &BloomBuilder::rust(),
+            7,
+            1024,
+            32 * 1024,
+            Compression::LzLike { ratio_pct: 50 },
+        )
+        .unwrap();
+        assert!(packed.bytes < plain.bytes);
+        // fewer on-disk blocks cover the same entries
+        assert!(packed.block_count() < plain.block_count());
+        // ratio 100 is bit-identical to the uncompressed build
+        let ident = Sst::build_with_codec(
+            1,
+            0,
+            entries,
+            &BloomBuilder::rust(),
+            7,
+            1024,
+            32 * 1024,
+            Compression::LzLike { ratio_pct: 100 },
+        )
+        .unwrap();
+        assert_eq!(ident.bytes, plain.bytes);
+        assert_eq!(ident.block_count(), plain.block_count());
     }
 
     #[test]

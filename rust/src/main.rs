@@ -33,10 +33,19 @@
 //!                        (0/omitted = account only, no metering)
 //!   --tenant-slo-p99 MS  p99 SLO per tenant in ms; an over-SLO tenant
 //!                        has its stale open-loop backlog shed first
+//!   --cache-blocks N     engine-wide block cache capacity in blocks
+//!                        (0 disables; default from LsmOptions)
+//!   --compression C      SST data-block codec: none, or lz-like[:RATIO]
+//!                        with RATIO the compressed size in percent of
+//!                        logical (1..=100, default 50)
+//!
+//! Read-heavy YCSB point presets: ycsb-b (95% read / 5% update),
+//! ycsb-c (read-only), ycsb-d (read-latest; forces --dist latest).
+//! Each preloads a working set before the timed phase.
 //!
 //! Contradictory flags are rejected up front (e.g. --rate with a closed
 //! loop, --theta without --dist zipfian, --shard-policy without
-//! --shards, --tenant-rate without --tenants).
+//! --shards, --tenant-rate without --tenants, --dist with ycsb-d).
 
 use anyhow::{anyhow, Result};
 
@@ -45,7 +54,7 @@ use kvaccel::engine::{EngineBuilder, EngineStats, KvEngine};
 use kvaccel::env::SimEnv;
 use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EXPERIMENTS};
 use kvaccel::kvaccel::RollbackScheme;
-use kvaccel::lsm::LsmOptions;
+use kvaccel::lsm::{Compression, LsmOptions};
 use kvaccel::runtime::{default_artifacts_dir, XlaRuntime};
 use kvaccel::shard::ShardPolicy;
 use kvaccel::sim::{Nanos, MILLIS, NS_PER_SEC};
@@ -71,18 +80,20 @@ fn real_main() -> Result<()> {
             println!("kvaccel — host-SSD collaborative write accelerator (paper reproduction)");
             println!();
             println!("usage:");
-            println!("  kvaccel run <A|B|C|D|E|ycsb-e> [--system rocksdb|rocksdb-nosd|adoc|kvaccel|kvaccel-lazy|kvaccel-eager]");
+            println!("  kvaccel run <A|B|C|D|E|ycsb-b|ycsb-c|ycsb-d|ycsb-e> [--system rocksdb|rocksdb-nosd|adoc|kvaccel|kvaccel-lazy|kvaccel-eager]");
             println!("              [--threads N] [--scale F] [--seed N] [--engine rust|xla]");
             println!("              [--clients N] [--loop-mode closed|open|poisson] [--rate OPS_S]");
             println!("              [--think-ms T] [--dist uniform|zipfian|latest] [--theta F]");
             println!("              [--scan-len L[:H]] [--crash-at OPS|TIME[s|ms|ns]]");
             println!("              [--shards N] [--shard-policy range|hash]");
             println!("              [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
+            println!("              [--cache-blocks N] [--compression none|lz-like[:RATIO]]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
             println!("  kvaccel bench [--out BENCH_PR2.json] [--scan-out BENCH_PR3.json] [--scale F] [--rate OPS_S] [--clients N]");
             println!("                [--shards N] [--shard-policy range|hash]");
             println!("                [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
+            println!("                [--cache-blocks N] [--compression none|lz-like[:RATIO]]");
             println!("  kvaccel inspect");
             Ok(())
         }
@@ -218,6 +229,13 @@ fn validate_run_flags(args: &Args) -> Result<()> {
             "--theta is the zipfian skew, but --dist is {dist:?} (add --dist zipfian)"
         ));
     }
+    let workload = args.positional.get(1).map(|s| s.to_uppercase());
+    if workload.as_deref() == Some("YCSB-D") && args.get("dist").is_some() {
+        return Err(anyhow!(
+            "--dist has no effect on ycsb-d (the preset IS read-latest; \
+             it forces the Latest distribution)"
+        ));
+    }
     validate_bench_flags(args)
 }
 
@@ -232,6 +250,9 @@ fn validate_bench_flags(args: &Args) -> Result<()> {
             return Err(anyhow!("--{f} has no effect without --tenants N"));
         }
     }
+    // malformed read-path flags fail here, before any engine is built
+    parse_cache_blocks(args)?;
+    parse_compression(args)?;
     Ok(())
 }
 
@@ -264,6 +285,72 @@ fn parse_tenants(args: &Args) -> Result<Option<(usize, f64, Option<Nanos>)>> {
         None => None,
     };
     Ok(Some((n, rate, slo)))
+}
+
+/// `--cache-blocks N`: engine-wide block cache capacity in blocks;
+/// 0 disables caching (every block access pays device latency).
+fn parse_cache_blocks(args: &Args) -> Result<Option<usize>> {
+    let Some(s) = args.get("cache-blocks") else { return Ok(None) };
+    let n: usize = s.parse().map_err(|_| {
+        anyhow!("--cache-blocks expects a block count (0 disables), got {s:?}")
+    })?;
+    Ok(Some(n))
+}
+
+/// `--compression none | lz-like[:RATIO]`: SST data-block codec. RATIO
+/// is the compressed size as a percent of logical bytes (1..=100,
+/// default 50); `none` takes no ratio.
+fn parse_compression(args: &Args) -> Result<Option<Compression>> {
+    let Some(s) = args.get("compression") else { return Ok(None) };
+    let (codec, ratio) = match s.split_once(':') {
+        Some((c, r)) => (c, Some(r)),
+        None => (s, None),
+    };
+    Ok(Some(match codec {
+        "none" => {
+            if ratio.is_some() {
+                return Err(anyhow!(
+                    "--compression none takes no ratio (got {s:?}); \
+                     use lz-like:RATIO for a custom codec ratio"
+                ));
+            }
+            Compression::None
+        }
+        "lz-like" | "lz" => {
+            let pct: u64 = match ratio {
+                Some(r) => r.parse().map_err(|_| {
+                    anyhow!(
+                        "--compression lz-like:RATIO expects an integer \
+                         percent, got {r:?}"
+                    )
+                })?,
+                None => 50,
+            };
+            if !(1..=100).contains(&pct) {
+                return Err(anyhow!(
+                    "--compression ratio is the compressed size in percent \
+                     of logical, needs 1..=100, got {pct}"
+                ));
+            }
+            Compression::LzLike { ratio_pct: pct }
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown codec {other:?} (none|lz-like[:RATIO])"
+            ))
+        }
+    }))
+}
+
+/// Fold the read-path flags into the engine options.
+fn apply_read_path_flags(mut opts: LsmOptions, args: &Args) -> Result<LsmOptions> {
+    if let Some(n) = parse_cache_blocks(args)? {
+        opts = opts.with_cache_blocks(n);
+    }
+    if let Some(c) = parse_compression(args)? {
+        opts = opts.with_compression(c);
+    }
+    Ok(opts)
 }
 
 fn parse_dist(args: &Args) -> Result<KeyDist> {
@@ -303,7 +390,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
     let mut cfg: BenchConfig = ctx.bench_config();
 
-    let opts = LsmOptions::default().with_threads(threads);
+    let opts =
+        apply_read_path_flags(LsmOptions::default().with_threads(threads), args)?;
     let mut builder = EngineBuilder::new(kind)
         .opts(opts)
         .merge_engine(ctx.merge_engine())
@@ -359,6 +447,27 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .to_string();
             (r, line)
         }
+        "YCSB-B" | "YCSB-C" | "YCSB-D" => {
+            // read-heavy point presets: preload a working set first, or
+            // every read misses and the run measures nothing but preload
+            let preload_bytes = ((4u64 << 30) as f64 * scale) as u64;
+            let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
+            let mut spec = workload::WorkloadSpec {
+                start_at: t0,
+                ..workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?
+            };
+            spec.stop_after_ops = stop_ops;
+            if let Some((n, rate, slo)) = tenants {
+                spec = spec.with_tenants(n, rate, slo);
+            }
+            let line = format!(
+                "clients       {} [{}] dist {:?}",
+                spec.clients.len(),
+                describe_clients(&spec),
+                spec.clients[0].dist,
+            );
+            (workload::run_spec(&mut *sys, &mut env, &spec), line)
+        }
         "E" | "YCSB-E" => {
             // YCSB-E: preload a working set, then the scan-heavy mix
             let (slo, shi) = parse_scan_len(args)?;
@@ -389,6 +498,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
     println!("{clients_line}");
     print_result(&r);
+    print_cache_line(&*sys);
     print_tenant_breakdown(&r);
     print_shard_breakdown(&*sys, &env);
 
@@ -444,6 +554,31 @@ fn describe_clients(spec: &kvaccel::workload::WorkloadSpec) -> String {
         })
         .collect::<Vec<_>>()
         .join(", ")
+}
+
+/// Block-cache and measured-bloom effectiveness lines (suppressed when
+/// the read path never ran — e.g. pure fillrandom on a cold store).
+fn print_cache_line(sys: &dyn KvEngine) {
+    let c = sys.cache_stats();
+    if c.hits + c.misses > 0 {
+        println!(
+            "block cache   {:.1}% hit ({} hits / {} misses, {} evictions, {} cached)",
+            c.hit_rate() * 100.0,
+            c.hits,
+            c.misses,
+            c.evictions,
+            fmt::bytes(c.cached_bytes as f64),
+        );
+    }
+    let d = sys.db_stats();
+    if d.bloom_negative_probes > 0 {
+        println!(
+            "bloom fpr     {:.4} measured ({} false positives / {} negative probes)",
+            d.bloom_fpr(),
+            d.bloom_false_positives,
+            d.bloom_negative_probes,
+        );
+    }
 }
 
 /// Per-tenant QoS breakdown (specs carrying a tenant table only).
@@ -589,6 +724,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let tenants = parse_tenants(args)?;
     let cfg = BenchConfig { seed, ..Default::default() }.scaled(scale);
     let mode = LoopMode::OpenFixed { ops_per_sec: rate };
+    let bench_opts =
+        apply_read_path_flags(LsmOptions::default().with_threads(threads), args)?;
 
     let mut rows = Vec::new();
     for kind in [
@@ -596,8 +733,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         SystemKind::Adoc,
         SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
     ] {
-        let mut builder =
-            EngineBuilder::new(kind).opts(LsmOptions::default().with_threads(threads));
+        let mut builder = EngineBuilder::new(kind).opts(bench_opts.clone());
         if let Some((n, policy)) = shards {
             builder = builder.sharded(n, policy).shard_key_space(cfg.key_space);
         }
@@ -661,9 +797,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         SystemKind::Adoc,
         SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
     ] {
-        let mut sys = EngineBuilder::new(kind)
-            .opts(LsmOptions::default().with_threads(threads))
-            .build();
+        let mut sys = EngineBuilder::new(kind).opts(bench_opts.clone()).build();
         let mut env = SimEnv::new(seed, SsdConfig::default());
         let preload_bytes = ((4u64 << 30) as f64 * scale) as u64;
         let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
@@ -807,6 +941,52 @@ mod tests {
         );
         assert!(validate_bench_flags(&parse("bench --tenants 2")).is_ok());
         assert!(validate_bench_flags(&parse("bench")).is_ok());
+    }
+
+    #[test]
+    fn cache_and_compression_flags_parse_and_validate() {
+        // defaults: both absent
+        assert!(parse_cache_blocks(&parse("run A")).unwrap().is_none());
+        assert!(parse_compression(&parse("run A")).unwrap().is_none());
+        // cache capacity, including 0 = disabled
+        assert_eq!(
+            parse_cache_blocks(&parse("run A --cache-blocks 4096")).unwrap(),
+            Some(4096)
+        );
+        assert_eq!(
+            parse_cache_blocks(&parse("run A --cache-blocks 0")).unwrap(),
+            Some(0)
+        );
+        assert!(parse_cache_blocks(&parse("run A --cache-blocks big")).is_err());
+        // codecs
+        assert_eq!(
+            parse_compression(&parse("run A --compression none")).unwrap(),
+            Some(Compression::None)
+        );
+        assert_eq!(
+            parse_compression(&parse("run A --compression lz-like")).unwrap(),
+            Some(Compression::LzLike { ratio_pct: 50 })
+        );
+        assert_eq!(
+            parse_compression(&parse("run A --compression lz-like:30")).unwrap(),
+            Some(Compression::LzLike { ratio_pct: 30 })
+        );
+        // rejected shapes: none takes no ratio; ratio bounds; codec name
+        assert!(parse_compression(&parse("run A --compression none:50")).is_err());
+        assert!(parse_compression(&parse("run A --compression lz-like:0")).is_err());
+        assert!(parse_compression(&parse("run A --compression lz-like:101")).is_err());
+        assert!(parse_compression(&parse("run A --compression gzip")).is_err());
+        // the shared validator catches them up front for run AND bench
+        assert!(validate_run_flags(&parse("run A --compression gzip")).is_err());
+        assert!(validate_bench_flags(&parse("bench --cache-blocks x")).is_err());
+        assert!(validate_run_flags(
+            &parse("run ycsb-c --cache-blocks 1024 --compression lz-like:50")
+        )
+        .is_ok());
+        // ycsb-d forces the Latest distribution
+        assert!(validate_run_flags(&parse("run ycsb-d --dist uniform")).is_err());
+        assert!(validate_run_flags(&parse("run ycsb-d")).is_ok());
+        assert!(validate_run_flags(&parse("run D --dist zipfian")).is_ok());
     }
 
     #[test]

@@ -141,6 +141,11 @@ impl ShardedDb {
             total_occupancy: kvaccel_cfg.controller.max_kv_occupancy,
             ..ArbiterConfig::default()
         };
+        // one engine-wide block cache: every shard shares the same
+        // instance, so the configured budget bounds the whole store and
+        // a hot shard can use capacity a cold shard leaves idle
+        let block_cache =
+            crate::engine::new_block_cache(opts.block_cache_blocks);
         let shards: Vec<Box<dyn KvEngine>> = (0..n)
             .map(|i| {
                 let mut kcfg = kvaccel_cfg.clone();
@@ -153,6 +158,7 @@ impl ShardedDb {
                     .bloom_builder(bloom.clone())
                     .kvaccel_config(kcfg)
                     .adoc_config(adoc_cfg.clone())
+                    .block_cache(block_cache.clone())
                     .build()
             })
             .collect();
@@ -317,6 +323,9 @@ impl ShardedDb {
             db.batches += d.batches;
             db.gets += d.gets;
             db.get_hits += d.get_hits;
+            db.block_reads += d.block_reads;
+            db.bloom_negative_probes += d.bloom_negative_probes;
+            db.bloom_false_positives += d.bloom_false_positives;
             db.flush_count += d.flush_count;
             db.compaction_count += d.compaction_count;
             db.bytes_flushed += d.bytes_flushed;
@@ -389,9 +398,21 @@ impl ShardedDb {
         // read the top-level shard manifest back
         let mut t = env.device.read_block(at, shard_manifest_bytes(n));
         let mut shards: Vec<Box<dyn KvEngine>> = Vec::with_capacity(n);
+        let mut block_cache: Option<crate::engine::SharedBlockCache> = None;
         for child in image.children {
-            let (sh, tc) = EngineBuilder::open(env, t, child);
+            let (mut sh, tc) = EngineBuilder::open(env, t, child);
             t = tc;
+            // recovered children each built their own cold cache; swap in
+            // one store-wide instance (the cache is volatile state, so a
+            // cold shared cache is exactly what a restart produces)
+            let cache = block_cache
+                .get_or_insert_with(|| {
+                    crate::engine::new_block_cache(
+                        sh.main_db().opts.block_cache_blocks,
+                    )
+                })
+                .clone();
+            sh.set_block_cache(cache);
             shards.push(sh);
         }
         let router =
@@ -674,6 +695,12 @@ impl KvEngine for ShardedDb {
             sh.tick(env, at);
         }
         self.arbitrate(env, at);
+    }
+
+    fn set_block_cache(&mut self, cache: crate::engine::SharedBlockCache) {
+        for sh in &mut self.shards {
+            sh.set_block_cache(cache.clone());
+        }
     }
 
     /// Clean shutdown: every shard closes (final rollback, sealed +

@@ -335,6 +335,14 @@ impl SsdDevice {
         self.pcie.transfer_small(nand_done, page, Direction::DeviceToHost)
     }
 
+    /// Zero-cost KV lookup against live device state: no PCIe, NAND or
+    /// ARM time is charged and no device counters move. Backs host
+    /// block-cache hits on the device write buffer — the host skips the
+    /// simulated round-trip but must still observe the live value.
+    pub fn kv_peek(&self, ns: NamespaceId, key: Key) -> Option<ValueDesc> {
+        self.kv.ns(ns).ok().and_then(|d| d.peek(key))
+    }
+
     /// Buffered Dev-LSM size (the Detector/Rollback trigger signal).
     pub fn kv_buffered_bytes(&self, ns: NamespaceId) -> u64 {
         self.kv.ns(ns).map(|d| d.buffered_bytes()).unwrap_or(0)

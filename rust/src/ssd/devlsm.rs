@@ -242,6 +242,22 @@ impl DevLsm {
         (result, now, charged)
     }
 
+    /// Zero-cost point lookup: the same memtable-then-newest-run walk as
+    /// `get`, but charging no ARM/NAND time and touching no counters.
+    /// Serves host block-cache hits, where the simulated I/O is skipped
+    /// but the (live) value is still needed.
+    pub fn peek(&self, key: Key) -> Option<ValueDesc> {
+        if let Some(&(_, val)) = self.mem.get(&key) {
+            return Some(val);
+        }
+        for run in &self.runs {
+            if let Ok(idx) = run.entries.binary_search_by(|e| e.key.cmp(&key)) {
+                return Some(run.entries[idx].val);
+            }
+        }
+        None
+    }
+
     /// All live entries, newest version per key, ascending by key. This is
     /// the iterator-based range scan's payload (paper Fig 9 steps 3-5).
     pub fn merged_entries(&self) -> Vec<Entry> {

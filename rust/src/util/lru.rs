@@ -22,11 +22,14 @@ pub struct LruCache<K: Eq + Hash + Clone, V> {
     capacity: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// A `capacity` of 0 means "cache disabled": inserts are dropped and
+    /// every lookup misses. Callers on hot paths should skip the probe
+    /// entirely when `capacity() == 0`.
     pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0);
         Self {
             map: HashMap::with_capacity(capacity + 1),
             slab: Vec::with_capacity(capacity.min(1 << 20)),
@@ -36,6 +39,7 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
             capacity,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -49,6 +53,18 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -109,6 +125,9 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
 
     /// Insert (or refresh) a key. Evicts LRU entries over capacity.
     pub fn insert(&mut self, key: K, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
         if let Some(&idx) = self.map.get(&key) {
             self.slab[idx].value = value;
             self.detach(idx);
@@ -134,6 +153,30 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
             let k = self.slab[tail].key.clone();
             self.map.remove(&k);
             self.free.push(tail);
+            self.evictions += 1;
+        }
+    }
+
+    /// Drop a key without touching the hit/miss/eviction counters
+    /// (invalidation, not capacity pressure).
+    pub fn remove(&mut self, key: &K) -> bool {
+        match self.map.remove(key) {
+            Some(idx) => {
+                self.detach(idx);
+                self.free.push(idx);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Keep only the entries whose key satisfies the predicate
+    /// (invalidation sweep, e.g. dropping a dead SST's blocks).
+    pub fn retain<F: FnMut(&K) -> bool>(&mut self, mut pred: F) {
+        let doomed: Vec<K> =
+            self.map.keys().filter(|k| !pred(k)).cloned().collect();
+        for k in doomed {
+            self.remove(&k);
         }
     }
 
@@ -190,5 +233,35 @@ mod tests {
         }
         assert_eq!(c.len(), 2);
         assert!(c.slab.len() <= 3);
+        assert_eq!(c.evictions(), 98);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = LruCache::new(0);
+        c.insert(1, ());
+        assert!(c.is_empty());
+        assert!(c.get(&1).is_none());
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn remove_and_retain_skip_counters() {
+        let mut c = LruCache::new(8);
+        for i in 0..6 {
+            c.insert((i % 2, i), i);
+        }
+        assert!(c.remove(&(0, 0)));
+        assert!(!c.remove(&(0, 0)));
+        c.retain(|k| k.0 != 1);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(&(0, 2)) && c.contains(&(0, 4)));
+        assert_eq!(c.evictions(), 0);
+        // freed slots are reused, not leaked
+        for i in 10..14 {
+            c.insert((0, i), i);
+        }
+        assert_eq!(c.len(), 6);
+        assert!(c.slab.len() <= 8);
     }
 }

@@ -164,6 +164,43 @@ pub fn ycsb_e(
     WorkloadSpec::from_bench("E/ycsb-e scan:insert 95:5", cfg).with_clients(list)
 }
 
+/// YCSB point-read presets B/C/D: every client runs the same
+/// read-dominant op mix (YCSB threads are symmetric, unlike db_bench's
+/// readwhilewriting writer/reader split). Run these after a [`preload`]
+/// — against a cold store every read is a miss and the block cache has
+/// nothing to do.
+pub fn ycsb_point(
+    name: &str,
+    cfg: &BenchConfig,
+    clients: usize,
+    mode: LoopMode,
+    dist: KeyDist,
+    mix: OpMix,
+) -> WorkloadSpec {
+    let clients = clients.max(1);
+    // open-loop rate is the aggregate offered load, split evenly
+    let per_client = scale_rate(mode, 1.0 / clients as f64);
+    let list: Vec<ClientConfig> = (0..clients)
+        .map(|i| ClientConfig {
+            mix,
+            mode: per_client,
+            dist,
+            seed_tag: i as u64,
+            ..ClientConfig::default()
+        })
+        .collect();
+    WorkloadSpec::from_bench(name, cfg).with_clients(list)
+}
+
+/// True for the read-heavy presets that only make sense against a
+/// preloaded store (the runner fills `bytes` of fillrandom data first).
+pub fn needs_preload(workload: &str) -> bool {
+    matches!(
+        workload,
+        "YCSB-B" | "ycsb-b" | "YCSB-C" | "ycsb-c" | "YCSB-D" | "ycsb-d"
+    )
+}
+
 /// Preload helper for workload D (the paper's "initial 20 GB
 /// fillrandom"): returns the time after preload + settle.
 pub fn preload(
@@ -214,6 +251,40 @@ pub fn preset_spec(
         // [`ycsb_e`] directly for custom lengths
         "E" | "ycsb-e" | "YCSB-E" => {
             return Ok(ycsb_e(cfg, clients, mode, dist, 1, 100));
+        }
+        // YCSB point-read presets (bare B/C stay the db_bench
+        // readwhilewriting splits above; the ycsb-* names select these)
+        "ycsb-b" | "YCSB-B" => {
+            return Ok(ycsb_point(
+                "B/ycsb-b read:update 95:5",
+                cfg,
+                clients,
+                mode,
+                dist,
+                OpMix::put_get(5, 95),
+            ));
+        }
+        "ycsb-c" | "YCSB-C" => {
+            return Ok(ycsb_point(
+                "C/ycsb-c read-only",
+                cfg,
+                clients,
+                mode,
+                dist,
+                OpMix::read_only(),
+            ));
+        }
+        // D forces the Latest distribution — the preset IS
+        // read-latest-after-insert; `--dist` has no meaning here
+        "ycsb-d" | "YCSB-D" => {
+            return Ok(ycsb_point(
+                "D/ycsb-d read-latest 95:5",
+                cfg,
+                clients,
+                mode,
+                KeyDist::Latest,
+                OpMix::put_get(5, 95),
+            ));
         }
         other => return Err(anyhow!("no preset spec for workload {other:?}")),
     };
@@ -385,6 +456,47 @@ mod tests {
         assert_eq!((pace.num, pace.den), (4, 9), "1/9 of 4x client 0's ops");
         assert!(preset_spec("D", &cfg, 1, LoopMode::Closed { think: 0 }, KeyDist::Uniform)
             .is_err());
+    }
+
+    #[test]
+    fn ycsb_point_presets_build_and_run() {
+        let cfg = tiny_cfg();
+        let c = preset_spec(
+            "ycsb-c",
+            &cfg,
+            2,
+            LoopMode::Closed { think: 0 },
+            KeyDist::Uniform,
+        )
+        .unwrap();
+        assert_eq!(c.clients.len(), 2);
+        assert_eq!(c.clients[0].mix, OpMix::read_only());
+        let d = preset_spec(
+            "YCSB-D",
+            &cfg,
+            1,
+            LoopMode::Closed { think: 0 },
+            KeyDist::Uniform,
+        )
+        .unwrap();
+        assert_eq!(d.clients[0].dist, KeyDist::Latest, "D forces Latest");
+        assert!(needs_preload("ycsb-b") && !needs_preload("A"));
+        // end-to-end: B after a preload is read-dominant
+        let (mut s, mut env) = sys(SystemKind::RocksDb { slowdown: true });
+        let t = preload(&mut *s, &mut env, &cfg, 2 << 20).unwrap();
+        let spec = WorkloadSpec {
+            start_at: t,
+            ..preset_spec(
+                "ycsb-b",
+                &cfg,
+                1,
+                LoopMode::Closed { think: 0 },
+                KeyDist::Uniform,
+            )
+            .unwrap()
+        };
+        let r = run_spec(&mut *s, &mut env, &spec);
+        assert!(r.reads.total > r.writes.total, "95:5 read-dominant");
     }
 
     #[test]

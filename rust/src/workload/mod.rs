@@ -18,8 +18,8 @@ pub use client::{
     WorkloadSpec,
 };
 pub use db_bench::{
-    fillrandom, fillrandom_batched, preload, preset_spec, readwhilewriting, seekrandom,
-    ycsb_e, BenchConfig,
+    fillrandom, fillrandom_batched, needs_preload, preload, preset_spec,
+    readwhilewriting, seekrandom, ycsb_e, ycsb_point, BenchConfig,
 };
 pub use keygen::{KeyDist, KeyGen};
 pub use stats::{cdf, Histogram, OpSeries, RunResult};

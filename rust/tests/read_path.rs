@@ -1,0 +1,416 @@
+//! Read-path acceleration conformance: the engine-wide block cache and
+//! the block-compression cost model must never change *what* a read
+//! returns — only what it costs. One suite run against every `KvEngine`
+//! implementation, in every cache x codec configuration.
+//!
+//! Covers: value identity across configurations, determinism of traced
+//! runs with the cache and codec enabled, cache truthfulness across
+//! flush/compaction/rollback invalidation, scan-warms-get coupling
+//! through the one shared cache instance (including a sharded store),
+//! and the measured bloom false-positive rate against the configured
+//! geometry.
+
+use std::collections::BTreeMap;
+
+use kvaccel::engine::{EngineBuilder, EngineStats, KvEngine};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::{Compression, LsmOptions, ValueDesc};
+use kvaccel::shard::ShardPolicy;
+use kvaccel::sim::{Nanos, SimRng};
+use kvaccel::ssd::SsdConfig;
+use kvaccel::workload::{self, BenchConfig, KeyDist, LoopMode};
+
+const ENGINES: [&str; 6] = [
+    "rocksdb",
+    "rocksdb-nosd",
+    "adoc",
+    "kvaccel",
+    "kvaccel-eager",
+    "kvaccel-lazy",
+];
+
+fn build_with(name: &str, opts: LsmOptions) -> (Box<dyn KvEngine>, SimEnv) {
+    let sys = match name {
+        "rocksdb" => EngineBuilder::rocksdb(true).opts(opts).build(),
+        "rocksdb-nosd" => EngineBuilder::rocksdb(false).opts(opts).build(),
+        "adoc" => EngineBuilder::adoc().opts(opts).build(),
+        "kvaccel" => EngineBuilder::kvaccel().opts(opts).build(),
+        "kvaccel-eager" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Eager).opts(opts).build()
+        }
+        "kvaccel-lazy" => {
+            EngineBuilder::kvaccel_scheme(RollbackScheme::Lazy).opts(opts).build()
+        }
+        other => panic!("unknown engine {other}"),
+    };
+    (sys, SimEnv::new(33, SsdConfig::default()))
+}
+
+/// The four read-path configurations: cache {off, on} x codec {none,
+/// lz-like:50}, over the small-store test options.
+fn configs() -> Vec<(String, LsmOptions)> {
+    let mut out = Vec::new();
+    for cache in [0usize, 128] {
+        for codec in [Compression::None, Compression::LzLike { ratio_pct: 50 }] {
+            let label = format!(
+                "cache={cache} codec={}",
+                if codec.is_none() { "none" } else { "lz-like:50" }
+            );
+            out.push((
+                label,
+                LsmOptions::small_for_test()
+                    .with_cache_blocks(cache)
+                    .with_compression(codec),
+            ));
+        }
+    }
+    out
+}
+
+fn v(tag: u32) -> ValueDesc {
+    ValueDesc::new(tag, 4096)
+}
+
+/// Tentpole contract: the cache and the codec are cost models, not data
+/// paths — the same op stream must read back identically in every
+/// configuration, on every engine, including gets issued mid-churn
+/// while flushes/compactions (and on KVACCEL, rollbacks) invalidate
+/// cached blocks underneath.
+#[test]
+fn values_identical_across_cache_and_codec_configs() {
+    for name in ENGINES {
+        let mut states: Vec<(String, Vec<(u32, ValueDesc)>)> = Vec::new();
+        for (label, opts) in configs() {
+            let (mut sys, mut env) = build_with(name, opts);
+            let mut rng = SimRng::new(4242);
+            let mut oracle: BTreeMap<u32, Option<ValueDesc>> = BTreeMap::new();
+            let mut t: Nanos = 0;
+            for op in 0..500u32 {
+                match rng.gen_range_u32(10) {
+                    0..=5 => {
+                        let k = rng.gen_range_u32(400);
+                        t = sys.put(&mut env, t, k, v(op)).done;
+                        oracle.insert(k, Some(v(op)));
+                    }
+                    6 => {
+                        let k = rng.gen_range_u32(400);
+                        t = sys.delete(&mut env, t, k).done;
+                        oracle.insert(k, None);
+                    }
+                    7..=8 => {
+                        // mid-churn read: cached blocks must stay truthful
+                        // while background work replaces SSTs
+                        let k = rng.gen_range_u32(400);
+                        let (got, nt) = sys.get(&mut env, t, k);
+                        t = nt;
+                        let want = oracle.get(&k).copied().flatten();
+                        assert_eq!(got, want, "{name} [{label}]: mid-churn get({k})");
+                    }
+                    _ => {
+                        t = sys.flush(&mut env, t);
+                    }
+                }
+            }
+            t = sys.finish(&mut env, t).unwrap();
+            for k in (0..400u32).step_by(7) {
+                let (got, nt) = sys.get(&mut env, t, k);
+                t = nt;
+                let want = oracle.get(&k).copied().flatten();
+                assert_eq!(got, want, "{name} [{label}]: post-finish get({k})");
+            }
+            let (all, _) = sys.scan(&mut env, t, 0, 10_000);
+            let got: Vec<(u32, ValueDesc)> =
+                all.iter().map(|e| (e.key, e.val)).collect();
+            let want: Vec<(u32, ValueDesc)> = oracle
+                .iter()
+                .filter_map(|(&k, &val)| val.map(|val| (k, val)))
+                .collect();
+            assert_eq!(got, want, "{name} [{label}]: final state diverges");
+            states.push((label, got));
+        }
+        for pair in states.windows(2) {
+            assert_eq!(
+                pair[0].1, pair[1].1,
+                "{name}: [{}] and [{}] diverge",
+                pair[0].0, pair[1].0
+            );
+        }
+    }
+}
+
+/// The write path never consults the block cache, so resizing it must
+/// not move a single write completion time — the conformance anchor for
+/// "cache-off traces are bit-identical to the pre-cache engine".
+#[test]
+fn write_timing_is_independent_of_cache_capacity() {
+    for name in ENGINES {
+        let (mut a, mut env_a) =
+            build_with(name, LsmOptions::small_for_test().with_cache_blocks(0));
+        let (mut b, mut env_b) =
+            build_with(name, LsmOptions::small_for_test().with_cache_blocks(4096));
+        let (mut ta, mut tb) = (0, 0);
+        for k in 0..600u32 {
+            ta = a.put(&mut env_a, ta, k % 251, v(k)).done;
+            tb = b.put(&mut env_b, tb, k % 251, v(k)).done;
+            assert_eq!(ta, tb, "{name}: put #{k} timing shifted with cache size");
+        }
+    }
+}
+
+/// A traced workload with the cache and compression enabled replays
+/// bit-identically for the same seed: hit/miss sequences (and therefore
+/// every op latency) are deterministic functions of the op stream.
+#[test]
+fn traced_runs_are_deterministic_with_cache_and_compression() {
+    let cfg = BenchConfig {
+        seed: 7,
+        key_space: 4096,
+        value_size: 1024,
+        ..Default::default()
+    };
+    let opts = LsmOptions::small_for_test()
+        .with_cache_blocks(256)
+        .with_compression(Compression::LzLike { ratio_pct: 50 });
+    for name in ["rocksdb", "adoc", "kvaccel-lazy"] {
+        let mut traces = Vec::new();
+        for _ in 0..2 {
+            let (mut sys, mut env) = build_with(name, opts.clone());
+            let t0 = workload::preload(&mut *sys, &mut env, &cfg, 256 * 1024).unwrap();
+            let mut spec = workload::preset_spec(
+                "ycsb-b",
+                &cfg,
+                2,
+                LoopMode::Closed { think: 0 },
+                KeyDist::Uniform,
+            )
+            .unwrap();
+            spec.start_at = t0;
+            spec.stop_after_ops = Some(300);
+            let (_, trace) = workload::run_spec_traced(&mut *sys, &mut env, &spec, true);
+            assert!(!trace.is_empty(), "{name}: traced run produced no ops");
+            traces.push(trace);
+        }
+        assert_eq!(traces[0], traces[1], "{name}: cached traced run not deterministic");
+    }
+}
+
+/// KVACCEL-specific: reads served off the device write buffer go through
+/// the dev namespace of the same cache; entries must stay truthful while
+/// keys get superseded and must not survive the rollback that drains the
+/// buffer back into the host LSM.
+#[test]
+fn kvaccel_dev_reads_stay_correct_with_cache_through_rollback() {
+    for scheme in ["kvaccel", "kvaccel-eager", "kvaccel-lazy"] {
+        let (mut sys, mut env) =
+            build_with(scheme, LsmOptions::small_for_test().with_cache_blocks(256));
+        let mut oracle: BTreeMap<u32, ValueDesc> = BTreeMap::new();
+        let mut t = 0;
+        // sustained load over a small store: the detector redirects a
+        // tail of these into the device write buffer
+        for i in 0..4000u32 {
+            let k = i % 1000;
+            t = sys.put(&mut env, t, k, v(i)).done;
+            oracle.insert(k, v(i));
+        }
+        assert!(sys.redirected_writes() > 0, "{scheme}: no writes redirected");
+        // two read rounds: the first warms the dev-read cache, the
+        // second is served from it — both must match the oracle
+        for round in 0..2 {
+            for k in 0..1000u32 {
+                let (got, nt) = sys.get(&mut env, t, k);
+                t = nt;
+                assert_eq!(
+                    got,
+                    oracle.get(&k).copied(),
+                    "{scheme}: round {round} get({k})"
+                );
+            }
+        }
+        assert!(sys.cache_stats().hits > 0, "{scheme}: warm round never hit");
+        // finish = final rollback: the buffer merges back into the host
+        // LSM and the dev-namespace cache entries are purged — reads must
+        // still be correct afterwards
+        t = sys.finish(&mut env, t).unwrap();
+        for k in 0..1000u32 {
+            let (got, nt) = sys.get(&mut env, t, k);
+            t = nt;
+            assert_eq!(got, oracle.get(&k).copied(), "{scheme}: post-rollback get({k})");
+        }
+    }
+}
+
+/// Satellite coupling check: cursors and `get()` share the one
+/// engine-wide cache instance, so a range scan warms subsequent point
+/// reads over the same keys.
+#[test]
+fn scans_warm_the_point_read_cache() {
+    for name in ENGINES {
+        let (mut sys, mut env) =
+            build_with(name, LsmOptions::small_for_test().with_cache_blocks(128));
+        let mut t = 0;
+        for k in 0..800u32 {
+            t = sys.put(&mut env, t, k, ValueDesc::new(k, 512)).done;
+        }
+        t = sys.finish(&mut env, t).unwrap();
+        let c0 = sys.cache_stats();
+        let (all, nt) = sys.scan(&mut env, t, 0, 2000);
+        t = nt;
+        assert_eq!(all.len(), 800, "{name}: scan result short");
+        let c1 = sys.cache_stats();
+        assert!(
+            c1.misses > c0.misses,
+            "{name}: a cold scan should miss its way through the store"
+        );
+        for k in 0..300u32 {
+            let (got, nt) = sys.get(&mut env, t, k);
+            t = nt;
+            assert_eq!(got, Some(ValueDesc::new(k, 512)), "{name}: get({k})");
+        }
+        let c2 = sys.cache_stats();
+        let hits = c2.hits - c1.hits;
+        let misses = c2.misses - c1.misses;
+        assert!(
+            hits > 0 && hits >= misses * 3,
+            "{name}: scan didn't warm point reads (hits {hits}, misses {misses})"
+        );
+    }
+}
+
+/// A sharded store holds ONE cache instance across all shards (the
+/// engine-wide tentpole), not one per shard: capacity reads back
+/// unsplit, and a cross-shard scan warms point gets on every shard.
+#[test]
+fn sharded_store_shares_one_engine_wide_cache() {
+    for policy in [ShardPolicy::Range, ShardPolicy::Hash] {
+        let mut env = SimEnv::new(33, SsdConfig::default());
+        let mut sys = EngineBuilder::lsm()
+            .opts(LsmOptions::small_for_test().with_cache_blocks(128))
+            .sharded(4, policy)
+            .shard_key_space(1024)
+            .build();
+        let mut t = 0;
+        for k in 0..1024u32 {
+            t = sys.put(&mut env, t, k, ValueDesc::new(k, 512)).done;
+        }
+        t = sys.finish(&mut env, t).unwrap();
+        let c = sys.cache_stats();
+        assert_eq!(
+            c.capacity_blocks,
+            128,
+            "{}: children must share one instance, not get one each",
+            policy.label()
+        );
+        let (all, nt) = sys.scan(&mut env, t, 0, 4096);
+        t = nt;
+        assert_eq!(all.len(), 1024, "{}: scan short", policy.label());
+        let c1 = sys.cache_stats();
+        for k in (0..1024u32).step_by(4) {
+            let (got, nt) = sys.get(&mut env, t, k);
+            t = nt;
+            assert_eq!(got, Some(ValueDesc::new(k, 512)), "{}", policy.label());
+        }
+        let c2 = sys.cache_stats();
+        let hits = c2.hits - c1.hits;
+        let misses = c2.misses - c1.misses;
+        assert!(
+            hits > 0 && hits >= misses * 3,
+            "{}: cross-shard scan didn't warm gets (hits {hits}, misses {misses})",
+            policy.label()
+        );
+    }
+}
+
+/// `--cache-blocks 0` means *off*: the hot paths skip the probe
+/// entirely, so no counter moves and nothing is retained.
+#[test]
+fn zero_capacity_cache_is_fully_disabled() {
+    for name in ["rocksdb", "kvaccel"] {
+        let (mut sys, mut env) =
+            build_with(name, LsmOptions::small_for_test().with_cache_blocks(0));
+        let mut t = 0;
+        for k in 0..600u32 {
+            t = sys.put(&mut env, t, k, ValueDesc::new(k, 512)).done;
+        }
+        t = sys.finish(&mut env, t).unwrap();
+        let (_, nt) = sys.scan(&mut env, t, 0, 1000);
+        t = nt;
+        for k in 0..600u32 {
+            let (_, nt) = sys.get(&mut env, t, k);
+            t = nt;
+        }
+        let c = sys.cache_stats();
+        assert_eq!(
+            (c.hits, c.misses, c.cached_blocks, c.capacity_blocks),
+            (0, 0, 0, 0),
+            "{name}: disabled cache must stay untouched"
+        );
+    }
+}
+
+/// The measured bloom false-positive rate stays within 2x the rate the
+/// configured geometry (bits/key, probe count) predicts.
+#[test]
+fn measured_bloom_fpr_within_2x_of_configured() {
+    let (mut sys, mut env) =
+        build_with("rocksdb", LsmOptions::small_for_test().with_cache_blocks(0));
+    let mut t = 0;
+    // even keys present, odd keys absent-but-in-range so absent-key
+    // gets land inside SST key ranges and actually consult the filters
+    for k in 0..3000u32 {
+        t = sys.put(&mut env, t, k * 2, ValueDesc::new(k, 512)).done;
+    }
+    t = sys.finish(&mut env, t).unwrap();
+    for k in 0..3000u32 {
+        let (got, nt) = sys.get(&mut env, t, k * 2 + 1);
+        t = nt;
+        assert_eq!(got, None, "odd key {} must be absent", k * 2 + 1);
+    }
+    let d = sys.db_stats();
+    assert!(
+        d.bloom_negative_probes > 2000,
+        "too few negative probes to measure: {}",
+        d.bloom_negative_probes
+    );
+    let o = LsmOptions::default();
+    // standard bloom approximation: (1 - e^(-k/b))^k for k probes over
+    // b bits/key; bloom_bits_for only ever rounds capacity *up*
+    let configured = (1.0
+        - (-(o.bloom_probes as f64) / o.bloom_bits_per_key as f64).exp())
+    .powi(o.bloom_probes as i32);
+    let measured = d.bloom_fpr();
+    assert!(
+        measured <= configured * 2.0,
+        "measured fpr {measured:.5} exceeds 2x configured {configured:.5}"
+    );
+    let _ = t;
+}
+
+/// Compression is a real trade on the write path too: a 50% codec must
+/// flush materially fewer device bytes than the identity codec.
+#[test]
+fn compression_shrinks_flushed_bytes() {
+    let mut flushed = Vec::new();
+    for codec in [Compression::None, Compression::LzLike { ratio_pct: 50 }] {
+        let (mut sys, mut env) = build_with(
+            "rocksdb",
+            LsmOptions::small_for_test().with_cache_blocks(0).with_compression(codec),
+        );
+        let mut t = 0;
+        for k in 0..800u32 {
+            t = sys.put(&mut env, t, k, ValueDesc::new(k, 1024)).done;
+        }
+        sys.finish(&mut env, t).unwrap();
+        assert!(sys.db_stats().flush_count > 0, "store never flushed");
+        flushed.push(sys.db_stats().bytes_flushed);
+    }
+    let (plain, packed) = (flushed[0], flushed[1]);
+    assert!(
+        packed < plain,
+        "50% codec must flush fewer bytes ({packed} vs {plain})"
+    );
+    assert!(
+        packed * 100 >= plain * 40,
+        "50% codec shrank flushes implausibly far ({packed} vs {plain})"
+    );
+}
