@@ -247,6 +247,20 @@ impl KvEngine for AdocEngine {
         self.db.maybe_schedule(env, at);
     }
 
+    fn cdc_tail(&self, env: &SimEnv, wm: &[crate::lsm::Seq]) -> Vec<crate::engine::CdcRecord> {
+        KvEngine::cdc_tail(&self.db, env, wm)
+    }
+
+    fn repl_apply(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        rec: &crate::engine::CdcRecord,
+    ) -> PutResult {
+        self.tuner.maybe_tune(env, at, &mut self.db);
+        self.db.apply_entry(env, at, rec.entry)
+    }
+
     fn set_block_cache(&mut self, cache: crate::engine::SharedBlockCache) {
         self.db.set_block_cache(cache);
     }

@@ -108,6 +108,26 @@ impl WriteBatch {
     }
 }
 
+/// One record in a primary's change-data-capture stream: the entry
+/// exactly as the primary committed it (original sequence number) plus
+/// the capture stream it came from. Unsharded engines expose a single
+/// stream 0; a `ShardedDb` exposes one stream per shard, because each
+/// child owns an independent seq domain and therefore needs its own
+/// tailing watermark.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CdcRecord {
+    pub entry: Entry,
+    pub stream: usize,
+}
+
+impl CdcRecord {
+    /// Bytes this record occupies on the replication wire: the WAL
+    /// record encoding (12 B header + entry) plus a 4 B stream tag.
+    pub fn wire_bytes(&self) -> u64 {
+        16 + self.entry.encoded_len()
+    }
+}
+
 /// Completion report for a batched write.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BatchResult {
@@ -257,6 +277,12 @@ pub trait EngineStats {
         None
     }
 
+    /// Downcast hook for replicated-store reporting (per-replica lag,
+    /// anti-entropy bytes); `None` for unreplicated engines.
+    fn replicated(&self) -> Option<&crate::repl::ReplicatedDb> {
+        None
+    }
+
     fn stall_stats(&self) -> &StallStats {
         &self.main_db().stall
     }
@@ -386,6 +412,41 @@ pub trait KvEngine: EngineStats {
     /// grants through this); `None` for the baselines.
     fn kvaccel_mut(&mut self) -> Option<&mut KvaccelDb> {
         None
+    }
+
+    /// Number of independent CDC capture streams this engine exposes
+    /// (one per shard on a `ShardedDb`, 1 otherwise). The shipper keeps
+    /// one seq watermark per stream.
+    fn cdc_streams(&self) -> usize {
+        1
+    }
+
+    /// Change-data-capture tail: every committed record with
+    /// `seq > wm[stream]` for its stream, in a deterministic order
+    /// (seq order within a stream). Zero virtual time is charged — the
+    /// shipper captures synchronously with each primary op and only the
+    /// simulated replication link costs time. Engines that buffer
+    /// writes outside the host WAL (KVACCEL's redirected writes) merge
+    /// those sources here; the default (no capture) suits wrappers that
+    /// delegate.
+    fn cdc_tail(&self, _env: &SimEnv, _wm: &[Seq]) -> Vec<CdcRecord> {
+        Vec::new()
+    }
+
+    /// Apply one replicated record, preserving its primary sequence
+    /// number (`LsmDb::apply_entry` semantics): full admission gate,
+    /// WAL append, memtable insert, but no new seq allocation — the
+    /// replica shares the primary's seq domain, which is what makes
+    /// failover's watermark comparison meaningful. The default routes
+    /// through `put`/`delete` (allocating a fresh local seq) for
+    /// wrappers that have no seq domain of their own.
+    fn repl_apply(&mut self, env: &mut SimEnv, at: Nanos, rec: &CdcRecord) -> PutResult {
+        let e = rec.entry;
+        if e.val.is_tombstone() {
+            self.delete(env, at, e.key)
+        } else {
+            self.put(env, at, e.key, e.val)
+        }
     }
 
     /// Install an externally-owned engine-wide block cache. Engines that

@@ -10,6 +10,7 @@ pub mod figs;
 pub mod qos_fairness;
 pub mod read_amp;
 pub mod recovery;
+pub mod repl_lag;
 pub mod shard_scale;
 pub mod tables;
 
@@ -182,6 +183,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "qos-fairness" => qos_fairness::qos_fairness(ctx),
         "read-amp" => read_amp::read_amp(ctx),
         "recovery" => recovery::recovery(ctx),
+        "repl-lag" => repl_lag::repl_lag(ctx),
         "shard-scale" => shard_scale::shard_scale(ctx),
         "table5" => tables::table5(ctx),
         "table6" => tables::table6(ctx),
@@ -199,8 +201,8 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 15] = [
+pub const ALL_EXPERIMENTS: [&str; 16] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "qdelay", "qos-fairness", "read-amp", "recovery", "shard-scale", "table5",
-    "table6",
+    "qdelay", "qos-fairness", "read-amp", "recovery", "repl-lag",
+    "shard-scale", "table5", "table6",
 ];

@@ -660,6 +660,42 @@ impl crate::engine::KvEngine for KvaccelDb {
         KvaccelDb::maintain(self, env, at);
     }
 
+    /// KVACCEL's CDC stream merges both write interfaces: host-WAL
+    /// records and redirected writes buffered in the device KV namespace
+    /// (which bypass the host WAL). Both draw seqs from the one Main-LSM
+    /// domain, so a merge by seq restores the total commit order. A
+    /// rollback's merged-back copies re-enter the WAL under fresh seqs —
+    /// the shipper re-captures them as duplicates, which replicas apply
+    /// idempotently (same value, newer seq).
+    fn cdc_tail(&self, env: &SimEnv, wm: &[Seq]) -> Vec<crate::engine::CdcRecord> {
+        let wm0 = wm.first().copied().unwrap_or(0);
+        let mut entries = self.main.wal_entries_after(wm0);
+        entries.extend(env.device.kv_tail_since(self.ns, wm0));
+        entries.sort_by_key(|e| e.seq);
+        entries
+            .into_iter()
+            .map(|entry| crate::engine::CdcRecord { entry, stream: 0 })
+            .collect()
+    }
+
+    /// Replica apply goes straight into the Main-LSM with the primary's
+    /// seq (no Controller routing — a replica never redirects applies).
+    /// Any device copy this node still routes (possible on a rejoined
+    /// ex-primary) is superseded first, exactly like the main-path write
+    /// step 3-1, so the rollback drain skips the stale copy.
+    fn repl_apply(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        rec: &crate::engine::CdcRecord,
+    ) -> PutResult {
+        self.tick(env, at);
+        if self.metadata.check(env, at, rec.entry.key) {
+            self.metadata.delete(env, at, rec.entry.key);
+        }
+        self.main.apply_entry(env, at, rec.entry)
+    }
+
     fn set_block_cache(&mut self, cache: crate::engine::SharedBlockCache) {
         self.main.set_block_cache(cache);
     }

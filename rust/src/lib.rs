@@ -44,6 +44,8 @@ pub mod shard;
 
 pub mod qos;
 
+pub mod repl;
+
 pub mod workload;
 
 pub mod experiments;

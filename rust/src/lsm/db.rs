@@ -696,6 +696,35 @@ impl LsmDb {
         self.put(env, at, key, ValueDesc::TOMBSTONE)
     }
 
+    /// Replication apply: the full write path (admission gate, WAL,
+    /// memtable) but with the entry's *original* primary sequence number
+    /// preserved, so replicas share the primary's seq domain and the
+    /// applied-seq watermark is comparable across nodes. The local seq
+    /// counter only moves forward (a replica never re-issues a primary
+    /// seq for its own writes after promotion).
+    pub fn apply_entry(&mut self, env: &mut SimEnv, at: Nanos, e: Entry) -> PutResult {
+        let (mut at, stalled_ns, delayed_ns) = self.admit_write(env, at);
+        self.seq = self.seq.max(e.seq);
+        self.stats.puts += 1;
+        if e.val.is_tombstone() {
+            self.stats.deletes += 1;
+        }
+        self.stats.user_bytes_written += e.encoded_len();
+        let wal_bytes = self.wal.append(e);
+        env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
+        self.mem.insert(e);
+        env.cpu.charge(CpuClass::Foreground, at, self.opts.put_cpu_ns);
+        at += self.opts.put_cpu_ns;
+        env.clock.advance_to(at);
+        PutResult { done: at, stalled_ns, delayed_ns }
+    }
+
+    /// CDC tailing cursor over the host WAL: live records with
+    /// `seq > wm`, in append order (see `Wal::entries_after`).
+    pub fn wal_entries_after(&self, wm: Seq) -> Vec<Entry> {
+        self.wal.entries_after(wm)
+    }
+
     /// Apply a batch as one unit: a single admission gate up front, per-
     /// entry memtable inserts (with mid-batch rotation when a slot is
     /// free), and one group-committed WAL submission — ops after the
@@ -1253,6 +1282,23 @@ impl crate::engine::KvEngine for LsmDb {
     fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
         self.catch_up(env, at);
         self.maybe_schedule(env, at);
+    }
+
+    fn cdc_tail(&self, _env: &SimEnv, wm: &[Seq]) -> Vec<crate::engine::CdcRecord> {
+        self.wal
+            .entries_after(wm.first().copied().unwrap_or(0))
+            .into_iter()
+            .map(|entry| crate::engine::CdcRecord { entry, stream: 0 })
+            .collect()
+    }
+
+    fn repl_apply(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        rec: &crate::engine::CdcRecord,
+    ) -> PutResult {
+        self.apply_entry(env, at, rec.entry)
     }
 
     fn set_block_cache(&mut self, cache: SharedBlockCache) {

@@ -89,6 +89,22 @@ impl Wal {
         out
     }
 
+    /// CDC tailing cursor: every live record with `seq > wm`, in append
+    /// order. Segments wholly at or below the watermark are skipped, so
+    /// a caught-up shipper pays nothing per poll. Records released by a
+    /// flush before being tailed are gone — the shipper must capture
+    /// synchronously with each op (it does; see `repl::ReplicatedDb`).
+    pub fn entries_after(&self, wm: Seq) -> Vec<Entry> {
+        let mut out: Vec<Entry> = Vec::new();
+        for s in self.segments.iter().chain(std::iter::once(&self.current)) {
+            if s.max_seq <= wm && !s.entries.is_empty() {
+                continue;
+            }
+            out.extend(s.entries.iter().filter(|e| e.seq > wm).copied());
+        }
+        out
+    }
+
     pub fn live_bytes(&self) -> u64 {
         self.segments.iter().map(|s| s.bytes).sum::<u64>() + self.current.bytes
     }
@@ -169,6 +185,24 @@ mod tests {
         assert_eq!(w.durable_entries(w.total_appended).len(), 3);
         // mid-record watermarks exclude the torn record
         assert_eq!(w.durable_entries(sz + 1).len(), 1);
+    }
+
+    #[test]
+    fn entries_after_tails_from_watermark() {
+        let mut w = Wal::new();
+        for s in 1..=6 {
+            w.append(e(s, s));
+            if s % 2 == 0 {
+                w.seal();
+            }
+        }
+        let seqs: Vec<Seq> = w.entries_after(3).iter().map(|x| x.seq).collect();
+        assert_eq!(seqs, vec![4, 5, 6]);
+        assert!(w.entries_after(6).is_empty());
+        assert_eq!(w.entries_after(0).len(), 6);
+        // released segments no longer appear in the tail
+        w.release_upto(2);
+        assert_eq!(w.entries_after(0).len(), 4);
     }
 
     #[test]

@@ -38,6 +38,12 @@
 //!   --compression C      SST data-block codec: none, or lz-like[:RATIO]
 //!                        with RATIO the compressed size in percent of
 //!                        logical (1..=100, default 50)
+//!   --replicas N         run N replicated nodes (a primary plus N-1
+//!                        replicas) behind one store, shipping the
+//!                        primary's CDC stream over a simulated link
+//!   --read-policy P      primary | ryw | eventual (default primary)
+//!   --repl-latency US    one-way link latency in microseconds
+//!   --repl-bandwidth MB  per-link bandwidth in MB/s
 //!
 //! Read-heavy YCSB point presets: ycsb-b (95% read / 5% update),
 //! ycsb-c (read-only), ycsb-d (read-latest; forces --dist latest).
@@ -45,7 +51,8 @@
 //!
 //! Contradictory flags are rejected up front (e.g. --rate with a closed
 //! loop, --theta without --dist zipfian, --shard-policy without
-//! --shards, --tenant-rate without --tenants, --dist with ycsb-d).
+//! --shards, --tenant-rate without --tenants, --dist with ycsb-d,
+//! --read-policy without --replicas, --replicas 1).
 
 use anyhow::{anyhow, Result};
 
@@ -55,6 +62,7 @@ use kvaccel::env::SimEnv;
 use kvaccel::experiments::{run as run_experiment, EngineMode, ExpContext, ALL_EXPERIMENTS};
 use kvaccel::kvaccel::RollbackScheme;
 use kvaccel::lsm::{Compression, LsmOptions};
+use kvaccel::repl::{ReadPolicy, ReplConfig, ReplicatedDb};
 use kvaccel::runtime::{default_artifacts_dir, XlaRuntime};
 use kvaccel::shard::ShardPolicy;
 use kvaccel::sim::{Nanos, MILLIS, NS_PER_SEC};
@@ -88,6 +96,8 @@ fn real_main() -> Result<()> {
             println!("              [--shards N] [--shard-policy range|hash]");
             println!("              [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
             println!("              [--cache-blocks N] [--compression none|lz-like[:RATIO]]");
+            println!("              [--replicas N] [--read-policy primary|ryw|eventual]");
+            println!("              [--repl-latency US] [--repl-bandwidth MBPS]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
             println!("      ids: {ALL_EXPERIMENTS:?}");
             println!("  kvaccel bench [--out BENCH_PR2.json] [--scan-out BENCH_PR3.json] [--scale F] [--rate OPS_S] [--clients N]");
@@ -205,6 +215,51 @@ fn parse_shards(args: &Args) -> Result<Option<(usize, ShardPolicy)>> {
     Ok(Some((n, policy)))
 }
 
+/// `--replicas N [--read-policy primary|ryw|eventual] [--repl-latency US]
+/// [--repl-bandwidth MBPS]`: run N replicated nodes (a primary plus N-1
+/// replicas) behind one store, shipping the primary's CDC stream over a
+/// simulated link. A 1-node "replica set" is the plain engine, so asking
+/// for one is a mistake, not a no-op.
+fn parse_replicas(args: &Args) -> Result<Option<ReplConfig>> {
+    let Some(n) = args.get("replicas") else { return Ok(None) };
+    let n: usize = n.parse().map_err(|_| {
+        anyhow!("--replicas expects an integer >= 2, got {n:?}")
+    })?;
+    if n < 2 {
+        return Err(anyhow!(
+            "--replicas needs at least 2 nodes (a primary plus one \
+             replica); omit the flag for an unreplicated store"
+        ));
+    }
+    let read_policy = match args.get("read-policy") {
+        Some(s) => ReadPolicy::parse(s).ok_or_else(|| {
+            anyhow!("unknown read policy {s:?} (primary|ryw|eventual)")
+        })?,
+        None => ReadPolicy::Primary,
+    };
+    let mut cfg =
+        ReplConfig { replicas: n, read_policy, ..ReplConfig::default() };
+    if let Some(v) = args.get("repl-latency") {
+        let us: f64 = v.parse().map_err(|_| {
+            anyhow!("--repl-latency expects microseconds, got {v:?}")
+        })?;
+        if us < 0.0 {
+            return Err(anyhow!("--repl-latency must be >= 0 us"));
+        }
+        cfg.link_latency = (us * 1_000.0) as Nanos;
+    }
+    if let Some(v) = args.get("repl-bandwidth") {
+        let mbps: f64 = v.parse().map_err(|_| {
+            anyhow!("--repl-bandwidth expects MB/s, got {v:?}")
+        })?;
+        if mbps <= 0.0 {
+            return Err(anyhow!("--repl-bandwidth must be > 0 MB/s"));
+        }
+        cfg.link_mbps = mbps;
+    }
+    Ok(Some(cfg))
+}
+
 /// Reject contradictory `run` flags up front instead of silently
 /// ignoring the loser (a closed-loop `--rate` used to do nothing).
 fn validate_run_flags(args: &Args) -> Result<()> {
@@ -250,9 +305,16 @@ fn validate_bench_flags(args: &Args) -> Result<()> {
             return Err(anyhow!("--{f} has no effect without --tenants N"));
         }
     }
-    // malformed read-path flags fail here, before any engine is built
+    for f in ["read-policy", "repl-latency", "repl-bandwidth"] {
+        if args.get(f).is_some() && args.get("replicas").is_none() {
+            return Err(anyhow!("--{f} has no effect without --replicas N"));
+        }
+    }
+    // malformed read-path and replication flags fail here, before any
+    // engine is built
     parse_cache_blocks(args)?;
     parse_compression(args)?;
+    parse_replicas(args)?;
     Ok(())
 }
 
@@ -387,19 +449,33 @@ fn cmd_run(args: &Args) -> Result<()> {
     let crash = parse_crash_at(args)?;
     let shards = parse_shards(args)?;
     let tenants = parse_tenants(args)?;
+    let replicas = parse_replicas(args)?;
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
     let mut cfg: BenchConfig = ctx.bench_config();
 
     let opts =
         apply_read_path_flags(LsmOptions::default().with_threads(threads), args)?;
-    let mut builder = EngineBuilder::new(kind)
-        .opts(opts)
-        .merge_engine(ctx.merge_engine())
-        .bloom_builder(ctx.bloom_builder());
-    if let Some((n, policy)) = shards {
-        builder = builder.sharded(n, policy).shard_key_space(cfg.key_space);
-    }
-    let mut sys = builder.build();
+    let key_space = cfg.key_space;
+    // one node's engine stack; with --replicas the replication layer
+    // calls this once per node (every node runs the same configuration)
+    let mut make_engine = |_node: usize| {
+        let mut builder = EngineBuilder::new(kind)
+            .opts(opts.clone())
+            .merge_engine(ctx.merge_engine())
+            .bloom_builder(ctx.bloom_builder());
+        if let Some((n, policy)) = shards {
+            builder = builder.sharded(n, policy).shard_key_space(key_space);
+        }
+        builder.build()
+    };
+    let mut sys: Box<dyn KvEngine> = match replicas.clone() {
+        Some(mut rcfg) => {
+            rcfg.key_space = key_space;
+            rcfg.seed = seed;
+            Box::new(ReplicatedDb::new(rcfg, &mut make_engine))
+        }
+        None => make_engine(0),
+    };
     let mut env = SimEnv::new(seed, SsdConfig::default());
     // crash injection: a time point caps the workload horizon, an op
     // point cuts the global issue budget; either way the run ends at the
@@ -495,12 +571,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some((n, policy)) = shards {
         println!("shards        {n} ({} policy, shared device)", policy.label());
     }
+    if let Some(rcfg) = &replicas {
+        println!(
+            "replicas      {} ({} reads, link {} + {:.0} MB/s)",
+            rcfg.replicas,
+            rcfg.read_policy.label(),
+            fmt::nanos(rcfg.link_latency as f64),
+            rcfg.link_mbps
+        );
+    }
     println!("workload      {} ({} virtual s, scale {scale})", r.workload, r.duration_s);
     println!("{clients_line}");
     print_result(&r);
     print_cache_line(&*sys);
     print_tenant_breakdown(&r);
     print_shard_breakdown(&*sys, &env);
+    print_repl_breakdown(&r);
 
     if crash.is_some() {
         let t_crash = env.now();
@@ -655,6 +741,48 @@ fn print_shard_breakdown(sys: &dyn KvEngine, env: &SimEnv) {
     }
 }
 
+/// Replication breakdown (runs with `--replicas` only): per-node apply
+/// progress and lag, CDC shipping volume, read routing, failover and
+/// anti-entropy totals.
+fn print_repl_breakdown(r: &RunResult) {
+    let Some(rep) = &r.replication else { return };
+    println!("replication breakdown ({} reads):", rep.read_policy);
+    for n in &rep.replicas {
+        println!(
+            "  node {:>2} {:<8} {:>8} applied (seq {:>8})  lag max {:>6} / mean {:>8.1} records",
+            n.node, n.role, n.applied_records, n.applied_seq, n.max_lag, n.mean_lag,
+        );
+    }
+    println!(
+        "  cdc: {} captured, {} shipped ({})",
+        rep.captured_records,
+        rep.shipped_records,
+        fmt::bytes(rep.shipped_bytes as f64),
+    );
+    let reads = rep.primary_reads + rep.replica_reads;
+    if reads > 0 {
+        println!(
+            "  reads: {} primary, {} replica ({} stale)",
+            rep.primary_reads, rep.replica_reads, rep.stale_reads,
+        );
+    }
+    if rep.failovers > 0 {
+        println!(
+            "  failover: {} promotions, {} blackout, {} committed records lost",
+            rep.failovers,
+            fmt::nanos(rep.blackout_ns as f64),
+            rep.lost_records,
+        );
+    }
+    if rep.anti_entropy_bytes > 0 {
+        println!(
+            "  anti-entropy: {} shipped (full resync would be {})",
+            fmt::bytes(rep.anti_entropy_bytes as f64),
+            fmt::bytes(rep.full_resync_bytes as f64),
+        );
+    }
+}
+
 fn print_result(r: &RunResult) {
     println!("writes        {} ({:.1} Kops/s)", r.writes.total, r.write_kops());
     println!("reads         {} ({:.1} Kops/s)", r.reads.total, r.read_kops());
@@ -714,6 +842,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 /// machine-readable JSON (the perf-trajectory artifact built in CI).
 fn cmd_bench(args: &Args) -> Result<()> {
     validate_bench_flags(args)?;
+    if args.get("replicas").is_some() {
+        return Err(anyhow!(
+            "--replicas applies to `run` (and `experiment repl-lag` covers \
+             the replicated comparison); `bench` measures single-node engines"
+        ));
+    }
     let out = args.get_or("out", "BENCH_PR2.json").to_string();
     let scale = args.get_f64("scale", 0.02);
     let seed = args.get_u64("seed", 42);
@@ -1003,5 +1137,50 @@ mod tests {
         assert!(parse_tenants(&parse("run A --tenants 0")).is_err());
         assert!(parse_tenants(&parse("run A --tenants x")).is_err());
         assert!(parse_tenants(&parse("run A --tenants 2 --tenant-slo-p99 0")).is_err());
+    }
+
+    #[test]
+    fn replication_flags_parse_and_validate() {
+        // absent -> unreplicated
+        assert!(parse_replicas(&parse("run A")).unwrap().is_none());
+        // full parse with link overrides
+        let cfg = parse_replicas(&parse(
+            "run A --replicas 3 --read-policy eventual \
+             --repl-latency 200 --repl-bandwidth 256"
+        ))
+        .unwrap()
+        .unwrap();
+        assert_eq!(cfg.replicas, 3);
+        assert_eq!(cfg.read_policy, ReadPolicy::Eventual);
+        assert_eq!(cfg.link_latency, 200_000);
+        assert!((cfg.link_mbps - 256.0).abs() < 1e-9);
+        // defaults when only the count is given
+        let cfg = parse_replicas(&parse("run A --replicas 2")).unwrap().unwrap();
+        assert_eq!(cfg.read_policy, ReadPolicy::Primary);
+        // a 1-node "replicated" store is the unreplicated store
+        assert!(parse_replicas(&parse("run A --replicas 1")).is_err());
+        assert!(parse_replicas(&parse("run A --replicas 0")).is_err());
+        assert!(parse_replicas(&parse("run A --replicas x")).is_err());
+        // unknown policy and malformed link parameters
+        assert!(
+            parse_replicas(&parse("run A --replicas 3 --read-policy strong")).is_err()
+        );
+        assert!(
+            parse_replicas(&parse("run A --replicas 3 --repl-latency -5")).is_err()
+        );
+        assert!(
+            parse_replicas(&parse("run A --replicas 3 --repl-bandwidth 0")).is_err()
+        );
+        // qualifier flags without --replicas are mistakes, not no-ops
+        assert!(validate_run_flags(&parse("run A --read-policy ryw")).is_err());
+        assert!(validate_run_flags(&parse("run A --repl-latency 100")).is_err());
+        assert!(validate_run_flags(&parse("run A --repl-bandwidth 512")).is_err());
+        assert!(validate_bench_flags(&parse("bench --read-policy eventual")).is_err());
+        // the shared validator catches malformed values up front
+        assert!(validate_run_flags(&parse("run A --replicas 1")).is_err());
+        assert!(validate_run_flags(
+            &parse("run A --replicas 3 --read-policy ryw")
+        )
+        .is_ok());
     }
 }

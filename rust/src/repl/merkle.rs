@@ -1,0 +1,239 @@
+//! Merkle-tree anti-entropy: fixed-fanout hash trees over key ranges.
+//!
+//! A diverged replica (e.g. a crashed ex-primary rejoining after
+//! failover) is repaired by exchanging subtree hashes with the current
+//! primary and shipping only the key ranges whose leaf hashes differ —
+//! the paper-adjacent alternative to a full resync. Leaf hashes fold
+//! the *values* `(key, seed, len)` of the live entries in the range,
+//! never their sequence numbers: two nodes that hold the same data
+//! through different write histories (a rollback merge-back re-sequences
+//! entries; a replica allocates local seqs during repair) still agree.
+
+use crate::engine::{IterOptions, KvEngine};
+use crate::env::SimEnv;
+use crate::lsm::entry::{Entry, Key};
+use crate::sim::Nanos;
+
+/// Wire size of one exchanged subtree hash (a 256-bit digest in a real
+/// system; the simulation folds to 64 bits but charges the full width).
+pub const HASH_WIRE_BYTES: u64 = 32;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over the 8 bytes of `word`, little-endian.
+fn fnv1a_u64(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Which leaf owns `key`: the key space hint is split into `leaves`
+/// equal ranges (keys past the hint clamp into the last leaf, so a
+/// too-small hint degrades to coarser ranges, never to a wrong answer).
+pub fn leaf_of(key: Key, leaves: usize, key_space: Key) -> usize {
+    let idx = (key as u128 * leaves as u128) / (key_space as u128 + 1);
+    (idx as usize).min(leaves - 1)
+}
+
+/// A fixed-fanout Merkle tree over one node's live entries, built from
+/// a single ascending snapshot scan. Retains the per-leaf entry lists
+/// so a diff can ship exactly the differing ranges.
+pub struct MerkleTree {
+    fanout: usize,
+    /// `levels[0]` = leaf hashes, last level = `[root]`.
+    levels: Vec<Vec<u64>>,
+    /// Live entries per leaf, ascending key order (scan order).
+    pub leaf_entries: Vec<Vec<Entry>>,
+}
+
+impl MerkleTree {
+    /// Scan the engine's live entries at `at` and build the tree.
+    /// Returns the tree and the virtual time the scan completed (the
+    /// scan charges real cursor costs on `env`).
+    pub fn build(
+        engine: &mut dyn KvEngine,
+        env: &mut SimEnv,
+        at: Nanos,
+        leaves: usize,
+        fanout: usize,
+        key_space: Key,
+    ) -> (Self, Nanos) {
+        let leaves = leaves.max(1);
+        let fanout = fanout.max(2);
+        let mut leaf_entries: Vec<Vec<Entry>> = vec![Vec::new(); leaves];
+        let mut it = engine.iter(env, at, IterOptions::default());
+        let mut t = it.seek_to_first(env, at);
+        while let Some(e) = it.entry() {
+            leaf_entries[leaf_of(e.key, leaves, key_space)].push(e);
+            t = it.next(env, t);
+        }
+        drop(it);
+        env.clock.advance_to(t);
+
+        let leaf_hashes: Vec<u64> =
+            leaf_entries.iter().map(|es| hash_leaf(es)).collect();
+        let mut levels = vec![leaf_hashes];
+        while levels.last().unwrap().len() > 1 {
+            let below = levels.last().unwrap();
+            let parents: Vec<u64> = below
+                .chunks(fanout)
+                .map(|c| {
+                    let mut h = FNV_OFFSET;
+                    h = fnv1a_u64(h, c.len() as u64);
+                    for &child in c {
+                        h = fnv1a_u64(h, child);
+                    }
+                    h
+                })
+                .collect();
+            levels.push(parents);
+        }
+        (Self { fanout, levels, leaf_entries }, t)
+    }
+
+    pub fn root(&self) -> u64 {
+        *self.levels.last().unwrap().first().unwrap()
+    }
+
+    /// Total on-wire size of every live entry — what a full resync from
+    /// this node would ship.
+    pub fn full_bytes(&self) -> u64 {
+        self.leaf_entries
+            .iter()
+            .flat_map(|es| es.iter())
+            .map(|e| e.encoded_len())
+            .sum()
+    }
+
+    /// Exchange hashes top-down against `other` (same shape required):
+    /// compare roots, descend only into differing subtrees, shipping
+    /// each visited node's child hashes in both directions. Returns the
+    /// differing leaf indices and the hash bytes exchanged.
+    pub fn diff(&self, other: &MerkleTree) -> (Vec<usize>, u64) {
+        assert_eq!(
+            self.levels.len(),
+            other.levels.len(),
+            "anti-entropy requires identically-shaped trees"
+        );
+        // both sides send their root
+        let mut hash_bytes = 2 * HASH_WIRE_BYTES;
+        if self.root() == other.root() {
+            return (Vec::new(), hash_bytes);
+        }
+        // frontier of differing node indices, walking from the root's
+        // children down to the leaf level
+        let mut frontier = vec![0usize];
+        for lvl in (0..self.levels.len() - 1).rev() {
+            let mut next = Vec::new();
+            for &node in &frontier {
+                let lo = node * self.fanout;
+                let hi = ((node + 1) * self.fanout).min(self.levels[lvl].len());
+                // each side ships this node's children to the other
+                hash_bytes += 2 * HASH_WIRE_BYTES * (hi - lo) as u64;
+                for child in lo..hi {
+                    if self.levels[lvl][child] != other.levels[lvl][child] {
+                        next.push(child);
+                    }
+                }
+            }
+            frontier = next;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+        (frontier, hash_bytes)
+    }
+}
+
+/// Leaf digest: FNV-1a over `(key, value seed, value len)` of each live
+/// entry in ascending key order. Sequence numbers are deliberately
+/// excluded (see module docs).
+fn hash_leaf(entries: &[Entry]) -> u64 {
+    let mut h = FNV_OFFSET;
+    h = fnv1a_u64(h, entries.len() as u64);
+    for e in entries {
+        h = fnv1a_u64(h, e.key as u64);
+        h = fnv1a_u64(h, e.val.seed as u64);
+        h = fnv1a_u64(h, e.val.len as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsm::entry::ValueDesc;
+
+    fn entry(key: Key, seed: u32) -> Entry {
+        Entry::new(key, 1, ValueDesc::new(seed, 64))
+    }
+
+    #[test]
+    fn leaf_of_partitions_the_hinted_space() {
+        assert_eq!(leaf_of(0, 8, 799), 0);
+        assert_eq!(leaf_of(799, 8, 799), 7);
+        // past-the-hint keys clamp into the last leaf
+        assert_eq!(leaf_of(5000, 8, 799), 7);
+        let mut last = 0;
+        for k in 0..800u32 {
+            let l = leaf_of(k, 8, 799);
+            assert!(l >= last, "leaf map must be monotone");
+            last = l;
+        }
+    }
+
+    #[test]
+    fn leaf_hash_ignores_seq() {
+        let a = vec![Entry::new(3, 10, ValueDesc::new(7, 64))];
+        let b = vec![Entry::new(3, 99, ValueDesc::new(7, 64))];
+        assert_eq!(hash_leaf(&a), hash_leaf(&b));
+        let c = vec![Entry::new(3, 10, ValueDesc::new(8, 64))];
+        assert_ne!(hash_leaf(&a), hash_leaf(&c));
+    }
+
+    #[test]
+    fn identical_trees_diff_to_nothing() {
+        let es: Vec<Entry> = (0..100).map(|k| entry(k, k)).collect();
+        let build = |es: &[Entry]| {
+            let mut leaf_entries = vec![Vec::new(); 16];
+            for e in es {
+                leaf_entries[leaf_of(e.key, 16, 99)].push(*e);
+            }
+            let leaf_hashes: Vec<u64> =
+                leaf_entries.iter().map(|l| hash_leaf(l)).collect();
+            let mut levels = vec![leaf_hashes];
+            while levels.last().unwrap().len() > 1 {
+                let below = levels.last().unwrap();
+                let parents: Vec<u64> = below
+                    .chunks(4)
+                    .map(|c| {
+                        let mut h = FNV_OFFSET;
+                        h = fnv1a_u64(h, c.len() as u64);
+                        for &x in c {
+                            h = fnv1a_u64(h, x);
+                        }
+                        h
+                    })
+                    .collect();
+                levels.push(parents);
+            }
+            MerkleTree { fanout: 4, levels, leaf_entries }
+        };
+        let t1 = build(&es);
+        let t2 = build(&es);
+        let (dirty, bytes) = t1.diff(&t2);
+        assert!(dirty.is_empty());
+        assert_eq!(bytes, 2 * HASH_WIRE_BYTES, "only the roots crossed");
+
+        // one changed value localizes to exactly one leaf
+        let mut es2 = es.clone();
+        es2[50] = entry(50, 999);
+        let t3 = build(&es2);
+        let (dirty, bytes) = t1.diff(&t3);
+        assert_eq!(dirty, vec![leaf_of(50, 16, 99)]);
+        assert!(bytes > 2 * HASH_WIRE_BYTES);
+    }
+}

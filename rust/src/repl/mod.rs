@@ -1,0 +1,1197 @@
+//! Replication subsystem: WAL-shipped CDC, replica reads, failover and
+//! Merkle anti-entropy across simulated nodes.
+//!
+//! [`ReplicatedDb`] wraps N engine replicas (any [`KvEngine`] kind,
+//! including a sharded store) behind the one engine interface:
+//!
+//! - **CDC shipping** — a change-data-capture shipper tails the
+//!   primary's seq-ordered commit stream ([`KvEngine::cdc_tail`],
+//!   synchronous with every primary op at zero virtual cost) and applies
+//!   the records on each replica over a simulated network link with
+//!   configurable one-way latency and bandwidth. Link traffic is modeled
+//!   as `ReplShip`/`ReplDeliver` events on a private
+//!   [`sim::sched::EventQueue`](crate::sim::sched::EventQueue), pumped
+//!   around every operation, so a run is bit-deterministic.
+//! - **Replica reads** — gets can route to replicas at snapshot
+//!   consistency (each replica *is* the applied prefix of the log):
+//!   [`ReadPolicy::Eventual`] round-robins and counts stale serves,
+//!   [`ReadPolicy::ReadYourWrites`] only serves from a replica that has
+//!   applied everything this session wrote (or observed), falling back
+//!   to the primary.
+//! - **Failover** — [`ReplicatedDb::fail_primary`] crashes the primary
+//!   mid-workload, drains batches already on the wire (shipper-buffered
+//!   batches die with the node), promotes the most-caught-up replica,
+//!   truncates the log to its applied prefix (the asynchronous data-loss
+//!   window) and re-points the shipper at the promoted node's WAL.
+//! - **Anti-entropy** — [`ReplicatedDb::rejoin_crashed`] recovers the
+//!   crashed node through the regular durable-image path
+//!   ([`EngineBuilder::open`]), then repairs its divergence against the
+//!   current primary by exchanging Merkle subtree hashes over key ranges
+//!   and shipping only the differing ranges — strictly fewer bytes than
+//!   a full resync when divergence is partial.
+//!
+//! Each replica runs on its own [`SimEnv`] (its own simulated SSD,
+//! deterministically seeded); node 0 — the initial primary — uses the
+//! caller's environment, so a replication-disabled run is untouched.
+//! All clocks share one global virtual-time axis.
+
+pub mod merkle;
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::engine::{
+    BatchResult, CdcRecord, DbIterator, DurableImage, EngineBuilder,
+    EngineHealth, EngineStats, IterOptions, KvEngine, ScanAmp,
+    SharedBlockCache, Snapshot, WriteBatch,
+};
+use crate::env::SimEnv;
+use crate::lsm::entry::{Entry, Key, Seq, ValueDesc, MAX_USER_KEY};
+use crate::lsm::{DbStats, LsmDb, PutResult, StallStats};
+use crate::sim::sched::{ActorId, Event, EventKind, EventQueue};
+use crate::sim::{Nanos, MILLIS};
+use crate::ssd::SsdConfig;
+
+pub use merkle::{MerkleTree, HASH_WIRE_BYTES};
+
+// ---------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------
+
+/// Where reads go.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPolicy {
+    /// Every read is served by the primary (strong, the default).
+    Primary,
+    /// Reads round-robin over replicas, but only a replica that has
+    /// applied everything this session wrote (or previously observed)
+    /// may serve; otherwise fall back to the primary. No read ever
+    /// observes a state older than one it already saw.
+    ReadYourWrites,
+    /// Reads round-robin over replicas unconditionally; a replica behind
+    /// the primary's committed log serves a stale (but internally
+    /// snapshot-consistent) view, counted in `stale_reads`.
+    Eventual,
+}
+
+impl ReadPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "primary" => Some(Self::Primary),
+            "ryw" | "read-your-writes" => Some(Self::ReadYourWrites),
+            "eventual" => Some(Self::Eventual),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Primary => "primary",
+            Self::ReadYourWrites => "ryw",
+            Self::Eventual => "eventual",
+        }
+    }
+}
+
+/// Replication topology and link model.
+#[derive(Clone, Debug)]
+pub struct ReplConfig {
+    /// Total nodes including the primary (>= 2).
+    pub replicas: usize,
+    pub read_policy: ReadPolicy,
+    /// One-way link propagation delay.
+    pub link_latency: Nanos,
+    /// Per-link bandwidth in MiB/s (store-and-forward, serialized per
+    /// replica link).
+    pub link_mbps: f64,
+    /// Minimum leaderless window after a primary crash (failover
+    /// blackout is `max(election_timeout, last in-flight arrival)`).
+    pub election_timeout: Nanos,
+    /// Merkle anti-entropy: leaf ranges over the key space and tree
+    /// fanout.
+    pub merkle_leaves: usize,
+    pub merkle_fanout: usize,
+    /// Key-space hint splitting the Merkle leaf ranges evenly over the
+    /// populated prefix (keys beyond it clamp into the last leaf).
+    pub key_space: Key,
+    /// Seeds the replicas' deterministic environments.
+    pub seed: u64,
+}
+
+impl Default for ReplConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 3,
+            read_policy: ReadPolicy::Primary,
+            link_latency: 50_000,
+            link_mbps: 1024.0,
+            election_timeout: 10 * MILLIS,
+            merkle_leaves: 64,
+            merkle_fanout: 8,
+            key_space: MAX_USER_KEY,
+            seed: 42,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------
+
+/// Per-replica row of the replication breakdown.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplicaResult {
+    pub node: usize,
+    /// "primary" | "replica" | "down".
+    pub role: String,
+    /// CDC records applied (the primary reports the full log).
+    pub applied_records: u64,
+    /// Highest primary sequence number applied.
+    pub applied_seq: Seq,
+    /// Worst replication lag observed, in records behind the log.
+    pub max_lag: u64,
+    pub mean_lag: f64,
+}
+
+/// Replication section of a run report (`RunResult::replication`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplResult {
+    pub replicas: Vec<ReplicaResult>,
+    pub primary: usize,
+    pub read_policy: String,
+    /// Records captured from the primary's commit stream.
+    pub captured_records: u64,
+    pub shipped_records: u64,
+    pub shipped_bytes: u64,
+    /// Replica-served reads that observed a state behind the log.
+    pub stale_reads: u64,
+    pub replica_reads: u64,
+    pub primary_reads: u64,
+    pub failovers: u64,
+    /// Total leaderless time across failovers.
+    pub blackout_ns: Nanos,
+    /// Committed records no surviving node held at failover.
+    pub lost_records: u64,
+    /// Merkle repair traffic (hashes + differing ranges).
+    pub anti_entropy_bytes: u64,
+    /// What a full resync would have shipped instead.
+    pub full_resync_bytes: u64,
+}
+
+/// What a primary crash + promotion did.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverReport {
+    pub crashed: usize,
+    pub promoted: usize,
+    pub at: Nanos,
+    /// Leaderless window: election timeout or the last in-flight batch
+    /// arrival, whichever is later.
+    pub blackout_ns: Nanos,
+    /// Records the promoted replica was behind at the crash — committed
+    /// on the dead primary, lost with it.
+    pub lag_records: u64,
+}
+
+/// What one Merkle anti-entropy pass shipped.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RepairReport {
+    pub total_leaves: usize,
+    pub dirty_leaves: usize,
+    /// Subtree hashes exchanged (both directions).
+    pub hash_bytes: u64,
+    /// Differing-range entries (and delete keys) shipped.
+    pub entry_bytes: u64,
+    pub entries_shipped: u64,
+    pub keys_deleted: u64,
+    /// Every live primary entry — the full-resync alternative.
+    pub full_resync_bytes: u64,
+    /// Virtual time the repair completed.
+    pub done: Nanos,
+}
+
+// ---------------------------------------------------------------------
+// Nodes
+// ---------------------------------------------------------------------
+
+struct Node {
+    /// `None` while crashed (awaiting rejoin).
+    engine: Option<Box<dyn KvEngine>>,
+    /// `None` for node 0, which lives on the caller's environment.
+    env: Option<SimEnv>,
+    /// Log prefix applied on this node.
+    applied: usize,
+    /// Log prefix already scheduled for shipping to this node.
+    sent: usize,
+    /// When this node's serialized link is free.
+    link_free: Nanos,
+    /// When this node finished its last apply (replica clock frontier).
+    apply_free: Nanos,
+    /// Batches awaiting their `ReplShip` event: `(from, upto)` log ranges.
+    pending_ship: VecDeque<(usize, usize)>,
+    /// Batches on the wire awaiting `ReplDeliver`.
+    pending_deliver: VecDeque<(usize, usize)>,
+    applied_seq: Seq,
+    max_lag: u64,
+    lag_sum: u128,
+    lag_samples: u64,
+}
+
+/// Split a node into its engine and the environment it runs on (its own,
+/// or the caller's for node 0).
+fn node_parts<'a>(
+    node: &'a mut Node,
+    ext: &'a mut SimEnv,
+) -> (&'a mut dyn KvEngine, &'a mut SimEnv) {
+    let engine = node.engine.as_deref_mut().expect("node is down");
+    let env = match &mut node.env {
+        Some(e) => e,
+        None => ext,
+    };
+    (engine, env)
+}
+
+// ---------------------------------------------------------------------
+// The replicated store
+// ---------------------------------------------------------------------
+
+pub struct ReplicatedDb {
+    nodes: Vec<Node>,
+    primary: usize,
+    /// The CDC log: every record captured from any primary, in capture
+    /// order. Replica progress is an index into this log.
+    log: Vec<CdcRecord>,
+    /// Per-stream capture watermark (highest seq captured per stream).
+    capture_wm: Vec<Seq>,
+    /// Private event queue for link traffic (`ReplShip`/`ReplDeliver`,
+    /// actor = destination node), pumped around every operation.
+    q: EventQueue,
+    cfg: ReplConfig,
+    /// Round-robin cursor for replica read routing.
+    rr_next: usize,
+    /// Session watermark for read-your-writes: the log index every
+    /// serving replica must have applied.
+    ryw_floor: usize,
+    /// Ops issued before this instant stall to it (failover blackout).
+    blackout_until: Nanos,
+    /// Crashed node's durable image, held for rejoin.
+    old_image: Option<(usize, DurableImage)>,
+    shipped_records: u64,
+    shipped_bytes: u64,
+    stale_reads: u64,
+    replica_reads: u64,
+    primary_reads: u64,
+    failovers: u64,
+    blackout_ns: Nanos,
+    lost_records: u64,
+    anti_entropy_bytes: u64,
+    full_resync_bytes: u64,
+}
+
+impl ReplicatedDb {
+    /// Build an N-node replicated store; `make(i)` constructs node `i`'s
+    /// engine (all nodes must be the same kind and configuration — the
+    /// replicas re-derive routing from it). Node 0 is the initial
+    /// primary and runs on the caller's `SimEnv`; every other node gets
+    /// its own deterministically-seeded environment.
+    pub fn new(
+        cfg: ReplConfig,
+        mut make: impl FnMut(usize) -> Box<dyn KvEngine>,
+    ) -> Self {
+        assert!(cfg.replicas >= 2, "replication needs at least 2 nodes");
+        let nodes: Vec<Node> = (0..cfg.replicas)
+            .map(|i| Node {
+                engine: Some(make(i)),
+                env: (i > 0).then(|| {
+                    SimEnv::new(
+                        cfg.seed
+                            ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        SsdConfig::default(),
+                    )
+                }),
+                applied: 0,
+                sent: 0,
+                link_free: 0,
+                apply_free: 0,
+                pending_ship: VecDeque::new(),
+                pending_deliver: VecDeque::new(),
+                applied_seq: 0,
+                max_lag: 0,
+                lag_sum: 0,
+                lag_samples: 0,
+            })
+            .collect();
+        let streams = nodes[0].engine.as_ref().unwrap().cdc_streams();
+        Self {
+            nodes,
+            primary: 0,
+            log: Vec::new(),
+            capture_wm: vec![0; streams],
+            q: EventQueue::new(),
+            cfg,
+            rr_next: 0,
+            ryw_floor: 0,
+            blackout_until: 0,
+            old_image: None,
+            shipped_records: 0,
+            shipped_bytes: 0,
+            stale_reads: 0,
+            replica_reads: 0,
+            primary_reads: 0,
+            failovers: 0,
+            blackout_ns: 0,
+            lost_records: 0,
+            anti_entropy_bytes: 0,
+            full_resync_bytes: 0,
+        }
+    }
+
+    pub fn primary_index(&self) -> usize {
+        self.primary
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_live(&self, node: usize) -> bool {
+        self.nodes[node].engine.is_some()
+    }
+
+    /// Log records applied on `node` (the primary trivially holds all).
+    pub fn applied_records(&self, node: usize) -> usize {
+        if node == self.primary {
+            self.log.len()
+        } else {
+            self.nodes[node].applied
+        }
+    }
+
+    /// Records captured from primaries so far.
+    pub fn log_len(&self) -> usize {
+        self.log.len()
+    }
+
+    fn primary_engine(&self) -> &dyn KvEngine {
+        self.nodes[self.primary]
+            .engine
+            .as_deref()
+            .expect("primary is down")
+    }
+
+    fn transit_ns(&self, bytes: u64) -> Nanos {
+        (bytes as f64 * 1e9 / (self.cfg.link_mbps.max(1e-6) * 1024.0 * 1024.0))
+            as Nanos
+    }
+
+    fn gate(&self, at: Nanos) -> Nanos {
+        at.max(self.blackout_until)
+    }
+
+    // -----------------------------------------------------------------
+    // CDC capture and link events
+    // -----------------------------------------------------------------
+
+    /// Capture everything the primary committed past the watermark
+    /// (synchronous, zero virtual cost) and schedule a ship batch to
+    /// every live replica.
+    fn capture(&mut self, ext: &SimEnv, at: Nanos) {
+        let p = self.primary;
+        let recs = {
+            let node = &self.nodes[p];
+            let Some(engine) = node.engine.as_deref() else { return };
+            let env: &SimEnv = node.env.as_ref().unwrap_or(ext);
+            engine.cdc_tail(env, &self.capture_wm)
+        };
+        if !recs.is_empty() {
+            for r in &recs {
+                self.capture_wm[r.stream] =
+                    self.capture_wm[r.stream].max(r.entry.seq);
+            }
+            self.log.extend(recs);
+            for i in 0..self.nodes.len() {
+                if i == p || self.nodes[i].engine.is_none() {
+                    continue;
+                }
+                if self.nodes[i].sent < self.log.len() {
+                    self.nodes[i]
+                        .pending_ship
+                        .push_back((self.nodes[i].sent, self.log.len()));
+                    self.nodes[i].sent = self.log.len();
+                    self.q.push(at, i as ActorId, EventKind::ReplShip);
+                }
+            }
+        }
+        self.sample_lag();
+    }
+
+    fn sample_lag(&mut self) {
+        let len = self.log.len();
+        let p = self.primary;
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            if i == p || node.engine.is_none() {
+                continue;
+            }
+            let lag = (len - node.applied.min(len)) as u64;
+            node.max_lag = node.max_lag.max(lag);
+            node.lag_sum += lag as u128;
+            node.lag_samples += 1;
+        }
+    }
+
+    /// Run every link event due at or before `now`.
+    fn pump(&mut self, ext: &mut SimEnv, now: Nanos) {
+        while self.q.peek_time().is_some_and(|t| t <= now) {
+            let ev = self.q.pop().unwrap();
+            self.handle(ext, ev);
+        }
+    }
+
+    /// Run the queue dry (end-of-run settling); returns the time the
+    /// last apply finished.
+    fn drain(&mut self, ext: &mut SimEnv) -> Nanos {
+        while let Some(ev) = self.q.pop() {
+            self.handle(ext, ev);
+        }
+        self.nodes.iter().map(|n| n.apply_free).max().unwrap_or(0)
+    }
+
+    fn handle(&mut self, ext: &mut SimEnv, ev: Event) {
+        match ev.kind {
+            EventKind::ReplShip => self.ship(ev.at, ev.actor as usize),
+            EventKind::ReplDeliver => {
+                self.deliver(ext, ev.at, ev.actor as usize);
+            }
+            _ => unreachable!("foreign event on the replication queue"),
+        }
+    }
+
+    /// A batch leaves the shipper: serialize it onto the replica's link
+    /// (store-and-forward — the link is busy until delivery).
+    fn ship(&mut self, at: Nanos, i: usize) {
+        let Some((from, upto)) = self.nodes[i].pending_ship.pop_front() else {
+            return;
+        };
+        let bytes: u64 =
+            self.log[from..upto].iter().map(|r| r.wire_bytes()).sum();
+        let start = at.max(self.nodes[i].link_free);
+        let arrive = start + self.cfg.link_latency + self.transit_ns(bytes);
+        self.nodes[i].link_free = arrive;
+        self.nodes[i].pending_deliver.push_back((from, upto));
+        self.shipped_records += (upto - from) as u64;
+        self.shipped_bytes += bytes;
+        self.q.push(arrive, i as ActorId, EventKind::ReplDeliver);
+    }
+
+    /// A batch finished crossing the link: apply it on the replica's own
+    /// environment, preserving primary sequence numbers.
+    fn deliver(&mut self, ext: &mut SimEnv, at: Nanos, i: usize) -> Nanos {
+        let Some((from, upto)) = self.nodes[i].pending_deliver.pop_front()
+        else {
+            return at;
+        };
+        let recs: Vec<CdcRecord> = self.log[from..upto].to_vec();
+        let mut t = at.max(self.nodes[i].apply_free);
+        {
+            let (engine, env) = node_parts(&mut self.nodes[i], ext);
+            for rec in &recs {
+                t = engine.repl_apply(env, t, rec).done;
+            }
+        }
+        let node = &mut self.nodes[i];
+        node.applied = node.applied.max(upto);
+        node.apply_free = node.apply_free.max(t);
+        for rec in &recs {
+            node.applied_seq = node.applied_seq.max(rec.entry.seq);
+        }
+        t
+    }
+
+    // -----------------------------------------------------------------
+    // Read routing
+    // -----------------------------------------------------------------
+
+    /// Pick the node to serve a read: `None` = the primary.
+    fn route_read(&mut self) -> Option<usize> {
+        if self.cfg.read_policy == ReadPolicy::Primary {
+            return None;
+        }
+        let cands: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| i != self.primary && self.nodes[i].engine.is_some())
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+        let pick = cands[self.rr_next % cands.len()];
+        self.rr_next += 1;
+        if self.cfg.read_policy == ReadPolicy::ReadYourWrites
+            && self.nodes[pick].applied < self.ryw_floor
+        {
+            // another caught-up replica may serve; otherwise the primary
+            return cands
+                .into_iter()
+                .find(|&c| self.nodes[c].applied >= self.ryw_floor);
+        }
+        Some(pick)
+    }
+
+    // -----------------------------------------------------------------
+    // Failover
+    // -----------------------------------------------------------------
+
+    /// Crash the current primary at `at` and promote the most-caught-up
+    /// live replica. Batches already on the wire still arrive (and count
+    /// toward the blackout); batches buffered in the dead shipper are
+    /// lost. The log truncates to the promoted node's applied prefix —
+    /// committed records past it are the asynchronous-replication loss
+    /// window — and the shipper re-points at the promoted node's WAL.
+    /// The crashed node's durable image is kept for `rejoin_crashed`.
+    pub fn fail_primary(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> FailoverReport {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let old = self.primary;
+        assert!(
+            self.old_image.is_none(),
+            "previous crashed node has not rejoined"
+        );
+        // drain the wire: deliveries land at their scheduled arrival,
+        // un-popped ship batches die with the primary
+        let mut last_arrival = at;
+        while let Some(ev) = self.q.pop() {
+            let i = ev.actor as usize;
+            match ev.kind {
+                EventKind::ReplShip => {
+                    self.nodes[i].pending_ship.pop_front();
+                }
+                EventKind::ReplDeliver => {
+                    let done = self.deliver(env, ev.at.max(at), i);
+                    last_arrival = last_arrival.max(done);
+                }
+                _ => unreachable!("foreign event on the replication queue"),
+            }
+        }
+        for node in &mut self.nodes {
+            node.pending_ship.clear();
+            node.sent = node.applied;
+        }
+        let promoted = (0..self.nodes.len())
+            .filter(|&i| i != old && self.nodes[i].engine.is_some())
+            .max_by_key(|&i| (self.nodes[i].applied, std::cmp::Reverse(i)))
+            .expect("failover requires at least one live replica");
+        // power-loss the old primary on its own environment; the image
+        // (and its device state) waits for rejoin
+        let engine = self.nodes[old].engine.take().expect("primary engine");
+        let image = {
+            let node = &mut self.nodes[old];
+            let nenv = match &mut node.env {
+                Some(e) => e,
+                None => env,
+            };
+            engine.crash(nenv, at)
+        };
+        self.old_image = Some((old, image));
+        let lag_records =
+            (self.log.len() - self.nodes[promoted].applied) as u64;
+        self.log.truncate(self.nodes[promoted].applied);
+        // re-point the shipper: watermarks restart from the promoted
+        // node's history (its WAL holds the applied records with their
+        // original seqs, so tailing resumes seamlessly)
+        let mut wm = vec![0; self.capture_wm.len()];
+        for r in &self.log {
+            wm[r.stream] = wm[r.stream].max(r.entry.seq);
+        }
+        self.capture_wm = wm;
+        self.primary = promoted;
+        let blackout_until =
+            (at + self.cfg.election_timeout).max(last_arrival);
+        self.blackout_until = self.blackout_until.max(blackout_until);
+        // survivors behind the promoted node catch up from its history
+        for i in 0..self.nodes.len() {
+            if i == promoted || self.nodes[i].engine.is_none() {
+                continue;
+            }
+            let node = &mut self.nodes[i];
+            node.applied = node.applied.min(self.log.len());
+            node.sent = node.applied;
+            if node.sent < self.log.len() {
+                node.pending_ship.push_back((node.sent, self.log.len()));
+                node.sent = self.log.len();
+                self.q.push(blackout_until, i as ActorId, EventKind::ReplShip);
+            }
+        }
+        self.failovers += 1;
+        self.blackout_ns += blackout_until - at;
+        self.lost_records += lag_records;
+        FailoverReport {
+            crashed: old,
+            promoted,
+            at,
+            blackout_ns: blackout_until - at,
+            lag_records,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Anti-entropy rejoin
+    // -----------------------------------------------------------------
+
+    /// Bring the crashed ex-primary back: recover it from its durable
+    /// image through the regular open path, then repair its divergence
+    /// against the current primary with a Merkle range exchange. After
+    /// repair the node mirrors the primary and resumes tailing the CDC
+    /// stream as an ordinary replica.
+    pub fn rejoin_crashed(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> RepairReport {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let (idx, image) =
+            self.old_image.take().expect("no crashed node to rejoin");
+        let (engine, t_rec) = {
+            let node = &mut self.nodes[idx];
+            let nenv = match &mut node.env {
+                Some(e) => e,
+                None => &mut *env,
+            };
+            EngineBuilder::open(nenv, at, image)
+        };
+        self.nodes[idx].engine = Some(engine);
+        let report = self.anti_entropy(env, t_rec, idx);
+        let len = self.log.len();
+        let top_seq = self.capture_wm.iter().copied().max().unwrap_or(0);
+        let node = &mut self.nodes[idx];
+        node.applied = len;
+        node.sent = len;
+        node.apply_free = node.apply_free.max(report.done);
+        node.link_free = node.link_free.max(report.done);
+        node.applied_seq = node.applied_seq.max(top_seq);
+        self.anti_entropy_bytes += report.hash_bytes + report.entry_bytes;
+        self.full_resync_bytes += report.full_resync_bytes;
+        report
+    }
+
+    /// Merkle exchange + range repair of node `idx` against the primary.
+    fn anti_entropy(
+        &mut self,
+        ext: &mut SimEnv,
+        at: Nanos,
+        idx: usize,
+    ) -> RepairReport {
+        let leaves = self.cfg.merkle_leaves;
+        let fanout = self.cfg.merkle_fanout;
+        let ks = self.cfg.key_space;
+        let latency = self.cfg.link_latency;
+        let p = self.primary;
+        let (ptree, _) = {
+            let (engine, env) = node_parts(&mut self.nodes[p], ext);
+            MerkleTree::build(engine, env, at, leaves, fanout, ks)
+        };
+        let (rtree, t0) = {
+            let (engine, env) = node_parts(&mut self.nodes[idx], ext);
+            MerkleTree::build(engine, env, at, leaves, fanout, ks)
+        };
+        let (dirty, hash_bytes) = ptree.diff(&rtree);
+        let mut t = t0;
+        let mut entry_bytes = 0u64;
+        let mut entries_shipped = 0u64;
+        let mut keys_deleted = 0u64;
+        for &leaf in &dirty {
+            let want = &ptree.leaf_entries[leaf];
+            let have = &rtree.leaf_entries[leaf];
+            let want_keys: HashMap<Key, ValueDesc> =
+                want.iter().map(|e| (e.key, e.val)).collect();
+            let have_keys: HashMap<Key, ValueDesc> =
+                have.iter().map(|e| (e.key, e.val)).collect();
+            // only the difference crosses the wire: changed/missing
+            // entries, plus a key list for deletions
+            let to_ship: Vec<Entry> = want
+                .iter()
+                .filter(|e| have_keys.get(&e.key) != Some(&e.val))
+                .copied()
+                .collect();
+            let to_delete: Vec<Key> = have
+                .iter()
+                .filter(|e| !want_keys.contains_key(&e.key))
+                .map(|e| e.key)
+                .collect();
+            let bytes = to_ship.iter().map(|e| e.encoded_len()).sum::<u64>()
+                + 8 * to_delete.len() as u64;
+            entry_bytes += bytes;
+            let link_free = self.nodes[idx].link_free;
+            t = t.max(link_free) + latency + self.transit_ns(bytes);
+            let (engine, env) = node_parts(&mut self.nodes[idx], ext);
+            for &k in &to_delete {
+                t = engine.delete(env, t, k).done;
+                keys_deleted += 1;
+            }
+            for e in &to_ship {
+                t = engine.put(env, t, e.key, e.val).done;
+                entries_shipped += 1;
+            }
+        }
+        self.nodes[idx].link_free = self.nodes[idx].link_free.max(t);
+        RepairReport {
+            total_leaves: leaves,
+            dirty_leaves: dirty.len(),
+            hash_bytes,
+            entry_bytes,
+            entries_shipped,
+            keys_deleted,
+            full_resync_bytes: ptree.full_bytes(),
+            done: t,
+        }
+    }
+
+    /// Merkle root of one node's live data (divergence checks in tests
+    /// and examples; charges a real scan on the node's environment).
+    pub fn node_digest(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        idx: usize,
+    ) -> u64 {
+        let leaves = self.cfg.merkle_leaves;
+        let fanout = self.cfg.merkle_fanout;
+        let ks = self.cfg.key_space;
+        let (engine, nenv) = node_parts(&mut self.nodes[idx], env);
+        MerkleTree::build(engine, nenv, at, leaves, fanout, ks).0.root()
+    }
+
+    /// Point-lookup on one specific node (tests: compare a replica's
+    /// view against the primary's without going through read routing).
+    pub fn node_get(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        idx: usize,
+        key: Key,
+    ) -> (Option<ValueDesc>, Nanos) {
+        let (engine, nenv) = node_parts(&mut self.nodes[idx], env);
+        engine.get(nenv, at, key)
+    }
+
+    // -----------------------------------------------------------------
+    // Reporting
+    // -----------------------------------------------------------------
+
+    pub fn results(&self) -> ReplResult {
+        let replicas = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let role = if n.engine.is_none() {
+                    "down"
+                } else if i == self.primary {
+                    "primary"
+                } else {
+                    "replica"
+                };
+                ReplicaResult {
+                    node: i,
+                    role: role.into(),
+                    applied_records: self.applied_records(i) as u64,
+                    applied_seq: if i == self.primary {
+                        self.capture_wm.iter().copied().max().unwrap_or(0)
+                    } else {
+                        n.applied_seq
+                    },
+                    max_lag: n.max_lag,
+                    mean_lag: if n.lag_samples == 0 {
+                        0.0
+                    } else {
+                        n.lag_sum as f64 / n.lag_samples as f64
+                    },
+                }
+            })
+            .collect();
+        ReplResult {
+            replicas,
+            primary: self.primary,
+            read_policy: self.cfg.read_policy.label().into(),
+            captured_records: self.log.len() as u64,
+            shipped_records: self.shipped_records,
+            shipped_bytes: self.shipped_bytes,
+            stale_reads: self.stale_reads,
+            replica_reads: self.replica_reads,
+            primary_reads: self.primary_reads,
+            failovers: self.failovers,
+            blackout_ns: self.blackout_ns,
+            lost_records: self.lost_records,
+            anti_entropy_bytes: self.anti_entropy_bytes,
+            full_resync_bytes: self.full_resync_bytes,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// EngineStats: delegate to the current primary
+// ---------------------------------------------------------------------
+
+impl EngineStats for ReplicatedDb {
+    fn main_db(&self) -> &LsmDb {
+        self.primary_engine().main_db()
+    }
+
+    fn kvaccel(&self) -> Option<&crate::kvaccel::KvaccelDb> {
+        self.primary_engine().kvaccel()
+    }
+
+    fn sharded(&self) -> Option<&crate::shard::ShardedDb> {
+        self.primary_engine().sharded()
+    }
+
+    fn replicated(&self) -> Option<&ReplicatedDb> {
+        Some(self)
+    }
+
+    fn stall_stats(&self) -> &StallStats {
+        self.primary_engine().stall_stats()
+    }
+
+    fn db_stats(&self) -> &DbStats {
+        self.primary_engine().db_stats()
+    }
+
+    fn redirected_writes(&self) -> u64 {
+        self.primary_engine().redirected_writes()
+    }
+
+    fn rollbacks(&self) -> u64 {
+        self.primary_engine().rollbacks()
+    }
+
+    fn scan_amp(&self) -> ScanAmp {
+        self.primary_engine().scan_amp()
+    }
+
+    fn cache_stats(&self) -> crate::engine::CacheStats {
+        self.primary_engine().cache_stats()
+    }
+
+    fn health(&self) -> EngineHealth {
+        self.primary_engine().health()
+    }
+}
+
+// ---------------------------------------------------------------------
+// KvEngine: primary writes, policy-routed reads
+// ---------------------------------------------------------------------
+
+impl KvEngine for ReplicatedDb {
+    fn put(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+        val: ValueDesc,
+    ) -> PutResult {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        let r = {
+            let (engine, penv) = node_parts(&mut self.nodes[p], env);
+            engine.put(penv, at, key, val)
+        };
+        env.clock.advance_to(r.done);
+        self.capture(env, r.done);
+        self.ryw_floor = self.ryw_floor.max(self.log.len());
+        r
+    }
+
+    fn delete(&mut self, env: &mut SimEnv, at: Nanos, key: Key) -> PutResult {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        let r = {
+            let (engine, penv) = node_parts(&mut self.nodes[p], env);
+            engine.delete(penv, at, key)
+        };
+        env.clock.advance_to(r.done);
+        self.capture(env, r.done);
+        self.ryw_floor = self.ryw_floor.max(self.log.len());
+        r
+    }
+
+    fn get(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+    ) -> (Option<ValueDesc>, Nanos) {
+        let at = self.gate(at);
+        self.pump(env, at);
+        match self.route_read() {
+            None => {
+                self.primary_reads += 1;
+                if self.cfg.read_policy == ReadPolicy::ReadYourWrites {
+                    self.ryw_floor = self.ryw_floor.max(self.log.len());
+                }
+                let p = self.primary;
+                let (engine, penv) = node_parts(&mut self.nodes[p], env);
+                let (v, done) = engine.get(penv, at, key);
+                env.clock.advance_to(done);
+                (v, done)
+            }
+            Some(i) => {
+                self.replica_reads += 1;
+                if self.nodes[i].applied < self.log.len() {
+                    self.stale_reads += 1;
+                }
+                if self.cfg.read_policy == ReadPolicy::ReadYourWrites {
+                    // monotonic session: never serve below what we saw
+                    self.ryw_floor = self.ryw_floor.max(self.nodes[i].applied);
+                }
+                let lat = self.cfg.link_latency;
+                let t0 = (at + lat).max(self.nodes[i].apply_free);
+                let (v, done_r) = {
+                    let (engine, renv) = node_parts(&mut self.nodes[i], env);
+                    engine.get(renv, t0, key)
+                };
+                self.nodes[i].apply_free =
+                    self.nodes[i].apply_free.max(done_r);
+                let done = done_r + lat;
+                env.clock.advance_to(done);
+                (v, done)
+            }
+        }
+    }
+
+    fn write_batch(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        batch: &WriteBatch,
+    ) -> BatchResult {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        let r = {
+            let (engine, penv) = node_parts(&mut self.nodes[p], env);
+            engine.write_batch(penv, at, batch)
+        };
+        env.clock.advance_to(r.done);
+        self.capture(env, r.done);
+        self.ryw_floor = self.ryw_floor.max(self.log.len());
+        r
+    }
+
+    fn snapshot(&mut self, env: &mut SimEnv, at: Nanos) -> Snapshot {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        let (engine, penv) = node_parts(&mut self.nodes[p], env);
+        engine.snapshot(penv, at)
+    }
+
+    fn iter(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        opts: IterOptions,
+    ) -> Box<dyn DbIterator> {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        let (engine, penv) = node_parts(&mut self.nodes[p], env);
+        engine.iter(penv, at, opts)
+    }
+
+    fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        {
+            let (engine, penv) = node_parts(&mut self.nodes[p], env);
+            engine.tick(penv, at);
+        }
+        self.capture(env, at);
+    }
+
+    fn kvaccel_mut(&mut self) -> Option<&mut crate::kvaccel::KvaccelDb> {
+        self.nodes[self.primary]
+            .engine
+            .as_deref_mut()
+            .and_then(|e| e.kvaccel_mut())
+    }
+
+    fn set_block_cache(&mut self, cache: SharedBlockCache) {
+        // each replica is an independent node with its own device —
+        // only the primary (the engine the caller sees) takes the cache
+        if let Some(e) = self.nodes[self.primary].engine.as_deref_mut() {
+            e.set_block_cache(cache);
+        }
+    }
+
+    fn flush(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        let at = self.gate(at);
+        self.pump(env, at);
+        let p = self.primary;
+        let t = {
+            let (engine, penv) = node_parts(&mut self.nodes[p], env);
+            engine.flush(penv, at)
+        };
+        env.clock.advance_to(t);
+        self.capture(env, t);
+        t
+    }
+
+    fn finish(&mut self, env: &mut SimEnv, at: Nanos) -> Result<Nanos> {
+        let at = self.gate(at);
+        self.pump(env, at);
+        self.capture(env, at);
+        let settled = self.drain(env).max(at);
+        let mut t = settled;
+        for node in &mut self.nodes {
+            if node.engine.is_none() {
+                continue;
+            }
+            let at_i = node.apply_free.max(at);
+            let (engine, nenv) = node_parts(node, env);
+            t = t.max(engine.finish(nenv, at_i)?);
+        }
+        env.clock.advance_to(t);
+        Ok(t)
+    }
+
+    fn close(
+        mut self: Box<Self>,
+        env: &mut SimEnv,
+        at: Nanos,
+    ) -> Result<DurableImage> {
+        let at = self.gate(at);
+        self.pump(env, at);
+        self.capture(env, at);
+        let _ = self.drain(env);
+        let p = self.primary;
+        let engine = self.nodes[p].engine.take().expect("primary engine");
+        let nenv = match &mut self.nodes[p].env {
+            Some(e) => e,
+            None => env,
+        };
+        engine.close(nenv, at)
+    }
+
+    fn crash(mut self: Box<Self>, env: &mut SimEnv, at: Nanos) -> DurableImage {
+        let p = self.primary;
+        let engine = self.nodes[p].engine.take().expect("primary engine");
+        let nenv = match &mut self.nodes[p].env {
+            Some(e) => e,
+            None => env,
+        };
+        engine.crash(nenv, at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemKind;
+    use crate::lsm::LsmOptions;
+
+    fn make_repl(n: usize, policy: ReadPolicy) -> (ReplicatedDb, SimEnv) {
+        let cfg = ReplConfig {
+            replicas: n,
+            read_policy: policy,
+            key_space: 10_000,
+            ..ReplConfig::default()
+        };
+        let db = ReplicatedDb::new(cfg, |_| {
+            EngineBuilder::new(SystemKind::RocksDb { slowdown: true })
+                .opts(LsmOptions::small_for_test())
+                .build()
+        });
+        (db, SimEnv::new(7, SsdConfig::default()))
+    }
+
+    #[test]
+    fn replicas_converge_after_drain() {
+        let (mut db, mut env) = make_repl(3, ReadPolicy::Primary);
+        let mut t = 0;
+        for k in 0..500u32 {
+            t = db.put(&mut env, t, k % 200, ValueDesc::new(k, 512)).done;
+        }
+        let end = db.finish(&mut env, t).unwrap();
+        assert_eq!(db.log_len(), 500);
+        for i in 1..3 {
+            assert_eq!(db.applied_records(i), 500, "replica {i} lagging");
+        }
+        let d0 = db.node_digest(&mut env, end, 0);
+        let d1 = db.node_digest(&mut env, end, 1);
+        let d2 = db.node_digest(&mut env, end, 2);
+        assert_eq!(d0, d1);
+        assert_eq!(d0, d2);
+    }
+
+    #[test]
+    fn read_your_writes_sees_own_puts() {
+        let (mut db, mut env) = make_repl(2, ReadPolicy::ReadYourWrites);
+        let mut t = 0;
+        for k in 0..100u32 {
+            t = db.put(&mut env, t, k, ValueDesc::new(k, 256)).done;
+            // immediately read back: the replica cannot have applied the
+            // write yet (the link has latency), so RYW must fall back
+            let (got, done) = db.get(&mut env, t, k);
+            assert_eq!(got, Some(ValueDesc::new(k, 256)), "lost own write {k}");
+            t = done;
+        }
+        let r = db.results();
+        assert_eq!(r.stale_reads, 0, "RYW never serves stale");
+    }
+
+    #[test]
+    fn eventual_reads_route_to_replicas() {
+        let (mut db, mut env) = make_repl(3, ReadPolicy::Eventual);
+        let mut t = 0;
+        for k in 0..200u32 {
+            t = db.put(&mut env, t, k, ValueDesc::new(k, 256)).done;
+        }
+        for k in 0..50u32 {
+            let (_, done) = db.get(&mut env, t, k);
+            t = done;
+        }
+        let r = db.results();
+        assert_eq!(r.replica_reads, 50, "eventual routes every read");
+        assert_eq!(r.primary_reads, 0);
+    }
+
+    #[test]
+    fn failover_promotes_and_recovers_writes() {
+        let (mut db, mut env) = make_repl(3, ReadPolicy::Primary);
+        let mut t = 0;
+        for k in 0..300u32 {
+            t = db.put(&mut env, t, k, ValueDesc::new(k, 512)).done;
+        }
+        let fo = db.fail_primary(&mut env, t);
+        assert_eq!(fo.crashed, 0);
+        assert!(fo.promoted == 1 || fo.promoted == 2);
+        assert!(!db.is_live(0));
+        // the store keeps serving through the promoted node
+        t = t.max(fo.at + fo.blackout_ns);
+        for k in 300..400u32 {
+            t = db.put(&mut env, t, k, ValueDesc::new(k, 512)).done;
+        }
+        let (got, done) = db.get(&mut env, t, 350);
+        assert_eq!(got, Some(ValueDesc::new(350, 512)));
+        t = done;
+        // rejoin the crashed node and verify zero divergence
+        let rep = db.rejoin_crashed(&mut env, t);
+        assert!(db.is_live(0));
+        assert!(
+            rep.hash_bytes + rep.entry_bytes < rep.full_resync_bytes,
+            "anti-entropy ({} B) must beat a full resync ({} B)",
+            rep.hash_bytes + rep.entry_bytes,
+            rep.full_resync_bytes
+        );
+        let end = db.finish(&mut env, rep.done).unwrap();
+        let dp = db.node_digest(&mut env, end, db.primary_index());
+        let d0 = db.node_digest(&mut env, end, 0);
+        assert_eq!(dp, d0, "rejoined node still diverged after repair");
+    }
+}

@@ -703,6 +703,48 @@ impl KvEngine for ShardedDb {
         }
     }
 
+    /// One CDC stream per shard: the children have independent sequence
+    /// domains (per-shard WAL streams), so their tails cannot be merged
+    /// into one ordered log — the shipper keeps one watermark per stream
+    /// and the replica's identically-seeded router re-derives the target
+    /// shard from each record's key.
+    fn cdc_streams(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn cdc_tail(
+        &self,
+        env: &SimEnv,
+        wm: &[crate::lsm::Seq],
+    ) -> Vec<crate::engine::CdcRecord> {
+        let mut out = Vec::new();
+        for (i, sh) in self.shards.iter().enumerate() {
+            let w = [wm.get(i).copied().unwrap_or(0)];
+            out.extend(
+                sh.cdc_tail(env, &w)
+                    .into_iter()
+                    .map(|r| crate::engine::CdcRecord { stream: i, ..r }),
+            );
+        }
+        out
+    }
+
+    fn repl_apply(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        rec: &crate::engine::CdcRecord,
+    ) -> PutResult {
+        // route by key, not by stream: the router is rebuilt from the
+        // same spec on every replica, so this lands on the shard whose
+        // sequence domain the record's seq belongs to
+        let s = self.router.shard_of(rec.entry.key);
+        self.pre_op(env, at, Some(s));
+        let r = self.shards[s].repl_apply(env, at, rec);
+        self.refresh_stats();
+        r
+    }
+
     /// Clean shutdown: every shard closes (final rollback, sealed +
     /// fsync'd WAL, CleanShutdown edit), then the top-level shard
     /// manifest is written durably.

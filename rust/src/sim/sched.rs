@@ -30,6 +30,13 @@ pub enum EventKind {
     /// device grants (`qos::QosController::on_tick`). The actor id is
     /// the reserved slot one past the last client.
     QosTick,
+    /// Replication: a CDC batch leaves the primary's shipper for the
+    /// replica identified by the actor id (`repl::ReplicatedDb` runs
+    /// its own queue; the workload loop never sees these).
+    ReplShip,
+    /// Replication: a CDC batch finishes crossing the simulated link
+    /// and is applied on the replica identified by the actor id.
+    ReplDeliver,
 }
 
 /// A scheduled wake-up for one actor.

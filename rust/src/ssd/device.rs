@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::lsm::entry::{Entry, Key, ValueDesc};
+use crate::lsm::entry::{Entry, Key, Seq, ValueDesc};
 use crate::sim::{Nanos, MICROS};
 
 use super::block_if::{BlockFs, FileId};
@@ -341,6 +341,18 @@ impl SsdDevice {
     /// simulated round-trip but must still observe the live value.
     pub fn kv_peek(&self, ns: NamespaceId, key: Key) -> Option<ValueDesc> {
         self.kv.ns(ns).ok().and_then(|d| d.peek(key))
+    }
+
+    /// Zero-cost CDC tail of one KV namespace: buffered entries with
+    /// `seq > wm`, sorted by seq (`kv_peek` semantics — no PCIe/NAND/ARM
+    /// time, no counters; the replication link charges the transfer).
+    pub fn kv_tail_since(&self, ns: NamespaceId, wm: Seq) -> Vec<Entry> {
+        self.kv.ns(ns).map(|d| d.tail_since(wm)).unwrap_or_default()
+    }
+
+    /// Largest sequence number buffered in one KV namespace (zero-cost).
+    pub fn kv_max_seq(&self, ns: NamespaceId) -> Seq {
+        self.kv.ns(ns).map(|d| d.max_seq()).unwrap_or(0)
     }
 
     /// Buffered Dev-LSM size (the Detector/Rollback trigger signal).

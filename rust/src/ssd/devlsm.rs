@@ -325,6 +325,28 @@ impl DevLsm {
         }
     }
 
+    /// CDC tailing cursor: every buffered entry with `seq > wm`, sorted
+    /// by seq. Zero-cost like `peek` — the shipper's capture runs at
+    /// host speed against capacitor-backed state; only the simulated
+    /// replication link charges time.
+    pub fn tail_since(&self, wm: Seq) -> Vec<Entry> {
+        let mut out: Vec<Entry> = self
+            .runs
+            .iter()
+            .flat_map(|r| r.entries.iter())
+            .filter(|e| e.seq > wm)
+            .copied()
+            .collect();
+        out.extend(
+            self.mem
+                .iter()
+                .filter(|&(_, &(seq, _))| seq > wm)
+                .map(|(&k, &(seq, val))| Entry { key: k, seq, val }),
+        );
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
     /// Largest sequence number resident anywhere in the buffer (recovery
     /// resumes the shared sequence domain above it).
     pub fn max_seq(&self) -> Seq {

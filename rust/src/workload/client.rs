@@ -699,6 +699,10 @@ pub fn run_spec_traced(
                     );
                 }
             }
+            // replication events live on the ReplicatedDb's private
+            // queue (pumped around each engine call); they never reach
+            // the workload scheduler
+            EventKind::ReplShip | EventKind::ReplDeliver => {}
         }
     }
 
@@ -912,6 +916,7 @@ fn assemble(
         scan_lat: HistogramSummary::from(&stats.scan_lat),
         scan_amp: sys.scan_amp(),
         tenants: qos.map(|q| q.into_results(duration_s)).unwrap_or_default(),
+        replication: sys.replicated().map(|r| r.results()),
     }
 }
 

@@ -5,7 +5,9 @@
 //! presets over it; `keygen` provides the deterministic key/value
 //! streams (Uniform/Zipfian/Latest); `stats` the measurement plumbing.
 //! Multi-tenant QoS (token buckets, SLO shedding) lives in `crate::qos`
-//! and is re-exported here because specs carry it.
+//! and is re-exported here because specs carry it; likewise the
+//! replication result types from `crate::repl`, because run results
+//! carry them.
 
 pub mod client;
 pub mod db_bench;
@@ -13,6 +15,7 @@ pub mod keygen;
 pub mod stats;
 
 pub use crate::qos::{QosConfig, TenantId, TenantResult, TenantSpec};
+pub use crate::repl::{ReplConfig, ReplResult, ReplicaResult, ReplicatedDb};
 pub use client::{
     run_spec, run_spec_traced, ClientConfig, LoopMode, OpKind, OpMix, OpTrace, Pace,
     WorkloadSpec,

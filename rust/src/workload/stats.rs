@@ -192,6 +192,12 @@ pub struct RunResult {
     /// (empty otherwise): throughput, latency, queueing, throttling
     /// and shedding, per tenant.
     pub tenants: Vec<crate::qos::TenantResult>,
+    /// Replication breakdown when the engine was a [`ReplicatedDb`]
+    /// (`None` otherwise): per-replica applied progress and lag, CDC
+    /// shipping volume, read routing, failover and anti-entropy totals.
+    ///
+    /// [`ReplicatedDb`]: crate::repl::ReplicatedDb
+    pub replication: Option<crate::repl::ReplResult>,
 }
 
 #[derive(Clone, Copy, Debug, Default)]

@@ -1,0 +1,272 @@
+//! Replication conformance: (1) with replication off — or with the
+//! engine wrapped in a `ReplicatedDb` under primary reads — every
+//! engine kind must produce the *bit-identical* op trace of the
+//! pre-replication scheduler (the CDC capture path is synchronous and
+//! free, replica work runs on replica environments); (2) a
+//! read-your-writes session never observes a value older than one it
+//! already saw; (3) for randomized primary crash points the promoted
+//! replica serves a per-key prefix-consistent view of the acked
+//! writes; (4) Merkle anti-entropy converges a rejoined node's digest
+//! to the primary's while shipping strictly fewer bytes than a full
+//! resync — including over sharded (multi-stream) engines.
+
+use std::collections::HashMap;
+
+use kvaccel::baselines::SystemKind;
+use kvaccel::engine::{EngineBuilder, KvEngine};
+use kvaccel::env::SimEnv;
+use kvaccel::kvaccel::RollbackScheme;
+use kvaccel::lsm::{Key, LsmOptions, ValueDesc};
+use kvaccel::repl::{ReadPolicy, ReplConfig, ReplicatedDb};
+use kvaccel::shard::ShardPolicy;
+use kvaccel::sim::{Nanos, NS_PER_SEC};
+use kvaccel::ssd::SsdConfig;
+use kvaccel::workload::{
+    run_spec_traced, ClientConfig, KeyDist, LoopMode, OpMix, WorkloadSpec,
+};
+
+const ENGINE_KINDS: [SystemKind; 6] = [
+    SystemKind::RocksDb { slowdown: true },
+    SystemKind::RocksDb { slowdown: false },
+    SystemKind::Adoc,
+    SystemKind::Kvaccel { scheme: RollbackScheme::Eager },
+    SystemKind::Kvaccel { scheme: RollbackScheme::Lazy },
+    SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+];
+
+fn plain(kind: SystemKind) -> Box<dyn KvEngine> {
+    EngineBuilder::new(kind).opts(LsmOptions::small_for_test()).build()
+}
+
+fn replicated(
+    kind: SystemKind,
+    n: usize,
+    policy: ReadPolicy,
+    key_space: Key,
+) -> ReplicatedDb {
+    let cfg = ReplConfig {
+        replicas: n,
+        read_policy: policy,
+        key_space,
+        seed: 21,
+        ..ReplConfig::default()
+    };
+    ReplicatedDb::new(cfg, |_| plain(kind))
+}
+
+/// Closed + open clients with a mixed op set — every scheduler path the
+/// replication hooks touch (puts, gets, deletes, scans, batches).
+fn mixed_spec(duration: Nanos) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "repl-conformance".into(),
+        clients: vec![
+            ClientConfig::writer(),
+            ClientConfig {
+                mix: OpMix { put: 3, get: 1, delete: 1, scan: 1, batch: 1 },
+                mode: LoopMode::OpenPoisson { ops_per_sec: 1_500.0 },
+                dist: KeyDist::Zipfian { theta: 0.9 },
+                scan_len: 8,
+                seed_tag: 17,
+                ..ClientConfig::default()
+            },
+            ClientConfig::reader()
+                .with_mode(LoopMode::OpenFixed { ops_per_sec: 800.0 })
+                .with_seed_tag(99),
+        ],
+        duration,
+        start_at: 0,
+        key_space: 20_000,
+        value_size: 4096,
+        seed: 7,
+        stop_after_ops: None,
+        qos: None,
+    }
+}
+
+#[test]
+fn replicated_primary_timeline_is_bit_identical_to_plain_engine() {
+    let spec = mixed_spec(NS_PER_SEC / 2);
+    for kind in ENGINE_KINDS {
+        let mut s1 = plain(kind);
+        let mut env1 = SimEnv::new(21, SsdConfig::default());
+        let (r1, t1) = run_spec_traced(&mut *s1, &mut env1, &spec, true);
+
+        let mut s2 = replicated(kind, 2, ReadPolicy::Primary, 20_000);
+        let mut env2 = SimEnv::new(21, SsdConfig::default());
+        let (r2, t2) = run_spec_traced(&mut s2, &mut env2, &spec, true);
+
+        assert_eq!(t1, t2, "{}: replication perturbed the op trace", kind.label());
+        assert_eq!(r1.writes.total, r2.writes.total, "{}", kind.label());
+        assert_eq!(r1.reads.total, r2.reads.total, "{}", kind.label());
+        assert_eq!(r1.write_lat.p99_us, r2.write_lat.p99_us, "{}", kind.label());
+        assert_eq!(r1.queue_delay.p99_us, r2.queue_delay.p99_us, "{}", kind.label());
+        // the only difference: the replicated run reports its breakdown
+        assert!(r1.replication.is_none(), "{}: plain run grew a repl row", kind.label());
+        let rep = r2.replication.expect("replicated run must report");
+        assert_eq!(rep.replicas.len(), 2, "{}", kind.label());
+        assert!(rep.captured_records > 0, "{}: CDC captured nothing", kind.label());
+        assert_eq!(
+            rep.replica_reads, 0,
+            "{}: primary policy must never route to a replica",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn read_your_writes_never_observes_regression() {
+    let mut db = replicated(
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+        3,
+        ReadPolicy::ReadYourWrites,
+        10_000,
+    );
+    let mut env = SimEnv::new(5, SsdConfig::default());
+    // overwrite a small key set so reads race the shipper; the session's
+    // view of each key must only ever move forward
+    let mut latest: HashMap<Key, ValueDesc> = HashMap::new();
+    let mut observed: HashMap<Key, u32> = HashMap::new();
+    let mut t = 0;
+    for i in 0..400u32 {
+        let k = i % 37;
+        let val = ValueDesc::new(i, 512);
+        t = db.put(&mut env, t, k, val).done;
+        latest.insert(k, val);
+        let probe = (i.wrapping_mul(7)) % 37;
+        let (got, done) = db.get(&mut env, t, probe);
+        t = done;
+        if let Some(v) = got {
+            let floor = observed.get(&probe).copied().unwrap_or(0);
+            assert!(
+                v.seed >= floor,
+                "key {probe} regressed: saw seed {} after {floor}",
+                v.seed
+            );
+            observed.insert(probe, v.seed);
+        }
+        // read-your-writes: our own writes are always visible
+        if let Some(want) = latest.get(&probe) {
+            assert_eq!(got, Some(*want), "own write to {probe} invisible");
+        }
+    }
+    let r = db.results();
+    assert_eq!(r.stale_reads, 0, "RYW served a stale view");
+    assert!(
+        r.replica_reads + r.primary_reads == 400,
+        "read routing lost reads: {r:?}"
+    );
+}
+
+#[test]
+fn randomized_crash_points_promote_a_prefix_consistent_replica() {
+    // deterministic pseudo-random crash points per engine kind, as in
+    // the PR4 recovery conformance: the promoted replica must serve
+    // every acked write (the CDC wire drains at failover, so the full
+    // acked prefix survives the crash)
+    let mut x: u64 = 0x9E37_79B9;
+    for kind in [
+        SystemKind::RocksDb { slowdown: true },
+        SystemKind::Adoc,
+        SystemKind::Kvaccel { scheme: RollbackScheme::Disabled },
+    ] {
+        for trial in 0..3u64 {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let n = 150 + (x % 600) as u32;
+            let mut db = replicated(kind, 2, ReadPolicy::Primary, 701);
+            let mut env = SimEnv::new(100 + trial, SsdConfig::default());
+            let mut acked: HashMap<Key, Option<ValueDesc>> = HashMap::new();
+            let mut t = 0;
+            for i in 0..n {
+                let k = (i * 37) % 701;
+                if i % 23 == 5 {
+                    t = db.delete(&mut env, t, k).done;
+                    acked.insert(k, None);
+                } else {
+                    let val = ValueDesc::new(i, 1024);
+                    t = db.put(&mut env, t, k, val).done;
+                    acked.insert(k, Some(val));
+                }
+            }
+            let fo = db.fail_primary(&mut env, t);
+            assert_eq!(fo.crashed, 0, "{} n={n}", kind.label());
+            assert_eq!(fo.promoted, 1, "{} n={n}", kind.label());
+            let label = format!("{} n={n}", kind.label());
+            let mut t2 = t.max(fo.at + fo.blackout_ns);
+            for key in 0..701u32 {
+                let (got, nt) = db.get(&mut env, t2, key);
+                t2 = nt;
+                let want = acked.get(&key).copied().flatten();
+                assert_eq!(got, want, "{label}: key {key} after promotion");
+            }
+            // keep writing through the new primary, then rejoin the
+            // crashed node and verify the repair closed the divergence
+            for i in 0..80u32 {
+                let k = (i * 53) % 701;
+                let val = ValueDesc::new(50_000 + i, 1024);
+                t2 = db.put(&mut env, t2, k, val).done;
+            }
+            let rep = db.rejoin_crashed(&mut env, t2);
+            assert!(
+                rep.hash_bytes + rep.entry_bytes < rep.full_resync_bytes,
+                "{label}: repair {} B >= full resync {} B",
+                rep.hash_bytes + rep.entry_bytes,
+                rep.full_resync_bytes
+            );
+            let end = db.finish(&mut env, rep.done.max(t2)).unwrap();
+            let dp = db.node_digest(&mut env, end, db.primary_index());
+            let d0 = db.node_digest(&mut env, end, 0);
+            assert_eq!(dp, d0, "{label}: rejoined node still diverged");
+        }
+    }
+}
+
+#[test]
+fn anti_entropy_converges_sharded_replicas() {
+    // a sharded engine exposes one CDC stream per shard; the shipper
+    // must keep per-stream watermarks straight and the Merkle exchange
+    // must converge the full multi-shard key space
+    let cfg = ReplConfig {
+        replicas: 2,
+        read_policy: ReadPolicy::Primary,
+        key_space: 9_999,
+        seed: 11,
+        ..ReplConfig::default()
+    };
+    let mut db = ReplicatedDb::new(cfg, |_| {
+        EngineBuilder::new(SystemKind::Kvaccel { scheme: RollbackScheme::Disabled })
+            .opts(LsmOptions::small_for_test())
+            .sharded(2, ShardPolicy::Range)
+            .shard_key_space(10_000)
+            .build()
+    });
+    let mut env = SimEnv::new(11, SsdConfig::default());
+    let mut t = 0;
+    for i in 0..400u32 {
+        let k = (i * 97) % 10_000;
+        t = db.put(&mut env, t, k, ValueDesc::new(i, 512)).done;
+    }
+    let end = db.finish(&mut env, t).unwrap();
+    assert_eq!(db.applied_records(1), db.log_len(), "replica lagging after drain");
+    let d0 = db.node_digest(&mut env, end, 0);
+    let d1 = db.node_digest(&mut env, end, 1);
+    assert_eq!(d0, d1, "sharded replica diverged from its primary");
+
+    // crash/promote/rejoin across the shard boundary
+    let fo = db.fail_primary(&mut env, end);
+    let mut t2 = end.max(fo.at + fo.blackout_ns);
+    for i in 0..60u32 {
+        let k = (i * 31) % 10_000;
+        t2 = db.put(&mut env, t2, k, ValueDesc::new(90_000 + i, 512)).done;
+    }
+    let rep = db.rejoin_crashed(&mut env, t2);
+    assert!(
+        rep.hash_bytes + rep.entry_bytes < rep.full_resync_bytes,
+        "sharded repair must beat a full resync"
+    );
+    let end2 = db.finish(&mut env, rep.done.max(t2)).unwrap();
+    let dp = db.node_digest(&mut env, end2, db.primary_index());
+    let dr = db.node_digest(&mut env, end2, fo.crashed);
+    assert_eq!(dp, dr, "sharded rejoin left divergence");
+}
