@@ -2,6 +2,10 @@
 //! the same rows the paper reports. `cargo bench --bench paper_figures`.
 //! (Full-scale regeneration: `kvaccel experiment all --scale 1`.)
 
+// real-time harness: wall-clock timing is the point here, so the
+// clippy.toml wall-clock ban is lifted for this file
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use kvaccel::experiments::{run, EngineMode, ExpContext, ALL_EXPERIMENTS};
 
 fn main() {

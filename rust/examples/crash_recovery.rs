@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     // reopen: manifest rebuild + WAL replay + device rescan + routing
     // reconciliation, all charged in virtual time
-    let (mut db2, t2) = EngineBuilder::open(&mut env, t, image);
+    let (mut db2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
     let h = db2.health();
     println!(
         "recovered in {:.3} virtual ms: {} WAL records replayed, {} device keys re-routed",
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     // a clean close reopens with nothing to replay
     let image = db2.close(&mut env, t3)?;
     assert!(image.clean && image.wal_records() == 0);
-    let (db3, t4) = EngineBuilder::open(&mut env, t3, image);
+    let (db3, t4) = EngineBuilder::open(&mut env, t3, image).expect("recovery failed");
     assert_eq!(db3.health().recovered_wal_records, 0);
     println!("clean close -> reopen replayed 0 records at {:.3}s", t4 as f64 / 1e9);
     println!("crash_recovery OK");

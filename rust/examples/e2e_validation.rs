@@ -12,6 +12,10 @@
 //!
 //! Recorded in EXPERIMENTS.md §End-to-end.
 
+// real-time harness: wall-clock timing is the point here, so the
+// clippy.toml wall-clock ban is lifted for this file
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
+
 use kvaccel::baselines::SystemKind;
 use kvaccel::engine::{EngineBuilder, EngineStats};
 use kvaccel::env::SimEnv;

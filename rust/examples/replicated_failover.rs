@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
 
     // phase 3: the crashed node rejoins — recover its durable image,
     // then Merkle range exchange ships only the differing leaves
-    let rep = db.rejoin_crashed(&mut env, t);
+    let rep = db.rejoin_crashed(&mut env, t).expect("rejoin failed");
     let shipped = rep.hash_bytes + rep.entry_bytes;
     println!(
         "anti-entropy: {}/{} leaves dirty, {} entries shipped + {} deleted, \

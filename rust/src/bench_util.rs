@@ -2,6 +2,11 @@
 //! has no `criterion` crate). Warmup + timed iterations, mean/p50/p99
 //! over per-batch timings, throughput reporting — enough to drive the
 //! `cargo bench` targets in rust/benches/.
+//!
+//! This is a real-time harness file: the wall-clock ban (pallas-lint
+//! no-wall-clock, clippy.toml disallowed-methods/types) is lifted here
+//! and only here, because measuring host CPU time is the whole point.
+#![allow(clippy::disallowed_methods, clippy::disallowed_types)]
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,99 @@
+//! `pallas-lint` — the repo-invariant static-analysis pass.
+//!
+//! Walks `rust/src/**` and enforces the determinism, recovery-safety,
+//! and durability-ordering rules in [`kvaccel::lint`]. Exits nonzero
+//! when any finding is neither suppressed by an inline
+//! `// lint:allow(<rule>): <reason>` nor parked in the checked-in
+//! baseline (`rust/lint_baseline.txt`).
+//!
+//! Run with `cargo run --bin pallas_lint` (any working directory; the
+//! source root is resolved from the crate manifest).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use kvaccel::lint::{lint_file, Baseline, Finding};
+
+fn main() -> ExitCode {
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src_root = manifest_dir.join("src");
+    let baseline_path = manifest_dir.join("lint_baseline.txt");
+
+    let baseline = match fs::read_to_string(&baseline_path) {
+        Ok(text) => Baseline::parse(&text),
+        Err(_) => Baseline::default(),
+    };
+
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(&src_root, &mut files) {
+        eprintln!("pallas-lint: cannot walk {}: {e}", src_root.display());
+        return ExitCode::from(2);
+    }
+    // deterministic report order regardless of directory enumeration
+    files.sort();
+
+    let mut live: Vec<Finding> = Vec::new();
+    let mut baselined = 0usize;
+    let mut suppressed = 0usize;
+    let mut scanned = 0usize;
+    for path in &files {
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("pallas-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = rel_path(&src_root, path);
+        let report = lint_file(&rel, &src);
+        suppressed += report.suppressed;
+        scanned += 1;
+        for f in report.findings {
+            if baseline.covers(&f) {
+                baselined += 1;
+            } else {
+                live.push(f);
+            }
+        }
+    }
+
+    for f in &live {
+        println!("src/{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    println!(
+        "pallas-lint: {} files, {} findings ({} allowed inline, {} baselined)",
+        scanned,
+        live.len(),
+        suppressed,
+        baselined,
+    );
+    if live.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Forward-slash path relative to the source root.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

@@ -20,7 +20,7 @@
 //! device side — and feeds the read-amplification counters
 //! ([`ScanCounters`]) surfaced through `EngineStats`.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
@@ -100,7 +100,7 @@ impl ScanAmp {
 pub struct DevPin {
     pub runs: Vec<Arc<Vec<Entry>>>,
     /// Keys whose latest version lived in the Dev-LSM at snapshot time.
-    pub live: Arc<HashSet<Key>>,
+    pub live: Arc<BTreeSet<Key>>,
     /// NAND page size (amortized read granularity for Dev-LSM Next()s).
     pub page_bytes: u64,
     /// Average encoded entry size (entries per page estimate).
@@ -355,7 +355,7 @@ enum Dir {
 pub struct EngineIterator {
     main: LsmIterator,
     dev: Option<DevIterator>,
-    live: Option<Arc<HashSet<Key>>>,
+    live: Option<Arc<BTreeSet<Key>>>,
     snap: Snapshot,
 
     lower: Option<Key>,

@@ -608,12 +608,13 @@ impl EngineBuilder {
     /// durable WAL records, and — on KVACCEL — rescan the device write
     /// buffer and reconcile the routing set against the recovered host
     /// state by sequence number. Returns the engine and the virtual time
-    /// recovery completed.
+    /// recovery completed, or an error when the device-side recovery
+    /// scan fails (recovery paths must not panic).
     pub fn open(
         env: &mut SimEnv,
         at: Nanos,
         image: DurableImage,
-    ) -> (Box<dyn KvEngine>, Nanos) {
+    ) -> Result<(Box<dyn KvEngine>, Nanos)> {
         let DurableImage {
             kind,
             opts,
@@ -628,14 +629,14 @@ impl EngineBuilder {
             ..
         } = image;
         if let Some(shard) = shard {
-            let (db, t) = crate::shard::ShardedDb::open(env, at, *shard);
-            return (Box::new(db), t);
+            let (db, t) = crate::shard::ShardedDb::open(env, at, *shard)?;
+            return Ok((Box::new(db), t));
         }
-        match kind {
+        Ok(match kind {
             SystemKind::RocksDb { .. } => {
                 let (db, t) =
                     LsmDb::open(env, at, opts, merge, bloom, manifest, wal, clean);
-                (Box::new(db), t)
+                (Box::new(db) as Box<dyn KvEngine>, t)
             }
             SystemKind::Adoc => {
                 let (eng, t) = AdocEngine::open(
@@ -649,16 +650,16 @@ impl EngineBuilder {
                     wal,
                     clean,
                 );
-                (Box::new(eng), t)
+                (Box::new(eng) as Box<dyn KvEngine>, t)
             }
             SystemKind::Kvaccel { scheme } => {
                 let cfg = kvaccel_cfg.unwrap_or_default().with_scheme(scheme);
                 let (eng, t) = KvaccelDb::open(
                     env, at, opts, cfg, merge, bloom, manifest, wal, clean,
-                );
-                (Box::new(eng), t)
+                )?;
+                (Box::new(eng) as Box<dyn KvEngine>, t)
             }
-        }
+        })
     }
 
     pub fn build(self) -> Box<dyn KvEngine> {

@@ -73,7 +73,7 @@ pub fn recovery(ctx: &ExpContext) -> Result<String> {
             }
             let dev_fill = env.device.kv_buffered_bytes(0);
             let image = sys.crash(&mut env, t);
-            let (mut sys2, t_rec) = EngineBuilder::open(&mut env, t, image);
+            let (mut sys2, t_rec) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
             let h = sys2.health();
             // probe: is the latest acked value of each written key
             // visible after recovery? (< 1.0 shows the sync=false gap)

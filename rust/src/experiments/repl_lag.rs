@@ -120,7 +120,7 @@ pub fn repl_lag(ctx: &ExpContext) -> Result<String> {
                 (i.wrapping_mul(2_654_435_761) % cfg.key_space as u64) as Key;
             t = repl.put(&mut env, t, key, ValueDesc::new(i as u32, 512)).done;
         }
-        let repair = repl.rejoin_crashed(&mut env, t);
+        let repair = repl.rejoin_crashed(&mut env, t).expect("rejoin failed");
         let t_end = repl.finish(&mut env, repair.done.max(t))?;
         let repaired = repl.node_digest(&mut env, t_end, fo.crashed)
             == repl.node_digest(&mut env, t_end, repl.primary_index());

@@ -573,17 +573,14 @@ impl KvaccelDb {
         manifest: Manifest,
         wal: Vec<Entry>,
         clean: bool,
-    ) -> (Self, Nanos) {
+    ) -> Result<(Self, Nanos)> {
         opts.enable_slowdown = false;
         let (main, t0) =
             LsmDb::open(env, at, opts, merge, bloom, manifest, wal, clean);
         let mut db = Self::from_parts(main, cfg);
         // full recovery scan of the device write buffer (charges the
         // NAND reads + chunked DMA of the paper's Fig 9 path)
-        let (entries, scan_done) = env
-            .device
-            .kv_bulk_scan(db.ns, t0)
-            .expect("recovery device scan failed");
+        let (entries, scan_done) = env.device.kv_bulk_scan(db.ns, t0)?;
         let mut routed: Vec<Key> = Vec::with_capacity(entries.len());
         let mut stale = 0u64;
         let mut max_dev_seq: Seq = 0;
@@ -603,7 +600,7 @@ impl KvaccelDb {
         db.main.recovery.dev_keys_rerouted = rerouted;
         db.main.recovery.dev_keys_stale = stale;
         env.clock.advance_to(t);
-        (db, t)
+        Ok((db, t))
     }
 }
 

@@ -1,6 +1,9 @@
-//! Metadata Manager (paper §V-C): an in-memory hash table tracking which
-//! keys currently live in the Dev-LSM, consulted on every read/write for
-//! interface routing ("membership testing").
+//! Metadata Manager (paper §V-C): an in-memory membership table tracking
+//! which keys currently live in the Dev-LSM, consulted on every
+//! read/write for interface routing ("membership testing"). The paper
+//! uses a hash table; this reproduction keeps the set ordered
+//! (`BTreeSet`) so any iteration over the routing set is deterministic
+//! — the Table VI per-op costs are charged explicitly either way.
 //!
 //! On loss (crash), the table is rebuilt by a full range scan of the
 //! key-value interface — `rebuild_from` implements that recovery path.
@@ -8,7 +11,7 @@
 //! Per-op costs are charged from the paper's measured overheads
 //! (Table VI: insert 0.45 us, check 0.20 us, delete 0.28 us).
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::env::SimEnv;
@@ -39,10 +42,10 @@ pub struct MetadataStats {
 #[derive(Debug)]
 pub struct MetadataManager {
     cfg: MetadataConfig,
-    in_dev: HashSet<Key>,
+    in_dev: BTreeSet<Key>,
     /// Cached refcounted copy of `in_dev` handed to snapshots;
     /// invalidated by any mutation (copy-on-write pinning).
-    pinned: Option<Arc<HashSet<Key>>>,
+    pinned: Option<Arc<BTreeSet<Key>>>,
     pub stats: MetadataStats,
 }
 
@@ -50,7 +53,7 @@ impl MetadataManager {
     pub fn new(cfg: MetadataConfig) -> Self {
         Self {
             cfg,
-            in_dev: HashSet::new(),
+            in_dev: BTreeSet::new(),
             pinned: None,
             stats: MetadataStats::default(),
         }
@@ -131,7 +134,7 @@ impl MetadataManager {
     /// Refcounted copy of the routing set for snapshot pinning. Cached
     /// until the next mutation, so read-only phases (e.g. seekrandom)
     /// pin in O(1).
-    pub fn pin(&mut self) -> Arc<HashSet<Key>> {
+    pub fn pin(&mut self) -> Arc<BTreeSet<Key>> {
         if let Some(p) = &self.pinned {
             return p.clone();
         }

@@ -348,7 +348,7 @@ mod tests {
     use crate::lsm::entry::ValueDesc;
     use crate::lsm::LsmOptions;
     use crate::ssd::SsdConfig;
-    use std::collections::HashSet;
+    use std::collections::BTreeSet;
 
     fn env() -> SimEnv {
         SimEnv::new(11, SsdConfig::default())
@@ -376,7 +376,7 @@ mod tests {
     ) -> EngineIterator {
         let pin = DevPin {
             runs: dev_runs,
-            live: Arc::new(live.iter().copied().collect::<HashSet<Key>>()),
+            live: Arc::new(live.iter().copied().collect::<BTreeSet<Key>>()),
             page_bytes: 16 * 1024,
             avg_entry: 4112,
         };
@@ -537,7 +537,7 @@ mod tests {
         let dev_runs = vec![Arc::new(vec![e(2, 10), e(6, 10)])];
         let pin = DevPin {
             runs: dev_runs,
-            live: Arc::new([2u32, 6].into_iter().collect::<HashSet<Key>>()),
+            live: Arc::new([2u32, 6].into_iter().collect::<BTreeSet<Key>>()),
             page_bytes: 16 * 1024,
             avg_entry: 4112,
         };

@@ -212,7 +212,7 @@ impl RollbackManager {
         let stream = main.opts.wal_stream;
         let (done, _) = self
             .finalize(env, ns, stream, metadata)?
-            .expect("begin just opened a window");
+            .ok_or_else(|| anyhow::anyhow!("rollback window vanished between begin and finalize"))?;
         Ok(done)
     }
 }

@@ -52,4 +52,6 @@ pub mod experiments;
 
 pub mod bench_util;
 
+pub mod lint;
+
 pub mod util;

@@ -1,0 +1,487 @@
+//! The deny-by-default rule set `pallas-lint` enforces, and the
+//! incidents each rule guards. Scoping is module-aware: a rule either
+//! applies everywhere minus an allowlist of harness files, or only to
+//! the trace-affecting simulation modules whose behavior feeds the
+//! bit-identity claims.
+
+use super::scan::{has_ident, has_macro, has_std_path, ScannedFile};
+
+/// One rule violation at a specific site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to `rust/src`.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Result of checking one file: live findings plus the count of sites
+/// an inline `lint:allow` suppressed (reported, never hidden).
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+/// Modules whose behavior feeds the deterministic trace: anything here
+/// that iterates an unordered collection, reads a wall clock, or draws
+/// ambient randomness can silently break the PR2/PR6/PR8 bit-identity
+/// invariants.
+const TRACE_MODULES: &[&str] = &[
+    "sim", "workload", "lsm", "kvaccel", "shard", "qos", "repl", "ssd",
+    "engine",
+];
+
+/// Real-time harness files: the only place `Instant`/`SystemTime` is
+/// legitimate (micro-bench timing, experiment wall-clock tables).
+const WALL_CLOCK_ALLOW: &[&str] = &["bench_util.rs", "experiments/tables.rs"];
+
+/// The env/CLI layer that is allowed to touch the real machine:
+/// process entry points, experiment emitters, the lint tool itself.
+const REAL_IO_ALLOW: &[&str] =
+    &["main.rs", "bin/", "lint/", "experiments/", "util/cli.rs"];
+
+/// Recovery-path files checked whole-file for panics (test mods exempt).
+const RECOVERY_FILES: &[&str] = &[
+    "lsm/manifest.rs",
+    "lsm/wal.rs",
+    "kvaccel/rollback.rs",
+    "repl/merkle.rs",
+];
+
+/// Function-name prefixes that mark a recovery/replay path in the
+/// trace modules: these run after a crash, where a panic turns a
+/// recoverable store into an unrecoverable one.
+const RECOVERY_FN_PREFIXES: &[&str] = &[
+    "open",
+    "recover",
+    "replay",
+    "rebuild",
+    "rejoin",
+    "anti_entropy",
+    "crash_into_image",
+    "power_loss",
+];
+
+/// Calls that destroy durable device state.
+const DELETE_TOKENS: &[&str] = &["delete_file", "kv_reset"];
+
+/// Evidence that the durable record preceding a delete was synced (or
+/// replayed): the PR4 sync-before-delete ordering.
+const SYNC_EVIDENCE: &[&str] =
+    &["meta_sync_write", "wal_sync_on", "wal_sync", "fsync", "manifest"];
+
+/// Modules where the sync-before-delete heuristic applies. `ssd` is
+/// exempt: it *implements* the delete/sync mechanisms.
+const SYNC_RULE_MODULES: &[&str] = &["lsm", "kvaccel", "shard", "repl", "engine"];
+
+pub const ALL_RULES: &[&str] = &[
+    "no-wall-clock",
+    "no-ambient-rng",
+    "no-unordered-iteration",
+    "no-panic-in-recovery",
+    "no-real-io",
+    "sync-before-delete",
+];
+
+fn path_in(path: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| {
+        if p.ends_with('/') {
+            path.starts_with(p)
+        } else {
+            path == *p
+        }
+    })
+}
+
+fn is_trace_module(module: &str) -> bool {
+    TRACE_MODULES.contains(&module)
+}
+
+fn is_recovery_fn(name: &str) -> bool {
+    RECOVERY_FN_PREFIXES.iter().any(|p| name.starts_with(p))
+}
+
+/// Run every rule over one scanned file, applying inline allows.
+pub fn check_file(f: &ScannedFile) -> FileReport {
+    let mut raw: Vec<Finding> = Vec::new();
+    no_wall_clock(f, &mut raw);
+    no_ambient_rng(f, &mut raw);
+    no_unordered_iteration(f, &mut raw);
+    no_panic_in_recovery(f, &mut raw);
+    no_real_io(f, &mut raw);
+    sync_before_delete(f, &mut raw);
+    raw.sort_by_key(|x| (x.line, x.rule));
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for x in raw {
+        if f.allowed(x.rule, x.line).is_some() {
+            suppressed += 1;
+        } else {
+            findings.push(x);
+        }
+    }
+    FileReport { findings, suppressed }
+}
+
+/// no-wall-clock: simulation code runs on virtual `Nanos` only; a real
+/// clock read anywhere else silently decouples results from the seed
+/// (the PR2 bit-identity claim).
+fn no_wall_clock(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if path_in(&f.rel_path, WALL_CLOCK_ALLOW) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        for tok in ["Instant", "SystemTime"] {
+            if has_ident(line, tok) {
+                out.push(Finding {
+                    path: f.rel_path.clone(),
+                    line: i + 1,
+                    rule: "no-wall-clock",
+                    msg: format!(
+                        "`{tok}` outside the real-time harness allowlist; \
+                         simulation time is virtual `Nanos` only"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// no-ambient-rng: all randomness flows from seeded per-client streams;
+/// an ambient generator makes runs irreproducible.
+fn no_ambient_rng(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        for tok in ["thread_rng", "from_entropy", "OsRng"] {
+            if has_ident(line, tok) {
+                out.push(Finding {
+                    path: f.rel_path.clone(),
+                    line: i + 1,
+                    rule: "no-ambient-rng",
+                    msg: format!(
+                        "`{tok}` draws ambient entropy; use the seeded \
+                         per-client RNG streams"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// no-unordered-iteration: `HashMap`/`HashSet` in a trace module. Even
+/// membership-only uses are banned — the cheapest way to keep iteration
+/// order out of the trace is to not hold unordered collections where
+/// the trace is produced.
+fn no_unordered_iteration(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !is_trace_module(&f.module) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        for tok in ["HashMap", "HashSet"] {
+            if has_ident(line, tok) {
+                out.push(Finding {
+                    path: f.rel_path.clone(),
+                    line: i + 1,
+                    rule: "no-unordered-iteration",
+                    msg: format!(
+                        "`{tok}` in trace module `{}`; use BTreeMap/BTreeSet \
+                         (or a sorted snapshot) so iteration order is \
+                         deterministic",
+                        f.module
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// no-panic-in-recovery: manifest replay, WAL recovery, rollback, and
+/// Merkle-rejoin paths must return `Result` — a panic during recovery
+/// turns a crashed-but-recoverable store into a dead one.
+fn no_panic_in_recovery(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let whole_file = path_in(&f.rel_path, RECOVERY_FILES);
+    if !whole_file && !is_trace_module(&f.module) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        let lineno = i + 1;
+        if f.in_test(lineno) {
+            continue;
+        }
+        let in_scope = whole_file
+            || f.enclosing_fn(lineno).is_some_and(|s| is_recovery_fn(&s.name));
+        if !in_scope {
+            continue;
+        }
+        for tok in ["unwrap", "expect"] {
+            if has_ident(line, tok) {
+                out.push(Finding {
+                    path: f.rel_path.clone(),
+                    line: lineno,
+                    rule: "no-panic-in-recovery",
+                    msg: format!(
+                        "`{tok}` on a recovery path; propagate a `Result` \
+                         instead of panicking mid-recovery"
+                    ),
+                });
+            }
+        }
+        if has_macro(line, "panic") {
+            out.push(Finding {
+                path: f.rel_path.clone(),
+                line: lineno,
+                rule: "no-panic-in-recovery",
+                msg: "`panic!` on a recovery path; return an error instead"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// no-real-io: `std::fs`/`std::net`/`std::thread` stay in the env/CLI
+/// layer; the simulator proper must not touch the real machine.
+fn no_real_io(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if path_in(&f.rel_path, REAL_IO_ALLOW) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        for seg in ["fs", "net", "thread"] {
+            if has_std_path(line, seg) {
+                out.push(Finding {
+                    path: f.rel_path.clone(),
+                    line: i + 1,
+                    rule: "no-real-io",
+                    msg: format!(
+                        "`std::{seg}` outside the env/CLI layer; simulation \
+                         code must not perform real I/O"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// sync-before-delete: a function that deletes durable device state
+/// (`delete_file`, `kv_reset`) must show sync/manifest evidence earlier
+/// in its body — the exact ordering bug PR4 fixed, where files died
+/// before the manifest edit naming their replacement was durable.
+fn sync_before_delete(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !SYNC_RULE_MODULES.contains(&f.module.as_str()) {
+        return;
+    }
+    for span in &f.fns {
+        if f.in_test(span.start) {
+            continue;
+        }
+        let mut evidence = false;
+        let end = span.end.min(f.lines.len());
+        for (idx, line) in f.lines.iter().enumerate().take(end).skip(span.start - 1) {
+            let lineno = idx + 1;
+            if SYNC_EVIDENCE.iter().any(|t| has_ident(line, t)) {
+                evidence = true;
+            }
+            if evidence {
+                continue;
+            }
+            for tok in DELETE_TOKENS {
+                if has_ident(line, tok) {
+                    out.push(Finding {
+                        path: f.rel_path.clone(),
+                        line: lineno,
+                        rule: "sync-before-delete",
+                        msg: format!(
+                            "`{tok}` in `{}` with no prior sync/manifest \
+                             evidence; durable state must be synced before \
+                             its predecessor is deleted",
+                            span.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::lint_source;
+
+    fn rules_of(findings: &[super::Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // --- no-wall-clock -----------------------------------------------
+
+    #[test]
+    fn wall_clock_fires_in_sim_code() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        let f = lint_source("sim/clock.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-wall-clock"]);
+    }
+
+    #[test]
+    fn wall_clock_silent_on_the_harness_allowlist() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert!(lint_source("bench_util.rs", src).is_empty());
+        assert!(lint_source("experiments/tables.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_ignores_strings_and_comments() {
+        let src = "// Instant::now() is banned\nfn f() { let s = \"SystemTime\"; }\n";
+        assert!(lint_source("sim/clock.rs", src).is_empty());
+    }
+
+    // --- no-ambient-rng ----------------------------------------------
+
+    #[test]
+    fn ambient_rng_fires_everywhere() {
+        let src = "fn f() { let mut r = thread_rng(); }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", src)), vec!["no-ambient-rng"]);
+        let src2 = "fn f() { let r = OsRng; }\n";
+        assert_eq!(rules_of(&lint_source("lsm/x.rs", src2)), vec!["no-ambient-rng"]);
+    }
+
+    #[test]
+    fn seeded_rng_is_silent() {
+        let src = "fn f(seed: u64) { let mut r = SplitMix64::new(seed); }\n";
+        assert!(lint_source("workload/keygen.rs", src).is_empty());
+    }
+
+    // --- no-unordered-iteration --------------------------------------
+
+    #[test]
+    fn unordered_iteration_fires_in_trace_modules() {
+        let src = "use std::collections::HashMap;\n";
+        let f = lint_source("lsm/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-unordered-iteration"]);
+    }
+
+    #[test]
+    fn unordered_iteration_silent_outside_trace_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert!(lint_source("util/lru.rs", src).is_empty());
+        assert!(lint_source("runtime/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn btree_collections_are_silent() {
+        let src = "use std::collections::{BTreeMap, BTreeSet};\n";
+        assert!(lint_source("lsm/x.rs", src).is_empty());
+    }
+
+    // --- no-panic-in-recovery ----------------------------------------
+
+    #[test]
+    fn panic_in_recovery_fires_in_an_open_fn() {
+        let src = "fn open() { x.unwrap(); }\n";
+        let f = lint_source("lsm/db.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-panic-in-recovery"]);
+        let src2 = "fn rebuild_from() { y.expect(\"boom\"); }\n";
+        let f2 = lint_source("kvaccel/metadata.rs", src2);
+        assert_eq!(rules_of(&f2), vec!["no-panic-in-recovery"]);
+    }
+
+    #[test]
+    fn panic_outside_recovery_fns_is_silent() {
+        let src = "fn put() { x.unwrap(); }\n";
+        assert!(lint_source("lsm/db.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn open() { let v = x.unwrap_or(0).max(y.unwrap_or_default()); }\n";
+        assert!(lint_source("lsm/db.rs", src).is_empty());
+    }
+
+    #[test]
+    fn recovery_files_are_checked_whole_file_minus_tests() {
+        let src = "fn helper() { x.unwrap(); }\n";
+        let f = lint_source("repl/merkle.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-panic-in-recovery"]);
+        let in_tests =
+            "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(lint_source("repl/merkle.rs", in_tests).is_empty());
+    }
+
+    #[test]
+    fn panic_macro_fires_on_recovery_paths() {
+        let src = "fn replay() { panic!(\"torn log\"); }\n";
+        let f = lint_source("lsm/wal.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-panic-in-recovery"]);
+    }
+
+    // --- no-real-io --------------------------------------------------
+
+    #[test]
+    fn real_io_fires_in_sim_code() {
+        let src = "fn f() { let d = std::fs::read_dir(p); }\n";
+        let f = lint_source("sim/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-real-io"]);
+    }
+
+    #[test]
+    fn real_io_silent_in_the_env_cli_layer() {
+        let src = "fn f() { let d = std::fs::read_dir(p); }\n";
+        assert!(lint_source("main.rs", src).is_empty());
+        assert!(lint_source("experiments/recovery.rs", src).is_empty());
+        assert!(lint_source("bin/pallas_lint.rs", src).is_empty());
+    }
+
+    // --- sync-before-delete ------------------------------------------
+
+    #[test]
+    fn delete_without_sync_evidence_fires() {
+        let src = "fn complete(&mut self) {\n    env.device.delete_file(id);\n}\n";
+        let f = lint_source("lsm/compact.rs", src);
+        assert_eq!(rules_of(&f), vec!["sync-before-delete"]);
+    }
+
+    #[test]
+    fn delete_after_sync_evidence_is_silent() {
+        let src = "fn complete(&mut self) {\n    env.device.meta_sync_write(at, bytes);\n    env.device.delete_file(id);\n}\n";
+        assert!(lint_source("lsm/compact.rs", src).is_empty());
+        let manifest_first = "fn open() {\n    let rec = manifest.rebuild(n);\n    env.device.delete_file(id);\n}\n";
+        assert!(lint_source("lsm/compact.rs", manifest_first).is_empty());
+    }
+
+    #[test]
+    fn sync_rule_skips_the_ssd_layer() {
+        let src = "fn gc(&mut self) {\n    self.delete_file(id);\n}\n";
+        assert!(lint_source("ssd/block_if.rs", src).is_empty());
+    }
+
+    // --- suppressions ------------------------------------------------
+
+    #[test]
+    fn inline_allow_suppresses_one_site() {
+        let src = "fn f() {\n    // lint:allow(no-wall-clock): calibration-only probe\n    let t = Instant::now();\n}\n";
+        assert!(lint_source("sim/clock.rs", src).is_empty());
+        // a trailing same-line allow works too
+        let trailing = "fn f() { let t = Instant::now(); } // lint:allow(no-wall-clock): calibration-only probe\n";
+        assert!(lint_source("sim/clock.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "fn f() {\n    // lint:allow(no-real-io): wrong rule\n    let t = Instant::now();\n}\n";
+        let f = lint_source("sim/clock.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-wall-clock"]);
+    }
+
+    #[test]
+    fn allow_without_reason_does_not_suppress() {
+        let src = "fn f() {\n    // lint:allow(no-wall-clock)\n    let t = Instant::now();\n}\n";
+        let f = lint_source("sim/clock.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-wall-clock"]);
+    }
+
+    #[test]
+    fn suppressed_sites_are_counted() {
+        let src = "fn f() {\n    // lint:allow(no-wall-clock): calibration-only probe\n    let t = Instant::now();\n}\n";
+        let rep = crate::lint::lint_file("sim/clock.rs", src);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.suppressed, 1);
+    }
+}

@@ -1,0 +1,537 @@
+//! Source scanning for `pallas-lint`: a comment/string-stripping
+//! tokenizer plus the structural facts the rules need — per-site
+//! `lint:allow` directives, `#[cfg(test)]` regions, and function spans.
+//!
+//! The stripper replaces every character inside comments, string
+//! literals, char literals, and raw strings with a space (newlines are
+//! preserved), so rule matching never fires on prose, doc examples, or
+//! assertion messages. This is deliberately a lexer, not a parser: the
+//! rules match identifier tokens on the stripped text, which is exact
+//! enough for deny-by-default invariants (`unwrap` never matches
+//! `unwrap_or`) without dragging in a full Rust grammar.
+
+/// One `// lint:allow(<rule>): <reason>` directive. The directive
+/// suppresses findings of `rule` on its own line and on the line
+/// directly below it (so it can trail the violating expression or sit
+/// on its own line above it). A directive without a written reason is
+/// ignored — justification is the point of the mechanism.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub rule: String,
+    /// 1-based line the directive is written on.
+    pub line: usize,
+    pub reason: String,
+}
+
+/// A `fn` item span in the file, used for function-scoped rules
+/// (recovery-path panics, sync-before-delete ordering).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub start: usize,
+    /// 1-based line of the closing brace of the body.
+    pub end: usize,
+}
+
+/// The scanned form of one source file.
+pub struct ScannedFile {
+    /// Path relative to `rust/src`, forward slashes.
+    pub rel_path: String,
+    /// First path component with any `.rs` suffix dropped — the module
+    /// the rules scope on (`lsm/db.rs` -> `lsm`, `main.rs` -> `main`).
+    pub module: String,
+    /// Stripped source, split into lines; `lines[0]` is line 1.
+    pub lines: Vec<String>,
+    pub allows: Vec<Allow>,
+    /// `test_mask[i]` is true when line `i + 1` lies inside a
+    /// `#[cfg(test)]` item's braces.
+    pub test_mask: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl ScannedFile {
+    /// Innermost function span containing `line`, if any.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .max_by_key(|f| f.start)
+    }
+
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_mask.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Is a finding of `rule` on `line` covered by an allow directive?
+    pub fn allowed(&self, rule: &str, line: usize) -> Option<&Allow> {
+        self.allows
+            .iter()
+            .find(|a| a.rule == rule && (a.line == line || a.line + 1 == line))
+    }
+}
+
+/// Scan one file: strip, then derive the structural facts.
+pub fn scan_source(rel_path: &str, src: &str) -> ScannedFile {
+    let (stripped, allows) = strip(src);
+    let lines: Vec<String> = stripped.lines().map(str::to_string).collect();
+    let test_mask = test_regions(&stripped, lines.len());
+    let fns = fn_spans(&stripped);
+    ScannedFile {
+        rel_path: rel_path.to_string(),
+        module: module_of(rel_path),
+        lines,
+        allows,
+        test_mask,
+        fns,
+    }
+}
+
+/// `lsm/db.rs` -> `lsm`; `main.rs` -> `main`; `bin/pallas_lint.rs` ->
+/// `bin`.
+pub fn module_of(rel_path: &str) -> String {
+    let first = rel_path.split('/').next().unwrap_or(rel_path);
+    first.trim_end_matches(".rs").to_string()
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Replace comments and literals with spaces, collecting `lint:allow`
+/// directives from line comments along the way.
+fn strip(src: &str) -> (String, Vec<Allow>) {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment: blank to end of line, parse allow directives
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            if let Some(a) = parse_allow(&text, line) {
+                allows.push(a);
+            }
+            for _ in start..i {
+                out.push(' ');
+            }
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string: r"...", r#"..."#, br"..." — no escapes inside
+        let prev_ident = i > 0 && is_ident_char(b[i - 1]);
+        if (c == 'r' || c == 'b') && !prev_ident {
+            if let Some((hashes, prefix_len)) = raw_string_start(&b, i) {
+                for _ in 0..prefix_len {
+                    out.push(' ');
+                }
+                i += prefix_len;
+                while i < b.len() {
+                    if b[i] == '"' && closes_raw(&b, i, hashes) {
+                        for _ in 0..=hashes {
+                            out.push(' ');
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    if b[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // ordinary string literal (backslash escapes, may span lines)
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    out.push(' ');
+                    if b[i + 1] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // char literal vs lifetime: 'x' / '\n' are literals, 'a in
+        // `&'a str` is a lifetime and passes through untouched
+        if c == '\'' {
+            let is_char = b.get(i + 1) == Some(&'\\')
+                || (b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\''));
+            if is_char {
+                out.push(' ');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == '\\' && i + 1 < b.len() {
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    }
+                    if b[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, allows)
+}
+
+/// Does position `i` start a raw string (`r"`, `r#"`, `br##"` ...)?
+/// Returns (hash count, prefix length including the opening quote).
+fn raw_string_start(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&'"') {
+        return None;
+    }
+    Some((hashes, j + 1 - i))
+}
+
+fn closes_raw(b: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| b.get(i + k) == Some(&'#'))
+}
+
+/// Parse `lint:allow(<rule>): <reason>` out of a line comment.
+fn parse_allow(comment: &str, line: usize) -> Option<Allow> {
+    let pos = comment.find("lint:allow(")?;
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim();
+    if rule.is_empty() {
+        return None;
+    }
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        // a justification is mandatory; an unexplained allow is inert
+        return None;
+    }
+    Some(Allow { rule: rule.to_string(), line, reason: reason.to_string() })
+}
+
+/// Mark every line inside a `#[cfg(test)]` item's braces.
+fn test_regions(stripped: &str, nlines: usize) -> Vec<bool> {
+    let bytes = stripped.as_bytes();
+    let mut mask = vec![false; nlines];
+    let mut search = 0usize;
+    while let Some(rel) = stripped[search..].find("cfg(test)") {
+        let attr = search + rel;
+        search = attr + "cfg(test)".len();
+        // the guarded item's body is the next brace block
+        let Some(open_rel) = stripped[search..].find('{') else { break };
+        let open = search + open_rel;
+        let mut depth = 0usize;
+        let mut close = bytes.len();
+        for (k, &ch) in bytes.iter().enumerate().skip(open) {
+            if ch == b'{' {
+                depth += 1;
+            } else if ch == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    close = k;
+                    break;
+                }
+            }
+        }
+        let first = line_of(bytes, open);
+        let last = line_of(bytes, close.min(bytes.len() - 1));
+        let lo = (first - 1).min(nlines);
+        let hi = last.min(nlines);
+        if lo < hi {
+            for m in &mut mask[lo..hi] {
+                *m = true;
+            }
+        }
+        search = close.min(bytes.len());
+    }
+    mask
+}
+
+/// 1-based line of byte offset `pos`.
+fn line_of(bytes: &[u8], pos: usize) -> usize {
+    1 + bytes[..pos.min(bytes.len())].iter().filter(|&&c| c == b'\n').count()
+}
+
+/// Find `fn` item spans by tracking brace depth. Trait-method
+/// declarations (`fn f();`) are cancelled by the `;` before any body.
+fn fn_spans(stripped: &str) -> Vec<FnSpan> {
+    let bytes = stripped.as_bytes();
+    let mut spans = Vec::new();
+    // (name, start line, depth the body opened at)
+    let mut stack: Vec<(String, usize, usize)> = Vec::new();
+    let mut pending: Option<(String, usize)> = None;
+    let mut expecting_name = false;
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if is_ident_char(c) {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+            let word = &stripped[start..i];
+            if expecting_name {
+                pending = Some((word.to_string(), line));
+                expecting_name = false;
+            } else if word == "fn" {
+                expecting_name = true;
+            }
+            continue;
+        }
+        match c {
+            '{' => {
+                depth += 1;
+                if let Some((name, start)) = pending.take() {
+                    stack.push((name, start, depth));
+                }
+            }
+            '}' => {
+                if let Some(&(_, _, d)) = stack.last() {
+                    if d == depth {
+                        if let Some((name, start, _)) = stack.pop() {
+                            spans.push(FnSpan { name, start, end: line });
+                        }
+                    }
+                }
+                depth = depth.saturating_sub(1);
+            }
+            ';' => {
+                // `fn f();` — declaration without a body
+                pending = None;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    // unterminated spans (truncated input) close at the last line
+    while let Some((name, start, _)) = stack.pop() {
+        spans.push(FnSpan { name, start, end: line });
+    }
+    spans.sort_by_key(|s| s.start);
+    spans
+}
+
+/// Iterate the identifier tokens of one stripped line with their byte
+/// offsets.
+pub fn idents(line: &str) -> Vec<(usize, &str)> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if is_ident_char(bytes[i] as char) {
+            let start = i;
+            while i < bytes.len() && is_ident_char(bytes[i] as char) {
+                i += 1;
+            }
+            out.push((start, &line[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// True when identifier token `word` occurs on `line` (exact token
+/// match: `unwrap` does not match `unwrap_or`).
+pub fn has_ident(line: &str, word: &str) -> bool {
+    idents(line).iter().any(|(_, w)| *w == word)
+}
+
+/// True when `line` invokes macro `name!`.
+pub fn has_macro(line: &str, name: &str) -> bool {
+    for (off, w) in idents(line) {
+        if w == name {
+            let rest = line[off + w.len()..].trim_start();
+            if rest.starts_with('!') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// True when `line` mentions path `std::<seg>` (whitespace-tolerant).
+pub fn has_std_path(line: &str, seg: &str) -> bool {
+    let toks = idents(line);
+    for (k, (off, w)) in toks.iter().enumerate() {
+        if *w != "std" {
+            continue;
+        }
+        if let Some((noff, nw)) = toks.get(k + 1) {
+            let between = &line[off + w.len()..*noff];
+            if between.trim() == "::" && *nw == seg {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let a = \"Instant::now()\"; // Instant here too\nlet b = 1;\n";
+        let (s, allows) = strip(src);
+        assert!(!s.contains("Instant"));
+        assert!(allows.is_empty());
+        assert_eq!(s.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* outer /* inner HashMap */ still */ let x = r#\"HashSet\"#;\n";
+        let (s, _) = strip(src);
+        assert!(!s.contains("HashMap"));
+        assert!(!s.contains("HashSet"));
+        assert!(s.contains("let x ="));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let src = "fn f<'a>(s: &'a str) -> char { 'x' }\n";
+        let (s, _) = strip(src);
+        assert!(s.contains("'a"));
+        assert!(!s.contains("'x'"));
+    }
+
+    #[test]
+    fn allow_directive_requires_a_reason() {
+        let with = "// lint:allow(no-wall-clock): calibration harness\n";
+        let (_, a) = strip(with);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].rule, "no-wall-clock");
+        let without = "// lint:allow(no-wall-clock)\n";
+        let (_, a) = strip(without);
+        assert!(a.is_empty(), "an allow with no reason is inert");
+    }
+
+    #[test]
+    fn test_region_masks_the_mod_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn tail() {}\n";
+        let f = scan_source("lsm/x.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(4));
+        assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn fn_spans_nest_and_close() {
+        let src = "fn outer() {\n    fn inner() {\n        let x = 1;\n    }\n}\n";
+        let f = scan_source("lsm/x.rs", src);
+        let inner = f.enclosing_fn(3).map(|s| s.name.clone());
+        assert_eq!(inner.as_deref(), Some("inner"));
+        let outer = f.enclosing_fn(5).map(|s| s.name.clone());
+        assert_eq!(outer.as_deref(), Some("outer"));
+    }
+
+    #[test]
+    fn ident_matching_is_exact() {
+        assert!(has_ident("x.unwrap()", "unwrap"));
+        assert!(!has_ident("x.unwrap_or(0)", "unwrap"));
+        assert!(has_macro("panic!(\"boom\")", "panic"));
+        assert!(!has_macro("self.panic_count += 1", "panic"));
+        assert!(has_std_path("use std::fs::File;", "fs"));
+        assert!(!has_std_path("use std::fmt;", "fs"));
+    }
+}

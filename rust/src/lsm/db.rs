@@ -7,7 +7,7 @@
 //! pinned at schedule, real merge executed through the MergeEngine) and
 //! their *effects* apply when the clock catches up to their end.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::{Arc, Weak};
 
 use anyhow::Result;
@@ -134,7 +134,7 @@ enum JobKind {
     },
     Compaction {
         level: usize,
-        removed: HashSet<u64>,
+        removed: BTreeSet<u64>,
         removed_files: Vec<crate::ssd::block_if::FileId>,
         outputs: Vec<Arc<super::sst::Sst>>,
         read_bytes: u64,
@@ -164,7 +164,7 @@ pub struct LsmDb {
     flush_free_at: Nanos,
     pool: ThreadPool,
     pending: Vec<PendingJob>,
-    busy: HashSet<u64>,
+    busy: BTreeSet<u64>,
     inflight_flushes: usize,
     inflight_compactions: usize,
 
@@ -200,7 +200,7 @@ impl LsmDb {
             next_sst_id: 1,
             flush_free_at: 0,
             pending: Vec::new(),
-            busy: HashSet::new(),
+            busy: BTreeSet::new(),
             inflight_flushes: 0,
             inflight_compactions: 0,
             snapshots: Vec::new(),
@@ -566,7 +566,7 @@ impl LsmDb {
         let end = write_done.max(start + 1);
         self.pool.occupy(thread, start, end);
         self.inflight_compactions += 1;
-        let removed: HashSet<u64> = pick.all_ids().collect();
+        let removed: BTreeSet<u64> = pick.all_ids().collect();
         let removed_files = pick
             .inputs
             .iter()

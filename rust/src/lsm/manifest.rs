@@ -10,7 +10,7 @@
 //! device synchronously (manifest writes are fsync'd even under the
 //! paper's sync=false db_bench config — exactly like RocksDB).
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::env::SimEnv;
@@ -195,7 +195,7 @@ impl Manifest {
                     clean = None;
                 }
                 ManifestEdit::CompactionInstall { level, removed, installed } => {
-                    let rm: HashSet<u64> = removed.iter().copied().collect();
+                    let rm: BTreeSet<u64> = removed.iter().copied().collect();
                     for s in installed {
                         next_sst_id = next_sst_id.max(s.id + 1);
                     }

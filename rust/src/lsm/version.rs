@@ -2,7 +2,7 @@
 //! compaction scoring/picking, and the pending-compaction-bytes estimate
 //! that drives one of the three stall conditions.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use super::entry::Key;
@@ -91,7 +91,7 @@ impl Version {
     pub fn apply_compaction(
         &mut self,
         level: usize,
-        removed: &HashSet<u64>,
+        removed: &BTreeSet<u64>,
         added: Vec<Arc<Sst>>,
     ) {
         let removed_bytes = |files: &[Arc<Sst>]| -> u64 {
@@ -164,7 +164,7 @@ impl Version {
     /// Device file ids referenced by any live SST — recovery's orphan
     /// cleanup deletes block-FS files outside this set (outputs of jobs
     /// that were mid-write at the crash).
-    pub fn live_file_ids(&self) -> HashSet<crate::ssd::block_if::FileId> {
+    pub fn live_file_ids(&self) -> BTreeSet<crate::ssd::block_if::FileId> {
         self.levels.iter().flatten().map(|s| s.file).collect()
     }
 
@@ -175,7 +175,7 @@ impl Version {
     pub fn pick_compaction(
         &self,
         opts: &LsmOptions,
-        busy: &HashSet<u64>,
+        busy: &BTreeSet<u64>,
     ) -> Option<CompactionPick> {
         // Levels in descending score order; take the first feasible pick
         // so a busy L0 does not starve lower-level compactions (RocksDB
@@ -196,7 +196,7 @@ impl Version {
     fn pick_at_level(
         &self,
         level: usize,
-        busy: &HashSet<u64>,
+        busy: &BTreeSet<u64>,
     ) -> Option<CompactionPick> {
         let inputs: Vec<Arc<Sst>> = if level == 0 {
             // L0->L1 is serialized (stall type #2) and incremental: take
@@ -263,7 +263,7 @@ mod tests {
             v.add_l0(sst(i, (i as u32 * 10)..(i as u32 * 10 + 10)));
         }
         assert!(v.compaction_score(0, &opts) >= 1.0);
-        let pick = v.pick_compaction(&opts, &HashSet::new()).unwrap();
+        let pick = v.pick_compaction(&opts, &BTreeSet::new()).unwrap();
         assert_eq!(pick.level, 0);
         assert_eq!(pick.inputs.len(), 4);
     }
@@ -275,7 +275,7 @@ mod tests {
         for i in 0..4 {
             v.add_l0(sst(i, 0..10));
         }
-        let mut busy = HashSet::new();
+        let mut busy = BTreeSet::new();
         busy.insert(2u64);
         assert!(v.pick_compaction(&opts, &busy).is_none());
     }
@@ -285,7 +285,7 @@ mod tests {
         let mut v = Version::new(3);
         v.add_l0(sst(1, 0..10));
         v.set_level(1, vec![sst(2, 0..5), sst(3, 20..30)]);
-        let removed: HashSet<u64> = [1u64, 2].into_iter().collect();
+        let removed: BTreeSet<u64> = [1u64, 2].into_iter().collect();
         v.apply_compaction(0, &removed, vec![sst(4, 0..10)]);
         assert_eq!(v.l0_count(), 0);
         assert_eq!(v.levels[1].len(), 2);

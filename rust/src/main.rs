@@ -598,7 +598,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             image.wal_records(),
             image.manifest_edits()
         );
-        let (sys2, t_rec) = EngineBuilder::open(&mut env, t_crash, image);
+        let (sys2, t_rec) = EngineBuilder::open(&mut env, t_crash, image)?;
         let h = sys2.health();
         println!(
             "recovered in  {} (virtual): {} WAL records replayed, \
@@ -673,7 +673,11 @@ fn print_tenant_breakdown(r: &RunResult) {
         return;
     }
     println!("per-tenant breakdown:");
-    for t in &r.tenants {
+    // rows land in admission-table order; sort so the report is stable
+    // under any upstream reordering (determinism: reports are diffed)
+    let mut tenants: Vec<_> = r.tenants.iter().collect();
+    tenants.sort_by(|a, b| a.name.cmp(&b.name));
+    for t in tenants {
         let slo = if t.slo_p99_us > 0.0 {
             format!(
                 "  slo {} ({} over-SLO ticks)",
@@ -712,7 +716,10 @@ fn print_shard_breakdown(sys: &dyn KvEngine, env: &SimEnv) {
         return;
     }
     println!("per-shard breakdown:");
-    for rep in sh.shard_reports(env) {
+    // same defensive ordering as the tenant rows: emit by shard index
+    let mut reports = sh.shard_reports(env);
+    reports.sort_by_key(|rep| rep.shard);
+    for rep in reports {
         let grant = rep
             .grant
             .map(|g| format!(" grant {:.0}%", g * 100.0))
@@ -747,7 +754,10 @@ fn print_shard_breakdown(sys: &dyn KvEngine, env: &SimEnv) {
 fn print_repl_breakdown(r: &RunResult) {
     let Some(rep) = &r.replication else { return };
     println!("replication breakdown ({} reads):", rep.read_policy);
-    for n in &rep.replicas {
+    // emit by node id regardless of upstream row order
+    let mut replicas: Vec<_> = rep.replicas.iter().collect();
+    replicas.sort_by_key(|n| n.node);
+    for n in replicas {
         println!(
             "  node {:>2} {:<8} {:>8} applied (seq {:>8})  lag max {:>6} / mean {:>8.1} records",
             n.node, n.role, n.applied_records, n.applied_seq, n.max_lag, n.mean_lag,

@@ -76,26 +76,38 @@ impl MerkleTree {
         let leaf_hashes: Vec<u64> =
             leaf_entries.iter().map(|es| hash_leaf(es)).collect();
         let mut levels = vec![leaf_hashes];
-        while levels.last().unwrap().len() > 1 {
-            let below = levels.last().unwrap();
-            let parents: Vec<u64> = below
-                .chunks(fanout)
-                .map(|c| {
-                    let mut h = FNV_OFFSET;
-                    h = fnv1a_u64(h, c.len() as u64);
-                    for &child in c {
-                        h = fnv1a_u64(h, child);
-                    }
-                    h
-                })
-                .collect();
+        // fold upward until a single root remains; `levels` is seeded
+        // with the leaf level, and the rejoin path must not panic, so
+        // the fold is written without `unwrap`
+        loop {
+            let parents: Vec<u64> = match levels.last() {
+                Some(below) if below.len() > 1 => below
+                    .chunks(fanout)
+                    .map(|c| {
+                        let mut h = FNV_OFFSET;
+                        h = fnv1a_u64(h, c.len() as u64);
+                        for &child in c {
+                            h = fnv1a_u64(h, child);
+                        }
+                        h
+                    })
+                    .collect(),
+                _ => break,
+            };
             levels.push(parents);
         }
         (Self { fanout, levels, leaf_entries }, t)
     }
 
+    /// The root digest. `levels` is never empty (`build` seeds it with
+    /// the leaf level); the degenerate case folds to the empty digest
+    /// rather than panicking on the rejoin path.
     pub fn root(&self) -> u64 {
-        *self.levels.last().unwrap().first().unwrap()
+        self.levels
+            .last()
+            .and_then(|l| l.first())
+            .copied()
+            .unwrap_or(FNV_OFFSET)
     }
 
     /// Total on-wire size of every live entry — what a full resync from

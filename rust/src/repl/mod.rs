@@ -37,7 +37,7 @@
 
 pub mod merkle;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Result;
 
@@ -648,18 +648,20 @@ impl ReplicatedDb {
         &mut self,
         env: &mut SimEnv,
         at: Nanos,
-    ) -> RepairReport {
+    ) -> Result<RepairReport> {
         let at = self.gate(at);
         self.pump(env, at);
-        let (idx, image) =
-            self.old_image.take().expect("no crashed node to rejoin");
+        let (idx, image) = self
+            .old_image
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no crashed node to rejoin"))?;
         let (engine, t_rec) = {
             let node = &mut self.nodes[idx];
             let nenv = match &mut node.env {
                 Some(e) => e,
                 None => &mut *env,
             };
-            EngineBuilder::open(nenv, at, image)
+            EngineBuilder::open(nenv, at, image)?
         };
         self.nodes[idx].engine = Some(engine);
         let report = self.anti_entropy(env, t_rec, idx);
@@ -673,7 +675,7 @@ impl ReplicatedDb {
         node.applied_seq = node.applied_seq.max(top_seq);
         self.anti_entropy_bytes += report.hash_bytes + report.entry_bytes;
         self.full_resync_bytes += report.full_resync_bytes;
-        report
+        Ok(report)
     }
 
     /// Merkle exchange + range repair of node `idx` against the primary.
@@ -704,9 +706,9 @@ impl ReplicatedDb {
         for &leaf in &dirty {
             let want = &ptree.leaf_entries[leaf];
             let have = &rtree.leaf_entries[leaf];
-            let want_keys: HashMap<Key, ValueDesc> =
+            let want_keys: BTreeMap<Key, ValueDesc> =
                 want.iter().map(|e| (e.key, e.val)).collect();
-            let have_keys: HashMap<Key, ValueDesc> =
+            let have_keys: BTreeMap<Key, ValueDesc> =
                 have.iter().map(|e| (e.key, e.val)).collect();
             // only the difference crosses the wire: changed/missing
             // entries, plus a key list for deletions
@@ -1181,7 +1183,7 @@ mod tests {
         assert_eq!(got, Some(ValueDesc::new(350, 512)));
         t = done;
         // rejoin the crashed node and verify zero divergence
-        let rep = db.rejoin_crashed(&mut env, t);
+        let rep = db.rejoin_crashed(&mut env, t).expect("rejoin failed");
         assert!(db.is_live(0));
         assert!(
             rep.hash_bytes + rep.entry_bytes < rep.full_resync_bytes,

@@ -41,6 +41,7 @@ impl XlaRuntime {
             blooms: HashMap::new(),
             dir: dir.clone(),
         };
+        // lint:allow(no-real-io): host-side artifact loading at process start, not simulation state
         let entries = std::fs::read_dir(&dir)
             .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts`)"))?;
         for entry in entries {

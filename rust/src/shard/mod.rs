@@ -380,7 +380,7 @@ impl ShardedDb {
     /// each against its own WAL stream and namespace), the router comes
     /// back from the boundary table, and the arbiter grant table rolls
     /// any mid-flight transfer forward to a consistent state.
-    pub fn open(env: &mut SimEnv, at: Nanos, image: ShardImage) -> (Self, Nanos) {
+    pub fn open(env: &mut SimEnv, at: Nanos, image: ShardImage) -> Result<(Self, Nanos)> {
         let n = image.children.len().max(1);
         env.device.wal_ensure_streams(n);
         if matches!(image.child_kind, SystemKind::Kvaccel { .. }) {
@@ -400,7 +400,7 @@ impl ShardedDb {
         let mut shards: Vec<Box<dyn KvEngine>> = Vec::with_capacity(n);
         let mut block_cache: Option<crate::engine::SharedBlockCache> = None;
         for child in image.children {
-            let (mut sh, tc) = EngineBuilder::open(env, t, child);
+            let (mut sh, tc) = EngineBuilder::open(env, t, child)?;
             t = tc;
             // recovered children each built their own cold cache; swap in
             // one store-wide instance (the cache is volatile state, so a
@@ -435,7 +435,7 @@ impl ShardedDb {
         db.ensure_boot(env);
         db.refresh_stats();
         env.clock.advance_to(t);
-        (db, t)
+        Ok((db, t))
     }
 }
 

@@ -4,7 +4,7 @@
 //! owning LSM structures (typed entries), while every byte is charged to
 //! the NAND/PCIe models here.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
@@ -25,7 +25,7 @@ pub struct FileMeta {
 
 #[derive(Clone, Debug, Default)]
 pub struct BlockFs {
-    files: HashMap<FileId, FileMeta>,
+    files: BTreeMap<FileId, FileMeta>,
     next_id: FileId,
     pub bytes_written: u64,
     pub bytes_deleted: u64,

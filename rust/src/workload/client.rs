@@ -1015,7 +1015,7 @@ mod tests {
         assert!(r.writes.total > 200);
         assert!(r.reads.total > 100);
         assert_eq!(r.read_hits + r.read_misses, r.reads.total);
-        let ids: std::collections::HashSet<ActorId> =
+        let ids: std::collections::BTreeSet<ActorId> =
             trace.iter().map(|t| t.client).collect();
         assert_eq!(ids.len(), 3, "all clients issued ops");
         assert_eq!(trace.len() as u64, r.writes.total + r.reads.total);
@@ -1048,7 +1048,7 @@ mod tests {
         assert!(r.reads.total > 100);
         // the reader never writes; without frontier sharing it would
         // read key 0 forever
-        let distinct: std::collections::HashSet<Key> = trace
+        let distinct: std::collections::BTreeSet<Key> = trace
             .iter()
             .filter(|t| t.kind == OpKind::Get)
             .map(|t| t.key)

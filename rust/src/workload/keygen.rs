@@ -253,7 +253,7 @@ mod tests {
     fn zipfian_is_skewed_and_bounded() {
         let space: Key = 10_000;
         let mut g = KeyGen::with_dist(3, space, 64, KeyDist::Zipfian { theta: 0.99 });
-        let mut counts = std::collections::HashMap::new();
+        let mut counts = std::collections::BTreeMap::new();
         let draws = 20_000;
         for _ in 0..draws {
             let k = g.random_key();

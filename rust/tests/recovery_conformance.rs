@@ -134,7 +134,7 @@ fn clean_close_reopens_with_zero_wal_records() {
             "{}: clean close must seal + drain the WAL",
             kind.label()
         );
-        let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image);
+        let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
         let h = sys2.health();
         assert_eq!(
             h.recovered_wal_records,
@@ -170,7 +170,7 @@ fn crash_recovery_is_prefix_consistent_across_engines() {
             let t = run_workload(&mut *sys, &mut env, &mut oracle, 500, n2);
             let image = sys.crash(&mut env, t);
             assert!(!image.clean);
-            let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image);
+            let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
             let label = format!("{} n2={n2}", kind.label());
             for key in 0..701u32 {
                 let (got, nt) = sys2.get(&mut env, t2, key);
@@ -195,7 +195,7 @@ fn double_crash_stays_prefix_consistent() {
         let mut oracle = Oracle::default();
         let t = run_workload(&mut *sys, &mut env, &mut oracle, 400, 350);
         let image = sys.crash(&mut env, t);
-        let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+        let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
         // second life: a short burst with NO barrier, then crash again
         let mut t3 = t2;
         for i in 0..40u32 {
@@ -218,7 +218,7 @@ fn double_crash_stays_prefix_consistent() {
             "{}: second-life page-cached tail leaked into the durable cut",
             kind.label()
         );
-        let (mut sys3, mut t4) = EngineBuilder::open(&mut env, t3, image2);
+        let (mut sys3, mut t4) = EngineBuilder::open(&mut env, t3, image2).expect("recovery failed");
         let label = format!("{} double-crash", kind.label());
         for key in 0..701u32 {
             let (got, nt) = sys3.get(&mut env, t4, key);
@@ -235,7 +235,7 @@ fn snapshot_and_iterator_conform_on_a_reopened_engine() {
         let mut oracle = Oracle::default();
         let t = run_workload(&mut *sys, &mut env, &mut oracle, 600, 500);
         let image = sys.crash(&mut env, t);
-        let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+        let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
         // cursor over the full range: keys strictly ascending, every
         // scanned entry agrees with a point get, every entry passes the
         // prefix-consistency oracle
@@ -282,7 +282,7 @@ fn unsynced_tail_is_lost_but_barrier_writes_survive() {
     }
     let image = sys.crash(&mut env, t);
     assert_eq!(image.wal_records(), 0, "nothing synced, nothing durable");
-    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
     let (got, _) = sys2.get(&mut env, t2, 3);
     assert_eq!(got, None, "page-cached write must not survive a crash");
 
@@ -293,7 +293,7 @@ fn unsynced_tail_is_lost_but_barrier_writes_survive() {
     }
     t = sys.flush(&mut env, t);
     let image = sys.crash(&mut env, t);
-    let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image);
+    let (mut sys2, mut t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
     for k in 0..5u32 {
         let (got, nt) = sys2.get(&mut env, t2, k);
         t2 = nt;
@@ -416,4 +416,5 @@ fn open_kv(
         image.wal,
         image.clean,
     )
+    .expect("recovery failed")
 }

@@ -207,7 +207,7 @@ fn randomized_crash_points_promote_a_prefix_consistent_replica() {
                 let val = ValueDesc::new(50_000 + i, 1024);
                 t2 = db.put(&mut env, t2, k, val).done;
             }
-            let rep = db.rejoin_crashed(&mut env, t2);
+            let rep = db.rejoin_crashed(&mut env, t2).expect("rejoin failed");
             assert!(
                 rep.hash_bytes + rep.entry_bytes < rep.full_resync_bytes,
                 "{label}: repair {} B >= full resync {} B",
@@ -260,7 +260,7 @@ fn anti_entropy_converges_sharded_replicas() {
         let k = (i * 31) % 10_000;
         t2 = db.put(&mut env, t2, k, ValueDesc::new(90_000 + i, 512)).done;
     }
-    let rep = db.rejoin_crashed(&mut env, t2);
+    let rep = db.rejoin_crashed(&mut env, t2).expect("rejoin failed");
     assert!(
         rep.hash_bytes + rep.entry_bytes < rep.full_resync_bytes,
         "sharded repair must beat a full resync"

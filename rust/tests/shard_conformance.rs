@@ -510,7 +510,7 @@ fn clean_close_reopens_with_zero_wal_records_per_shard() {
             );
             let shard = image.shard.as_ref().expect("sharded image");
             assert_eq!(shard.children.len(), 4, "{tag}");
-            let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+            let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
             let h = sys2.health();
             assert_eq!(h.recovered_wal_records, 0, "{tag}: zero-replay reopen");
             // spot-check data
@@ -539,7 +539,7 @@ fn crash_recovery_is_prefix_consistent_across_shards() {
                 let t = run_crash_workload(&mut *sys, &mut env, &mut oracle, n1, n2);
                 let image = sys.crash(&mut env, t);
                 assert!(!image.clean);
-                let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+                let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
                 let mut tt = t2;
                 for probe in 0..KEY_SPACE {
                     if probe % 37 != 0 && probe % 53 != 0 {
@@ -567,7 +567,7 @@ fn double_crash_keeps_per_shard_wal_streams_consistent() {
     let mut oracle = Oracle::default();
     let t = run_crash_workload(&mut *sys, &mut env, &mut oracle, 600, 200);
     let image = sys.crash(&mut env, t);
-    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
     // treat everything visible after the first recovery as the new
     // acked history baseline
     let mut oracle2 = Oracle::default();
@@ -585,7 +585,7 @@ fn double_crash_keeps_per_shard_wal_streams_consistent() {
         oracle2.record(k, Some(v(77_000 + i)));
     }
     let image2 = sys2.crash(&mut env, tt);
-    let (mut sys3, t3) = EngineBuilder::open(&mut env, tt, image2);
+    let (mut sys3, t3) = EngineBuilder::open(&mut env, tt, image2).expect("recovery failed");
     let mut t4 = t3;
     for probe in (0..KEY_SPACE).step_by(37) {
         let (got, nt) = sys3.get(&mut env, t4, probe);
@@ -629,7 +629,7 @@ fn crash_mid_rebalance_recovers_a_consistent_grant_table() {
         let shard = image.shard.as_ref().expect("sharded image");
         assert!(shard.pending.is_some(), "pending transfer recorded durably");
     }
-    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image);
+    let (mut sys2, t2) = EngineBuilder::open(&mut env, t, image).expect("recovery failed");
     let sh = sys2.sharded().expect("reopened as sharded");
     let sum: f64 = sh.arbiter().grants().iter().sum();
     assert!(
