@@ -169,6 +169,7 @@ impl AdocEngine {
         bloom: BloomBuilder,
         manifest: Manifest,
         wal: Vec<Entry>,
+        vlog: Option<crate::vlog::VlogImage>,
         clean: bool,
     ) -> (Self, Nanos) {
         let base_threads = opts.compaction_threads;
@@ -181,6 +182,7 @@ impl AdocEngine {
             bloom,
             manifest,
             wal,
+            vlog,
             clean,
         );
         (
@@ -244,6 +246,7 @@ impl KvEngine for AdocEngine {
     fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
         self.tuner.maybe_tune(env, at, &mut self.db);
         self.db.catch_up(env, at);
+        self.db.vlog_gc_tick(env, at);
         self.db.maybe_schedule(env, at);
     }
 

@@ -32,6 +32,7 @@ use crate::lsm::sst::Sst;
 use crate::lsm::LsmOptions;
 use crate::sim::{CpuClass, Nanos};
 use crate::util::LruCache;
+use crate::vlog::VLOG_RECORD_HEADER;
 
 // ---------------------------------------------------------------------
 // Read-amplification accounting
@@ -47,6 +48,9 @@ pub struct ScanCounters {
     pub main_blocks: AtomicU64,
     /// NAND pages read by Dev-LSM cursors (KVACCEL only).
     pub dev_pages: AtomicU64,
+    /// Value-log blocks touched dereferencing separated values
+    /// (key-value separation only).
+    pub vlog_blocks: AtomicU64,
 }
 
 impl ScanCounters {
@@ -56,6 +60,7 @@ impl ScanCounters {
             nexts: self.nexts.load(Ordering::Relaxed),
             main_blocks: self.main_blocks.load(Ordering::Relaxed),
             dev_pages: self.dev_pages.load(Ordering::Relaxed),
+            vlog_blocks: self.vlog_blocks.load(Ordering::Relaxed),
         }
     }
 }
@@ -69,6 +74,7 @@ pub struct ScanAmp {
     pub nexts: u64,
     pub main_blocks: u64,
     pub dev_pages: u64,
+    pub vlog_blocks: u64,
 }
 
 impl ScanAmp {
@@ -77,6 +83,14 @@ impl ScanAmp {
             0.0
         } else {
             self.main_blocks as f64 / self.nexts as f64
+        }
+    }
+
+    pub fn vlog_blocks_per_next(&self) -> f64 {
+        if self.nexts == 0 {
+            0.0
+        } else {
+            self.vlog_blocks as f64 / self.nexts as f64
         }
     }
 
@@ -331,6 +345,16 @@ pub type SharedBlockCache = Arc<Mutex<LruCache<(u64, usize), ()>>>;
 /// Reserved cache-key namespace for device write-buffer entries.
 pub const DEV_CACHE_NS: u64 = u64::MAX;
 
+/// Reserved cache-key namespace for value-log blocks; the block index
+/// packs `(segment << 32) | block_within_segment` (segment ids and
+/// per-segment block counts both fit 32 bits by construction).
+pub const VLOG_CACHE_NS: u64 = u64::MAX - 1;
+
+/// Cache key of one value-log block.
+pub fn vlog_cache_key(segment: u32, block: u64) -> (u64, usize) {
+    (VLOG_CACHE_NS, ((segment as usize) << 32) | (block as usize & 0xFFFF_FFFF))
+}
+
 /// `blocks == 0` builds a disabled cache: every probe misses and
 /// inserts are dropped (hot paths skip the probe entirely).
 pub fn new_block_cache(blocks: usize) -> SharedBlockCache {
@@ -366,6 +390,7 @@ pub struct EngineIterator {
 
     next_cpu_ns: Nanos,
     get_cpu_ns: Nanos,
+    block_bytes: u64,
     disk_block_bytes: u64,
     decompress_cpu_ns: Nanos,
     /// Engine-wide block cache, shared with the engine's point-read
@@ -416,6 +441,7 @@ impl EngineIterator {
             current: None,
             next_cpu_ns: cost.next_cpu_ns,
             get_cpu_ns: cost.get_cpu_ns,
+            block_bytes: cost.block_bytes,
             disk_block_bytes: cost.disk_block_bytes,
             decompress_cpu_ns: cost.decompress_cpu_ns,
             cache,
@@ -453,6 +479,35 @@ impl EngineIterator {
             }
         }
         t
+    }
+
+    /// Dereference a separated value at the emit boundary: charge the
+    /// vlog blocks its record spans (cache-aware, like SST blocks but
+    /// counted separately — `ScanAmp::vlog_blocks`) and return the
+    /// entry with its location stripped, so cursor consumers never see
+    /// pointers.
+    fn deref_vlog(&mut self, env: &mut SimEnv, mut t: Nanos, e: Entry) -> (Entry, Nanos) {
+        let crate::lsm::entry::ValueLoc::Vlog { segment, offset } = e.val.loc else {
+            return (e, t);
+        };
+        let bb = self.block_bytes.max(1);
+        let first = offset as u64 / bb;
+        let last = (offset as u64 + VLOG_RECORD_HEADER + e.val.len as u64 - 1) / bb;
+        for block in first..=last {
+            self.local.vlog_blocks += 1;
+            self.counters.vlog_blocks.fetch_add(1, Ordering::Relaxed);
+            let key = vlog_cache_key(segment, block);
+            let mut cache = self.cache.lock().expect("block cache poisoned");
+            if cache.capacity() > 0 && cache.get(&key).is_some() {
+                env.cpu.charge(CpuClass::Foreground, t, self.get_cpu_ns / 2);
+                t += self.get_cpu_ns / 2;
+            } else {
+                // vlog blocks are stored uncompressed (blind appends)
+                t = env.device.read_block(t, self.block_bytes);
+                cache.insert(key, ());
+            }
+        }
+        (e.inline_value(), t)
     }
 
     /// Fold the Dev-LSM cursor's page-read counter into the shared
@@ -545,6 +600,8 @@ impl EngineIterator {
             if winner.val.is_tombstone() {
                 continue;
             }
+            let (winner, nt) = self.deref_vlog(env, t, winner);
+            t = nt;
             self.current = Some(winner);
             return t;
         }
@@ -608,6 +665,8 @@ impl EngineIterator {
             if winner.val.is_tombstone() {
                 continue;
             }
+            let (winner, nt) = self.deref_vlog(env, t, winner);
+            t = nt;
             self.current = Some(winner);
             return t;
         }

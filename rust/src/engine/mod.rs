@@ -27,9 +27,9 @@ use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::Nanos;
 
 pub use iter::{
-    new_block_cache, DbIterator, DevPin, EngineIterator, IterCost, IterOptions,
-    ScanAmp, ScanCounters, SharedBlockCache, Snapshot, SnapshotInner,
-    DEV_CACHE_NS,
+    new_block_cache, vlog_cache_key, DbIterator, DevPin, EngineIterator, IterCost,
+    IterOptions, ScanAmp, ScanCounters, SharedBlockCache, Snapshot, SnapshotInner,
+    DEV_CACHE_NS, VLOG_CACHE_NS,
 };
 
 // ---------------------------------------------------------------------
@@ -167,6 +167,9 @@ pub struct DurableImage {
     pub manifest: Manifest,
     /// Durable WAL records in append order.
     pub wal: Vec<Entry>,
+    /// Value-log head image (None when key-value separation never
+    /// engaged; sealed segments travel through the manifest).
+    pub vlog: Option<crate::vlog::VlogImage>,
     pub kvaccel_cfg: Option<KvaccelConfig>,
     pub adoc_cfg: Option<AdocConfig>,
     /// Sharded-store image: the top-level shard manifest (ranges → child
@@ -622,6 +625,7 @@ impl EngineBuilder {
             bloom,
             manifest,
             wal,
+            vlog,
             kvaccel_cfg,
             adoc_cfg,
             shard,
@@ -634,8 +638,9 @@ impl EngineBuilder {
         }
         Ok(match kind {
             SystemKind::RocksDb { .. } => {
-                let (db, t) =
-                    LsmDb::open(env, at, opts, merge, bloom, manifest, wal, clean);
+                let (db, t) = LsmDb::open(
+                    env, at, opts, merge, bloom, manifest, wal, vlog, clean,
+                );
                 (Box::new(db) as Box<dyn KvEngine>, t)
             }
             SystemKind::Adoc => {
@@ -648,6 +653,7 @@ impl EngineBuilder {
                     bloom,
                     manifest,
                     wal,
+                    vlog,
                     clean,
                 );
                 (Box::new(eng) as Box<dyn KvEngine>, t)
@@ -655,7 +661,7 @@ impl EngineBuilder {
             SystemKind::Kvaccel { scheme } => {
                 let cfg = kvaccel_cfg.unwrap_or_default().with_scheme(scheme);
                 let (eng, t) = KvaccelDb::open(
-                    env, at, opts, cfg, merge, bloom, manifest, wal, clean,
+                    env, at, opts, cfg, merge, bloom, manifest, wal, vlog, clean,
                 )?;
                 (Box::new(eng) as Box<dyn KvEngine>, t)
             }

@@ -7,6 +7,7 @@
 //! fall) are the reproduction target — see EXPERIMENTS.md.
 
 pub mod figs;
+pub mod kv_sep;
 pub mod qos_fairness;
 pub mod read_amp;
 pub mod recovery;
@@ -179,6 +180,7 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
         "fig12" => figs::fig12(ctx),
         "fig13" => figs::fig13(ctx),
         "fig14" => figs::fig14(ctx),
+        "kv-sep" => kv_sep::kv_sep(ctx),
         "qdelay" => figs::qdelay(ctx),
         "qos-fairness" => qos_fairness::qos_fairness(ctx),
         "read-amp" => read_amp::read_amp(ctx),
@@ -201,8 +203,8 @@ pub fn run(ctx: &ExpContext, id: &str) -> Result<String> {
     }
 }
 
-pub const ALL_EXPERIMENTS: [&str; 16] = [
+pub const ALL_EXPERIMENTS: [&str; 17] = [
     "fig2", "fig3", "fig4", "fig5", "fig11", "fig12", "fig13", "fig14",
-    "qdelay", "qos-fairness", "read-amp", "recovery", "repl-lag",
-    "shard-scale", "table5", "table6",
+    "kv-sep", "qdelay", "qos-fairness", "read-amp", "recovery",
+    "repl-lag", "shard-scale", "table5", "table6",
 ];

@@ -161,6 +161,7 @@ impl KvaccelDb {
         // redirected the Main-LSM sees no operations, and without this the
         // Detector would sample a frozen (stalled-forever) snapshot.
         self.main.catch_up(env, at);
+        self.main.vlog_gc_tick(env, at);
         // Close a rollback window whose horizon has passed (Fig 9 step
         // 8: device reset + routing clear, deferred from `begin`).
         if self.rollback.pending_end().is_some_and(|end| end <= at) {
@@ -497,6 +498,7 @@ impl KvaccelDb {
     ) -> Result<DurableImage> {
         let t = self.finish(env, at)?;
         let t = env.device.wal_sync_on(self.main.opts.wal_stream, t);
+        let t = self.main.vlog_sync(env, t);
         let last_seq = self.main.last_seq();
         let t = self
             .main
@@ -504,7 +506,8 @@ impl KvaccelDb {
         env.clock.advance_to(t);
         let KvaccelDb { main, cfg, .. } = self;
         let scheme = cfg.rollback.scheme;
-        let (opts, merge, bloom, manifest, wal) = main.into_image_parts(None);
+        let (opts, merge, bloom, manifest, wal, vlog) =
+            main.into_image_parts(None, None);
         Ok(DurableImage {
             kind: SystemKind::Kvaccel { scheme },
             opts,
@@ -512,6 +515,7 @@ impl KvaccelDb {
             bloom,
             manifest,
             wal,
+            vlog,
             kvaccel_cfg: Some(cfg),
             adoc_cfg: None,
             shard: None,
@@ -535,11 +539,12 @@ impl KvaccelDb {
         // page-cache accounting (those bytes are lost, not durable)
         let watermark =
             env.device.wal_durable_watermark_on(self.main.opts.wal_stream);
+        let vlog_watermark = self.main.vlog_durable_watermark(env);
         env.device.crash(at);
         let KvaccelDb { main, cfg, .. } = self;
         let scheme = cfg.rollback.scheme;
-        let (opts, merge, bloom, manifest, wal) =
-            main.into_image_parts(Some(watermark));
+        let (opts, merge, bloom, manifest, wal, vlog) =
+            main.into_image_parts(Some(watermark), vlog_watermark);
         DurableImage {
             kind: SystemKind::Kvaccel { scheme },
             opts,
@@ -547,6 +552,7 @@ impl KvaccelDb {
             bloom,
             manifest,
             wal,
+            vlog,
             kvaccel_cfg: Some(cfg),
             adoc_cfg: None,
             shard: None,
@@ -572,11 +578,12 @@ impl KvaccelDb {
         bloom: BloomBuilder,
         manifest: Manifest,
         wal: Vec<Entry>,
+        vlog: Option<crate::vlog::VlogImage>,
         clean: bool,
     ) -> Result<(Self, Nanos)> {
         opts.enable_slowdown = false;
         let (main, t0) =
-            LsmDb::open(env, at, opts, merge, bloom, manifest, wal, clean);
+            LsmDb::open(env, at, opts, merge, bloom, manifest, wal, vlog, clean);
         let mut db = Self::from_parts(main, cfg);
         // full recovery scan of the device write buffer (charges the
         // NAND reads + chunked DMA of the paper's Fig 9 path)
@@ -671,7 +678,12 @@ impl crate::engine::KvEngine for KvaccelDb {
         entries.sort_by_key(|e| e.seq);
         entries
             .into_iter()
-            .map(|entry| crate::engine::CdcRecord { entry, stream: 0 })
+            // ship values, never vlog pointers — the replica separates
+            // against its own log
+            .map(|entry| crate::engine::CdcRecord {
+                entry: entry.inline_value(),
+                stream: 0,
+            })
             .collect()
     }
 

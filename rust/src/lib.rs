@@ -34,6 +34,8 @@ pub mod ssd;
 
 pub mod lsm;
 
+pub mod vlog;
+
 pub mod kvaccel;
 
 pub mod baselines;

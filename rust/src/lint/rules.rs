@@ -30,7 +30,7 @@ pub struct FileReport {
 /// invariants.
 const TRACE_MODULES: &[&str] = &[
     "sim", "workload", "lsm", "kvaccel", "shard", "qos", "repl", "ssd",
-    "engine",
+    "engine", "vlog",
 ];
 
 /// Real-time harness files: the only place `Instant`/`SystemTime` is
@@ -74,7 +74,8 @@ const SYNC_EVIDENCE: &[&str] =
 
 /// Modules where the sync-before-delete heuristic applies. `ssd` is
 /// exempt: it *implements* the delete/sync mechanisms.
-const SYNC_RULE_MODULES: &[&str] = &["lsm", "kvaccel", "shard", "repl", "engine"];
+const SYNC_RULE_MODULES: &[&str] =
+    &["lsm", "kvaccel", "shard", "repl", "engine", "vlog"];
 
 pub const ALL_RULES: &[&str] = &[
     "no-wall-clock",

@@ -14,12 +14,16 @@ use anyhow::Result;
 
 use crate::engine::{new_block_cache, ScanCounters, SharedBlockCache, Snapshot, SnapshotInner};
 
+use crate::engine::{vlog_cache_key, VLOG_CACHE_NS};
 use crate::env::SimEnv;
 use crate::runtime::{BloomBuilder, MergeEngine};
 use crate::sim::{CpuClass, Nanos, ThreadPool};
+use crate::vlog::{
+    Vlog, VlogImage, VlogSegment, VlogStats, VLOG_RECORD_HEADER, VLOG_STREAM_OFFSET,
+};
 
 use super::compaction::{concat_inputs, run_merge, shape_of};
-use super::entry::{Entry, Key, Seq, ValueDesc};
+use super::entry::{Entry, Key, Seq, ValueDesc, ValueLoc};
 use super::iterator::LsmIterator;
 use super::manifest::{Manifest, ManifestEdit};
 use super::memtable::Memtable;
@@ -139,6 +143,9 @@ enum JobKind {
         outputs: Vec<Arc<super::sst::Sst>>,
         read_bytes: u64,
         write_bytes: u64,
+        /// `(segment, len)` of separated values whose pointer entries
+        /// the merge dropped — their vlog bytes go dead at install.
+        dead_vlog: Vec<(u32, u32)>,
     },
 }
 
@@ -183,6 +190,16 @@ pub struct LsmDb {
     pub stall: StallStats,
     pub stats: DbStats,
     pub recovery: RecoveryStats,
+
+    /// WiscKey-style value log (key-value separation). Created lazily on
+    /// the first separated append, so a store whose `vlog_threshold` is
+    /// configured but never crossed — and every store with the feature
+    /// off — is bit-identical to one built before the vlog existed.
+    vlog: Option<Box<Vlog>>,
+    /// GC-retired segments awaiting physical deletion, tagged with the
+    /// seq at retirement: the file is only deleted once no live snapshot
+    /// pins an older view (the drop's manifest edit is already durable).
+    vlog_pending_drops: Vec<(Seq, Arc<VlogSegment>)>,
 }
 
 impl LsmDb {
@@ -209,6 +226,8 @@ impl LsmDb {
             stall: StallStats::default(),
             stats: DbStats::default(),
             recovery: RecoveryStats::default(),
+            vlog: None,
+            vlog_pending_drops: Vec::new(),
             opts,
         }
     }
@@ -275,12 +294,19 @@ impl LsmDb {
     /// read-path recency order. No latency is charged — recovery
     /// reconciliation walks this in bulk and charges CPU once.
     pub fn latest_seq(&self, key: Key) -> Option<Seq> {
-        if let Some((seq, _)) = self.mem.get(key) {
-            return Some(seq);
+        self.latest_desc(key).map(|(seq, _)| seq)
+    }
+
+    /// Newest visible `(seq, value)` for `key` — the vlog GC's liveness
+    /// oracle (a separated value is live iff the latest version still
+    /// points at its exact log location). No latency is charged.
+    pub fn latest_desc(&self, key: Key) -> Option<(Seq, ValueDesc)> {
+        if let Some(hit) = self.mem.get(key) {
+            return Some(hit);
         }
         for imm in self.imms.iter().rev() {
-            if let Some((seq, _)) = imm.get(key) {
-                return Some(seq);
+            if let Some(hit) = imm.get(key) {
+                return Some(hit);
             }
         }
         for sst in &self.version.levels[0] {
@@ -288,7 +314,7 @@ impl LsmDb {
                 continue;
             }
             if let Some((e, _)) = sst.get(key) {
-                return Some(e.seq);
+                return Some((e.seq, e.val));
             }
         }
         for level in 1..self.version.levels.len() {
@@ -296,10 +322,208 @@ impl LsmDb {
             let idx = files.partition_point(|s| s.largest < key);
             let Some(sst) = files.get(idx) else { continue };
             if let Some((e, _)) = sst.get(key) {
-                return Some(e.seq);
+                return Some((e.seq, e.val));
             }
         }
         None
+    }
+
+    // -----------------------------------------------------------------
+    // Value log (key-value separation)
+    // -----------------------------------------------------------------
+
+    /// Counters of this store's value log (zero when separation is off
+    /// or never triggered).
+    pub fn vlog_stats(&self) -> VlogStats {
+        self.vlog.as_ref().map(|v| v.stats).unwrap_or_default()
+    }
+
+    /// Current value-log footprint on the device (head + sealed
+    /// segments; retired-but-undeleted segments excluded).
+    pub fn vlog_total_bytes(&self) -> u64 {
+        self.vlog.as_ref().map(|v| v.total_bytes()).unwrap_or(0)
+    }
+
+    /// Known-dead bytes still occupying the value log — the numerator
+    /// of vlog space amplification.
+    pub fn vlog_dead_bytes(&self) -> u64 {
+        self.vlog.as_ref().map(|v| v.dead_bytes()).unwrap_or(0)
+    }
+
+    /// Fsync the value-log stream if one exists (wrapping engines call
+    /// this before capturing a clean image). No-op time-wise when off.
+    pub fn vlog_sync(&mut self, env: &mut SimEnv, at: Nanos) -> Nanos {
+        match &self.vlog {
+            Some(v) => env.device.wal_sync_on(v.stream(), at),
+            None => at,
+        }
+    }
+
+    /// Durable byte watermark of the value-log stream (None when the
+    /// log never engaged) — the crash cut wrapping engines capture
+    /// before the power loss wipes page-cache accounting.
+    pub fn vlog_durable_watermark(&self, env: &SimEnv) -> Option<u64> {
+        self.vlog
+            .as_ref()
+            .map(|v| env.device.wal_durable_watermark_on(v.stream()))
+    }
+
+    /// Route `val` through the value log when separation applies:
+    /// appends the payload to the log (lazily creating it) and returns
+    /// the pointer descriptor the LSM stores instead. Installs the seal
+    /// edit when the append fills the head.
+    fn separate_value(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+        seq: Seq,
+        val: ValueDesc,
+    ) -> ValueDesc {
+        if self.opts.vlog_threshold == 0
+            || val.is_tombstone()
+            || val.in_vlog()
+            || val.len < self.opts.vlog_threshold
+        {
+            return val;
+        }
+        let vlog = self.vlog.get_or_insert_with(|| {
+            Box::new(Vlog::new(self.opts.wal_stream, self.opts.vlog_segment_bytes))
+        });
+        let out = vlog.append(env, at, key, seq, val);
+        if let Some(segment) = out.sealed {
+            self.manifest.append(env, at, ManifestEdit::VlogSeal { segment });
+        }
+        out.desc
+    }
+
+    /// An insert shadowed `old` in the active memtable: if it pointed
+    /// into the value log, those log bytes are now dead.
+    fn note_shadowed(&mut self, old: ValueDesc) {
+        if let ValueLoc::Vlog { segment, .. } = old.loc {
+            if let Some(vlog) = self.vlog.as_mut() {
+                vlog.mark_dead(segment, old.len);
+            }
+        }
+    }
+
+    /// One background GC step for the value log (driven from
+    /// `KvEngine::tick` and piggybacked on the write path so every
+    /// engine kind reclaims space): pick the deadest sealed segment past the
+    /// configured dead ratio, rewrite its live values to the log head
+    /// at fresh seqs, make both logs durable, then install the segment
+    /// drop edit. Physical deletion defers until no live snapshot pins
+    /// the pre-GC view (`flush_pending_vlog_drops`).
+    pub fn vlog_gc_tick(&mut self, env: &mut SimEnv, at: Nanos) {
+        self.flush_pending_vlog_drops(env);
+        let Some(victim) = self
+            .vlog
+            .as_ref()
+            .and_then(|v| v.gc_victim(self.opts.vlog_gc_dead_ratio))
+        else {
+            return;
+        };
+        let Some(seg) =
+            self.vlog.as_ref().and_then(|v| v.sealed_segment(victim).cloned())
+        else {
+            return;
+        };
+        let mut t = at;
+        // read the whole victim back (sequential segment read)
+        if let Some(file) = seg.file {
+            t = env.device.read_file(t, file, seg.bytes);
+        }
+        if let Some(vlog) = self.vlog.as_mut() {
+            vlog.stats.gc_runs += 1;
+            vlog.stats.gc_read_bytes += seg.bytes;
+        }
+        // liveness sift: one latest-version probe per record
+        let sift_cpu = seg.records.len() as u64 * self.opts.merge_cpu_ns_per_entry;
+        env.cpu.charge(CpuClass::Compaction, t, sift_cpu);
+        t += sift_cpu;
+        for rec in &seg.records {
+            let live = matches!(
+                self.latest_desc(rec.key),
+                Some((_, d))
+                    if d.loc == (ValueLoc::Vlog { segment: victim, offset: rec.offset })
+            );
+            if !live {
+                continue;
+            }
+            // rewrite = a fresh internal write of the same logical value:
+            // new seq, value re-appended at the log head, pointer through
+            // WAL + memtable so recovery and replicas see it normally
+            if self.mem.approximate_bytes() >= self.opts.write_buffer_size
+                && self.imms.len() + 1 < self.opts.max_write_buffer_number
+            {
+                self.rotate_memtable(env, t);
+            }
+            self.seq += 1;
+            let val = self.separate_value(
+                env,
+                t,
+                rec.key,
+                self.seq,
+                ValueDesc::new(rec.seed, rec.len),
+            );
+            if let Some(vlog) = self.vlog.as_mut() {
+                vlog.stats.gc_rewritten_bytes += rec.record_bytes();
+            }
+            let entry = Entry::new(rec.key, self.seq, val);
+            let wal_bytes = self.wal.append(entry);
+            env.device.wal_append_on(self.opts.wal_stream, t, wal_bytes);
+            if let Some((_, old)) = self.mem.insert(entry) {
+                self.note_shadowed(old);
+            }
+            env.cpu.charge(CpuClass::Compaction, t, self.opts.flush_cpu_ns_per_entry);
+            t += self.opts.flush_cpu_ns_per_entry;
+        }
+        // durability order: new value copies first, then the pointer WAL,
+        // then the drop edit — only after all three may old copies go
+        let vstream = self.vlog.as_ref().expect("victim implies vlog").stream();
+        t = env.device.wal_sync_on(vstream, t);
+        t = env.device.wal_sync_on(self.opts.wal_stream, t);
+        let retired = self.vlog.as_mut().expect("victim implies vlog").retire(victim);
+        let t = self
+            .manifest
+            .append(env, t, ManifestEdit::VlogDrop { segment: victim });
+        if let Some(seg) = retired {
+            self.vlog_pending_drops.push((self.seq, seg));
+        }
+        // release the victim's cached blocks (ids are never reused)
+        {
+            let mut cache = self.block_cache.lock().expect("block cache poisoned");
+            if cache.capacity() > 0 && !cache.is_empty() {
+                cache.retain(|k| {
+                    k.0 != VLOG_CACHE_NS || (k.1 >> 32) as u32 != victim
+                });
+            }
+        }
+        self.flush_pending_vlog_drops(env);
+        env.clock.advance_to(t);
+    }
+
+    /// Physically delete GC-retired segment files once no live snapshot
+    /// can still observe the pre-GC view (the drop's manifest edit is
+    /// already durable — this only reclaims space).
+    fn flush_pending_vlog_drops(&mut self, env: &mut SimEnv) {
+        if self.vlog_pending_drops.is_empty() {
+            return;
+        }
+        let min_pinned = self.min_pinned_seq();
+        self.vlog_pending_drops.retain(|(gc_seq, seg)| {
+            if matches!(min_pinned, Some(p) if p < *gc_seq) {
+                return true; // a snapshot still pins the pre-GC view
+            }
+            if let Some(file) = seg.file {
+                // deferred physical reclaim: the covering VlogDrop edit was
+                // appended and synced in vlog_gc_tick before the segment
+                // entered this queue, so only snapshot pins gate it here
+                // lint:allow(sync-before-delete): drop edit synced in vlog_gc_tick
+                let _ = env.device.delete_file(file);
+            }
+            false
+        });
     }
 
     pub fn has_pending_jobs(&self) -> bool {
@@ -378,6 +602,7 @@ impl LsmDb {
                 outputs,
                 read_bytes,
                 write_bytes,
+                dead_vlog,
             } => {
                 self.stats.compaction_count += 1;
                 self.stats.bytes_compacted_read += read_bytes;
@@ -397,6 +622,11 @@ impl LsmDb {
                     },
                 );
                 self.version.apply_compaction(level, &removed, outputs);
+                if let Some(vlog) = self.vlog.as_mut() {
+                    for (segment, len) in dead_vlog {
+                        vlog.mark_dead(segment, len);
+                    }
+                }
                 for f in removed_files {
                     // files may already be gone in pathological shutdowns
                     let _ = env.device.delete_file(f);
@@ -448,7 +678,12 @@ impl LsmDb {
         entries: Vec<Entry>,
         max_seq: Seq,
     ) -> Result<()> {
-        let start = self.flush_free_at.max(now);
+        let mut start = self.flush_free_at.max(now);
+        if let Some(vlog) = &self.vlog {
+            // SST pointers must never reference page-cached vlog bytes:
+            // sync the value log before the flush makes pointers durable
+            start = env.device.wal_sync_on(vlog.stream(), start);
+        }
         let n = entries.len() as u64;
         let bytes: u64 = entries.iter().map(|e| e.encoded_len()).sum();
         // entry encode cost plus (when a codec is on) per-block
@@ -527,6 +762,25 @@ impl LsmDb {
             self.opts.target_file_size,
             drop_tombstones,
         )?;
+        // separated values whose pointer entries the merge dropped (old
+        // versions, shadowed writes, expired tombstone targets): their
+        // vlog bytes go dead when this compaction installs. Pointers the
+        // merge *kept* just move between SSTs — values never rewrite.
+        let mut dead_vlog: Vec<(u32, u32)> = Vec::new();
+        if self.vlog.is_some() {
+            let kept: BTreeSet<(Key, Seq)> = output_sets
+                .iter()
+                .flatten()
+                .map(|e| (e.key, e.seq))
+                .collect();
+            for e in &entries {
+                if let ValueLoc::Vlog { segment, .. } = e.val.loc {
+                    if !kept.contains(&(e.key, e.seq)) {
+                        dead_vlog.push((segment, e.val.len));
+                    }
+                }
+            }
+        }
         // phase 3: write outputs
         let shape = shape_of(&pick, &output_sets);
         let mut outputs = Vec::with_capacity(output_sets.len());
@@ -583,6 +837,7 @@ impl LsmDb {
                 read_bytes,
                 // identical to shape.write_bytes when compression is off
                 write_bytes: disk_write_bytes,
+                dead_vlog,
             },
         });
         debug_assert!(
@@ -676,15 +931,24 @@ impl LsmDb {
         let (mut at, stalled_ns, delayed_ns) = self.admit_write(env, at);
         // the write itself
         self.seq += 1;
+        let val = self.separate_value(env, at, key, self.seq, val);
         let entry = Entry::new(key, self.seq, val);
         self.stats.puts += 1;
-        self.stats.user_bytes_written += entry.encoded_len();
+        // user bytes are the *logical* write (key + metadata + payload),
+        // independent of whether the payload was separated
+        self.stats.user_bytes_written += 16 + entry.val.value_len();
         let wal_bytes = self.wal.append(entry);
         env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
-        self.mem.insert(entry);
+        if let Some((_, old)) = self.mem.insert(entry) {
+            self.note_shadowed(old);
+        }
         env.cpu.charge(CpuClass::Foreground, at, self.opts.put_cpu_ns);
         at += self.opts.put_cpu_ns;
         env.clock.advance_to(at);
+        // piggybacked GC check: engines without an external tick driver
+        // still reclaim dead vlog space under a steady write load (a
+        // strict no-op while the value log is empty or healthy)
+        self.vlog_gc_tick(env, at);
         PutResult { done: at, stalled_ns, delayed_ns }
     }
 
@@ -709,13 +973,20 @@ impl LsmDb {
         if e.val.is_tombstone() {
             self.stats.deletes += 1;
         }
-        self.stats.user_bytes_written += e.encoded_len();
+        self.stats.user_bytes_written += 16 + e.val.value_len();
+        // CDC ships values, never pointers: strip any stray location and
+        // re-separate against *this* store's own value log
+        let val = self.separate_value(env, at, e.key, e.seq, e.val.inline());
+        let e = Entry { val, ..e };
         let wal_bytes = self.wal.append(e);
         env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
-        self.mem.insert(e);
+        if let Some((_, old)) = self.mem.insert(e) {
+            self.note_shadowed(old);
+        }
         env.cpu.charge(CpuClass::Foreground, at, self.opts.put_cpu_ns);
         at += self.opts.put_cpu_ns;
         env.clock.advance_to(at);
+        self.vlog_gc_tick(env, at);
         PutResult { done: at, stalled_ns, delayed_ns }
     }
 
@@ -752,16 +1023,21 @@ impl LsmDb {
                 self.rotate_memtable(env, at);
             }
             self.seq += 1;
-            let entry = Entry::new(op.key(), self.seq, op.value());
+            // batched separated values land contiguously in the log (the
+            // whole batch appends before the single group-commit below)
+            let val = self.separate_value(env, at, op.key(), self.seq, op.value());
+            let entry = Entry::new(op.key(), self.seq, val);
             // `puts` counts every write op (tombstones included), exactly
             // like the single-op path; `deletes` is supplementary.
             self.stats.puts += 1;
             if op.is_delete() {
                 self.stats.deletes += 1;
             }
-            self.stats.user_bytes_written += entry.encoded_len();
+            self.stats.user_bytes_written += 16 + entry.val.value_len();
             wal_bytes += self.wal.append(entry);
-            self.mem.insert(entry);
+            if let Some((_, old)) = self.mem.insert(entry) {
+                self.note_shadowed(old);
+            }
         }
         // one group-commit WAL submission for the whole batch
         env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
@@ -769,6 +1045,7 @@ impl LsmDb {
         env.cpu.charge(CpuClass::Foreground, at, cpu);
         at += cpu;
         env.clock.advance_to(at);
+        self.vlog_gc_tick(env, at);
         crate::engine::BatchResult { done: at, stalled_ns, delayed_ns, ops: batch.len() }
     }
 
@@ -790,11 +1067,14 @@ impl LsmDb {
             self.rotate_memtable(env, at);
         }
         self.seq += 1;
+        let val = self.separate_value(env, at, key, self.seq, val);
         let entry = Entry::new(key, self.seq, val);
-        self.stats.user_bytes_written += entry.encoded_len();
+        self.stats.user_bytes_written += 16 + entry.val.value_len();
         let wal_bytes = self.wal.append(entry);
         env.device.wal_append_on(self.opts.wal_stream, at, wal_bytes);
-        self.mem.insert(entry);
+        if let Some((_, old)) = self.mem.insert(entry) {
+            self.note_shadowed(old);
+        }
         at += self.opts.flush_cpu_ns_per_entry; // bulk-load cost, not client path
         env.cpu.charge(CpuClass::Kvaccel, at, self.opts.flush_cpu_ns_per_entry);
         at
@@ -838,6 +1118,62 @@ impl LsmDb {
         self.block_access(env, at, sst, block)
     }
 
+    /// Dereference a separated value on the point-read path: charge the
+    /// value-log block touches through the shared block cache (hits cost
+    /// CPU only; misses read uncompressed vlog blocks from the device)
+    /// and return the normalized inline value. Inline values pass
+    /// through untouched.
+    fn vlog_deref(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        v: ValueDesc,
+    ) -> (ValueDesc, Nanos) {
+        let ValueLoc::Vlog { segment, offset } = v.loc else {
+            return (v, at);
+        };
+        let mut at = at;
+        let bb = self.opts.block_bytes;
+        let first = offset as u64 / bb;
+        let last = (offset as u64 + VLOG_RECORD_HEADER + v.len as u64 - 1) / bb;
+        if let Some(vlog) = self.vlog.as_mut() {
+            vlog.stats.derefs += 1;
+        }
+        for block in first..=last {
+            let cache_key = vlog_cache_key(segment, block);
+            let mut cache = self.block_cache.lock().expect("block cache poisoned");
+            if cache.capacity() > 0 && cache.get(&cache_key).is_some() {
+                env.cpu.charge(CpuClass::Foreground, at, self.opts.get_cpu_ns / 2);
+                at += self.opts.get_cpu_ns / 2;
+                continue;
+            }
+            at = env.device.read_block(at, bb);
+            cache.insert(cache_key, ());
+            drop(cache);
+            if let Some(vlog) = self.vlog.as_mut() {
+                vlog.stats.deref_blocks_read += 1;
+            }
+        }
+        (v.inline(), at)
+    }
+
+    /// Terminal step of a point lookup that found `v`: tombstones read
+    /// as absent; separated values are dereferenced through the vlog.
+    fn finish_get(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        v: ValueDesc,
+    ) -> (Option<ValueDesc>, Nanos) {
+        if v.is_tombstone() {
+            env.clock.advance_to(at);
+            return (None, at);
+        }
+        let (v, at) = self.vlog_deref(env, at, v);
+        env.clock.advance_to(at);
+        (Some(v), at)
+    }
+
     /// Point lookup. Tombstones read as absent.
     pub fn get(
         &mut self,
@@ -849,17 +1185,14 @@ impl LsmDb {
         self.stats.gets += 1;
         env.cpu.charge(CpuClass::Foreground, at, self.opts.get_cpu_ns);
         let mut at = at + self.opts.get_cpu_ns;
-        let as_result = |v: ValueDesc| if v.is_tombstone() { None } else { Some(v) };
         if let Some((_, v)) = self.mem.get(key) {
             self.stats.get_hits += 1;
-            env.clock.advance_to(at);
-            return (as_result(v), at);
+            return self.finish_get(env, at, v);
         }
-        for imm in self.imms.iter().rev() {
-            if let Some((_, v)) = imm.get(key) {
+        for i in (0..self.imms.len()).rev() {
+            if let Some((_, v)) = self.imms[i].get(key) {
                 self.stats.get_hits += 1;
-                env.clock.advance_to(at);
-                return (as_result(v), at);
+                return self.finish_get(env, at, v);
             }
         }
         // L0: newest first, overlapping ranges
@@ -876,8 +1209,7 @@ impl LsmDb {
                 Some((e, block)) => {
                     at = self.block_access(env, at, sst.id, block);
                     self.stats.get_hits += 1;
-                    env.clock.advance_to(at);
-                    return (as_result(e.val), at);
+                    return self.finish_get(env, at, e.val);
                 }
                 None => {
                     // bloom false positive: wasted block read
@@ -902,8 +1234,7 @@ impl LsmDb {
                 Some((e, block)) => {
                     at = self.block_access(env, at, sst.id, block);
                     self.stats.get_hits += 1;
-                    env.clock.advance_to(at);
-                    return (as_result(e.val), at);
+                    return self.finish_get(env, at, e.val);
                 }
                 None => {
                     self.stats.bloom_negative_probes += 1;
@@ -1066,17 +1397,46 @@ impl LsmDb {
     /// Split into the parts a `DurableImage` carries. `watermark`
     /// selects the WAL cut: `Some(w)` keeps only records whose bytes
     /// reached flash by stream offset `w` (crash); `None` keeps every
-    /// retained record (clean close — empty by then).
+    /// retained record (clean close — empty by then). `vlog_watermark`
+    /// is the same cut for the value-log stream.
+    #[allow(clippy::type_complexity)]
     pub fn into_image_parts(
         self,
         watermark: Option<u64>,
-    ) -> (LsmOptions, MergeEngine, BloomBuilder, Manifest, Vec<Entry>) {
-        let LsmDb { opts, engine, bloom, manifest, wal, .. } = self;
-        let records = match watermark {
+        vlog_watermark: Option<u64>,
+    ) -> (
+        LsmOptions,
+        MergeEngine,
+        BloomBuilder,
+        Manifest,
+        Vec<Entry>,
+        Option<VlogImage>,
+    ) {
+        let LsmDb { opts, engine, bloom, manifest, wal, vlog, .. } = self;
+        let mut records = match watermark {
             Some(w) => wal.durable_entries(w),
             None => wal.replay(),
         };
-        (opts, engine, bloom, manifest, records)
+        let vlog_img = vlog.map(|v| match vlog_watermark {
+            Some(w) => v.crash_image(w),
+            None => v.clean_image(),
+        });
+        if let Some(img) = &vlog_img {
+            // old-copy semantics for a crash mid-append: a durable WAL
+            // record whose pointer references a head value that never
+            // reached flash is dropped — the value is gone, so recovery
+            // surfaces the previous version instead of a torn new one.
+            // Sealed-segment pointers are always durable (seal = fsync).
+            let durable: BTreeSet<u32> =
+                img.head_records.iter().map(|r| r.offset).collect();
+            records.retain(|e| match e.val.loc {
+                ValueLoc::Vlog { segment, offset } if segment == img.head_id => {
+                    durable.contains(&offset)
+                }
+                _ => true,
+            });
+        }
+        (opts, engine, bloom, manifest, records, vlog_img)
     }
 
     /// Clean shutdown: drain all work, seal + fsync the WAL, write the
@@ -1088,14 +1448,19 @@ impl LsmDb {
         at: Nanos,
     ) -> Result<crate::engine::DurableImage> {
         let t = self.flush_and_wait(env, at);
-        let t = env.device.wal_sync_on(self.opts.wal_stream, t);
+        self.flush_pending_vlog_drops(env);
+        let mut t = env.device.wal_sync_on(self.opts.wal_stream, t);
+        if let Some(vlog) = &self.vlog {
+            t = t.max(env.device.wal_sync_on(vlog.stream(), t));
+        }
         let last_seq = self.seq;
         let t = self
             .manifest
             .append(env, t, ManifestEdit::CleanShutdown { last_seq });
         env.clock.advance_to(t);
         let slowdown = self.opts.enable_slowdown;
-        let (opts, merge, bloom, manifest, wal) = self.into_image_parts(None);
+        let (opts, merge, bloom, manifest, wal, vlog) =
+            self.into_image_parts(None, None);
         Ok(crate::engine::DurableImage {
             kind: crate::baselines::SystemKind::RocksDb { slowdown },
             opts,
@@ -1103,6 +1468,7 @@ impl LsmDb {
             bloom,
             manifest,
             wal,
+            vlog,
             kvaccel_cfg: None,
             adoc_cfg: None,
             shard: None,
@@ -1121,13 +1487,17 @@ impl LsmDb {
         at: Nanos,
     ) -> crate::engine::DurableImage {
         self.catch_up(env, at);
-        // capture the durability cut BEFORE the power loss wipes the
+        // capture the durability cuts BEFORE the power loss wipes the
         // page-cache accounting (those bytes are lost, not durable)
         let watermark = env.device.wal_durable_watermark_on(self.opts.wal_stream);
+        let vlog_watermark = self
+            .vlog
+            .as_ref()
+            .map(|v| env.device.wal_durable_watermark_on(v.stream()));
         env.device.crash(at);
         let slowdown = self.opts.enable_slowdown;
-        let (opts, merge, bloom, manifest, wal) =
-            self.into_image_parts(Some(watermark));
+        let (opts, merge, bloom, manifest, wal, vlog) =
+            self.into_image_parts(Some(watermark), vlog_watermark);
         crate::engine::DurableImage {
             kind: crate::baselines::SystemKind::RocksDb { slowdown },
             opts,
@@ -1135,6 +1505,7 @@ impl LsmDb {
             bloom,
             manifest,
             wal,
+            vlog,
             kvaccel_cfg: None,
             adoc_cfg: None,
             shard: None,
@@ -1157,6 +1528,7 @@ impl LsmDb {
         bloom: BloomBuilder,
         manifest: Manifest,
         wal_records: Vec<Entry>,
+        vlog: Option<VlogImage>,
         clean: bool,
     ) -> (Self, Nanos) {
         let mut db = LsmDb::new(opts, merge, bloom);
@@ -1187,6 +1559,42 @@ impl LsmDb {
                 db.recovery.orphan_files_removed += 1;
             }
         }
+        // value-log recovery: sealed segments come back through the
+        // manifest, the head from the image's durable prefix. Orphans in
+        // the vlog directory (GC-retired victims whose deferred delete
+        // never ran, superseded head extents) are removed once the live
+        // set is known.
+        let vlog_stream = VLOG_STREAM_OFFSET + db.opts.wal_stream;
+        if vlog.is_some() || !rec.vlog_segments.is_empty() {
+            env.device.wal_reset_stream_on(vlog_stream);
+            let img = vlog.unwrap_or_else(|| VlogImage {
+                // no head survived the crash: start a fresh one above
+                // every recovered segment id
+                head_id: rec
+                    .vlog_segments
+                    .iter()
+                    .map(|s| s.id + 1)
+                    .max()
+                    .unwrap_or(0),
+                ..VlogImage::default()
+            });
+            let log = Vlog::reopen(
+                env,
+                t,
+                db.opts.wal_stream,
+                db.opts.vlog_segment_bytes,
+                &img,
+                rec.vlog_segments.clone(),
+            );
+            let keep = log.live_file_ids();
+            db.vlog = Some(Box::new(log));
+            for id in env.device.fs.file_ids_for(vlog_stream) {
+                if !keep.contains(&id) {
+                    let _ = env.device.delete_file(id);
+                    db.recovery.orphan_files_removed += 1;
+                }
+            }
+        }
         // WAL replay: stream the durable records back, skip anything a
         // flushed SST already covers, re-insert the rest at their
         // original seqs (rotating the memtable when it fills)
@@ -1204,7 +1612,9 @@ impl LsmDb {
             db.seq = db.seq.max(e.seq);
             let bytes = db.wal.append(e);
             env.device.wal_append_on(db.opts.wal_stream, t, bytes);
-            db.mem.insert(e);
+            if let Some((_, old)) = db.mem.insert(e) {
+                db.note_shadowed(old);
+            }
             replayed += 1;
             if db.mem.approximate_bytes() >= db.opts.write_buffer_size
                 && db.imms.len() + 1 < db.opts.max_write_buffer_number
@@ -1220,9 +1630,14 @@ impl LsmDb {
         db.recovery.wal_records_replayed = replayed;
         // a reopened log starts a fresh epoch: rebase so the edit log
         // stays bounded across restarts
+        let vlog_segs: Vec<Arc<VlogSegment>> = db
+            .vlog
+            .as_ref()
+            .map(|v| v.sealed_segments().cloned().collect())
+            .unwrap_or_default();
         t = db
             .manifest
-            .rebase(env, t, &db.version, db.next_sst_id, rec.flushed_upto);
+            .rebase(env, t, &db.version, db.next_sst_id, rec.flushed_upto, vlog_segs);
         db.recovery.last_recovery_ns = t.saturating_sub(at);
         db.maybe_schedule(env, t);
         env.clock.advance_to(t);
@@ -1281,14 +1696,17 @@ impl crate::engine::KvEngine for LsmDb {
 
     fn tick(&mut self, env: &mut SimEnv, at: Nanos) {
         self.catch_up(env, at);
+        self.vlog_gc_tick(env, at);
         self.maybe_schedule(env, at);
     }
 
     fn cdc_tail(&self, _env: &SimEnv, wm: &[Seq]) -> Vec<crate::engine::CdcRecord> {
+        // replication ships the value itself, never a vlog pointer — a
+        // replica's log layout is its own business
         self.wal
             .entries_after(wm.first().copied().unwrap_or(0))
             .into_iter()
-            .map(|entry| crate::engine::CdcRecord { entry, stream: 0 })
+            .map(|entry| crate::engine::CdcRecord { entry: entry.inline_value(), stream: 0 })
             .collect()
     }
 
@@ -1619,7 +2037,7 @@ mod tests {
         assert!(img.wal.is_empty(), "clean close must drain the WAL");
         let (mut db2, mut t2) = LsmDb::open(
             &mut env, t, img.opts, img.merge, img.bloom, img.manifest, img.wal,
-            img.clean,
+            img.vlog, img.clean,
         );
         assert_eq!(db2.recovery.wal_records_replayed, 0);
         assert_eq!(db2.recovery.recoveries, 1);
@@ -1646,7 +2064,7 @@ mod tests {
         assert!(!img.clean);
         let (mut db2, mut t2) = LsmDb::open(
             &mut env, t, img.opts, img.merge, img.bloom, img.manifest, img.wal,
-            img.clean,
+            img.vlog, img.clean,
         );
         assert_eq!(db2.recovery.recoveries, 1);
         for k in 0..200u32 {

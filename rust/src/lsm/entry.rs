@@ -24,18 +24,40 @@ pub const MAX_USER_KEY: Key = u32::MAX - 1;
 /// Length tag marking a tombstone.
 const TOMBSTONE_LEN: u32 = u32::MAX;
 
+/// On-flash footprint of a `ValueLoc::Vlog` pointer: 4 B segment +
+/// 4 B offset + 4 B length (WiscKey's `<segment, offset, len>` triple).
+pub const VLOG_POINTER_BYTES: u64 = 12;
+
+/// Where the value's bytes live. `Inline` is the classic LSM layout
+/// (payload travels with the entry through WAL/memtable/SSTs); `Vlog`
+/// means the entry carries only a pointer — the payload was appended to
+/// the value log and the LSM's footprint shrinks to pointer size.
+///
+/// The `(seed, len)` descriptor stays in `ValueDesc` either way (values
+/// are deterministic streams, so "dereferencing" a pointer is purely a
+/// cost-model event: a vlog block read), which keeps snapshots and
+/// pinned iterators correct by construction while GC relocates data.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ValueLoc {
+    #[default]
+    Inline,
+    Vlog { segment: u32, offset: u32 },
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ValueDesc {
     pub seed: u32,
     pub len: u32,
+    pub loc: ValueLoc,
 }
 
 impl ValueDesc {
-    pub const TOMBSTONE: ValueDesc = ValueDesc { seed: 0, len: TOMBSTONE_LEN };
+    pub const TOMBSTONE: ValueDesc =
+        ValueDesc { seed: 0, len: TOMBSTONE_LEN, loc: ValueLoc::Inline };
 
     pub fn new(seed: u32, len: u32) -> Self {
         assert_ne!(len, TOMBSTONE_LEN, "len reserved for tombstones");
-        Self { seed, len }
+        Self { seed, len, loc: ValueLoc::Inline }
     }
 
     pub fn is_tombstone(&self) -> bool {
@@ -49,6 +71,34 @@ impl ValueDesc {
         } else {
             self.len as u64
         }
+    }
+
+    /// Bytes this value occupies *in the LSM* (WAL / memtable / SST):
+    /// the payload when inline, a fixed-size pointer when separated.
+    pub fn stored_len(&self) -> u64 {
+        if self.is_tombstone() {
+            0
+        } else if self.in_vlog() {
+            VLOG_POINTER_BYTES
+        } else {
+            self.len as u64
+        }
+    }
+
+    pub fn in_vlog(&self) -> bool {
+        matches!(self.loc, ValueLoc::Vlog { .. })
+    }
+
+    /// The same value with its location stripped — what user-facing
+    /// reads return (callers never see vlog pointers).
+    pub fn inline(&self) -> ValueDesc {
+        ValueDesc { seed: self.seed, len: self.len, loc: ValueLoc::Inline }
+    }
+
+    /// The same value relocated into the value log.
+    pub fn at_vlog(&self, segment: u32, offset: u32) -> ValueDesc {
+        debug_assert!(!self.is_tombstone(), "tombstones are never separated");
+        ValueDesc { seed: self.seed, len: self.len, loc: ValueLoc::Vlog { segment, offset } }
     }
 
     /// Materialize the deterministic payload (tests / verification).
@@ -72,9 +122,16 @@ impl Entry {
     }
 
     /// Logical on-flash footprint: 4 B key + 8 B internal metadata
-    /// (seq + type, RocksDB-style) + 4 B length + payload.
+    /// (seq + type, RocksDB-style) + 4 B length + payload (or a 12 B
+    /// vlog pointer when the value is separated).
     pub fn encoded_len(&self) -> u64 {
-        16 + self.val.value_len()
+        16 + self.val.stored_len()
+    }
+
+    /// The same entry with its value location stripped (read-boundary
+    /// normalization: user-visible results never expose vlog pointers).
+    pub fn inline_value(&self) -> Entry {
+        Entry { key: self.key, seq: self.seq, val: self.val.inline() }
     }
 
     /// Ordering used everywhere: by key ascending, then seq *descending*
@@ -117,6 +174,19 @@ mod tests {
         assert_eq!(e.encoded_len(), 16 + 4096);
         let t = Entry::new(1, 2, ValueDesc::TOMBSTONE);
         assert_eq!(t.encoded_len(), 16);
+    }
+
+    #[test]
+    fn vlog_pointer_shrinks_footprint() {
+        let v = ValueDesc::new(9, 4096).at_vlog(3, 8192);
+        assert!(v.in_vlog());
+        assert_eq!(v.stored_len(), VLOG_POINTER_BYTES);
+        assert_eq!(v.value_len(), 4096, "logical size unchanged");
+        let e = Entry::new(1, 1, v);
+        assert_eq!(e.encoded_len(), 16 + VLOG_POINTER_BYTES);
+        // stripping the location restores equality with the original
+        assert_eq!(v.inline(), ValueDesc::new(9, 4096));
+        assert_eq!(e.inline_value().val, ValueDesc::new(9, 4096));
     }
 
     #[test]

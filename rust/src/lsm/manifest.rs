@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::env::SimEnv;
 use crate::sim::Nanos;
+use crate::vlog::VlogSegment;
 
 use super::entry::Seq;
 use super::sst::Sst;
@@ -30,6 +31,9 @@ pub enum ManifestEdit {
         /// Highest sequence number covered by the flushed SSTs.
         flushed_upto: Seq,
         next_sst_id: u64,
+        /// Live value-log segments (key-value separation; empty when the
+        /// vlog is off).
+        vlog: Vec<Arc<VlogSegment>>,
     },
     /// Flush install: a new L0 SST covering WAL records up to `max_seq`.
     AddL0 { sst: Arc<Sst>, max_seq: Seq },
@@ -50,6 +54,14 @@ pub enum ManifestEdit {
     RollbackEnd { returned: u64 },
     /// Clean shutdown: memtable flushed, WAL sealed + fsync'd and empty.
     CleanShutdown { last_seq: Seq },
+    /// Value-log head sealed into an immutable segment. The vlog stream
+    /// was fsync'd before this edit is appended, so every record the
+    /// segment names is on flash when the manifest references it.
+    VlogSeal { segment: Arc<VlogSegment> },
+    /// Value-log segment retired by GC: its live values were re-appended
+    /// to the head (and fsync'd) before this edit — recovery must no
+    /// longer consider the segment part of the log.
+    VlogDrop { segment: u32 },
 }
 
 impl ManifestEdit {
@@ -57,13 +69,14 @@ impl ManifestEdit {
     /// plus one file descriptor per SST reference.
     fn encoded_len(&self) -> u64 {
         let refs = match self {
-            ManifestEdit::Rebase { levels, .. } => {
-                levels.iter().map(|l| l.len()).sum::<usize>()
+            ManifestEdit::Rebase { levels, vlog, .. } => {
+                levels.iter().map(|l| l.len()).sum::<usize>() + vlog.len()
             }
             ManifestEdit::AddL0 { .. } => 1,
             ManifestEdit::CompactionInstall { removed, installed, .. } => {
                 removed.len() + installed.len()
             }
+            ManifestEdit::VlogSeal { .. } | ManifestEdit::VlogDrop { .. } => 1,
             _ => 0,
         };
         32 + 16 * refs as u64
@@ -84,6 +97,8 @@ pub struct RecoveredVersion {
     pub clean: Option<Seq>,
     /// A rollback window was open when the log ended (crash mid-rollback).
     pub dangling_rollback: bool,
+    /// Live value-log segments (seals minus drops), id-ascending.
+    pub vlog_segments: Vec<Arc<VlogSegment>>,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -154,6 +169,7 @@ impl Manifest {
         version: &Version,
         next_sst_id: u64,
         flushed_upto: Seq,
+        vlog: Vec<Arc<VlogSegment>>,
     ) -> Nanos {
         self.edits.clear();
         self.live_bytes = 0;
@@ -165,6 +181,7 @@ impl Manifest {
                 levels: version.levels.clone(),
                 flushed_upto,
                 next_sst_id,
+                vlog,
             },
         )
     }
@@ -176,9 +193,10 @@ impl Manifest {
         let mut flushed_upto: Seq = 0;
         let mut clean = None;
         let mut dangling_rollback = false;
+        let mut vlog_segments: Vec<Arc<VlogSegment>> = Vec::new();
         for (_, edit) in &self.edits {
             match edit {
-                ManifestEdit::Rebase { levels, flushed_upto: f, next_sst_id: n } => {
+                ManifestEdit::Rebase { levels, flushed_upto: f, next_sst_id: n, vlog } => {
                     version = Version::new(num_levels.max(levels.len()));
                     for (l, files) in levels.iter().enumerate() {
                         version.set_level(l, files.clone());
@@ -187,6 +205,7 @@ impl Manifest {
                     next_sst_id = *n;
                     clean = None;
                     dangling_rollback = false;
+                    vlog_segments = vlog.clone();
                 }
                 ManifestEdit::AddL0 { sst, max_seq } => {
                     next_sst_id = next_sst_id.max(sst.id + 1);
@@ -212,9 +231,26 @@ impl Manifest {
                 ManifestEdit::CleanShutdown { last_seq } => {
                     clean = Some(*last_seq);
                 }
+                ManifestEdit::VlogSeal { segment } => {
+                    vlog_segments.push(segment.clone());
+                    clean = None;
+                }
+                ManifestEdit::VlogDrop { segment } => {
+                    vlog_segments.retain(|s| s.id != *segment);
+                    clean = None;
+                }
             }
         }
-        RecoveredVersion { version, next_sst_id, flushed_upto, clean, dangling_rollback }
+        vlog_segments.sort_by_key(|s| s.id);
+        vlog_segments.dedup_by_key(|s| s.id);
+        RecoveredVersion {
+            version,
+            next_sst_id,
+            flushed_upto,
+            clean,
+            dangling_rollback,
+            vlog_segments,
+        }
     }
 }
 
@@ -307,7 +343,7 @@ mod tests {
             );
         }
         let rec = m.rebuild(3);
-        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto);
+        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto, Vec::new());
         assert_eq!(m.edit_count(), 1);
         let rec2 = m.rebuild(3);
         assert_eq!(rec2.version.l0_count(), 5);
@@ -328,9 +364,35 @@ mod tests {
         }
         let before = m.bytes();
         let rec = m.rebuild(3);
-        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto);
+        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto, Vec::new());
         assert!(m.bytes() < before, "rebased log must shed the history");
         assert!(m.stats.bytes_written > before, "cumulative stats keep growing");
+    }
+
+    #[test]
+    fn vlog_seal_and_drop_replay() {
+        let seg = |id: u32| {
+            Arc::new(VlogSegment {
+                id,
+                file: None,
+                records: Vec::new(),
+                bytes: 1 << 20,
+            })
+        };
+        let mut env = env();
+        let mut m = Manifest::new();
+        m.append(&mut env, 0, ManifestEdit::VlogSeal { segment: seg(0) });
+        m.append(&mut env, 0, ManifestEdit::VlogSeal { segment: seg(1) });
+        m.append(&mut env, 0, ManifestEdit::VlogDrop { segment: 0 });
+        let rec = m.rebuild(3);
+        let ids: Vec<u32> = rec.vlog_segments.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1], "drop retires the sealed segment");
+        // rebase carries the survivors forward
+        m.rebase(&mut env, 0, &rec.version, rec.next_sst_id, rec.flushed_upto, rec.vlog_segments);
+        assert_eq!(m.edit_count(), 1);
+        let rec2 = m.rebuild(3);
+        let ids: Vec<u32> = rec2.vlog_segments.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1]);
     }
 
     #[test]

@@ -29,12 +29,14 @@ impl Memtable {
         }
     }
 
-    pub fn insert(&mut self, e: Entry) {
+    /// Insert, returning the value this write shadowed in the active
+    /// buffer (the vlog marks the shadowed copy's bytes dead).
+    pub fn insert(&mut self, e: Entry) -> Option<(Seq, ValueDesc)> {
         self.bytes += e.encoded_len();
         self.min_seq = self.min_seq.min(e.seq);
         self.max_seq = self.max_seq.max(e.seq);
         self.pinned = None;
-        self.map.insert(e.key, (e.seq, e.val));
+        self.map.insert(e.key, (e.seq, e.val))
     }
 
     pub fn get(&self, key: Key) -> Option<(Seq, ValueDesc)> {

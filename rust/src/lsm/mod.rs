@@ -18,7 +18,7 @@ pub mod version;
 pub mod wal;
 
 pub use db::{DbStats, LsmDb, PutResult, RecoveryStats};
-pub use entry::{Entry, Key, Seq, ValueDesc, MAX_USER_KEY};
+pub use entry::{Entry, Key, Seq, ValueDesc, ValueLoc, MAX_USER_KEY};
 pub use manifest::{Manifest, ManifestEdit, RecoveredVersion};
 pub use options::{Compression, LsmOptions};
 pub use stall::{StallReason, StallStats, WriteCondition};

@@ -24,6 +24,13 @@
 //!   --theta F            zipfian skew in (0,1) (default 0.99)
 //!   --scan-len L[:H]     YCSB-E Next count per scan: fixed L, or
 //!                        uniform in [L, H] (default 1:100)
+//!   --value-size S       per-op value size in bytes: fixed N,
+//!                        uniform L:H, or lognormal:MU:SIGMA
+//!                        (log-space parameters; preset default 4096)
+//!   --vlog-threshold B   WiscKey-style key-value separation: values
+//!                        >= B bytes go to the value log, the LSM keeps
+//!                        a 12 B pointer (0/omitted = all inline)
+//!   --vlog-segment-bytes B  value-log segment size (default 32 MiB)
 //!   --crash-at P         inject a power loss after P issued ops (plain
 //!                        integer) or at virtual time P (s|ms|ns
 //!                        suffix), then reopen and report recovery
@@ -52,7 +59,8 @@
 //! Contradictory flags are rejected up front (e.g. --rate with a closed
 //! loop, --theta without --dist zipfian, --shard-policy without
 //! --shards, --tenant-rate without --tenants, --dist with ycsb-d,
-//! --read-policy without --replicas, --replicas 1).
+//! --read-policy without --replicas, --replicas 1,
+//! --vlog-segment-bytes without --vlog-threshold).
 
 use anyhow::{anyhow, Result};
 
@@ -68,7 +76,7 @@ use kvaccel::shard::ShardPolicy;
 use kvaccel::sim::{Nanos, MILLIS, NS_PER_SEC};
 use kvaccel::ssd::SsdConfig;
 use kvaccel::util::{fmt, Args};
-use kvaccel::workload::{self, BenchConfig, KeyDist, LoopMode, RunResult};
+use kvaccel::workload::{self, BenchConfig, KeyDist, LoopMode, RunResult, ValueSizeDist};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -96,6 +104,8 @@ fn real_main() -> Result<()> {
             println!("              [--shards N] [--shard-policy range|hash]");
             println!("              [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
             println!("              [--cache-blocks N] [--compression none|lz-like[:RATIO]]");
+            println!("              [--value-size N|L:H|lognormal:MU:SIGMA]");
+            println!("              [--vlog-threshold BYTES] [--vlog-segment-bytes BYTES]");
             println!("              [--replicas N] [--read-policy primary|ryw|eventual]");
             println!("              [--repl-latency US] [--repl-bandwidth MBPS]");
             println!("  kvaccel experiment <id|all> [--scale F] [--seed N] [--engine rust|xla]");
@@ -104,6 +114,8 @@ fn real_main() -> Result<()> {
             println!("                [--shards N] [--shard-policy range|hash]");
             println!("                [--tenants N] [--tenant-rate OPS_S] [--tenant-slo-p99 MS]");
             println!("                [--cache-blocks N] [--compression none|lz-like[:RATIO]]");
+            println!("                [--value-size N|L:H|lognormal:MU:SIGMA]");
+            println!("                [--vlog-threshold BYTES] [--vlog-segment-bytes BYTES]");
             println!("  kvaccel inspect");
             Ok(())
         }
@@ -310,10 +322,18 @@ fn validate_bench_flags(args: &Args) -> Result<()> {
             return Err(anyhow!("--{f} has no effect without --replicas N"));
         }
     }
-    // malformed read-path and replication flags fail here, before any
-    // engine is built
+    if args.get("vlog-segment-bytes").is_some() && args.get("vlog-threshold").is_none()
+    {
+        return Err(anyhow!(
+            "--vlog-segment-bytes has no effect without --vlog-threshold BYTES"
+        ));
+    }
+    // malformed read-path, value-log, value-size, and replication flags
+    // fail here, before any engine is built
     parse_cache_blocks(args)?;
     parse_compression(args)?;
+    parse_value_size(args)?;
+    parse_vlog(args)?;
     parse_replicas(args)?;
     Ok(())
 }
@@ -404,6 +424,42 @@ fn parse_compression(args: &Args) -> Result<Option<Compression>> {
     }))
 }
 
+/// `--value-size N | L:H | lognormal:MU:SIGMA`: per-op value size in
+/// bytes — fixed, uniform in [L, H], or log-normal with the given
+/// log-space parameters (the long-tailed shape real value populations
+/// show). Applies to run and bench; presets default to their own fixed
+/// size (db_bench: 4096).
+fn parse_value_size(args: &Args) -> Result<Option<ValueSizeDist>> {
+    let Some(s) = args.get("value-size") else { return Ok(None) };
+    ValueSizeDist::parse(s).map(Some).map_err(|e| anyhow!("--value-size: {e}"))
+}
+
+/// `--vlog-threshold BYTES [--vlog-segment-bytes BYTES]`: WiscKey-style
+/// key-value separation. Values at or above the threshold append to the
+/// value log and the LSM keeps a 12 B pointer; 0 (the default) keeps
+/// every value inline in the SSTs.
+fn parse_vlog(args: &Args) -> Result<Option<(u32, Option<u64>)>> {
+    let seg = match args.get("vlog-segment-bytes") {
+        Some(v) => {
+            let n: u64 = v.parse().map_err(|_| {
+                anyhow!("--vlog-segment-bytes expects a byte count, got {v:?}")
+            })?;
+            if n < 4096 {
+                return Err(anyhow!(
+                    "--vlog-segment-bytes must be >= 4096 (one block)"
+                ));
+            }
+            Some(n)
+        }
+        None => None,
+    };
+    let Some(s) = args.get("vlog-threshold") else { return Ok(None) };
+    let thr: u32 = s.parse().map_err(|_| {
+        anyhow!("--vlog-threshold expects a byte count (0 disables), got {s:?}")
+    })?;
+    Ok(Some((thr, seg)))
+}
+
 /// Fold the read-path flags into the engine options.
 fn apply_read_path_flags(mut opts: LsmOptions, args: &Args) -> Result<LsmOptions> {
     if let Some(n) = parse_cache_blocks(args)? {
@@ -411,6 +467,12 @@ fn apply_read_path_flags(mut opts: LsmOptions, args: &Args) -> Result<LsmOptions
     }
     if let Some(c) = parse_compression(args)? {
         opts = opts.with_compression(c);
+    }
+    if let Some((thr, seg)) = parse_vlog(args)? {
+        opts = opts.with_vlog_threshold(thr);
+        if let Some(sb) = seg {
+            opts = opts.with_vlog_segment_bytes(sb);
+        }
     }
     Ok(opts)
 }
@@ -450,8 +512,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let shards = parse_shards(args)?;
     let tenants = parse_tenants(args)?;
     let replicas = parse_replicas(args)?;
+    let vdist = parse_value_size(args)?;
     let ctx = ExpContext::new(scale, seed, parse_engine(args))?;
     let mut cfg: BenchConfig = ctx.bench_config();
+    // preload and fixed-size presets (workload D) use the mean; the
+    // scheduler specs below carry the full distribution
+    if let Some(d) = vdist {
+        cfg.value_size = d.mean().round().max(1.0) as u32;
+    }
 
     let opts =
         apply_read_path_flags(LsmOptions::default().with_threads(threads), args)?;
@@ -493,6 +561,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             let mut spec =
                 workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?;
             spec.stop_after_ops = stop_ops;
+            if let Some(d) = vdist {
+                spec = spec.with_value_dist(d);
+            }
             if let Some((n, rate, slo)) = tenants {
                 spec = spec.with_tenants(n, rate, slo);
             }
@@ -533,6 +604,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 ..workload::preset_spec(&workload_id, &cfg, clients, mode, dist)?
             };
             spec.stop_after_ops = stop_ops;
+            if let Some(d) = vdist {
+                spec = spec.with_value_dist(d);
+            }
             if let Some((n, rate, slo)) = tenants {
                 spec = spec.with_tenants(n, rate, slo);
             }
@@ -554,6 +628,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 ..workload::ycsb_e(&cfg, clients, mode, dist, slo, shi)
             };
             spec.stop_after_ops = stop_ops;
+            if let Some(d) = vdist {
+                spec = spec.with_value_dist(d);
+            }
             if let Some((n, rate, slo)) = tenants {
                 spec = spec.with_tenants(n, rate, slo);
             }
@@ -866,7 +943,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 4);
     let shards = parse_shards(args)?;
     let tenants = parse_tenants(args)?;
-    let cfg = BenchConfig { seed, ..Default::default() }.scaled(scale);
+    let vdist = parse_value_size(args)?;
+    let mut cfg = BenchConfig { seed, ..Default::default() }.scaled(scale);
+    if let Some(d) = vdist {
+        cfg.value_size = d.mean().round().max(1.0) as u32;
+    }
     let mode = LoopMode::OpenFixed { ops_per_sec: rate };
     let bench_opts =
         apply_read_path_flags(LsmOptions::default().with_threads(threads), args)?;
@@ -885,6 +966,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut env = SimEnv::new(seed, SsdConfig::default());
         let mut spec =
             workload::preset_spec("A", &cfg, clients, mode, KeyDist::Uniform)?;
+        if let Some(d) = vdist {
+            spec = spec.with_value_dist(d);
+        }
         if let Some((n, t_rate, slo)) = tenants {
             spec = spec.with_tenants(n, t_rate, slo);
         }
@@ -945,7 +1029,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut env = SimEnv::new(seed, SsdConfig::default());
         let preload_bytes = ((4u64 << 30) as f64 * scale) as u64;
         let t0 = workload::preload(&mut *sys, &mut env, &cfg, preload_bytes)?;
-        let spec = workload::WorkloadSpec {
+        let mut spec = workload::WorkloadSpec {
             start_at: t0,
             ..workload::ycsb_e(
                 &cfg,
@@ -956,6 +1040,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 100,
             )
         };
+        if let Some(d) = vdist {
+            spec = spec.with_value_dist(d);
+        }
         let r = workload::run_spec(&mut *sys, &mut env, &spec);
         println!("== {} (ycsb-e) ==", kind.label());
         print_result(&r);
@@ -1131,6 +1218,56 @@ mod tests {
         assert!(validate_run_flags(&parse("run ycsb-d --dist uniform")).is_err());
         assert!(validate_run_flags(&parse("run ycsb-d")).is_ok());
         assert!(validate_run_flags(&parse("run D --dist zipfian")).is_ok());
+    }
+
+    #[test]
+    fn value_size_and_vlog_flags_parse_and_validate() {
+        // defaults: both absent
+        assert!(parse_value_size(&parse("run A")).unwrap().is_none());
+        assert!(parse_vlog(&parse("run A")).unwrap().is_none());
+        // the three value-size shapes
+        assert_eq!(
+            parse_value_size(&parse("run A --value-size 16384")).unwrap(),
+            Some(ValueSizeDist::Fixed(16384))
+        );
+        assert_eq!(
+            parse_value_size(&parse("run A --value-size 64:8192")).unwrap(),
+            Some(ValueSizeDist::Uniform { lo: 64, hi: 8192 })
+        );
+        assert_eq!(
+            parse_value_size(&parse("run A --value-size lognormal:8.0:1.5")).unwrap(),
+            Some(ValueSizeDist::LogNormal { mu: 8.0, sigma: 1.5 })
+        );
+        assert!(parse_value_size(&parse("run A --value-size big")).is_err());
+        assert!(parse_value_size(&parse("run A --value-size 10:5")).is_err());
+        // vlog flags
+        assert_eq!(
+            parse_vlog(&parse("run A --vlog-threshold 1024")).unwrap(),
+            Some((1024, None))
+        );
+        assert_eq!(
+            parse_vlog(&parse(
+                "run A --vlog-threshold 1024 --vlog-segment-bytes 1048576"
+            ))
+            .unwrap(),
+            Some((1024, Some(1 << 20)))
+        );
+        assert!(parse_vlog(&parse("run A --vlog-threshold x")).is_err());
+        assert!(parse_vlog(
+            &parse("run A --vlog-threshold 1024 --vlog-segment-bytes 16")
+        )
+        .is_err());
+        // qualifier without the flag it qualifies, and malformed values,
+        // are caught by the shared validator for run AND bench
+        assert!(validate_run_flags(&parse("run A --vlog-segment-bytes 65536")).is_err());
+        assert!(validate_bench_flags(&parse("bench --vlog-segment-bytes 65536")).is_err());
+        assert!(validate_run_flags(&parse("run A --value-size 0")).is_err());
+        assert!(validate_bench_flags(&parse("bench --value-size lognormal:1")).is_err());
+        assert!(validate_run_flags(&parse(
+            "run A --value-size lognormal:9:1 --vlog-threshold 4096 \
+             --vlog-segment-bytes 1048576"
+        ))
+        .is_ok());
     }
 
     #[test]

@@ -769,6 +769,7 @@ impl KvEngine for ShardedDb {
             bloom: BloomBuilder::rust(),
             manifest: Manifest::new(),
             wal: Vec::new(),
+            vlog: None,
             kvaccel_cfg: None,
             adoc_cfg: None,
             shard: Some(Box::new(image)),
@@ -800,6 +801,7 @@ impl KvEngine for ShardedDb {
             bloom: BloomBuilder::rust(),
             manifest: Manifest::new(),
             wal: Vec::new(),
+            vlog: None,
             kvaccel_cfg: None,
             adoc_cfg: None,
             shard: Some(Box::new(image)),
@@ -907,6 +909,7 @@ impl ShardIter {
         let a = self.children[i].amp();
         let blocks = a.main_blocks - self.folded[i].main_blocks;
         let pages = a.dev_pages - self.folded[i].dev_pages;
+        let vlog = a.vlog_blocks - self.folded[i].vlog_blocks;
         if blocks > 0 {
             self.local.main_blocks += blocks;
             self.counters
@@ -918,6 +921,12 @@ impl ShardIter {
             self.counters
                 .dev_pages
                 .fetch_add(pages, std::sync::atomic::Ordering::Relaxed);
+        }
+        if vlog > 0 {
+            self.local.vlog_blocks += vlog;
+            self.counters
+                .vlog_blocks
+                .fetch_add(vlog, std::sync::atomic::Ordering::Relaxed);
         }
         self.folded[i] = a;
     }

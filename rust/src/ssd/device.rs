@@ -162,6 +162,14 @@ impl SsdDevice {
         self.fs.delete_file(&mut self.ftl, id)
     }
 
+    /// Name already-written bytes as a file without re-charging PCIe or
+    /// NAND: a sealed value-log segment's payload was paid for append by
+    /// append on its WAL stream, and sealing just gives the extent a
+    /// directory entry so recovery and GC can address/delete it.
+    pub fn register_file_for(&mut self, owner: u32, bytes: u64) -> Result<FileId> {
+        self.fs.create_file_for(&mut self.ftl, owner, bytes)
+    }
+
     /// Make WAL streams `0..n` available (a sharded store opens one log
     /// per shard). Existing streams keep their accounting.
     pub fn wal_ensure_streams(&mut self, n: usize) {

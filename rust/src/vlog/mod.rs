@@ -1,0 +1,471 @@
+//! WiscKey-style value log: key-value separation for the LSM engine.
+//!
+//! Values at or above `LsmOptions::vlog_threshold` bytes are appended to
+//! a segmented log on the SSD's block interface; the LSM (WAL, memtable,
+//! SSTs) keeps only a 12 B `<segment, offset, len>` pointer
+//! ([`crate::lsm::entry::ValueLoc::Vlog`]), so flush and compaction
+//! traffic shrinks to pointer size — the write-amplification win the
+//! `kv-sep` experiment measures.
+//!
+//! Layout and lifecycle:
+//! - The **head** segment accumulates appends through a dedicated device
+//!   WAL stream (`VLOG_STREAM_OFFSET + wal_stream`), giving vlog bytes
+//!   the same page-cache / fsync / crash-cut semantics as the WAL: a
+//!   crash loses the unsynced tail, and the durable prefix of the head
+//!   is recovered exactly (crash mid-append → old or new copy, never a
+//!   torn one).
+//! - Once `vlog_segment_bytes` accumulate the head **seals**: the stream
+//!   is fsync'd, the extent is registered as a block-FS file (owned by
+//!   the vlog's stream id, keeping it out of the Main-LSM's orphan
+//!   scan), and the segment is installed in the manifest
+//!   (`ManifestEdit::VlogSeal`) so reopen rebuilds the segment list.
+//! - **GC** (driven by `LsmDb::tick`) picks the sealed segment with the
+//!   highest dead-byte ratio, re-appends its live values to the head,
+//!   re-inserts the moved pointers through the write path, and retires
+//!   the segment with `ManifestEdit::VlogDrop` + a deferred
+//!   `delete_file` (sync-before-delete: the drop is only installed
+//!   after the relocated copies are fsync'd).
+//!
+//! Values are deterministic `(seed, len)` streams ([`ValueDesc`]), so a
+//! pointer dereference never moves payload bytes — it is purely a cost
+//! event (a vlog block read through the shared block cache). That is
+//! also why snapshots pinned across a GC stay correct by construction:
+//! the descriptor rides inside the pinned entry.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::env::SimEnv;
+use crate::lsm::entry::{Key, Seq, ValueDesc};
+use crate::sim::Nanos;
+use crate::ssd::block_if::FileId;
+
+/// Device WAL streams `VLOG_STREAM_OFFSET + wal_stream` carry value-log
+/// appends; the same number is the block-FS directory owner of sealed
+/// segment files. The offset keeps vlog streams clear of every shard's
+/// WAL stream (shard streams are small consecutive integers) and keeps
+/// sealed segments out of `LsmDb::open`'s SST orphan scan, which only
+/// looks at `file_ids_for(wal_stream)`.
+pub const VLOG_STREAM_OFFSET: u32 = 512;
+
+/// Per-record framing: 4 B key + 4 B seq + 4 B length + 4 B CRC ahead of
+/// the payload (WiscKey's log record header).
+pub const VLOG_RECORD_HEADER: u64 = 16;
+
+/// One value in the log. `(seed, len)` is the deterministic payload
+/// descriptor; `offset` is the record's byte offset within its segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VlogRecord {
+    pub key: Key,
+    pub seq: Seq,
+    pub seed: u32,
+    pub len: u32,
+    pub offset: u32,
+}
+
+impl VlogRecord {
+    /// On-log footprint: header + payload.
+    pub fn record_bytes(&self) -> u64 {
+        VLOG_RECORD_HEADER + self.len as u64
+    }
+}
+
+/// A log segment: the append head (file = None) or a sealed, immutable,
+/// manifest-installed extent (file = Some).
+#[derive(Clone, Debug)]
+pub struct VlogSegment {
+    pub id: u32,
+    /// Block-FS file backing a sealed segment (None while head).
+    pub file: Option<FileId>,
+    pub records: Vec<VlogRecord>,
+    pub bytes: u64,
+}
+
+impl VlogSegment {
+    fn new(id: u32) -> Self {
+        Self { id, file: None, records: Vec::new(), bytes: 0 }
+    }
+}
+
+/// Durable image of the value log at close/crash: the head's surviving
+/// records (sealed segments travel through the manifest).
+#[derive(Clone, Debug, Default)]
+pub struct VlogImage {
+    pub head_id: u32,
+    pub head_records: Vec<VlogRecord>,
+    pub head_bytes: u64,
+    pub next_segment: u32,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VlogStats {
+    /// Values separated into the log (user writes + GC relocations).
+    pub appends: u64,
+    /// Bytes appended to the log (headers + payloads).
+    pub appended_bytes: u64,
+    /// Pointer dereferences served (point reads + iterator positions).
+    pub derefs: u64,
+    /// Vlog data blocks materialized from the device (cache misses).
+    pub deref_blocks_read: u64,
+    pub segments_sealed: u64,
+    pub segments_dropped: u64,
+    pub gc_runs: u64,
+    /// Segment bytes scanned by GC.
+    pub gc_read_bytes: u64,
+    /// Live bytes GC re-appended to the head.
+    pub gc_rewritten_bytes: u64,
+    /// Dead bytes reclaimed by dropped segments.
+    pub gc_reclaimed_bytes: u64,
+}
+
+/// What `Vlog::append` produced: the relocated descriptor plus, when the
+/// append filled the head, the freshly sealed segment the caller must
+/// install in the manifest (`ManifestEdit::VlogSeal`).
+pub struct AppendOutcome {
+    pub desc: ValueDesc,
+    pub done: Nanos,
+    pub sealed: Option<Arc<VlogSegment>>,
+}
+
+#[derive(Debug)]
+pub struct Vlog {
+    /// Device WAL stream carrying appends; also the block-FS directory
+    /// owner of sealed segment files.
+    stream: u32,
+    segment_bytes: u64,
+    head: VlogSegment,
+    sealed: BTreeMap<u32, Arc<VlogSegment>>,
+    /// Dead bytes per sealed segment, discovered by memtable overwrites,
+    /// compaction drops and GC relocation. Rebuilt from zero after a
+    /// reopen (an LSM scan would recover it; the simulation lets GC
+    /// relearn it from ongoing traffic instead).
+    dead: BTreeMap<u32, u64>,
+    next_segment: u32,
+    /// Stream byte offset where the current head's first record lives —
+    /// converts the stream's durable watermark into a head prefix length
+    /// at crash time.
+    stream_base: u64,
+    pub stats: VlogStats,
+}
+
+impl Vlog {
+    /// A fresh, empty log bound to `wal_stream`'s companion vlog stream.
+    pub fn new(wal_stream: u32, segment_bytes: u64) -> Self {
+        Self {
+            stream: VLOG_STREAM_OFFSET + wal_stream,
+            segment_bytes: segment_bytes.max(4 << 10),
+            head: VlogSegment::new(0),
+            sealed: BTreeMap::new(),
+            dead: BTreeMap::new(),
+            next_segment: 1,
+            stream_base: 0,
+            stats: VlogStats::default(),
+        }
+    }
+
+    /// The device WAL stream / block-FS directory this log owns.
+    pub fn stream(&self) -> u32 {
+        self.stream
+    }
+
+    pub fn head_id(&self) -> u32 {
+        self.head.id
+    }
+
+    pub fn sealed_segments(&self) -> impl Iterator<Item = &Arc<VlogSegment>> {
+        self.sealed.values()
+    }
+
+    pub fn sealed_segment(&self, id: u32) -> Option<&Arc<VlogSegment>> {
+        self.sealed.get(&id)
+    }
+
+    /// Total log footprint (head + sealed segments).
+    pub fn total_bytes(&self) -> u64 {
+        self.head.bytes + self.sealed.values().map(|s| s.bytes).sum::<u64>()
+    }
+
+    /// Known-dead bytes across sealed segments.
+    pub fn dead_bytes(&self) -> u64 {
+        self.dead.values().sum()
+    }
+
+    /// Append one value at `at`; the payload rides the vlog WAL stream
+    /// (page-cache semantics, so group-committed batches coalesce into
+    /// contiguous writebacks). Seals the head when full.
+    pub fn append(
+        &mut self,
+        env: &mut SimEnv,
+        at: Nanos,
+        key: Key,
+        seq: Seq,
+        val: ValueDesc,
+    ) -> AppendOutcome {
+        debug_assert!(!val.is_tombstone() && !val.in_vlog());
+        let offset = self.head.bytes as u32;
+        let rec = VlogRecord { key, seq, seed: val.seed, len: val.len, offset };
+        let bytes = rec.record_bytes();
+        let done = env.device.wal_append_on(self.stream, at, bytes);
+        self.head.records.push(rec);
+        self.head.bytes += bytes;
+        self.stats.appends += 1;
+        self.stats.appended_bytes += bytes;
+        let desc = val.at_vlog(self.head.id, offset);
+        let sealed = if self.head.bytes >= self.segment_bytes {
+            Some(self.seal_head(env, done))
+        } else {
+            None
+        };
+        AppendOutcome { desc, done, sealed }
+    }
+
+    /// Seal the head: fsync the stream (every record durable before the
+    /// manifest may reference the segment), register the extent as a
+    /// block-FS file under this log's directory, start a fresh head.
+    /// The caller installs the returned segment via
+    /// `ManifestEdit::VlogSeal`.
+    pub fn seal_head(&mut self, env: &mut SimEnv, at: Nanos) -> Arc<VlogSegment> {
+        env.device.wal_sync_on(self.stream, at);
+        let mut seg = std::mem::replace(
+            &mut self.head,
+            VlogSegment::new(self.next_segment),
+        );
+        self.next_segment += 1;
+        self.stream_base += seg.bytes;
+        seg.file = env.device.register_file_for(self.stream, seg.bytes).ok();
+        let seg = Arc::new(seg);
+        self.sealed.insert(seg.id, Arc::clone(&seg));
+        self.stats.segments_sealed += 1;
+        seg
+    }
+
+    /// Record that the value at `loc` is no longer referenced by the
+    /// latest version of its key (overwritten, deleted, or dropped by
+    /// compaction). Head bytes are not tracked — GC only considers
+    /// sealed segments.
+    pub fn mark_dead(&mut self, segment: u32, len: u32) {
+        if self.sealed.contains_key(&segment) {
+            *self.dead.entry(segment).or_insert(0) += VLOG_RECORD_HEADER + len as u64;
+        } else if segment == self.head.id {
+            // Dead-in-head bytes become sealed-segment dead bytes once
+            // the head seals; stash them under the head's future id.
+            *self.dead.entry(segment).or_insert(0) += VLOG_RECORD_HEADER + len as u64;
+        }
+    }
+
+    /// GC victim: the sealed segment with the highest dead fraction, if
+    /// it reaches `dead_ratio`.
+    pub fn gc_victim(&self, dead_ratio: f64) -> Option<u32> {
+        self.sealed
+            .values()
+            .filter(|s| s.bytes > 0)
+            .map(|s| {
+                let dead = self.dead.get(&s.id).copied().unwrap_or(0).min(s.bytes);
+                (s.id, dead as f64 / s.bytes as f64)
+            })
+            .filter(|&(_, ratio)| ratio >= dead_ratio)
+            .max_by(|a, b| a.1.total_cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|(id, _)| id)
+    }
+
+    /// Remove `segment` from the live set (GC retirement). The physical
+    /// `delete_file` is the caller's job, *after* installing
+    /// `ManifestEdit::VlogDrop` with relocated copies already fsync'd.
+    pub fn retire(&mut self, segment: u32) -> Option<Arc<VlogSegment>> {
+        let seg = self.sealed.remove(&segment)?;
+        let dead = self.dead.remove(&segment).unwrap_or(0);
+        self.stats.segments_dropped += 1;
+        self.stats.gc_reclaimed_bytes += dead.min(seg.bytes);
+        Some(seg)
+    }
+
+    /// Capture the durable image at a crash: records of the head whose
+    /// bytes fully reached flash (stream watermark minus the head's
+    /// stream base) survive; the page-cached tail is lost — exactly the
+    /// WAL's sync=false semantics.
+    pub fn crash_image(&self, durable_watermark: u64) -> VlogImage {
+        let durable_in_head = durable_watermark.saturating_sub(self.stream_base);
+        let mut records = Vec::new();
+        let mut bytes = 0u64;
+        for r in &self.head.records {
+            if r.offset as u64 + r.record_bytes() <= durable_in_head {
+                records.push(*r);
+                bytes = r.offset as u64 + r.record_bytes();
+            } else {
+                break;
+            }
+        }
+        VlogImage {
+            head_id: self.head.id,
+            head_records: records,
+            head_bytes: bytes,
+            next_segment: self.next_segment,
+        }
+    }
+
+    /// Capture the full head (clean shutdown: everything synced).
+    pub fn clean_image(&self) -> VlogImage {
+        VlogImage {
+            head_id: self.head.id,
+            head_records: self.head.records.clone(),
+            head_bytes: self.head.bytes,
+            next_segment: self.next_segment,
+        }
+    }
+
+    /// Rebuild a log at open: sealed segments come from the manifest,
+    /// the head from the image. The stream was reset by the caller
+    /// (fresh log file), so surviving head bytes are re-appended to the
+    /// stream and fsync'd — the recovered prefix is durable in the new
+    /// life before any new write lands behind it.
+    pub fn reopen(
+        env: &mut SimEnv,
+        at: Nanos,
+        wal_stream: u32,
+        segment_bytes: u64,
+        image: &VlogImage,
+        sealed: Vec<Arc<VlogSegment>>,
+    ) -> Self {
+        let mut log = Self::new(wal_stream, segment_bytes);
+        for seg in sealed {
+            log.next_segment = log.next_segment.max(seg.id + 1);
+            log.sealed.insert(seg.id, seg);
+        }
+        log.next_segment = log.next_segment.max(image.next_segment).max(image.head_id + 1);
+        log.head = VlogSegment::new(image.head_id);
+        log.head.records = image.head_records.clone();
+        log.head.bytes = image.head_bytes;
+        if image.head_bytes > 0 {
+            env.device.wal_append_on(log.stream, at, image.head_bytes);
+            env.device.wal_sync_on(log.stream, at);
+        }
+        log
+    }
+
+    /// Live block-FS files this log owns (sealed segments) — the
+    /// recovery orphan scan keeps these and deletes the rest of the
+    /// vlog directory.
+    pub fn live_file_ids(&self) -> Vec<FileId> {
+        let mut ids: Vec<FileId> =
+            self.sealed.values().filter_map(|s| s.file).collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::SsdConfig;
+
+    fn env() -> SimEnv {
+        SimEnv::new(7, SsdConfig::default())
+    }
+
+    fn v(seed: u32, len: u32) -> ValueDesc {
+        ValueDesc::new(seed, len)
+    }
+
+    #[test]
+    fn append_assigns_segment_offsets() {
+        let mut e = env();
+        let mut log = Vlog::new(0, 1 << 20);
+        let a = log.append(&mut e, 0, 1, 1, v(10, 100));
+        let b = log.append(&mut e, 0, 2, 2, v(11, 200));
+        assert_eq!(a.desc, v(10, 100).at_vlog(0, 0));
+        assert_eq!(b.desc, v(11, 200).at_vlog(0, (VLOG_RECORD_HEADER + 100) as u32));
+        assert!(a.sealed.is_none() && b.sealed.is_none());
+        assert_eq!(log.stats.appends, 2);
+        assert_eq!(log.total_bytes(), 2 * VLOG_RECORD_HEADER + 300);
+    }
+
+    #[test]
+    fn head_seals_when_full() {
+        let mut e = env();
+        let mut log = Vlog::new(0, 4 << 10);
+        let mut sealed = Vec::new();
+        for i in 0..10u32 {
+            let out = log.append(&mut e, 0, i, i, v(i, 1000));
+            if let Some(s) = out.sealed {
+                sealed.push(s);
+            }
+        }
+        assert!(!sealed.is_empty());
+        for s in &sealed {
+            assert!(s.file.is_some(), "sealed segment registered as a file");
+            assert!(s.bytes >= 4 << 10);
+        }
+        assert_eq!(log.stats.segments_sealed as usize, sealed.len());
+        // ids are unique and the head is newer than every sealed segment
+        for s in &sealed {
+            assert!(s.id < log.head_id());
+        }
+    }
+
+    #[test]
+    fn gc_victim_needs_dead_ratio() {
+        let mut e = env();
+        let mut log = Vlog::new(0, 4 << 10);
+        for i in 0..10u32 {
+            log.append(&mut e, 0, i, i, v(i, 1000));
+        }
+        assert_eq!(log.gc_victim(0.4), None, "nothing dead yet");
+        let victim = log.sealed_segments().next().unwrap().id;
+        let seg_bytes = log.sealed_segment(victim).unwrap().bytes;
+        let mut marked = 0;
+        for r in log.sealed_segment(victim).unwrap().records.clone() {
+            log.mark_dead(victim, r.len);
+            marked += r.record_bytes();
+            if marked * 2 > seg_bytes {
+                break;
+            }
+        }
+        assert_eq!(log.gc_victim(0.4), Some(victim));
+        assert_eq!(log.gc_victim(0.99), None);
+        let seg = log.retire(victim).unwrap();
+        assert_eq!(seg.id, victim);
+        assert!(log.sealed_segment(victim).is_none());
+    }
+
+    #[test]
+    fn crash_image_keeps_durable_prefix_only() {
+        let mut e = env();
+        let mut log = Vlog::new(0, 64 << 20);
+        // well below the 1 MB writeback threshold: everything page-cached
+        for i in 0..5u32 {
+            log.append(&mut e, 0, i, i, v(i, 100));
+        }
+        let wm = e.device.wal_durable_watermark_on(log.stream());
+        assert_eq!(wm, 0, "small appends stay in page cache");
+        let img = log.crash_image(wm);
+        assert!(img.head_records.is_empty());
+        // after an fsync the whole head is durable
+        e.device.wal_sync_on(log.stream(), 0);
+        let wm = e.device.wal_durable_watermark_on(log.stream());
+        let img = log.crash_image(wm);
+        assert_eq!(img.head_records.len(), 5);
+        assert_eq!(img.head_bytes, log.total_bytes());
+    }
+
+    #[test]
+    fn reopen_restores_head_and_sealed() {
+        let mut e = env();
+        let mut log = Vlog::new(3, 4 << 10);
+        let mut sealed = Vec::new();
+        for i in 0..8u32 {
+            if let Some(s) = log.append(&mut e, 0, i, i, v(i, 1000)).sealed {
+                sealed.push(s);
+            }
+        }
+        e.device.wal_sync_on(log.stream(), 0);
+        let img = log.crash_image(e.device.wal_durable_watermark_on(log.stream()));
+        e.device.wal_reset_stream_on(log.stream());
+        let re = Vlog::reopen(&mut e, 0, 3, 4 << 10, &img, sealed.clone());
+        assert_eq!(re.head_id(), log.head_id());
+        assert_eq!(re.total_bytes(), log.total_bytes());
+        assert_eq!(re.sealed_segments().count(), sealed.len());
+        assert!(re.next_segment >= log.next_segment);
+        // recovered head is durable in the new life
+        assert_eq!(e.device.wal_durable_watermark_on(re.stream()), img.head_bytes);
+    }
+}

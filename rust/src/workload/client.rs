@@ -27,7 +27,7 @@ use crate::sim::sched::{ActorId, EventKind, EventQueue};
 use crate::sim::{Nanos, SimRng, NS_PER_SEC};
 
 use super::db_bench::BenchConfig;
-use super::keygen::{KeyDist, KeyGen};
+use super::keygen::{KeyDist, KeyGen, ValueSizeDist};
 use super::stats::{Histogram, HistogramSummary, OpSeries, RunResult};
 
 // ---------------------------------------------------------------------
@@ -243,7 +243,12 @@ pub struct WorkloadSpec {
     pub duration: Nanos,
     pub start_at: Nanos,
     pub key_space: Key,
+    /// Fixed size, or the rounded mean when `value_dist` is a spread
+    /// (kept for report labels; the generators use `value_dist`).
     pub value_size: u32,
+    /// Per-op value size distribution (`Fixed(value_size)` reproduces
+    /// the pre-spread generator bit for bit).
+    pub value_dist: ValueSizeDist,
     pub seed: u64,
     /// Global op budget across ALL clients: once this many ops have been
     /// issued, every client retires and open-loop backlogs are dropped.
@@ -264,6 +269,7 @@ impl WorkloadSpec {
             start_at: 0,
             key_space: cfg.key_space,
             value_size: cfg.value_size,
+            value_dist: ValueSizeDist::Fixed(cfg.value_size),
             seed: cfg.seed,
             stop_after_ops: None,
             qos: None,
@@ -278,6 +284,15 @@ impl WorkloadSpec {
     /// Cut the run after `n` issued ops in total (crash injection).
     pub fn with_stop_after(mut self, n: u64) -> Self {
         self.stop_after_ops = Some(n);
+        self
+    }
+
+    /// Swap in a value-size distribution; `value_size` becomes the
+    /// rounded mean so throughput conversions and report labels stay
+    /// meaningful.
+    pub fn with_value_dist(mut self, dist: ValueSizeDist) -> Self {
+        self.value_dist = dist;
+        self.value_size = dist.mean().round().max(1.0) as u32;
         self
     }
 
@@ -302,7 +317,7 @@ impl WorkloadSpec {
         for (i, c) in self.clients.iter_mut().enumerate() {
             c.tenant = (i % n) as TenantId;
         }
-        let bytes_per_op = 16 + self.value_size as u64;
+        let bytes_per_op = 16 + self.value_dist.mean().round() as u64;
         let rate_bytes = (rate_ops_s.max(0.0) * bytes_per_op as f64) as u64;
         let burst = (rate_bytes / 4).max(bytes_per_op);
         let tenants = (0..n)
@@ -355,6 +370,10 @@ struct Client {
     /// Op kind already drawn for an op the QoS bucket deferred: the RNG
     /// stream must not re-draw when the op is retried.
     pending_kind: Option<OpKind>,
+    /// Value lengths drawn up front for the next write op (admission
+    /// charges what will actually be written); consumed by `issue_one`
+    /// and, like `pending_kind`, NOT re-drawn on a QoS retry.
+    pending_lens: Vec<u32>,
 }
 
 impl Client {
@@ -498,7 +517,12 @@ pub fn run_spec_traced(
                 ^ cfg.seed_tag
                 ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F);
             Client {
-                gen: KeyGen::with_dist(seed, spec.key_space, spec.value_size, cfg.dist),
+                gen: KeyGen::with_value_dist(
+                    seed,
+                    spec.key_space,
+                    cfg.dist,
+                    spec.value_dist,
+                ),
                 rng: SimRng::new(seed ^ 0x6D17_ACED),
                 cfg: cfg.clone(),
                 issued: 0,
@@ -508,6 +532,7 @@ pub fn run_spec_traced(
                 fifo: std::collections::VecDeque::new(),
                 parked: false,
                 pending_kind: None,
+                pending_lens: Vec::new(),
             }
         })
         .collect();
@@ -567,7 +592,7 @@ pub fn run_spec_traced(
                 }
                 sync_latest_frontier(&mut clients, a);
                 let kind = take_kind(&mut clients[a]);
-                let cost = op_cost_bytes(kind, &clients[a].cfg, spec.value_size);
+                let cost = op_cost_bytes(kind, &mut clients[a], spec);
                 if let Some(ctl) = qos.as_mut() {
                     let t = clients[a].cfg.tenant as usize;
                     if let Some(ready) = ctl.try_charge(t, ev.at, cost) {
@@ -648,7 +673,7 @@ pub fn run_spec_traced(
                 // the client's previous op is done
                 let start = ev.at.max(clients[a].free_at);
                 let kind = take_kind(&mut clients[a]);
-                let cost = op_cost_bytes(kind, &clients[a].cfg, spec.value_size);
+                let cost = op_cost_bytes(kind, &mut clients[a], spec);
                 if let Some(ctl) = qos.as_mut() {
                     let t = clients[a].cfg.tenant as usize;
                     if let Some(ready) = ctl.try_charge(t, start, cost) {
@@ -757,15 +782,45 @@ fn take_kind(c: &mut Client) -> OpKind {
     }
 }
 
-/// Admission cost of one op in simulated bytes (key + value per entry;
-/// batches charge every entry, scans their minimum Next count). Charged
-/// against the tenant's token bucket *before* the op runs.
-fn op_cost_bytes(kind: OpKind, cfg: &ClientConfig, value_size: u32) -> u64 {
-    let per_entry = 16 + value_size as u64;
+/// Admission cost of one op in simulated bytes, charged against the
+/// tenant's token bucket *before* the op runs. Writes charge the key
+/// plus the value bytes this op will *actually* write: the lengths are
+/// drawn from the value-size distribution here and stashed on the
+/// client so `issue_one` writes exactly what was charged (and a QoS
+/// retry re-charges the same lengths instead of re-drawing). Reads
+/// have no per-op length, so they charge the distribution mean per
+/// entry; deletes write a bare tombstone.
+fn op_cost_bytes(kind: OpKind, c: &mut Client, spec: &WorkloadSpec) -> u64 {
+    let mean_entry = 16 + spec.value_dist.mean().round() as u64;
     match kind {
-        OpKind::Put | OpKind::Get | OpKind::Delete => per_entry,
-        OpKind::Batch => per_entry * cfg.batch_size.max(1) as u64,
-        OpKind::Scan => per_entry * cfg.scan_len.max(1) as u64,
+        OpKind::Put => {
+            if c.pending_lens.is_empty() {
+                let len = c.gen.draw_value_len();
+                c.pending_lens.push(len);
+            }
+            16 + c.pending_lens[0] as u64
+        }
+        OpKind::Batch => {
+            let n = c.cfg.batch_size.max(1);
+            while c.pending_lens.len() < n {
+                let len = c.gen.draw_value_len();
+                c.pending_lens.push(len);
+            }
+            c.pending_lens.iter().map(|&l| 16 + l as u64).sum()
+        }
+        OpKind::Delete => 16,
+        OpKind::Get => mean_entry,
+        OpKind::Scan => mean_entry * c.cfg.scan_len.max(1) as u64,
+    }
+}
+
+/// The value length for the next write entry: the stash filled at
+/// admission time, or a fresh draw when no QoS controller pre-drew.
+fn take_len(c: &mut Client) -> u32 {
+    if c.pending_lens.is_empty() {
+        c.gen.draw_value_len()
+    } else {
+        c.pending_lens.remove(0)
     }
 }
 
@@ -789,7 +844,8 @@ fn issue_one(
     let (key, done) = match kind {
         OpKind::Put => {
             let key = c.gen.write_key();
-            let val = c.gen.value_for(key, c.op_seq);
+            let len = take_len(c);
+            let val = c.gen.value_with_len(key, c.op_seq, len);
             c.op_seq += 1;
             let r = sys.put(env, at, key, val);
             stats.write_op(lat_from, r.done, cap_series);
@@ -832,7 +888,8 @@ fn issue_one(
             let mut first: Option<Key> = None;
             for _ in 0..n {
                 let key = c.gen.write_key();
-                let val = c.gen.value_for(key, c.op_seq);
+                let len = take_len(c);
+                let val = c.gen.value_with_len(key, c.op_seq, len);
                 c.op_seq += 1;
                 if first.is_none() {
                     first = Some(key);
@@ -866,7 +923,7 @@ fn assemble(
     let db_stats = sys.db_stats();
     let stall = sys.stall_stats();
     let cpu_percent = env.cpu.host_cpu_percent(end, 8);
-    let bytes_per_op = (16 + spec.value_size as u64) as f64;
+    let bytes_per_op = 16.0 + spec.value_dist.mean();
     let write_mbps =
         stats.writes.total as f64 * bytes_per_op / duration_s / (1024.0 * 1024.0);
     let read_mbps =
@@ -936,6 +993,7 @@ mod tests {
             start_at: 0,
             key_space: 50_000,
             value_size: 4096,
+            value_dist: ValueSizeDist::Fixed(4096),
             seed: 42,
             stop_after_ops: None,
             qos: None,
@@ -1125,6 +1183,29 @@ mod tests {
             r.writes.total
         );
         assert!(r.tenants[0].throttled > 0, "bucket never engaged");
+    }
+
+    #[test]
+    fn value_size_spread_run_completes() {
+        let (mut s, mut env) = build();
+        let sp = spec(vec![ClientConfig::writer()], 1)
+            .with_value_dist(ValueSizeDist::LogNormal { mu: 8.0, sigma: 1.0 });
+        let r = run_spec(&mut *s, &mut env, &sp);
+        assert!(r.writes.total > 100, "{}", r.writes.total);
+    }
+
+    #[test]
+    fn qos_charges_tombstones_at_their_actual_size() {
+        let (mut s, mut env) = build();
+        let mut c = ClientConfig::writer();
+        c.mix = OpMix { put: 0, get: 0, delete: 1, scan: 0, batch: 0 };
+        // the bucket is sized for 200 put-equivalents/s (16+4096 B per
+        // op); a 16 B tombstone stream fits ~257x that, so the closed
+        // loop must never park on the bucket
+        let sp = spec(vec![c], 1).with_tenants(1, 200.0, None);
+        let r = run_spec(&mut *s, &mut env, &sp);
+        assert_eq!(r.tenants[0].throttled, 0, "tombstones over-charged");
+        assert!(r.writes.total > 100, "{}", r.writes.total);
     }
 
     #[test]

@@ -6,6 +6,115 @@
 use crate::lsm::entry::{Key, ValueDesc, MAX_USER_KEY};
 use crate::sim::SimRng;
 
+/// Hard cap on a drawn value length (4 MiB): keeps a heavy lognormal
+/// tail from producing values larger than a vlog segment.
+pub const MAX_VALUE_LEN: u32 = 4 << 20;
+
+/// Per-op value size distribution. `Fixed` draws nothing from the RNG,
+/// so every pre-existing fixed-size workload is bit-identical; the
+/// spread shapes draw from a *dedicated* value-size stream (never the
+/// key RNG), so turning a spread on does not perturb the key sequence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ValueSizeDist {
+    /// Every value exactly this many bytes (db_bench default).
+    Fixed(u32),
+    /// Uniform in `[lo, hi]` inclusive.
+    Uniform { lo: u32, hi: u32 },
+    /// Log-normal: `exp(N(mu, sigma^2))` bytes, clamped to
+    /// `[1, MAX_VALUE_LEN]` — the long-tailed "mostly small, few huge"
+    /// shape real KV value populations show.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl Default for ValueSizeDist {
+    fn default() -> Self {
+        ValueSizeDist::Fixed(4096)
+    }
+}
+
+impl ValueSizeDist {
+    /// Mean value size in bytes (log-normal: `exp(mu + sigma^2/2)`,
+    /// clamped like the draws). Used for rate/throughput conversions.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ValueSizeDist::Fixed(n) => n as f64,
+            ValueSizeDist::Uniform { lo, hi } => (lo as f64 + hi as f64) / 2.0,
+            ValueSizeDist::LogNormal { mu, sigma } => {
+                (mu + sigma * sigma / 2.0).exp().clamp(1.0, MAX_VALUE_LEN as f64)
+            }
+        }
+    }
+
+    /// Draw one value length. `Fixed` consumes no randomness (the RNG
+    /// stream must stay untouched for bit-identity with fixed-size
+    /// workloads).
+    pub fn draw(&self, rng: &mut SimRng) -> u32 {
+        match *self {
+            ValueSizeDist::Fixed(n) => n,
+            ValueSizeDist::Uniform { lo, hi } => lo + rng.gen_range_u32(hi - lo + 1),
+            ValueSizeDist::LogNormal { mu, sigma } => {
+                // Box–Muller: next_f64 is in [0,1), so 1-u1 is in (0,1]
+                // and the log never sees zero
+                let u1 = rng.next_f64();
+                let u2 = rng.next_f64();
+                let z = (-2.0 * (1.0 - u1).ln()).sqrt()
+                    * (std::f64::consts::TAU * u2).cos();
+                let len = (mu + sigma * z).exp();
+                len.clamp(1.0, MAX_VALUE_LEN as f64).round() as u32
+            }
+        }
+    }
+
+    /// CLI shape: `N` (fixed), `L:H` (uniform), `lognormal:MU:SIGMA`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let int = |v: &str| -> Result<u32, String> {
+            v.parse::<u32>()
+                .map_err(|_| format!("expected a byte count, got {v:?}"))
+        };
+        if let Some(rest) = s
+            .strip_prefix("lognormal:")
+            .or_else(|| s.strip_prefix("lognorm:"))
+        {
+            let Some((mu, sigma)) = rest.split_once(':') else {
+                return Err(format!(
+                    "lognormal needs MU:SIGMA (log-space), got {s:?}"
+                ));
+            };
+            let f = |v: &str| -> Result<f64, String> {
+                v.parse::<f64>()
+                    .map_err(|_| format!("expected a number, got {v:?}"))
+            };
+            let (mu, sigma) = (f(mu)?, f(sigma)?);
+            if !mu.is_finite() || !sigma.is_finite() || sigma < 0.0 {
+                return Err(format!(
+                    "lognormal needs finite MU and SIGMA >= 0, got {s:?}"
+                ));
+            }
+            return Ok(ValueSizeDist::LogNormal { mu, sigma });
+        }
+        match s.split_once(':') {
+            Some((lo, hi)) => {
+                let (lo, hi) = (int(lo)?, int(hi)?);
+                if lo == 0 || hi < lo || hi > MAX_VALUE_LEN {
+                    return Err(format!(
+                        "uniform L:H needs 1 <= L <= H <= {MAX_VALUE_LEN}, got {s:?}"
+                    ));
+                }
+                Ok(ValueSizeDist::Uniform { lo, hi })
+            }
+            None => {
+                let n = int(s)?;
+                if n == 0 || n > MAX_VALUE_LEN {
+                    return Err(format!(
+                        "fixed size needs 1..={MAX_VALUE_LEN}, got {s:?}"
+                    ));
+                }
+                Ok(ValueSizeDist::Fixed(n))
+            }
+        }
+    }
+}
+
 /// Key popularity distribution (YCSB naming).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum KeyDist {
@@ -115,8 +224,13 @@ pub struct KeyGen {
     rng: SimRng,
     /// upper bound (exclusive) of the key space
     pub key_space: Key,
+    /// Fixed size, or the rounded mean when a spread is configured.
     pub value_size: u32,
     dist: KeyDist,
+    vdist: ValueSizeDist,
+    /// Dedicated stream for value-size draws: spread distributions must
+    /// not perturb the key sequence (and `Fixed` never touches it).
+    vrng: SimRng,
     zipf: Option<Zipfian>,
     /// Latest: number of keys written so far (write high-water mark).
     inserted: u64,
@@ -133,6 +247,15 @@ impl KeyGen {
     }
 
     pub fn with_dist(seed: u64, key_space: Key, value_size: u32, dist: KeyDist) -> Self {
+        Self::with_value_dist(seed, key_space, dist, ValueSizeDist::Fixed(value_size))
+    }
+
+    pub fn with_value_dist(
+        seed: u64,
+        key_space: Key,
+        dist: KeyDist,
+        vdist: ValueSizeDist,
+    ) -> Self {
         assert!(key_space > 0 && key_space <= MAX_USER_KEY);
         let zipf = match dist {
             KeyDist::Uniform => None,
@@ -143,8 +266,10 @@ impl KeyGen {
         Self {
             rng: SimRng::new(seed),
             key_space,
-            value_size,
+            value_size: vdist.mean().round().max(1.0) as u32,
             dist,
+            vdist,
+            vrng: SimRng::new(seed ^ 0x5A1E_BEEF_1057_0DD5),
             zipf,
             inserted: 0,
             value_salt: (seed ^ (seed >> 32)) as u32,
@@ -207,11 +332,24 @@ impl KeyGen {
 
     /// Fresh value: the seed encodes (generator, key, op#) so
     /// overwrites are distinguishable and verifiable, including across
-    /// concurrent clients writing the same key.
+    /// concurrent clients writing the same key. The length comes from
+    /// the value-size distribution (`Fixed` draws no randomness).
     pub fn value_for(&mut self, key: Key, op: u64) -> ValueDesc {
+        let len = self.draw_value_len();
+        self.value_with_len(key, op, len)
+    }
+
+    /// Like `value_for` with the length already drawn (the QoS admission
+    /// path draws up front so the bucket charges what will be written).
+    pub fn value_with_len(&mut self, key: Key, op: u64, len: u32) -> ValueDesc {
         let seed = (key ^ (op as u32).rotate_left(16) ^ self.value_salt)
             .wrapping_mul(0x9E37_79B1);
-        ValueDesc::new(seed, self.value_size)
+        ValueDesc::new(seed, len)
+    }
+
+    /// Draw one value length from the configured distribution.
+    pub fn draw_value_len(&mut self) -> u32 {
+        self.vdist.draw(&mut self.vrng)
     }
 
     pub fn rng(&mut self) -> &mut SimRng {
@@ -308,6 +446,93 @@ mod tests {
         }
         for _ in 0..100 {
             assert!(g.random_key() < 10);
+        }
+    }
+
+    #[test]
+    fn fixed_value_dist_is_bit_identical_to_plain_fixed() {
+        // Fixed draws nothing from either RNG stream, so the full
+        // (key, value) sequence matches a pre-spread-era generator
+        let mut a = KeyGen::new(11, 10_000, 4096);
+        let mut b = KeyGen::with_value_dist(
+            11,
+            10_000,
+            KeyDist::Uniform,
+            ValueSizeDist::Fixed(4096),
+        );
+        for op in 0..1000 {
+            let (ka, kb) = (a.write_key(), b.write_key());
+            assert_eq!(ka, kb);
+            assert_eq!(a.value_for(ka, op), b.value_for(kb, op));
+        }
+    }
+
+    #[test]
+    fn uniform_value_dist_spans_range_deterministically() {
+        let d = ValueSizeDist::Uniform { lo: 100, hi: 8192 };
+        let mk = || {
+            KeyGen::with_value_dist(21, 1000, KeyDist::Uniform, d)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let mut lens = std::collections::BTreeSet::new();
+        for _ in 0..2000 {
+            let (la, lb) = (a.draw_value_len(), b.draw_value_len());
+            assert_eq!(la, lb, "value stream must be deterministic");
+            assert!((100..=8192).contains(&la));
+            lens.insert(la);
+        }
+        assert!(lens.len() > 500, "uniform collapsed: {}", lens.len());
+        assert!((d.mean() - 4146.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lognormal_value_dist_long_tailed_and_clamped() {
+        // mu=8, sigma=1.5: median e^8 ~ 3 kB, mean ~ 9.2 kB, rare
+        // multi-hundred-kB outliers
+        let d = ValueSizeDist::LogNormal { mu: 8.0, sigma: 1.5 };
+        let mut g = KeyGen::with_value_dist(33, 1000, KeyDist::Uniform, d);
+        let draws: Vec<u32> = (0..5000).map(|_| g.draw_value_len()).collect();
+        assert!(draws.iter().all(|&l| (1..=MAX_VALUE_LEN).contains(&l)));
+        let mean = draws.iter().map(|&l| l as f64).sum::<f64>() / draws.len() as f64;
+        assert!((4000.0..20_000.0).contains(&mean), "mean {mean}");
+        let max = *draws.iter().max().unwrap();
+        assert!(max > 50_000, "no tail: max {max}");
+    }
+
+    #[test]
+    fn value_dist_parse_accepts_the_cli_shapes() {
+        assert_eq!(ValueSizeDist::parse("4096"), Ok(ValueSizeDist::Fixed(4096)));
+        assert_eq!(
+            ValueSizeDist::parse("64:1024"),
+            Ok(ValueSizeDist::Uniform { lo: 64, hi: 1024 })
+        );
+        assert_eq!(
+            ValueSizeDist::parse("lognormal:8.0:1.5"),
+            Ok(ValueSizeDist::LogNormal { mu: 8.0, sigma: 1.5 })
+        );
+        for bad in [
+            "", "0", "big", "10:5", "0:5", "lognormal:8", "lognormal:x:1",
+            "lognormal:8:-1", "9999999999",
+        ] {
+            assert!(ValueSizeDist::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn spread_values_do_not_perturb_the_key_stream() {
+        let mut fixed = KeyGen::new(5, 10_000, 4096);
+        let mut spread = KeyGen::with_value_dist(
+            5,
+            10_000,
+            KeyDist::Uniform,
+            ValueSizeDist::Uniform { lo: 16, hi: 65_536 },
+        );
+        for op in 0..1000 {
+            let (ka, kb) = (fixed.write_key(), spread.write_key());
+            assert_eq!(ka, kb, "value sizing leaked into the key RNG");
+            // the value *seed* matches too; only the length differs
+            let (va, vb) = (fixed.value_for(ka, op), spread.value_for(kb, op));
+            assert_eq!(va.seed, vb.seed);
         }
     }
 

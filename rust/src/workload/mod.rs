@@ -24,5 +24,5 @@ pub use db_bench::{
     fillrandom, fillrandom_batched, needs_preload, preload, preset_spec,
     readwhilewriting, seekrandom, ycsb_e, ycsb_point, BenchConfig,
 };
-pub use keygen::{KeyDist, KeyGen};
+pub use keygen::{KeyDist, KeyGen, ValueSizeDist, MAX_VALUE_LEN};
 pub use stats::{cdf, Histogram, OpSeries, RunResult};

@@ -15,7 +15,7 @@ use kvaccel::lsm::LsmOptions;
 use kvaccel::sim::{Nanos, NS_PER_SEC};
 use kvaccel::ssd::SsdConfig;
 use kvaccel::workload::{
-    run_spec_traced, ClientConfig, KeyDist, LoopMode, OpMix, WorkloadSpec,
+    run_spec_traced, ClientConfig, KeyDist, LoopMode, OpMix, ValueSizeDist, WorkloadSpec,
 };
 
 const ENGINES: [&str; 6] = [
@@ -68,6 +68,7 @@ fn mixed_spec(duration: Nanos) -> WorkloadSpec {
         start_at: 0,
         key_space: 20_000,
         value_size: 4096,
+        value_dist: ValueSizeDist::Fixed(4096),
         seed: 7,
         stop_after_ops: None,
         qos: None,

@@ -414,6 +414,7 @@ fn open_kv(
         image.bloom,
         image.manifest,
         image.wal,
+        image.vlog,
         image.clean,
     )
     .expect("recovery failed")

@@ -13,7 +13,7 @@ use kvaccel::sim::{Nanos, NS_PER_SEC};
 use kvaccel::ssd::SsdConfig;
 use kvaccel::workload::{
     fillrandom, preset_spec, readwhilewriting, run_spec, run_spec_traced, BenchConfig,
-    ClientConfig, KeyDist, KeyGen, LoopMode, OpMix, WorkloadSpec,
+    ClientConfig, KeyDist, KeyGen, LoopMode, OpMix, ValueSizeDist, WorkloadSpec,
 };
 
 const ENGINES: [&str; 6] = [
@@ -67,6 +67,7 @@ fn mixed_spec(duration: Nanos) -> WorkloadSpec {
         start_at: 0,
         key_space: 20_000,
         value_size: 4096,
+        value_dist: ValueSizeDist::Fixed(4096),
         seed: 7,
         stop_after_ops: None,
         qos: None,
@@ -141,6 +142,7 @@ fn fillrandom_preset_matches_prerefactor_op_stream() {
         start_at: 0,
         key_space: cfg.key_space,
         value_size: cfg.value_size,
+        value_dist: ValueSizeDist::Fixed(cfg.value_size),
         seed: cfg.seed,
         stop_after_ops: None,
         qos: None,
@@ -276,6 +278,7 @@ fn zipfian_and_latest_clients_run_on_every_engine() {
                 start_at: 0,
                 key_space: 10_000,
                 value_size: 1024,
+                value_dist: ValueSizeDist::Fixed(1024),
                 seed: 13,
                 stop_after_ops: None,
                 qos: None,
